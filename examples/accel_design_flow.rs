@@ -1,0 +1,84 @@
+//! The paper's §III-B design cycle, end to end, for the MM kernel:
+//!
+//! 1. run the application CPU-only and profile it (baseline),
+//! 2. identify the hot kernel (the matmul loop),
+//! 3-5. validate a *virtualized* accelerator model (the AOT Pallas
+//!      artifact via PJRT) against the CPU baseline,
+//! 6-7. switch to the *RTL-stage* accelerator (the CGRA emulator),
+//!      measure performance + energy, and compare with the baseline.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example accel_design_flow
+//! ```
+
+use femu::config::PlatformConfig;
+use femu::coordinator::{experiments, Platform};
+use femu::runtime::{Runtime, TensorI32};
+use femu::util::Rng;
+use femu::workloads::{programs, reference as refimpl};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = PlatformConfig::default();
+    let (m, k, n) = (121usize, 16usize, 4usize);
+    let mut rng = Rng::new(0xDE51);
+    let a = rng.vec_i32(m * k, -4096, 4096);
+    let b = rng.vec_i32(k * n, -4096, 4096);
+    let want = refimpl::matmul_i32(&a, &b, m, k, n);
+
+    // ---- step 1-2: CPU-only baseline profile ---------------------------
+    println!("[step 1] CPU-only baseline");
+    let mut p = Platform::new(cfg.clone());
+    let prog = p.dbg.load_source(&programs::mm_cpu(m, k, n))?;
+    p.dbg.write_i32_slice(prog.symbol("a_buf")?, &a)?;
+    p.dbg.write_i32_slice(prog.symbol("b_buf")?, &b)?;
+    p.run_app(1 << 32)?;
+    let got = p.dbg.read_i32_slice(prog.symbol("c_buf")?, m * n)?;
+    assert_eq!(got, want, "CPU baseline must match the oracle");
+    let window = p.dbg.soc.perf.window_snapshot().unwrap().clone();
+    let cpu_cycles = window.cycles;
+    let cpu_energy = cfg.energy.estimate(&window).total_mj;
+    println!("  kernel window: {cpu_cycles} cycles, {:.3} uJ", cpu_energy * 1e3);
+    println!("[step 2] hot kernel identified: the MM loop (the full window)");
+
+    // ---- steps 3-5: virtualized accelerator model ----------------------
+    println!("[steps 3-5] virtualized accelerator model (PJRT artifact)");
+    let rt = Runtime::load("artifacts")?;
+    let out = rt.execute(
+        "matmul",
+        &[TensorI32::new(vec![m, k], a.clone())?, TensorI32::new(vec![k, n], b.clone())?],
+    )?;
+    let virt_ok = out[0].data() == want.as_slice();
+    println!("  virtualized model matches CPU baseline: {virt_ok}");
+    assert!(virt_ok);
+
+    // ---- steps 6-7: RTL-stage accelerator (CGRA) ------------------------
+    println!("[steps 6-7] RTL-stage accelerator (CGRA emulator)");
+    let mut p = Platform::new(cfg.clone());
+    let prog = p.dbg.load_source(&programs::mm_cgra(m, k, n))?;
+    p.dbg.write_i32_slice(prog.symbol("a_buf")?, &a)?;
+    p.dbg.write_i32_slice(prog.symbol("b_buf")?, &b)?;
+    p.run_app(1 << 32)?;
+    let got = p.dbg.read_i32_slice(prog.symbol("c_buf")?, m * n)?;
+    assert_eq!(got, want, "CGRA result must match the oracle");
+    let window = p.dbg.soc.perf.window_snapshot().unwrap().clone();
+    let cgra_cycles = window.cycles;
+    let cgra_energy = cfg.energy.estimate(&window).total_mj;
+    println!("  kernel window: {cgra_cycles} cycles, {:.3} uJ", cgra_energy * 1e3);
+    let run = p.dbg.soc.stats.cgra_run;
+    println!(
+        "  CGRA internals: {} contexts, {} mem-stall cycles, {} config cycles",
+        run.contexts, run.mem_stalls, run.config_cycles
+    );
+
+    // ---- comparison ------------------------------------------------------
+    println!("\n== design-cycle outcome ==");
+    println!("  speedup: {:.2}x", cpu_cycles as f64 / cgra_cycles as f64);
+    println!("  energy reduction: {:.2}x", cpu_energy / cgra_energy);
+
+    // the same grid is available as a one-call experiment driver:
+    let points =
+        experiments::fig5_run(&cfg, experiments::Fig5Kernel::Mm, experiments::Fig5Impl::Cgra, 1)?;
+    assert!(points.iter().all(|pt| pt.validated));
+    println!("accel_design_flow OK");
+    Ok(())
+}

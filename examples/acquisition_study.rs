@@ -1,0 +1,51 @@
+//! §V-A acquisition characterization (Fig 4) as a library example:
+//! sweep the sampling frequency and print the active/sleep split of the
+//! acquisition window for both platform calibrations.
+//!
+//! ```sh
+//! cargo run --release --example acquisition_study
+//! ```
+
+use femu::config::PlatformConfig;
+use femu::coordinator::experiments;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = PlatformConfig::default();
+    // Short window: the split fractions are window-invariant; the CLI
+    // (`femu sweep-acquisition`) runs the paper's full 5 s window.
+    let window_s = 0.25;
+    println!("acquisition window: {window_s} s (fractions are window-invariant)");
+    println!(
+        "{:>10} {:>12} {:>10} {:>10} {:>10}",
+        "f_s (Hz)", "platform", "active %", "sleep %", "energy mJ"
+    );
+    let mut low_active = None;
+    let mut high_active = None;
+    for f in experiments::FIG4_FREQS_HZ {
+        for p in experiments::fig4_point(&cfg, f, window_s, 7)? {
+            let active_pct = 100.0 * p.active_s / p.total_s;
+            println!(
+                "{:>10} {:>12} {:>9.2}% {:>9.2}% {:>10.4}",
+                p.sample_rate_hz,
+                if p.model == "femu" { "FEMU" } else { "chip" },
+                active_pct,
+                100.0 - active_pct,
+                p.total_mj,
+            );
+            if p.model == "femu" && f == 100.0 {
+                low_active = Some(active_pct);
+            }
+            if p.model == "femu" && f == 100_000.0 {
+                high_active = Some(active_pct);
+            }
+        }
+    }
+    // The paper's qualitative claim: sleep-dominated at low rates
+    // (<1% active), active-dominated at 100 kHz (>70%).
+    let low = low_active.unwrap();
+    let high = high_active.unwrap();
+    assert!(low < 1.0, "100 Hz active share should be <1%, got {low:.2}%");
+    assert!(high > 70.0, "100 kHz active share should be >70%, got {high:.2}%");
+    println!("\nacquisition_study OK (100 Hz: {low:.2}% active, 100 kHz: {high:.1}% active)");
+    Ok(())
+}

@@ -1,0 +1,306 @@
+//! Dual-phase TinyAI application: **overlapping acquisition and
+//! processing** (paper §I: applications "generally involve two distinct,
+//! possibly overlapping, operational phases ... acquisition ... and
+//! processing").
+//!
+//! The guest acquires sample windows from the virtualized ADC with an
+//! **interrupt handler** (background phase) while the main loop runs the
+//! Q15 FFT over the previously captured window (foreground phase) —
+//! classic double buffering. The driver then quantifies what the overlap
+//! buys: total time vs. the sequential acquire-then-process structure,
+//! with full energy accounting.
+//!
+//! ```sh
+//! cargo run --release --example dual_phase
+//! ```
+
+use femu::config::PlatformConfig;
+use femu::coordinator::Platform;
+use femu::energy::EnergyModel;
+use femu::workloads::{programs, reference as refimpl, signals};
+
+const N: usize = 512; // samples per window (FFT size)
+const WINDOWS: usize = 4;
+const RATE_HZ: f64 = 10_000.0;
+
+/// Guest program: IRQ-driven acquisition into the fill buffer while the
+/// main loop FFTs the previous window in place (double buffering).
+fn dual_phase_program() -> String {
+    format!(
+        r#"{prelude}
+.equ N, {n}
+.equ WINDOWS, {windows}
+_start:
+    li   sp, 0x3F000         # stack in bank 1
+    la   t0, handler
+    csrw mtvec, t0
+    la   t0, irq_save
+    csrw mscratch, t0        # handler scratch base (mscratch swap idiom)
+    li   t0, MIE_ADC
+    csrw mie, t0
+    li   s0, SPI_ADC
+    li   t0, 3               # enable + irq
+    sw   t0, 0(s0)
+    # acquire window 0 in the foreground (nothing to process yet)
+    la   t0, buf0
+    la   t1, fill_ptr
+    sw   t0, 0(t1)
+    la   t1, fill_cnt
+    sw   zero, 0(t1)
+    csrsi mstatus, 8         # global irq enable: handler may run anywhere
+wait_w0:
+    la   t1, fill_cnt
+    lw   t2, 0(t1)
+    li   t3, N
+    bgeu t2, t3, w0_done
+    wfi
+    j    wait_w0
+w0_done:
+    # main pipeline: for w in 1..WINDOWS: start acquiring into the other
+    # buffer (irq-driven), FFT the window just captured, wait for fill.
+    li   s10, 1              # w
+    la   s8, buf0            # proc buffer (just filled)
+    la   s9, buf1            # fill buffer
+pipe:
+    # arm background fill of s9
+    la   t1, fill_ptr
+    sw   s9, 0(t1)
+    la   t1, fill_cnt
+    sw   zero, 0(t1)
+    # foreground: FFT(s8) — interrupts keep firing during this
+    mv   a0, s8
+    call fft512
+    # wait for the background fill to finish
+fill_wait:
+    la   t1, fill_cnt
+    lw   t2, 0(t1)
+    li   t3, N
+    bgeu t2, t3, fill_done
+    wfi
+    j    fill_wait
+fill_done:
+    # swap buffers, next window
+    mv   t0, s8
+    mv   s8, s9
+    mv   s9, t0
+    addi s10, s10, 1
+    li   t0, WINDOWS
+    bltu s10, t0, pipe
+    # final window: process in the foreground
+    mv   a0, s8
+    call fft512
+    ebreak
+
+# ---- ADC IRQ handler: pop one sample into the fill buffer ----
+# May preempt any code (including mid-FFT), so it must preserve every
+# register it touches; ra is borrowed through the mscratch swap idiom.
+handler:
+    csrrw x1, mscratch, x1   # x1 <- irq_save base, mscratch <- caller ra
+    sw   t0, 0(x1)
+    sw   t1, 4(x1)
+    sw   t2, 8(x1)
+    li   t0, SPI_ADC
+    lw   t1, 8(t0)           # RXDATA (costs the SPI word time)
+    la   t0, fill_ptr
+    lw   t2, 0(t0)
+    sw   t1, 0(t2)
+    addi t2, t2, 4
+    sw   t2, 0(t0)
+    la   t0, fill_cnt
+    lw   t2, 0(t0)
+    addi t2, t2, 1
+    sw   t2, 0(t0)
+    lw   t0, 0(x1)
+    lw   t1, 4(x1)
+    lw   t2, 8(x1)
+    csrrw x1, mscratch, x1   # restore ra + re-arm the scratch base
+    mret
+
+# ---- in-place Q15 FFT over the window at a0 (re only; im = scratch) ----
+# clobbers t*, a*, s1..s7, s11; preserves s8, s9, s10 (pipeline state)
+fft512:
+    la   s1, im_buf
+    li   t0, 0
+clr_im:
+    slli t1, t0, 2
+    add  t2, s1, t1
+    sw   zero, 0(t2)
+    addi t0, t0, 1
+    li   t1, N
+    bltu t0, t1, clr_im
+    mv   s0, a0              # re base
+    la   s2, rev_tbl
+    li   t0, 0
+bitrev_loop:
+    slli t1, t0, 2
+    add  t2, s2, t1
+    lw   t3, 0(t2)
+    ble  t3, t0, brskip
+    slli t4, t3, 2
+    add  t5, s0, t1
+    add  t6, s0, t4
+    lw   a1, 0(t5)
+    lw   a2, 0(t6)
+    sw   a2, 0(t5)
+    sw   a1, 0(t6)
+brskip:
+    addi t0, t0, 1
+    li   t1, N
+    bltu t0, t1, bitrev_loop
+    la   s2, wr_tbl
+    la   s3, wi_tbl
+    li   s5, 2
+    li   a6, N
+    srli a7, a6, 1           # stride = N/m (walks down per stage)
+stage_loop:
+    srli s6, s5, 1
+    li   s7, 0
+grp_loop:
+    li   s11, 0              # j
+j_loop:
+    add  t0, s7, s11         # e
+    add  t1, t0, s6          # o
+    mul  t2, s11, a7         # tw
+    slli t0, t0, 2
+    slli t1, t1, 2
+    slli t2, t2, 2
+    add  a0, s0, t0
+    add  a1, s1, t0
+    add  a2, s0, t1
+    add  a3, s1, t1
+    add  a4, s2, t2
+    add  a5, s3, t2
+    lw   t3, 0(a2)
+    lw   t4, 0(a3)
+    lw   t5, 0(a4)
+    lw   t6, 0(a5)
+    mul  t0, t3, t5
+    mulh t1, t3, t5
+    srli t0, t0, 15
+    slli t1, t1, 17
+    or   t0, t0, t1          # q15(or*twr)
+    mul  t1, t4, t6
+    mulh t2, t4, t6
+    srli t1, t1, 15
+    slli t2, t2, 17
+    or   t1, t1, t2          # q15(oi*twi)
+    sub  t0, t0, t1          # tr
+    mul  t1, t3, t6
+    mulh t2, t3, t6
+    srli t1, t1, 15
+    slli t2, t2, 17
+    or   t1, t1, t2          # q15(or*twi)
+    mul  t3, t4, t5
+    mulh t4, t4, t5
+    srli t3, t3, 15
+    slli t4, t4, 17
+    or   t3, t3, t4          # q15(oi*twr)
+    add  t1, t1, t3          # ti
+    lw   t5, 0(a0)
+    lw   t6, 0(a1)
+    add  t3, t5, t0
+    srai t3, t3, 1
+    sw   t3, 0(a0)
+    add  t4, t6, t1
+    srai t4, t4, 1
+    sw   t4, 0(a1)
+    sub  t3, t5, t0
+    srai t3, t3, 1
+    sw   t3, 0(a2)
+    sub  t4, t6, t1
+    srai t4, t4, 1
+    sw   t4, 0(a3)
+    addi s11, s11, 1
+    bltu s11, s6, j_loop
+    add  s7, s7, s5
+    li   t0, N
+    bltu s7, t0, grp_loop
+    slli s5, s5, 1
+    srli a7, a7, 1
+    li   t0, N
+    ble  s5, t0, stage_loop
+    ret
+
+.data
+irq_save: .space 16
+fill_ptr: .word 0
+fill_cnt: .word 0
+buf0:     .space {nb}
+buf1:     .space {nb}
+im_buf:   .space {nb}
+rev_tbl:  .space {nb}
+wr_tbl:   .space {hb}
+wi_tbl:   .space {hb}
+"#,
+        prelude = programs::PRELUDE,
+        n = N,
+        windows = WINDOWS,
+        nb = N * 4,
+        hb = N / 2 * 4,
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = PlatformConfig::default();
+    let mut p = Platform::new(cfg.clone());
+    p.dbg.soc.perf.enable_trace(); // power-state VCD of the pipeline
+
+    let prog = p.dbg.load_source(&dual_phase_program())?;
+    // tables (injected by the CS, like the Fig 5 FFT runs)
+    let (wr, wi) = refimpl::twiddles_q15(N);
+    let rev: Vec<i32> = refimpl::bit_reverse_indices(N).iter().map(|&x| x as i32).collect();
+    p.dbg.write_i32_slice(prog.symbol("wr_tbl")?, &wr)?;
+    p.dbg.write_i32_slice(prog.symbol("wi_tbl")?, &wi)?;
+    p.dbg.write_i32_slice(prog.symbol("rev_tbl")?, &rev)?;
+
+    let sig = signals::biosignal(0xD0A1, N * WINDOWS, RATE_HZ);
+    p.start_adc(sig.samples.clone(), RATE_HZ);
+
+    println!("running {WINDOWS} windows of {N} samples at {RATE_HZ} Hz, overlapped...");
+    p.run_app(1 << 36)?;
+    assert!(!p.dbg.soc.bus.spi_adc.underrun(), "overlap must not starve acquisition");
+
+    // validate: the final (in-place) FFT of the last window must match
+    // the oracle applied to the captured input
+    let last_buf = if WINDOWS % 2 == 1 { "buf0" } else { "buf1" };
+    let got = p.dbg.read_i32_slice(prog.symbol(last_buf)?, N)?;
+    let mut want_re: Vec<i32> = sig.samples[(WINDOWS - 1) * N..].to_vec();
+    let mut want_im = vec![0i32; N];
+    refimpl::fft_q15(&mut want_re, &mut want_im);
+    assert_eq!(got, want_re, "in-place FFT of the last window");
+    println!("last-window FFT validated against the oracle");
+
+    // timing: total vs the sequential structure
+    let total_s = p.dbg.soc.secs(p.dbg.soc.now);
+    let acq_s = WINDOWS as f64 * N as f64 / RATE_HZ;
+    // FFT-only cost measured from a standalone run
+    let fft_cycles = {
+        let mut q = Platform::new(cfg.clone());
+        let fprog = q.dbg.load_source(&programs::fft_cpu(N))?;
+        q.dbg.write_i32_slice(fprog.symbol("re_buf")?, &sig.samples[..N])?;
+        q.dbg.write_i32_slice(fprog.symbol("rev_tbl")?, &rev)?;
+        q.dbg.write_i32_slice(fprog.symbol("wr_tbl")?, &wr)?;
+        q.dbg.write_i32_slice(fprog.symbol("wi_tbl")?, &wi)?;
+        q.run_app(1 << 32)?;
+        q.dbg.soc.perf.window_snapshot().unwrap().cycles
+    };
+    let proc_s = WINDOWS as f64 * fft_cycles as f64 / cfg.soc.freq_hz as f64;
+    let sequential_s = acq_s + proc_s;
+    println!("overlapped total : {total_s:.4} s");
+    println!("sequential bound : {sequential_s:.4} s (acquire {acq_s:.4} + process {proc_s:.4})");
+    println!("overlap hides    : {:.1}% of processing time", 100.0 * (sequential_s - total_s) / proc_s);
+    assert!(total_s < sequential_s, "overlap must beat sequential");
+
+    // energy + VCD
+    let snap = p.snapshot();
+    let r = EnergyModel::femu().estimate(&snap);
+    println!("energy: {:.4} mJ ({:.3} mW avg)", r.total_mj, r.avg_power_mw());
+    if let Some(trace) = p.dbg.soc.perf.trace() {
+        let vcd = trace.to_vcd(cfg.soc.freq_hz, p.dbg.soc.now);
+        let path = std::env::temp_dir().join("femu_dual_phase.vcd");
+        std::fs::write(&path, &vcd)?;
+        println!("power-domain waveform: {} ({} transitions)", path.display(), trace.len());
+    }
+    println!("dual_phase OK");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! End-to-end TinyAI driver — the full-system workload that proves all
+//! layers compose (DESIGN.md §5 "V"):
+//!
+//! guest (RV32 on the emulated X-HEEP) acquires a 512-sample window from
+//! the **virtualized ADC** (dual-FIFO pacing) → copies it through the
+//! **bridge window** into the mailbox request block → rings the doorbell
+//! → the CS **accelerator-virtualization** service executes the
+//! `model` artifact (Pallas FFT kernel + Q15 classifier, AOT-lowered to
+//! HLO, run via PJRT) → the guest reads the logits, computes the argmax,
+//! and prints the class over the **UART** — while the perf monitor and
+//! energy model price the whole run.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_tinyai
+//! ```
+
+use femu::config::PlatformConfig;
+use femu::coordinator::Platform;
+use femu::energy::EnergyModel;
+use femu::runtime::TensorI32;
+use femu::util::Rng;
+use femu::workloads::{programs, signals};
+
+const N: usize = 512;
+const N_CLASSES: usize = 4;
+const REQ_OFF: u32 = 0x1000;
+const SAMPLE_RATE_HZ: f64 = 20_000.0;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = PlatformConfig::default();
+    let mut platform = Platform::new(cfg.clone());
+    platform.attach_artifacts("artifacts")?;
+
+    // CS-side model parameters (Q15 classifier weights), bound to the
+    // `model` artifact entry — the guest never sees them.
+    let mut rng = Rng::new(0xE2E);
+    let w1 = TensorI32::new(vec![64, 32], rng.vec_i32(64 * 32, -(1 << 14), 1 << 14))?;
+    let b1 = TensorI32::new(vec![32], rng.vec_i32(32, -500, 500))?;
+    let w2 = TensorI32::new(vec![32, N_CLASSES], rng.vec_i32(32 * N_CLASSES, -(1 << 14), 1 << 14))?;
+    let b2 = TensorI32::new(vec![N_CLASSES], rng.vec_i32(N_CLASSES, -500, 500))?;
+    let params = vec![w1, b1, w2, b2];
+
+    // expected result, computed through the same artifact (oracle check
+    // against ref.py happens in the Python test suite)
+    let sig = signals::biosignal(0x51_6, N, SAMPLE_RATE_HZ);
+    let expected_logits = {
+        let accel = platform.accel.as_ref().unwrap();
+        let window = TensorI32::new(vec![N], sig.samples.clone())?;
+        let mut args = vec![window];
+        args.extend(params.iter().cloned());
+        args.extend(femu::virt::accel::fft_table_tensors(N));
+        accel.runtime().execute("model", &args)?[0].clone()
+    };
+    let expected_class = expected_logits
+        .data()
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &v)| v)
+        .map(|(i, _)| i)
+        .unwrap();
+
+    platform.accel.as_mut().unwrap().bind_params("model", params);
+
+    // guest program + ADC stream
+    platform.dbg.load_source(&programs::classifier_mailbox(N, N_CLASSES, REQ_OFF))?;
+    platform.start_adc(sig.samples.clone(), SAMPLE_RATE_HZ);
+
+    println!("running end-to-end TinyAI app (acquire -> classify -> report)...");
+    let exit = platform.run_app(1 << 34)?;
+    println!("guest exit: {exit:?}");
+
+    // UART report: 'C' + class, newline
+    let uart = platform.dbg.uart();
+    let printed = String::from_utf8_lossy(&uart);
+    println!("uart: {printed:?}");
+    let printed_class = (uart[0] - b'C') as usize;
+    println!("guest-reported class: {printed_class}, CS-expected class: {expected_class}");
+    assert_eq!(printed_class, expected_class, "guest argmax must match the artifact");
+
+    // logits in the mailbox block must equal the direct execution
+    let logits = platform
+        .dbg
+        .soc
+        .bus
+        .cs_dram
+        .read_i32_slice(REQ_OFF as usize + 8 + N * 4, N_CLASSES)
+        .map_err(|e| anyhow::anyhow!("reading logits: {e:?}"))?;
+    assert_eq!(logits.as_slice(), expected_logits.data());
+    println!("logits: {logits:?}");
+
+    // whole-run performance + energy (acquisition is the dominant phase)
+    let snap = platform.snapshot();
+    println!("\ntotal: {} cycles = {:.3} ms emulated", snap.cycles, snap.cycles as f64 / 20e3);
+    for model in [EnergyModel::femu(), EnergyModel::heepocrates()] {
+        let r = model.estimate(&snap);
+        println!(
+            "energy [{}]: {:.4} mJ (active {:.4}, sleep {:.4}), avg {:.3} mW",
+            model.name,
+            r.total_mj,
+            r.active_mj,
+            r.sleep_mj,
+            r.avg_power_mw(),
+        );
+    }
+    assert!(!platform.dbg.soc.bus.spi_adc.underrun());
+    println!("\ne2e_tinyai OK");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: assemble a guest program, run it on the emulated
+//! X-HEEP-FEMU platform, and read back performance + energy estimates.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use femu::config::PlatformConfig;
+use femu::coordinator::Platform;
+use femu::energy::EnergyModel;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Build a platform (the default config mirrors X-HEEP-FEMU:
+    //    2 x 128 KiB SRAM banks, 20 MHz, femu energy calibration).
+    let mut platform = Platform::new(PlatformConfig::default());
+
+    // 2. Load a guest program through debugger virtualization. This one
+    //    sums an array and prints a marker over the UART.
+    let prog = platform.dbg.load_source(
+        r#"
+        .equ UART, 0x20000000
+        _start:
+            la   t0, data
+            li   t1, 8          # length
+            li   t2, 0          # sum
+        loop:
+            lw   t3, 0(t0)
+            add  t2, t2, t3
+            addi t0, t0, 4
+            addi t1, t1, -1
+            bnez t1, loop
+            li   t4, UART
+            li   t5, 79         # 'O'
+            sw   t5, 0(t4)
+            li   t5, 75         # 'K'
+            sw   t5, 0(t4)
+            ebreak
+        .data
+        data: .word 1, 2, 3, 4, 5, 6, 7, 8
+        "#,
+    )?;
+    println!("loaded {} instructions, entry {:#x}", prog.text.len(), prog.entry);
+
+    // 3. Run to completion.
+    let exit = platform.run_app(1_000_000)?;
+    println!("guest exit: {exit:?}");
+    println!("uart: {:?}", String::from_utf8_lossy(&platform.dbg.uart()));
+
+    // 4. Inspect guest state (debugger virtualization).
+    let sum = platform.dbg.reg(7); // t2
+    println!("sum register t2 = {sum}");
+    assert_eq!(sum, 36);
+
+    // 5. Performance counters + energy estimation (automatic mode).
+    let snap = platform.snapshot();
+    println!("\ncycles: {} ({:.1} us at 20 MHz)", snap.cycles, snap.cycles as f64 / 20.0);
+    for model in [EnergyModel::femu(), EnergyModel::heepocrates()] {
+        let r = model.estimate(&snap);
+        println!(
+            "energy [{}]: {:.6} uJ total ({:.6} uJ active, {:.6} uJ sleep)",
+            model.name,
+            r.total_mj * 1e3,
+            r.active_mj * 1e3,
+            r.sleep_mj * 1e3,
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

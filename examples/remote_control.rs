@@ -1,0 +1,96 @@
+//! Remote control: drive the platform through the TCP control server —
+//! the paper's §IV-E "user interface" flow (Python-class-over-Jupyter in
+//! the original; JSON-line protocol here).
+//!
+//! ```sh
+//! cargo run --release --example remote_control
+//! ```
+
+use femu::config::PlatformConfig;
+use femu::coordinator::Platform;
+use femu::server::{Client, Server};
+use femu::util::Json;
+
+fn main() -> anyhow::Result<()> {
+    // spawn an in-process server on an ephemeral port
+    let platform = Platform::new(PlatformConfig::default());
+    let server = Server::spawn(platform, "127.0.0.1:0")?;
+    println!("control server at {}", server.addr());
+    let mut client = Client::connect(server.addr())?;
+
+    // ping
+    let pong = client.call(Json::obj(vec![("cmd", Json::from("ping"))]))?;
+    println!("ping -> {pong}");
+
+    // load a program remotely
+    let src = r#"
+        .equ UART, 0x20000000
+        _start:
+            la  t0, vec
+            li  t1, 4
+            li  t2, 0
+        loop:
+            lw  t3, 0(t0)
+            add t2, t2, t3
+            addi t0, t0, 4
+            addi t1, t1, -1
+            bnez t1, loop
+            la  t4, result
+            sw  t2, 0(t4)
+            li  t5, UART
+            li  t6, 33        # '!'
+            sw  t6, 0(t5)
+            ebreak
+        .data
+        vec:    .space 16
+        result: .word 0
+    "#;
+    let loaded = client.call(Json::obj(vec![
+        ("cmd", Json::from("load_asm")),
+        ("source", Json::from(src)),
+    ]))?;
+    let vec_addr = loaded.get("symbols")?.get("vec")?.as_i64()?;
+    let res_addr = loaded.get("symbols")?.get("result")?.as_i64()?;
+    println!("loaded: vec at {vec_addr:#x}, result at {res_addr:#x}");
+
+    // inject operands remotely
+    client.call(Json::obj(vec![
+        ("cmd", Json::from("write_mem")),
+        ("addr", Json::from(vec_addr)),
+        ("values", Json::arr_i32(&[10, 20, 30, -18])),
+    ]))?;
+
+    // run
+    let run = client.call(Json::obj(vec![("cmd", Json::from("run"))]))?;
+    println!("run -> exit={}", run.str_field("exit")?);
+    assert_eq!(run.str_field("exit")?, "halted");
+
+    // read the result back
+    let mem = client.call(Json::obj(vec![
+        ("cmd", Json::from("read_mem")),
+        ("addr", Json::from(res_addr)),
+        ("n", Json::from(1i64)),
+    ]))?;
+    let result = mem.as_arr()?[0].as_i64()?;
+    println!("result = {result}");
+    assert_eq!(result, 42);
+
+    // uart + perf + energy over the wire
+    let uart = client.call(Json::obj(vec![("cmd", Json::from("uart"))]))?;
+    println!("uart -> {uart}");
+    let perf = client.call(Json::obj(vec![("cmd", Json::from("perf"))]))?;
+    println!("cycles -> {}", perf.get("cycles")?.as_i64()?);
+    let energy = client.call(Json::obj(vec![
+        ("cmd", Json::from("energy")),
+        ("model", Json::from("heepocrates")),
+    ]))?;
+    println!(
+        "energy -> {:.6} mJ over {:.6} s",
+        energy.get("total_mj")?.as_f64()?,
+        energy.get("seconds")?.as_f64()?
+    );
+
+    server.shutdown();
+    println!("remote_control OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+"""AOT: lower every L2 entry point to HLO *text* artifacts for Rust/PJRT.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+behind the published `xla` 0.1.6 crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under artifacts/):
+  <name>.hlo.txt   one per entry point (matmul, conv2d, fft512, model)
+  manifest.json    arg/result shapes + dtypes, consumed by
+                   rust/src/runtime/artifacts.rs
+
+Run via `make artifacts`; a no-op when inputs are unchanged (make rule).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "return_tuple": True, "entries": {}}
+    for name, (fn, args) in model.example_args().items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *args)
+        leaves = jax.tree_util.tree_leaves(out_tree)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+            "results": [
+                {"shape": list(l.shape), "dtype": str(l.dtype)} for l in leaves
+            ],
+        }
+        print(f"aot: {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", default=None, help="compat: single-file target; "
+                   "artifacts are emitted into its directory")
+    args = p.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    lower_all(out_dir or ".")
+
+
+if __name__ == "__main__":
+    main()

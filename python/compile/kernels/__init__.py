@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the FEMU virtualized-accelerator models.
+
+Each module exposes a jittable wrapper around a `pallas_call`
+(interpret=True) plus shares the `ref` pure-jnp oracle used by pytest.
+"""
+
+from . import ref  # noqa: F401
+from .matmul import matmul_i32  # noqa: F401
+from .conv2d import conv2d_i32  # noqa: F401
+from .fft import fft_q15  # noqa: F401

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: INT32 2-D convolution (valid, stride 1).
+
+Paper context (Fig 5, "CONV"): 16x16 input, 3 channels, 8 filters of 3x3,
+INT32 — the OpenEdgeCGRA convolution case study. The kernel uses the
+shift-and-accumulate formulation: for each (kh, kw) tap the input map is
+sliced and multiplied against the per-filter tap weights, accumulating in
+INT32. The grid walks output-channel blocks so each grid step holds the
+input map plus one block of filters VMEM-resident (the TPU adaptation of
+the paper's spatial CGRA mapping; see DESIGN.md §7).
+
+The (kh, kw) loops are unrolled at trace time — kernels here are 3x3, so
+this emits 9 fused multiply-accumulate passes rather than a dynamic loop,
+which XLA fuses into a single elementwise DAG.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BF = 8  # output-channel (filter) block per grid step
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int):
+    """One grid step: conv of the full map with a block of filters."""
+    x = x_ref[...]  # (H, W, Cin)
+    w = w_ref[...]  # (bf, KH, KW, Cin)
+    oh = x.shape[0] - kh + 1
+    ow = x.shape[1] - kw + 1
+    acc = jnp.zeros((oh, ow, w.shape[0]), dtype=jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[i : i + oh, j : j + ow, :]  # (oh, ow, Cin)
+            taps = w[:, i, j, :]  # (bf, Cin)
+            # (oh, ow, Cin) x (bf, Cin) -> (oh, ow, bf)
+            acc = acc + jax.lax.dot_general(
+                patch,
+                taps,
+                (((2,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bf",))
+def conv2d_i32(x: jnp.ndarray, w: jnp.ndarray, bf: int = DEFAULT_BF) -> jnp.ndarray:
+    """INT32 valid conv2d via a Pallas filter-blocked kernel.
+
+    x: (H, W, Cin) int32; w: (F, KH, KW, Cin) int32
+    -> (H-KH+1, W-KW+1, F) int32.
+    F is padded to a multiple of `bf` with zero filters, sliced back.
+    """
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    h, wid, cin = x.shape
+    f, kh, kw, cin2 = w.shape
+    assert cin == cin2, (cin, cin2)
+    oh, ow = h - kh + 1, wid - kw + 1
+    bf = min(bf, max(f, 1))
+    f_pad = (-f) % bf
+    w_p = jnp.pad(w, ((0, f_pad), (0, 0), (0, 0), (0, 0)))
+    grid = (w_p.shape[0] // bf,)
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, kh=kh, kw=kw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((h, wid, cin), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bf, kh, kw, cin), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((oh, ow, bf), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, w_p.shape[0]), jnp.int32),
+        interpret=True,
+    )(x, w_p)
+    return out[:, :, :f]

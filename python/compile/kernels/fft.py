@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: fixed-point (Q15 twiddle) radix-2 DIT FFT.
+
+Paper context (Fig 5, "FFT"): a 512-point FxP32 FFT, the VWR2A workload.
+Data is int32, twiddles are Q15 int32, butterflies scale by 1/2 per stage
+(arithmetic shift) to bound dynamic range — bit-identical to ref.fft_q15,
+the RV32 assembly kernel, and the CGRA mapping.
+
+TPU adaptation (DESIGN.md §7): the whole n-point working set stays
+VMEM-resident and each of the log2(n) stages is one full-array vectorized
+pass. The kernel is deliberately **gather/scatter-free**:
+
+* the bit-reversal permutation is the classic reshape-to-(2,)*log2(n) +
+  axis-reversal transpose,
+* each stage views the array as (groups, 2, half) so even/odd lanes are
+  static slices, and the per-stage twiddles are a strided static slice of
+  the twiddle table.
+
+Static slicing both matches how a TPU kernel would express the HBM↔VMEM
+schedule and keeps the lowered HLO inside the op set the AOT runtime's
+XLA (xla_extension 0.5.1 — see /opt/xla-example/README.md) compiles
+correctly; its gather/scatter handling is not trustworthy for this
+interchange path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+Q = ref.Q
+
+
+def _bit_reverse(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Bit-reversal permutation via reshape + transpose (no gather)."""
+    bits = n.bit_length() - 1
+    if bits == 0:
+        return x
+    y = x.reshape((2,) * bits)
+    y = jnp.transpose(y, tuple(reversed(range(bits))))
+    return y.reshape(n)
+
+
+def _q15(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return ((a.astype(jnp.int64) * b.astype(jnp.int64)) >> Q).astype(jnp.int32)
+
+
+def _fft_kernel(re_ref, im_ref, *refs, n: int):
+    """refs layout: stages x twr tables, stages x twi tables, then the
+    two output refs. Per-stage twiddle tables arrive as separate operands
+    (precomputed host-side) so the kernel needs no gather and no strided
+    slice — only reshapes, transposes, concats, and elementwise ops."""
+    stages = n.bit_length() - 1
+    twr_refs = refs[:stages]
+    twi_refs = refs[stages : 2 * stages]
+    or_ref, oi_ref = refs[2 * stages], refs[2 * stages + 1]
+    re = _bit_reverse(re_ref[...], n)
+    im = _bit_reverse(im_ref[...], n)
+
+    # unrolled static stage loop
+    for s in range(1, stages + 1):
+        m = 1 << s
+        half = m // 2
+        groups = n // m
+        xr = re.reshape(groups, 2, half)
+        xi = im.reshape(groups, 2, half)
+        er, orr = xr[:, 0, :], xr[:, 1, :]
+        ei, oi = xi[:, 0, :], xi[:, 1, :]
+        twr = twr_refs[s - 1][...][None, :]
+        twi = twi_refs[s - 1][...][None, :]
+        tr = _q15(orr, twr) - _q15(oi, twi)
+        ti = _q15(orr, twi) + _q15(oi, twr)
+        new_er = (er + tr) >> 1
+        new_ei = (ei + ti) >> 1
+        new_or = (er - tr) >> 1
+        new_oi = (ei - ti) >> 1
+        re = jnp.concatenate([new_er[:, None, :], new_or[:, None, :]], axis=1).reshape(n)
+        im = jnp.concatenate([new_ei[:, None, :], new_oi[:, None, :]], axis=1).reshape(n)
+    or_ref[...] = re
+    oi_ref[...] = im
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _fft_call(re, im, *tables):
+    n = re.shape[0]
+    kern = functools.partial(_fft_kernel, n=n)
+    return pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ),
+        interpret=True,
+    )(re, im, *tables)
+
+
+def stage_tables(n: int):
+    """Per-stage (twr, twi) tables: stage s uses W^(j * n/2^s), j < 2^(s-1)."""
+    wr, wi = ref.twiddles_q15(n)
+    stages = n.bit_length() - 1
+    twr, twi = [], []
+    for s in range(1, stages + 1):
+        half = 1 << (s - 1)
+        stride = n // (1 << s)
+        idx = [j * stride for j in range(half)]
+        twr.append(jnp.asarray([int(wr[i]) for i in idx], jnp.int32))
+        twi.append(jnp.asarray([int(wi[i]) for i in idx], jnp.int32))
+    return twr + twi
+
+
+def fft_q15(re: jnp.ndarray, im: jnp.ndarray):
+    """Q15 radix-2 FFT via the Pallas kernel.
+
+    re, im: (n,) int32, n a power of two >= 2. Returns (re, im) int32.
+    Twiddle tables are generated host-side (same rounding rule as
+    ref.twiddles_q15) and passed as kernel operands — exactly how the
+    RV32/CGRA implementations receive them in guest memory.
+    """
+    n = int(re.shape[0])
+    assert n & (n - 1) == 0 and n >= 2, f"n must be a power of two, got {n}"
+    return _fft_call(re.astype(jnp.int32), im.astype(jnp.int32), *stage_tables(n))
+
+
+def fft_with_tables(re: jnp.ndarray, im: jnp.ndarray, tables):
+    """AOT entry form: twiddle tables arrive as *parameters*.
+
+    The HLO-text interchange elides large dense constants (the old
+    xla_extension 0.5.1 parser then fills garbage — see DESIGN.md
+    §AOT-pitfalls), so the AOT artifacts must not embed the tables;
+    the Rust runtime passes them at execution
+    (rust/src/virt/accel.rs::fft_table_tensors).
+    """
+    return _fft_call(re.astype(jnp.int32), im.astype(jnp.int32), *tables)
+
+
+def stage_table_shapes(n: int):
+    """Shapes of stage_tables(n), in order (twr stages..., twi stages...)."""
+    stages = n.bit_length() - 1
+    halves = [(1 << (s - 1),) for s in range(1, stages + 1)]
+    return halves + halves

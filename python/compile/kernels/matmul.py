@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: INT32 tiled matrix multiply.
+
+Paper context (Fig 5, "MM"): a 121x16 by 16x4 INT32 matmul, the VersaSens
+wearable workload. The kernel is written generically and tiled for the
+TPU mental model: the grid walks M-tiles, each grid step keeps an
+(bm, K) A-tile, the whole (K, N) B panel, and a (bm, N) output tile
+VMEM-resident (these case-study operands are tiny against ~16 MiB VMEM,
+so K and N are not further split; the BlockSpec structure is what a real
+MXU lowering would keep).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime executes (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 32  # M-tile; 121 rows -> 4 grid steps with padding.
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o_tile = a_tile @ B (INT32, wrap-around)."""
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def matmul_i32(a: jnp.ndarray, b: jnp.ndarray, bm: int = DEFAULT_BM) -> jnp.ndarray:
+    """INT32 matmul via a Pallas M-tiled kernel.
+
+    a: (M, K) int32, b: (K, N) int32 -> (M, N) int32.
+    M is padded up to a multiple of `bm` (zero rows), then sliced back —
+    zero rows contribute zero products, so padding is exact for integer
+    arithmetic.
+    """
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (k, k2)
+    bm = min(bm, max(m, 1))
+    m_pad = (-m) % bm
+    a_p = jnp.pad(a, ((0, m_pad), (0, 0)))
+    grid = (a_p.shape[0] // bm,)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], n), jnp.int32),
+        interpret=True,
+    )(a_p, b)
+    return out[:m]

@@ -1,0 +1,197 @@
+"""Pure-jnp oracles for the FEMU accelerator kernels.
+
+These are the bit-exact references every other implementation in the stack
+must match:
+
+  * the Pallas kernels in this package (checked by pytest/hypothesis),
+  * the RV32 assembly kernels run on the emulated X-HEEP CPU,
+  * the CGRA kernel mappings executed by the CGRA emulator,
+  * the AOT artifacts executed from Rust through PJRT.
+
+All arithmetic is integer: INT32 for MM/CONV (wrap-around two's-complement
+semantics, matching RV32 `mul`/`add`) and Q15 fixed point for the FFT
+(int32 data, int32 Q15 twiddles, 64-bit intermediate products shifted
+arithmetically right by 15, matching RV32 `mul`+`mulh`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+Q = 15  # Q15 fixed-point fractional bits used by the FFT and the model's
+# fully-connected layers.
+
+
+def matmul_i32(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """INT32 matrix multiply with two's-complement wrap-around.
+
+    Matches the RV32IM `mul` (low 32 bits) accumulated with `add`.
+    """
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    # int32 dot with wrap-around: XLA integer dot already wraps (two's
+    # complement), same as the RV32 kernel.
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def conv2d_i32(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """INT32 2-D convolution, 'valid' padding, stride 1.
+
+    x: (H, W, Cin) input feature map.
+    w: (F, KH, KW, Cin) filters.
+    returns (H-KH+1, W-KW+1, F).
+
+    This is the paper's CONV case-study shape family (16x16x3 input,
+    8 filters of 3x3) but implemented generically.
+    """
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    h, wid, cin = x.shape
+    f, kh, kw, cin2 = w.shape
+    assert cin == cin2, (cin, cin2)
+    oh, ow = h - kh + 1, wid - kw + 1
+    # im2col: gather all (kh, kw, cin) patches, then a single integer dot.
+    patches = jnp.stack(
+        [
+            x[i : i + oh, j : j + ow, :]
+            for i in range(kh)
+            for j in range(kw)
+        ],
+        axis=2,
+    )  # (oh, ow, kh*kw, cin)
+    patches = patches.reshape(oh, ow, kh * kw * cin)
+    wmat = w.reshape(f, kh * kw * cin).T  # (kh*kw*cin, f)
+    return jax.lax.dot_general(
+        patches.reshape(oh * ow, -1),
+        wmat,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).reshape(oh, ow, f)
+
+
+def q15_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Q15 fixed-point multiply: (a * b) >> 15 with 64-bit intermediate.
+
+    Arithmetic (sign-propagating) right shift — identical to the RV32
+    sequence `mul`/`mulh` followed by a funnel shift, and to the CGRA
+    MULQ15 functional unit.
+    """
+    prod = a.astype(jnp.int64) * b.astype(jnp.int64)
+    return (prod >> Q).astype(jnp.int32)
+
+
+def _bit_reverse_indices(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def twiddles_q15(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Q15 twiddle factors W_n^k = exp(-2*pi*i*k/n) for k in [0, n/2).
+
+    Rounding rule is floor(x + 0.5) — a single documented rule shared
+    with the Rust table generator (rust/src/workloads/signals.rs) so the
+    tables are bit-identical across the stack. cos(0)=1.0 is clamped to
+    0x7FFF to fit Q15.
+    """
+    k = np.arange(max(n // 2, 1))
+    ang = -2.0 * np.pi * k / n
+    scale = float(1 << Q)
+    wr = np.floor(np.cos(ang) * scale + 0.5).astype(np.int64)
+    wi = np.floor(np.sin(ang) * scale + 0.5).astype(np.int64)
+    wr = np.clip(wr, -(1 << Q), (1 << Q) - 1).astype(np.int32)
+    wi = np.clip(wi, -(1 << Q), (1 << Q) - 1).astype(np.int32)
+    return wr, wi
+
+
+def fft_q15(re: jnp.ndarray, im: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Radix-2 DIT fixed-point FFT over int32 data with Q15 twiddles.
+
+    Per-stage scaling by 1/2 (arithmetic >> 1) keeps the dynamic range
+    bounded; the RV32 and CGRA implementations apply identical scaling,
+    so outputs match bit-for-bit.
+    """
+    n = int(re.shape[0])
+    assert n & (n - 1) == 0 and n >= 2, f"n must be a power of two, got {n}"
+    rev = _bit_reverse_indices(n)
+    wr_np, wi_np = twiddles_q15(n)
+    re = jnp.asarray(re, dtype=jnp.int32)[rev]
+    im = jnp.asarray(im, dtype=jnp.int32)[rev]
+    wr = jnp.asarray(wr_np, dtype=jnp.int32)
+    wi = jnp.asarray(wi_np, dtype=jnp.int32)
+
+    stages = n.bit_length() - 1
+    for s in range(1, stages + 1):
+        m = 1 << s  # butterfly group size
+        half = m // 2
+        stride = n // m
+        # indices of even/odd elements of every butterfly
+        grp = jnp.arange(n // m) * m
+        j = jnp.arange(half)
+        even_idx = (grp[:, None] + j[None, :]).reshape(-1)
+        odd_idx = even_idx + half
+        tw_idx = jnp.tile(j * stride, n // m)
+
+        er, ei = re[even_idx], im[even_idx]
+        orr, oi = re[odd_idx], im[odd_idx]
+        twr, twi = wr[tw_idx], wi[tw_idx]
+        # t = W * odd  (Q15 complex multiply)
+        tr = q15_mul(orr, twr) - q15_mul(oi, twi)
+        ti = q15_mul(orr, twi) + q15_mul(oi, twr)
+        # scaled butterfly: out = (even +/- t) >> 1
+        new_e_r = (er + tr) >> 1
+        new_e_i = (ei + ti) >> 1
+        new_o_r = (er - tr) >> 1
+        new_o_i = (ei - ti) >> 1
+        re = re.at[even_idx].set(new_e_r).at[odd_idx].set(new_o_r)
+        im = im.at[even_idx].set(new_e_i).at[odd_idx].set(new_o_i)
+    return re, im
+
+
+def relu_i32(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0).astype(jnp.int32)
+
+
+def fc_q15(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fully connected layer: (x @ w) >> 15 + b, all int32, Q15 weights.
+
+    Accumulation is in 64-bit then shifted; the RV32 kernel accumulates
+    the 64-bit products with mul/mulh + 64-bit adds, so they agree
+    bit-for-bit.
+    """
+    acc = jax.lax.dot_general(
+        x.astype(jnp.int64),
+        w.astype(jnp.int64),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.int64,
+    )
+    return ((acc >> Q) + b.astype(jnp.int64)).astype(jnp.int32)
+
+
+def tinyai_classifier(
+    window_re: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+) -> jnp.ndarray:
+    """End-to-end TinyAI pipeline oracle (the §V-C style classifier).
+
+    window_re: (512,) int32 acquired samples (imag = 0).
+    Features = L1-magnitude of the first 64 FFT bins, then two Q15 FC
+    layers with ReLU in between. Returns (n_classes,) int32 logits.
+    """
+    im = jnp.zeros_like(window_re)
+    fr, fi = fft_q15(window_re, im)
+    feats = (jnp.abs(fr[:64]) + jnp.abs(fi[:64])).astype(jnp.int32)
+    h = relu_i32(fc_q15(feats, w1, b1))
+    return fc_q15(h, w2, b2)

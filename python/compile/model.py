@@ -1,0 +1,97 @@
+"""L2: the end-to-end TinyAI pipeline model, built from the L1 kernels.
+
+This is the compute graph the FEMU CS executes when an accelerator is
+*virtualized* (paper §III-A "accelerator virtualization" / §V-B): the
+X-HEEP guest writes operands into a mailbox DRAM region, the CS service
+runs the functional model, and writes results back. In our stack the
+functional models are these jitted JAX functions, AOT-lowered once by
+`aot.py` to HLO text and executed from Rust via PJRT — Python never runs
+at emulation time.
+
+Exported entry points (all int32 in / int32 out):
+
+  * mm_entry     — Fig 5 "MM":   (121,16) @ (16,4)
+  * conv_entry   — Fig 5 "CONV": (16,16,3) map, (8,3,3,3) filters
+  * fft_entry    — Fig 5 "FFT":  512-point Q15
+  * model_entry  — §V-C-style classifier: 512-sample window -> FFT
+                   features -> FC(64->32) -> ReLU -> FC(32->4) logits.
+
+The classifier's numeric contract: inputs are 16-bit ADC samples
+(|x| < 2^15), FC weights are Q15 (|w| <= 2^15), so 64-bit accumulators
+never overflow and the Q15 shift is exact against the RV32 mul/mulh
+implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d_i32, fft_q15, matmul_i32
+from .kernels import fft as fft_kernel
+from .kernels import ref
+
+# --- Fig 5 case-study shapes (paper §V-B) ---------------------------------
+MM_A_SHAPE = (121, 16)
+MM_B_SHAPE = (16, 4)
+CONV_X_SHAPE = (16, 16, 3)
+CONV_W_SHAPE = (8, 3, 3, 3)
+FFT_N = 512
+
+# --- classifier dims (§V-C wood-moisture-style pipeline) ------------------
+N_FEATS = 64
+N_HIDDEN = 32
+N_CLASSES = 4
+
+
+def mm_entry(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return matmul_i32(a, b)
+
+
+def conv_entry(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return conv2d_i32(x, w)
+
+
+def fft_entry(re, im, *tables):
+    # twiddle tables are artifact *parameters*: dense constants do not
+    # survive the HLO-text interchange (see kernels/fft.py)
+    return fft_kernel.fft_with_tables(re, im, tables)
+
+
+def classifier(window: jnp.ndarray, w1, b1, w2, b2, tables=None) -> jnp.ndarray:
+    """FFT features -> FC -> ReLU -> FC, all int32/Q15 (see ref oracle)."""
+    im = jnp.zeros_like(window)
+    if tables is None:
+        fr, fi = fft_q15(window, im)
+    else:
+        fr, fi = fft_kernel.fft_with_tables(window, im, tables)
+    feats = (jnp.abs(fr[:N_FEATS]) + jnp.abs(fi[:N_FEATS])).astype(jnp.int32)
+    h = ref.relu_i32(ref.fc_q15(feats, w1, b1))
+    return ref.fc_q15(h, w2, b2)
+
+
+def model_entry(window, w1, b1, w2, b2, *tables):
+    return classifier(window, w1, b1, w2, b2, tables)
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering of every entry point."""
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    table_specs = tuple(sds(shape, i32) for shape in fft_kernel.stage_table_shapes(FFT_N))
+    return {
+        "matmul": (mm_entry, (sds(MM_A_SHAPE, i32), sds(MM_B_SHAPE, i32))),
+        "conv2d": (conv_entry, (sds(CONV_X_SHAPE, i32), sds(CONV_W_SHAPE, i32))),
+        "fft512": (fft_entry, (sds((FFT_N,), i32), sds((FFT_N,), i32)) + table_specs),
+        "model": (
+            model_entry,
+            (
+                sds((FFT_N,), i32),
+                sds((N_FEATS, N_HIDDEN), i32),
+                sds((N_HIDDEN,), i32),
+                sds((N_HIDDEN, N_CLASSES), i32),
+                sds((N_CLASSES,), i32),
+            )
+            + table_specs,
+        ),
+    }

@@ -1,0 +1,159 @@
+"""Core correctness signal: Pallas kernels vs pure-jnp oracle, bit-exact.
+
+Fixed-shape tests at the paper's Fig 5 case-study shapes; the hypothesis
+shape/value sweeps live in test_sweeps.py.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import conv2d_i32, fft_q15, matmul_i32, ref
+from compile import model
+
+RNG = np.random.default_rng(0xFE)
+
+
+def rand_i32(shape, lo=-(2**15), hi=2**15):
+    return RNG.integers(lo, hi, size=shape, dtype=np.int64).astype(np.int32)
+
+
+class TestMatmul:
+    def test_paper_shape(self):
+        a = rand_i32(model.MM_A_SHAPE)
+        b = rand_i32(model.MM_B_SHAPE)
+        np.testing.assert_array_equal(matmul_i32(a, b), ref.matmul_i32(a, b))
+
+    def test_identity(self):
+        a = rand_i32((16, 16))
+        eye = np.eye(16, dtype=np.int32)
+        np.testing.assert_array_equal(matmul_i32(a, eye), a)
+
+    def test_wraparound(self):
+        # INT32 overflow must wrap (two's complement), not saturate/trap.
+        a = np.full((4, 4), 2**30, dtype=np.int32)
+        b = np.full((4, 4), 4, dtype=np.int32)
+        out = np.asarray(matmul_i32(a, b))
+        np.testing.assert_array_equal(out, np.asarray(ref.matmul_i32(a, b)))
+
+    def test_non_divisible_m(self):
+        # 121 rows vs bm=32 exercises the zero-row padding path.
+        a = rand_i32((121, 16))
+        b = rand_i32((16, 4))
+        for bm in (1, 7, 32, 121, 128):
+            np.testing.assert_array_equal(
+                matmul_i32(a, b, bm=bm), ref.matmul_i32(a, b)
+            )
+
+    def test_negative_values(self):
+        a = rand_i32((5, 3), lo=-100, hi=0)
+        b = rand_i32((3, 2), lo=-100, hi=0)
+        np.testing.assert_array_equal(matmul_i32(a, b), ref.matmul_i32(a, b))
+
+
+class TestConv2d:
+    def test_paper_shape(self):
+        x = rand_i32(model.CONV_X_SHAPE)
+        w = rand_i32(model.CONV_W_SHAPE)
+        np.testing.assert_array_equal(conv2d_i32(x, w), ref.conv2d_i32(x, w))
+
+    def test_single_filter_delta(self):
+        # A delta filter reproduces the input channel sum shifted.
+        x = rand_i32((8, 8, 1))
+        w = np.zeros((1, 3, 3, 1), dtype=np.int32)
+        w[0, 1, 1, 0] = 1
+        out = np.asarray(conv2d_i32(x, w))
+        np.testing.assert_array_equal(out[:, :, 0], np.asarray(x)[1:7, 1:7, 0])
+
+    def test_filter_block_padding(self):
+        x = rand_i32((10, 10, 2))
+        w = rand_i32((5, 3, 3, 2))  # 5 filters vs bf=8 -> padding
+        for bf in (1, 3, 5, 8):
+            np.testing.assert_array_equal(
+                conv2d_i32(x, w, bf=bf), ref.conv2d_i32(x, w)
+            )
+
+    def test_1x1_kernel(self):
+        x = rand_i32((6, 6, 3))
+        w = rand_i32((4, 1, 1, 3))
+        np.testing.assert_array_equal(conv2d_i32(x, w), ref.conv2d_i32(x, w))
+
+
+class TestFft:
+    def test_paper_shape_512(self):
+        re = rand_i32((512,))
+        im = rand_i32((512,))
+        pr, pi = fft_q15(re, im)
+        rr, ri = ref.fft_q15(re, im)
+        np.testing.assert_array_equal(pr, rr)
+        np.testing.assert_array_equal(pi, ri)
+
+    @pytest.mark.parametrize("n", [2, 4, 8, 64, 256, 1024])
+    def test_sizes(self, n):
+        re = rand_i32((n,))
+        im = rand_i32((n,))
+        pr, pi = fft_q15(re, im)
+        rr, ri = ref.fft_q15(re, im)
+        np.testing.assert_array_equal(pr, rr)
+        np.testing.assert_array_equal(pi, ri)
+
+    def test_impulse(self):
+        # FFT of unit impulse: flat spectrum scaled by 1/n (stage >>1 x log2 n).
+        n = 64
+        re = np.zeros(n, dtype=np.int32)
+        re[0] = 1 << 15
+        im = np.zeros(n, dtype=np.int32)
+        pr, pi = fft_q15(re, im)
+        expected = (1 << 15) >> 6  # scaled by 2^-log2(64)
+        np.testing.assert_array_equal(np.asarray(pr), np.full(n, expected))
+        np.testing.assert_array_equal(np.asarray(pi), np.zeros(n))
+
+    def test_dc_signal(self):
+        n = 32
+        re = np.full(n, 1000, dtype=np.int32)
+        im = np.zeros(n, dtype=np.int32)
+        pr, pi = fft_q15(re, im)
+        # all energy in bin 0: n * 1000 / n = 1000, minus Q15 attrition
+        # (W^0 is clamped to 0x7FFF != 1.0, so each stage loses ~1/2^15).
+        assert 990 <= int(np.asarray(pr)[0]) <= 1000
+        assert np.abs(np.asarray(pr)[1:]).max() <= 2
+
+    def test_matches_float_fft_approximately(self):
+        # Sanity: fixed-point result tracks numpy's float FFT within
+        # quantization error bounds.
+        n = 256
+        t = np.arange(n)
+        sig = (10000 * np.sin(2 * np.pi * 8 * t / n)).astype(np.int32)
+        pr, pi = fft_q15(sig, np.zeros(n, dtype=np.int32))
+        flt = np.fft.fft(sig.astype(np.float64)) / n
+        got = np.asarray(pr).astype(np.float64) + 1j * np.asarray(pi)
+        err = np.abs(got - flt)
+        assert err.max() < 40, err.max()  # Q15 + per-stage scaling noise
+
+
+class TestClassifier:
+    def _params(self):
+        w1 = rand_i32((model.N_FEATS, model.N_HIDDEN), lo=-(2**14), hi=2**14)
+        b1 = rand_i32((model.N_HIDDEN,), lo=-100, hi=100)
+        w2 = rand_i32((model.N_HIDDEN, model.N_CLASSES), lo=-(2**14), hi=2**14)
+        b2 = rand_i32((model.N_CLASSES,), lo=-100, hi=100)
+        return w1, b1, w2, b2
+
+    def test_model_vs_ref(self):
+        window = rand_i32((model.FFT_N,))
+        params = self._params()
+        got = np.asarray(model.classifier(window, *params))
+        want = np.asarray(ref.tinyai_classifier(window, *params))
+        np.testing.assert_array_equal(got, want)
+
+    def test_output_shape_and_dtype(self):
+        window = rand_i32((model.FFT_N,))
+        out = np.asarray(model.classifier(window, *self._params()))
+        assert out.shape == (model.N_CLASSES,)
+        assert out.dtype == np.int32
+
+    def test_deterministic(self):
+        window = rand_i32((model.FFT_N,))
+        params = self._params()
+        a = np.asarray(model.classifier(window, *params))
+        b = np.asarray(model.classifier(window, *params))
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,141 @@
+"""Hypothesis sweeps: Pallas kernels vs oracle across shapes and values.
+
+The system prompt contract for L1: hypothesis sweeps the Pallas kernels'
+shapes/dtypes and asserts bit-exact agreement with ref.py. Integer kernels
+means assert_array_equal, not allclose.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d_i32, fft_q15, matmul_i32, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def arrays_i32(shape, lo=-(2**20), hi=2**20):
+    return st.builds(
+        lambda seed: np.random.default_rng(seed)
+        .integers(lo, hi, size=shape, dtype=np.int64)
+        .astype(np.int32),
+        st.integers(0, 2**32 - 1),
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 24),
+    n=st.integers(1, 12),
+    seed=st.integers(0, 2**32 - 1),
+    bm=st.sampled_from([1, 4, 8, 32]),
+)
+def test_matmul_shapes(m, k, n, seed, bm):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-(2**20), 2**20, size=(m, k), dtype=np.int64).astype(np.int32)
+    b = rng.integers(-(2**20), 2**20, size=(k, n), dtype=np.int64).astype(np.int32)
+    np.testing.assert_array_equal(matmul_i32(a, b, bm=bm), ref.matmul_i32(a, b))
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(3, 20),
+    w=st.integers(3, 20),
+    cin=st.integers(1, 4),
+    f=st.integers(1, 10),
+    ksz=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_conv2d_shapes(h, w, cin, f, ksz, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-(2**12), 2**12, size=(h, w, cin), dtype=np.int64).astype(
+        np.int32
+    )
+    wt = rng.integers(-(2**12), 2**12, size=(f, ksz, ksz, cin), dtype=np.int64).astype(
+        np.int32
+    )
+    np.testing.assert_array_equal(conv2d_i32(x, wt), ref.conv2d_i32(x, wt))
+
+
+@settings(**SETTINGS)
+@given(
+    logn=st.integers(1, 10),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_fft_sizes(logn, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    re = rng.integers(-(2**15), 2**15, size=n, dtype=np.int64).astype(np.int32)
+    im = rng.integers(-(2**15), 2**15, size=n, dtype=np.int64).astype(np.int32)
+    pr, pi = fft_q15(re, im)
+    rr, ri = ref.fft_q15(re, im)
+    np.testing.assert_array_equal(pr, rr)
+    np.testing.assert_array_equal(pi, ri)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_fft_extreme_values(seed):
+    # int32 extremes: the >>1 per-stage scaling must prevent overflow.
+    n = 64
+    rng = np.random.default_rng(seed)
+    choices = np.array(
+        [np.iinfo(np.int32).min, np.iinfo(np.int32).max, 0, -1, 1], dtype=np.int32
+    )
+    re = choices[rng.integers(0, 5, size=n)]
+    im = choices[rng.integers(0, 5, size=n)]
+    pr, pi = fft_q15(re, im)
+    rr, ri = ref.fft_q15(re, im)
+    np.testing.assert_array_equal(pr, rr)
+    np.testing.assert_array_equal(pi, ri)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_fft_linearity(seed):
+    # Property: FFT(a) + FFT(b) == FFT(a+b) holds only approximately in
+    # fixed point; check the bounded-error version (error <= stages).
+    n = 128
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-(2**12), 2**12, size=n, dtype=np.int64).astype(np.int32)
+    b = rng.integers(-(2**12), 2**12, size=n, dtype=np.int64).astype(np.int32)
+    ar, ai = ref.fft_q15(a, np.zeros(n, np.int32))
+    br, bi = ref.fft_q15(b, np.zeros(n, np.int32))
+    sr, si = ref.fft_q15(a + b, np.zeros(n, np.int32))
+    stages = n.bit_length() - 1
+    assert np.abs(np.asarray(ar) + np.asarray(br) - np.asarray(sr)).max() <= stages
+    assert np.abs(np.asarray(ai) + np.asarray(bi) - np.asarray(si)).max() <= stages
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_matmul_identity_property(m, k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-(2**20), 2**20, size=(m, k), dtype=np.int64).astype(np.int32)
+    eye = np.eye(k, dtype=np.int32)
+    np.testing.assert_array_equal(matmul_i32(a, eye), a)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 12),
+    k=st.integers(1, 12),
+    n=st.integers(1, 6),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_matmul_distributive_property(m, k, n, seed):
+    # (A + B) @ C == A@C + B@C exactly under wrap-around int32.
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-(2**18), 2**18, size=(m, k), dtype=np.int64).astype(np.int32)
+    b = rng.integers(-(2**18), 2**18, size=(m, k), dtype=np.int64).astype(np.int32)
+    c = rng.integers(-(2**18), 2**18, size=(k, n), dtype=np.int64).astype(np.int32)
+    lhs = np.asarray(matmul_i32((a + b).astype(np.int32), c))
+    rhs = (
+        np.asarray(matmul_i32(a, c)).astype(np.int64)
+        + np.asarray(matmul_i32(b, c)).astype(np.int64)
+    ).astype(np.int32)
+    np.testing.assert_array_equal(lhs, rhs)

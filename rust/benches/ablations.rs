@@ -1,0 +1,174 @@
+//! Ablation benches for the design choices DESIGN.md §6 calls out:
+//!
+//! A. **Dual-FIFO ADC pacing vs un-paced reads** — without the nominal-
+//!    rate pacing, the acquisition "finishes" as fast as the CPU can
+//!    drain the FIFO and the time/energy estimates collapse, which is
+//!    why the paper's dual-buffer mechanism matters for honest
+//!    acquisition-phase characterization.
+//! B. **Energy-model granularity** — per-domain 4-state model vs a
+//!    whole-SoC 2-state (active/idle) model: quantifies the estimation
+//!    error coarse models introduce across the Fig 4 operating points.
+//! C. **Accelerator integration stage** — virtualized (PJRT software
+//!    model, placeholder latency) vs RTL-stage (CGRA emulator, cycle
+//!    counts): same function, different cost visibility.
+//!
+//! `cargo bench --bench ablations`
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use femu::config::PlatformConfig;
+use femu::coordinator::{experiments, Platform};
+use femu::energy::EnergyModel;
+use femu::perfmon::PowerState;
+use femu::workloads::programs;
+
+fn ablation_a_fifo_pacing() {
+    harness::header("Ablation A: dual-FIFO pacing vs un-paced ADC reads");
+    let cfg = PlatformConfig::default();
+    let n = 2_000u64;
+    let rate = 1_000.0; // 1 kHz -> nominal 2 s
+    // paced (the real mechanism)
+    let mut p = Platform::new(cfg.clone());
+    p.dbg.load_source(&programs::acquisition(n, 2)).unwrap();
+    p.start_adc((0..n as i32).collect(), rate);
+    p.run_app(1 << 36).unwrap();
+    let paced_s = p.dbg.soc.now as f64 / cfg.soc.freq_hz as f64;
+    let paced_e = EnergyModel::femu().estimate(&p.snapshot()).total_mj;
+
+    // un-paced: period forced to 1 cycle (every sample "already there"),
+    // modeling a platform that streams without rate emulation
+    let mut p = Platform::new(cfg.clone());
+    p.dbg.load_source(&programs::acquisition(n, 2)).unwrap();
+    p.start_adc((0..n as i32).collect(), cfg.soc.freq_hz as f64); // 1 cycle/sample
+    p.run_app(1 << 36).unwrap();
+    let unpaced_s = p.dbg.soc.now as f64 / cfg.soc.freq_hz as f64;
+    let unpaced_e = EnergyModel::femu().estimate(&p.snapshot()).total_mj;
+
+    println!("paced   : {:>9.4} s, {:>9.5} mJ  (nominal window {:.3} s)", paced_s, paced_e, n as f64 / rate);
+    println!("un-paced: {:>9.4} s, {:>9.5} mJ", unpaced_s, unpaced_e);
+    println!(
+        "-> un-paced underestimates acquisition time {:.0}x and energy {:.1}x",
+        paced_s / unpaced_s,
+        paced_e / unpaced_e
+    );
+    assert!(paced_s / unpaced_s > 50.0, "pacing must matter");
+    assert!((paced_s - n as f64 / rate).abs() / (n as f64 / rate) < 0.05);
+}
+
+fn ablation_b_energy_granularity() {
+    harness::header("Ablation B: 4-state per-domain model vs 2-state CPU-centric model");
+    // The common MCU-datasheet shortcut: price the whole SoC by the CPU's
+    // state alone (P_run while the CPU is active, P_sleep otherwise). It
+    // tracks CPU-only workloads closely — and falls apart the moment an
+    // accelerator burns power while the CPU sleeps, which is exactly the
+    // co-design regime FEMU targets (hence the per-domain counters).
+    let cfg = PlatformConfig::default();
+    let fine = EnergyModel::heepocrates();
+    let banks = cfg.soc.num_banks as f64;
+    let p_run: f64 =
+        fine.cpu.mw[0] + fine.bus.mw[0] + fine.periph.mw[0] + banks * fine.mem_bank.mw[0];
+    let p_sleep: f64 =
+        fine.cpu.mw[1] + fine.bus.mw[1] + fine.periph.mw[1] + banks * fine.mem_bank.mw[3];
+    println!("{:>10} | {:>12} {:>12} {:>8}", "workload", "4-state mJ", "2-state mJ", "err %");
+    let mut errs = Vec::new();
+    for (imp, label) in
+        [(experiments::Fig5Impl::Cpu, "MM on CPU"), (experiments::Fig5Impl::Cgra, "MM on CGRA")]
+    {
+        // re-run the kernel to get the window time split
+        let mut p = Platform::new(cfg.clone());
+        let src = match imp {
+            experiments::Fig5Impl::Cpu => programs::mm_cpu(121, 16, 4),
+            experiments::Fig5Impl::Cgra => programs::mm_cgra(121, 16, 4),
+        };
+        let prog = p.dbg.load_source(&src).unwrap();
+        let mut rng = femu::util::Rng::new(0xB);
+        p.dbg.write_i32_slice(prog.symbol("a_buf").unwrap(), &rng.vec_i32(121 * 16, -99, 99)).unwrap();
+        p.dbg.write_i32_slice(prog.symbol("b_buf").unwrap(), &rng.vec_i32(16 * 4, -99, 99)).unwrap();
+        p.run_app(1 << 32).unwrap();
+        let w = p.dbg.soc.perf.window_snapshot().unwrap().clone();
+        let fine_mj = fine.estimate(&w).total_mj;
+        let freq = cfg.soc.freq_hz as f64;
+        let cpu_active_s = w.cpu.get(PowerState::Active) as f64 / freq;
+        let cpu_sleep_s = (w.cycles - w.cpu.get(PowerState::Active)) as f64 / freq;
+        let coarse_mj = p_run * cpu_active_s + p_sleep * cpu_sleep_s;
+        let err = 100.0 * (coarse_mj - fine_mj).abs() / fine_mj;
+        println!("{:>10} | {:>12.6} {:>12.6} {:>7.1}%", label, fine_mj, coarse_mj, err);
+        errs.push(err);
+    }
+    println!(
+        "-> CPU-only error {:.1}% vs accelerated error {:.1}%: per-domain 4-state \
+         tracking is what keeps accelerator energy visible",
+        errs[0], errs[1]
+    );
+    assert!(errs[1] > 3.0 * errs[0].max(0.5), "CGRA-phase error must dominate");
+}
+
+fn ablation_c_accel_stage() {
+    harness::header("Ablation C: virtualized (PJRT) vs RTL-stage (CGRA) accelerator");
+    let cfg = PlatformConfig::default();
+    // RTL stage: cycle-accounted CGRA run
+    let (points, wall_cgra) = harness::time(|| {
+        experiments::fig5_run(&cfg, experiments::Fig5Kernel::Mm, experiments::Fig5Impl::Cgra, 3)
+            .unwrap()
+    });
+    let cgra = &points[0];
+    // virtualized stage: PJRT artifact (placeholder latency, functional)
+    let rt = femu::runtime::Runtime::load("artifacts").expect("make artifacts");
+    let mut rng = femu::util::Rng::new(3);
+    let a = rng.vec_i32(121 * 16, -4096, 4096);
+    let b = rng.vec_i32(16 * 4, -4096, 4096);
+    let (out, wall_virt) = harness::time_best(5, || {
+        rt.execute(
+            "matmul",
+            &[
+                femu::runtime::TensorI32::new(vec![121, 16], a.clone()).unwrap(),
+                femu::runtime::TensorI32::new(vec![16, 4], b.clone()).unwrap(),
+            ],
+        )
+        .unwrap()
+    });
+    let oracle = femu::workloads::reference::matmul_i32(&a, &b, 121, 16, 4);
+    let functional_equal = out[0].data() == oracle.as_slice();
+    println!("RTL-stage  : {} guest cycles, validated={}, bench {}s", cgra.cycles, cgra.validated, harness::eng(wall_cgra));
+    println!(
+        "virtualized: functional={}, host exec {}s/call, latency model {} cycles",
+        functional_equal,
+        harness::eng(wall_virt),
+        femu::virt::accel::DEFAULT_LATENCY_CYCLES
+    );
+    println!("-> both stages agree functionally; only the RTL stage yields credible perf/energy");
+    assert!(functional_equal && cgra.validated);
+}
+
+fn ablation_d_sleep_policy() {
+    harness::header("Ablation D: memory sleep policy during WFI (active/gated/retention)");
+    let cfg = PlatformConfig::default();
+    println!("{:>10} | {:>12} {:>14}", "policy", "energy mJ", "bank state");
+    let mut energies = Vec::new();
+    for (policy, name) in [(0u32, "active"), (1, "clock-gated"), (2, "retention")] {
+        let mut p = Platform::new(cfg.clone());
+        p.dbg.load_source(&programs::acquisition(500, policy)).unwrap();
+        p.start_adc((0..500).collect(), 1_000.0);
+        p.run_app(1 << 36).unwrap();
+        let snap = p.snapshot();
+        let e = EnergyModel::heepocrates().estimate(&snap).total_mj;
+        let dominant = PowerState::ALL
+            .iter()
+            .max_by_key(|&&s| snap.banks[1].get(s))
+            .unwrap()
+            .name();
+        println!("{:>10} | {:>12.5} {:>14}", name, e, dominant);
+        energies.push(e);
+    }
+    println!("-> retention saves {:.1}% vs always-active memories", 100.0 * (energies[0] - energies[2]) / energies[0]);
+    assert!(energies[2] < energies[1] && energies[1] < energies[0]);
+}
+
+fn main() {
+    ablation_a_fifo_pacing();
+    ablation_b_energy_granularity();
+    ablation_c_accel_stage();
+    ablation_d_sleep_policy();
+    println!("\nablations OK");
+}

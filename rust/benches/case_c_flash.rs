@@ -1,0 +1,55 @@
+//! Bench: regenerate **Case C (§V-C)** — the flash-virtualization
+//! transfer study: 240 windows of 35 000 16-bit ultrasound samples
+//! (70 KiB/window), virtualized vs physical SPI flash.
+//!
+//! `cargo bench --bench case_c_flash` (FEMU_CASEC_SCALE shrinks the
+//! workload; default 1 = full paper size).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use femu::config::PlatformConfig;
+use femu::coordinator::experiments;
+
+fn main() {
+    let scale: usize =
+        std::env::var("FEMU_CASEC_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let cfg = PlatformConfig::default();
+    harness::header(&format!("Case C (\u{a7}V-C): flash virtualization (scale 1/{scale})"));
+    let (r, wall) = harness::time(|| experiments::case_c(&cfg, scale).unwrap());
+    println!(
+        "workload: {} windows x {} samples ({} KiB/window)",
+        r.windows,
+        r.samples_per_window,
+        r.samples_per_window * 2 / 1024
+    );
+    println!(
+        "{:>14} | {:>14} {:>14}",
+        "", "virtualized", "physical SPI"
+    );
+    println!(
+        "{:>14} | {:>14} {:>14}",
+        "per window",
+        format!("{}s", harness::eng(r.virt_window_s)),
+        format!("{}s", harness::eng(r.phys_window_s)),
+    );
+    println!(
+        "{:>14} | {:>14} {:>14}",
+        "full run",
+        format!("{}s", harness::eng(r.virt_total_s)),
+        format!("{}s", harness::eng(r.phys_total_s)),
+    );
+    println!("speedup: {:.0}x (paper: ~250x)", r.speedup);
+    println!("bench wall time: {}s", harness::eng(wall));
+
+    assert!(r.speedup > 180.0 && r.speedup < 320.0, "speedup out of band: {}", r.speedup);
+    if scale == 1 {
+        // absolute claims at the paper size: ~10 ms vs ~2.5 s per window,
+        // ~2.4 s vs ~10 min full run
+        assert!((r.virt_window_s - 0.010).abs() < 0.005, "virt window {}", r.virt_window_s);
+        assert!((r.phys_window_s - 2.5).abs() < 0.5, "phys window {}", r.phys_window_s);
+        assert!((r.virt_total_s - 2.4).abs() < 1.0, "virt total {}", r.virt_total_s);
+        assert!((r.phys_total_s - 600.0).abs() < 120.0, "phys total {}", r.phys_total_s);
+    }
+    println!("shape check OK");
+}

@@ -1,0 +1,54 @@
+//! Bench: regenerate **Fig 4** — normalized acquisition time and energy
+//! for a 5 s window at sampling frequencies 100 Hz..100 kHz, on
+//! X-HEEP-FEMU (femu calibration) and the HEEPocrates chip (silicon
+//! calibration), with the active/sleep split.
+//!
+//! `cargo bench --bench fig4_acquisition` (set FEMU_FIG4_WINDOW_S to
+//! override the emulated window; default 1 s keeps the bench quick while
+//! preserving the split — fractions are window-invariant).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use femu::config::PlatformConfig;
+use femu::coordinator::experiments;
+
+fn main() {
+    let window_s: f64 = std::env::var("FEMU_FIG4_WINDOW_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let cfg = PlatformConfig::default();
+    harness::header(&format!(
+        "Fig 4: acquisition time & energy, {window_s} s window (normalized)"
+    ));
+    println!(
+        "{:>9} {:>12} | {:>8} {:>8} | {:>8} {:>8} | {:>9}",
+        "f_s (Hz)", "platform", "act_t%", "slp_t%", "act_E%", "slp_E%", "bench_s"
+    );
+    let mut rows = Vec::new();
+    for f in experiments::FIG4_FREQS_HZ {
+        let (points, wall) =
+            harness::time(|| experiments::fig4_point(&cfg, f, window_s, 0xF164).unwrap());
+        for p in &points {
+            let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
+            println!(
+                "{:>9} {:>12} | {:>7.2}% {:>7.2}% | {:>7.2}% {:>7.2}% | {:>9}",
+                p.sample_rate_hz,
+                plat,
+                100.0 * p.active_s / p.total_s,
+                100.0 * p.sleep_s / p.total_s,
+                100.0 * p.active_mj / p.total_mj,
+                100.0 * p.sleep_mj / p.total_mj,
+                harness::eng(wall),
+            );
+        }
+        rows.push(points);
+    }
+    // paper-shape checks (abort the bench loudly if the figure breaks)
+    let low = &rows[0][0];
+    let high = rows.last().unwrap().first().unwrap();
+    assert!(low.active_s / low.total_s < 0.01, "100 Hz must be sleep-dominated");
+    assert!(high.active_s / high.total_s > 0.70, "100 kHz must be active-dominated");
+    println!("\nshape check OK: <1% active at 100 Hz, >70% active at 100 kHz");
+}

@@ -1,0 +1,77 @@
+//! Bench: regenerate **Fig 5** — normalized processing time and energy
+//! for the MM / CONV / FFT kernels on CPU and CGRA, under the FEMU and
+//! chip calibrations, with bit-exact output validation.
+//!
+//! `cargo bench --bench fig5_kernels`
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use femu::config::PlatformConfig;
+use femu::coordinator::experiments::{self, Fig5Impl, Fig5Kernel};
+
+fn main() {
+    let cfg = PlatformConfig::default();
+    harness::header("Fig 5: TinyAI kernels, CPU vs CGRA, FEMU vs chip");
+    println!(
+        "{:>6} {:>6} {:>12} | {:>10} {:>10} {:>11} {:>6} | {:>9}",
+        "kernel", "impl", "platform", "cycles", "time", "energy", "valid", "bench_s"
+    );
+    let mut all = Vec::new();
+    for kernel in Fig5Kernel::ALL {
+        for imp in [Fig5Impl::Cpu, Fig5Impl::Cgra] {
+            let (points, wall) =
+                harness::time(|| experiments::fig5_run(&cfg, kernel, imp, 0xF15).unwrap());
+            for p in &points {
+                let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
+                println!(
+                    "{:>6} {:>6} {:>12} | {:>10} {:>9}s {:>10}J {:>6} | {:>9}",
+                    p.kernel,
+                    p.implementation,
+                    plat,
+                    p.cycles,
+                    harness::eng(p.time_s),
+                    harness::eng(p.energy_mj / 1e3),
+                    if p.validated { "yes" } else { "NO" },
+                    harness::eng(wall),
+                );
+            }
+            all.extend(points);
+        }
+    }
+
+    // normalized view (CPU = 1.0 per kernel, femu calibration) — the
+    // paper's presentation
+    harness::header("Fig 5 normalized (CPU = 1.0, femu calibration)");
+    println!("{:>6} | {:>10} {:>10} | {:>10} {:>10}", "kernel", "t_CPU", "t_CGRA", "E_CPU", "E_CGRA");
+    for k in ["MM", "CONV", "FFT"] {
+        let cpu = all
+            .iter()
+            .find(|p| p.kernel == k && p.implementation == "CPU" && p.model == "femu")
+            .unwrap();
+        let cgra = all
+            .iter()
+            .find(|p| p.kernel == k && p.implementation == "CGRA" && p.model == "femu")
+            .unwrap();
+        println!(
+            "{:>6} | {:>10.3} {:>10.3} | {:>10.3} {:>10.3}",
+            k,
+            1.0,
+            cgra.time_s / cpu.time_s,
+            1.0,
+            cgra.energy_mj / cpu.energy_mj,
+        );
+    }
+
+    // shape checks
+    assert!(all.iter().all(|p| p.validated));
+    let speedup = |k: &str| {
+        let cpu = all.iter().find(|p| p.kernel == k && p.implementation == "CPU" && p.model == "femu").unwrap();
+        let cgra = all.iter().find(|p| p.kernel == k && p.implementation == "CGRA" && p.model == "femu").unwrap();
+        cpu.cycles as f64 / cgra.cycles as f64
+    };
+    let (mm, conv, fft) = (speedup("MM"), speedup("CONV"), speedup("FFT"));
+    println!("\nspeedups: MM {mm:.2}x  CONV {conv:.2}x  FFT {fft:.2}x");
+    assert!(conv > mm && conv > fft, "CONV must gain most (paper shape)");
+    println!("shape check OK: CGRA wins everywhere, CONV gains most");
+}

@@ -1,0 +1,38 @@
+//! Tiny benchmark harness (criterion is unavailable offline; see
+//! Cargo.toml). Each bench binary is `harness = false` and uses these
+//! helpers to time emulator wall-clock and print paper-style tables.
+
+use std::time::Instant;
+
+/// Wall-time one closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` `reps` times, reporting the minimum wall time (least-noise
+/// estimator) and the last result.
+pub fn time_best<T>(reps: usize, mut f: impl FnMut() -> T) -> (T, f64) {
+    assert!(reps > 0);
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..reps {
+        let (r, s) = time(&mut f);
+        best = best.min(s);
+        out = Some(r);
+    }
+    (out.unwrap(), best)
+}
+
+/// Engineering formatting (duplicated from femu::util for bench
+/// independence).
+pub fn eng(x: f64) -> String {
+    femu::util::eng(x)
+}
+
+pub fn header(title: &str) {
+    println!("\n==============================================================");
+    println!("{title}");
+    println!("==============================================================");
+}

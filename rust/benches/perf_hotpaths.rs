@@ -1,0 +1,157 @@
+//! Hot-path microbenchmarks — the measurement tool for the §Perf pass
+//! (EXPERIMENTS.md §Perf records before/after from this bench).
+//!
+//! * ISS throughput (emulated instructions / wall second) on a dense ALU
+//!   loop, a memory-heavy loop, and the Fig 5 MM kernel;
+//! * event-driven sleep fast-forward rate (emulated cycles / wall s);
+//! * CGRA emulator throughput (contexts / wall s);
+//! * PJRT artifact execution latency.
+//!
+//! `cargo bench --bench perf_hotpaths`
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use femu::isa::assemble;
+use femu::soc::{Soc, SocConfig};
+
+fn iss_throughput(name: &str, src: &str) {
+    let prog = assemble(src).unwrap();
+    let (result, secs) = harness::time_best(3, || {
+        let mut soc = Soc::new(SocConfig::default());
+        soc.load(&prog).unwrap();
+        soc.run_to_halt(1 << 34);
+        (soc.stats.instructions, soc.now)
+    });
+    let (instr, cycles) = result;
+    println!(
+        "{name:<18} {:>12} instr in {:>8}s -> {:>10} instr/s ({} emu cycles)",
+        instr,
+        harness::eng(secs),
+        harness::eng(instr as f64 / secs),
+        harness::eng(cycles as f64),
+    );
+}
+
+fn main() {
+    harness::header("L3 hot paths: instruction-set simulator");
+    iss_throughput(
+        "alu_loop",
+        r#"
+        _start:
+            li t0, 2000000
+        loop:
+            addi t1, t1, 3
+            xor  t2, t1, t0
+            slli t3, t2, 1
+            sub  t4, t3, t1
+            addi t0, t0, -1
+            bnez t0, loop
+            ebreak
+        "#,
+    );
+    iss_throughput(
+        "mem_loop",
+        r#"
+        _start:
+            li t0, 500000
+            li t5, 0x20000      # bank-1 buffer base
+        loop:
+            sw t0, 0(t5)
+            lw t1, 0(t5)
+            sw t1, 4(t5)
+            lw t2, 4(t5)
+            addi t0, t0, -1
+            bnez t0, loop
+            ebreak
+        "#,
+    );
+    iss_throughput("mul_div_loop",
+        r#"
+        _start:
+            li t0, 200000
+        loop:
+            mul  t1, t0, t0
+            mulh t2, t1, t0
+            div  t3, t1, t0
+            addi t0, t0, -1
+            bnez t0, loop
+            ebreak
+        "#,
+    );
+
+    harness::header("L3 hot paths: event-driven sleep fast-forward");
+    {
+        let prog = assemble(
+            r#"
+            .equ TIMER, 0x20000200
+            _start:
+                la  t0, handler
+                csrw mtvec, t0
+                li  t0, TIMER
+                li  t1, 0x7FFFFFFF   # far-future timer (~7.3 emulated years)
+                sw  t1, 8(t0)
+                li  t1, 0x10000000
+                sw  t1, 12(t0)
+                li  t1, 1
+                sw  t1, 16(t0)
+                li  t1, 0x80
+                csrw mie, t1
+                csrsi mstatus, 8
+                wfi
+                ebreak
+            handler:
+                ebreak
+            "#,
+        )
+        .unwrap();
+        let (cycles, secs) = harness::time_best(3, || {
+            let mut soc = Soc::new(SocConfig::default());
+            soc.load(&prog).unwrap();
+            soc.run_to_halt(1 << 62);
+            soc.now
+        });
+        println!(
+            "sleep fast-forward: {} emulated cycles in {}s -> {} cycles/s",
+            harness::eng(cycles as f64),
+            harness::eng(secs),
+            harness::eng(cycles as f64 / secs),
+        );
+    }
+
+    harness::header("CGRA emulator throughput");
+    {
+        use femu::cgra::{kernels, CgraCore};
+        let passes = kernels::conv2d_passes(0, 2048 * 4, 4096 * 4, 16, 16, 3, 8, 3, 3);
+        let (run, secs) = harness::time_best(3, || {
+            let mut core = CgraCore::new();
+            let mut mem = vec![0u32; 16384];
+            kernels::run_passes(&mut core, &passes, &mut mem).unwrap()
+        });
+        println!(
+            "conv2d mapping: {} contexts (+{} stalls) in {}s -> {} contexts/s",
+            run.contexts,
+            run.mem_stalls,
+            harness::eng(secs),
+            harness::eng(run.contexts as f64 / secs),
+        );
+    }
+
+    harness::header("PJRT artifact execution latency (virtualized accelerator)");
+    {
+        use femu::runtime::{Runtime, TensorI32};
+        let rt = Runtime::load("artifacts").expect("make artifacts");
+        let mut rng = femu::util::Rng::new(1);
+        let a = TensorI32::new(vec![121, 16], rng.vec_i32(121 * 16, -99, 99)).unwrap();
+        let b = TensorI32::new(vec![16, 4], rng.vec_i32(16 * 4, -99, 99)).unwrap();
+        let (_, secs) = harness::time_best(20, || rt.execute("matmul", &[a.clone(), b.clone()]).unwrap());
+        println!("matmul artifact: {}s/exec", harness::eng(secs));
+        let re = TensorI32::new(vec![512], rng.vec_i32(512, -99, 99)).unwrap();
+        let im = TensorI32::new(vec![512], rng.vec_i32(512, -99, 99)).unwrap();
+        let mut args = vec![re, im];
+        args.extend(femu::virt::accel::fft_table_tensors(512));
+        let (_, secs) = harness::time_best(20, || rt.execute("fft512", &args).unwrap());
+        println!("fft512 artifact: {}s/exec", harness::eng(secs));
+    }
+    println!("\nperf_hotpaths done");
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate **Table I** — the FPGA-platform feature comparison,
+//! plus the §II filtering narrative (features applied in descending
+//! support order until only FEMU survives).
+//!
+//! `cargo bench --bench table1`
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use femu::coordinator::table1::{filtering_steps, render_markdown, Feature, TABLE1};
+
+fn main() {
+    harness::header("Table I: comparison of relevant FPGA-based platforms");
+    print!("{}", render_markdown());
+
+    harness::header("\u{a7}II filtering argument");
+    for (feature, survivors) in filtering_steps() {
+        println!("after `{}`: {} platform(s): {}", feature.name(), survivors.len(), survivors.join(", "));
+    }
+
+    // structural checks: the table's headline claims
+    let full_support: Vec<_> =
+        TABLE1.iter().filter(|r| Feature::ALL.iter().all(|&f| r.supports(f))).collect();
+    assert_eq!(full_support.len(), 1);
+    assert_eq!(full_support[0].name, "FEMU (this work)");
+    let steps = filtering_steps();
+    assert_eq!(steps.last().unwrap().1, vec!["FEMU (this work)"]);
+    println!("\nshape check OK: FEMU is the only platform with all five features");
+}

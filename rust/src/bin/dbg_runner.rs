@@ -1,0 +1,27 @@
+// debug: run candidate HLOs and compare against numpy-dumped expectations
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    for name in ["bitrev", "stage", "q15"] {
+        let proto = xla::HloModuleProto::from_text_file(&format!("/tmp/dbg_{name}.hlo.txt"))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let x: Vec<i32> = (0..512).collect();
+        let lit = xla::Literal::vec1(&x);
+        let result = exe.execute::<xla::Literal>(&[lit]).map_err(|e| anyhow::anyhow!("{e}"))?[0][0]
+            .to_literal_sync().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let got = out.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        // read expected from .npy (skip 128-byte header-ish: parse minimal)
+        let raw = std::fs::read(format!("/tmp/dbg_{name}_want.npy"))?;
+        let hdr_len = u16::from_le_bytes([raw[8], raw[9]]) as usize + 10;
+        let want: Vec<i32> = raw[hdr_len..].chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        let ok = got == want;
+        println!("{name}: {}", if ok { "MATCH" } else { "MISMATCH" });
+        if !ok {
+            println!("  got[0..16]  = {:?}", &got[..16]);
+            println!("  want[0..16] = {:?}", &want[..16]);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! RH↔CS bridge: the mailbox doorbell for accelerator virtualization.
+//!
+//! Paper §IV-B: "X-HEEP writes configuration parameters and input data to
+//! predefined DRAM regions through an OBI-AXI bridge ... the accelerator
+//! software model running on the PS monitors these memory regions,
+//! executes the required computations, and writes the results back."
+//!
+//! The data path is the bridge *window* (guest loads/stores at
+//! [`crate::bus::BRIDGE_BASE`] reach CS DRAM with AXI-crossing latency).
+//! This module is the control path: a doorbell register block. The guest
+//! lays out `[kernel_id, n_args, args..]` at the mailbox offset in CS
+//! DRAM, rings [`regs::DOORBELL`], and sleeps; the SoC surfaces the ring
+//! to the coordinator, the CS service ([`crate::virt::accel`]) executes
+//! the AOT artifact via PJRT and schedules completion after the modeled
+//! CS turnaround latency, which raises the MAILBOX interrupt.
+
+/// Register offsets within the mailbox window.
+pub mod regs {
+    pub const DOORBELL: u32 = 0x00; // W: ring (bit0)
+    pub const STATUS: u32 = 0x04; // R: bit0 done, bit1 busy
+    pub const CTRL: u32 = 0x08; // R/W: bit0 irq enable
+    /// R/W: guest-chosen byte offset of the request block within CS DRAM.
+    pub const REQ_OFF: u32 = 0x0C;
+}
+
+/// Fixed request-block layout (word offsets within the request block in
+/// CS DRAM): `[kernel_id, n_args, arg0, arg1, ...]`.
+pub const MAX_ARGS: usize = 12;
+
+#[derive(Clone, Debug, Default)]
+pub struct Mailbox {
+    irq_enabled: bool,
+    req_off: u32,
+    /// Rung but not yet picked up by the coordinator.
+    pending: bool,
+    /// Completion time scheduled by the CS service.
+    done_at: Option<u64>,
+    /// Completed (STATUS.done reads 1 until the next ring).
+    done: bool,
+    irq_level: bool,
+}
+
+impl Mailbox {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn read(&self, offset: u32, now: u64) -> u32 {
+        match offset {
+            regs::STATUS => {
+                let busy = self.pending || self.done_at.map(|t| now < t).unwrap_or(false);
+                (self.done as u32) | ((busy as u32) << 1)
+            }
+            regs::CTRL => self.irq_enabled as u32,
+            regs::REQ_OFF => self.req_off,
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, offset: u32, value: u32) {
+        match offset {
+            regs::DOORBELL => {
+                if value & 1 != 0 && !self.pending && self.done_at.is_none() {
+                    self.pending = true;
+                    self.done = false;
+                    self.irq_level = false;
+                }
+            }
+            regs::CTRL => self.irq_enabled = value & 1 != 0,
+            regs::REQ_OFF => self.req_off = value,
+            _ => {}
+        }
+    }
+
+    /// Coordinator side: take the pending ring (request block offset).
+    pub fn take_pending(&mut self) -> Option<u32> {
+        if self.pending {
+            self.pending = false;
+            Some(self.req_off)
+        } else {
+            None
+        }
+    }
+
+    /// CS service: schedule completion at `at` (results already written to
+    /// CS DRAM — the guest must not read them before STATUS.done).
+    pub fn schedule_completion(&mut self, at: u64) {
+        self.done_at = Some(at);
+    }
+
+    /// SoC tick: fire completion when due.
+    pub fn tick(&mut self, now: u64) {
+        if let Some(t) = self.done_at {
+            if now >= t {
+                self.done_at = None;
+                self.done = true;
+                if self.irq_enabled {
+                    self.irq_level = true;
+                }
+            }
+        }
+    }
+
+    pub fn irq_pending(&self) -> bool {
+        self.irq_level
+    }
+
+    pub fn clear_irq(&mut self) {
+        self.irq_level = false;
+    }
+
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        self.done_at.map(|t| t.max(now))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doorbell_lifecycle() {
+        let mut m = Mailbox::new();
+        m.write(regs::CTRL, 1);
+        m.write(regs::REQ_OFF, 0x8000);
+        m.write(regs::DOORBELL, 1);
+        assert_eq!(m.read(regs::STATUS, 0), 0b10);
+        assert_eq!(m.take_pending(), Some(0x8000));
+        assert_eq!(m.take_pending(), None);
+        m.schedule_completion(500);
+        assert_eq!(m.read(regs::STATUS, 100), 0b10); // busy until 500
+        m.tick(499);
+        assert!(!m.irq_pending());
+        m.tick(500);
+        assert!(m.irq_pending());
+        assert_eq!(m.read(regs::STATUS, 500), 0b01);
+    }
+
+    #[test]
+    fn ring_while_busy_ignored() {
+        let mut m = Mailbox::new();
+        m.write(regs::DOORBELL, 1);
+        m.take_pending().unwrap();
+        m.schedule_completion(100);
+        m.write(regs::DOORBELL, 1); // busy: ignored
+        assert_eq!(m.take_pending(), None);
+    }
+
+    #[test]
+    fn no_irq_when_disabled() {
+        let mut m = Mailbox::new();
+        m.write(regs::DOORBELL, 1);
+        m.take_pending().unwrap();
+        m.schedule_completion(10);
+        m.tick(10);
+        assert!(!m.irq_pending());
+        assert_eq!(m.read(regs::STATUS, 10) & 1, 1);
+    }
+}

@@ -1,0 +1,369 @@
+//! System interconnect: the OBI-style crossbar of the emulated X-HEEP
+//! host, plus the address map.
+//!
+//! Address map (see DESIGN.md §4):
+//!
+//! ```text
+//! 0x0000_0000 .. banks*bank_size   SRAM banks (code + data)
+//! 0x2000_0000 .. +0x1000           peripherals (see periph::map)
+//! 0x4000_0000 .. +cs_dram_size     bridge window into CS DRAM
+//! ```
+//!
+//! Wait-state model: SRAM 0 extra cycles, peripheral registers
+//! [`PERIPH_WAIT`], bridge window [`BRIDGE_WAIT`] (the OBI→AXI→DDR
+//! crossing of §IV-B), plus device-specific costs (SPI flash word timing).
+
+use crate::bridge::Mailbox;
+use crate::cgra::CgraDevice;
+use crate::cpu::{BusAccess, BusFault, Size};
+use crate::mem::{CsDram, MemError, SramBank};
+use crate::periph::{map, Dma, Gpio, PowerCtrl, SpiAdc, SpiFlash, Timer, Uart};
+
+/// Base of the SRAM bank region.
+pub const SRAM_BASE: u32 = 0x0000_0000;
+/// Base of the peripheral region.
+pub const PERIPH_BASE: u32 = 0x2000_0000;
+/// Base of the bridge window into CS DRAM.
+pub const BRIDGE_BASE: u32 = 0x4000_0000;
+
+/// Extra wait states for peripheral register access.
+pub const PERIPH_WAIT: u32 = 1;
+/// Extra wait states for bridge-window access (OBI→AXI→DDR crossing).
+pub const BRIDGE_WAIT: u32 = 20;
+
+/// The interconnect and everything behind it.
+pub struct Bus {
+    pub banks: Vec<SramBank>,
+    pub bank_size: u32,
+    /// log2(bank_size): the hot-path address decode uses shift/mask
+    /// instead of div/mod (§Perf opt 3).
+    bank_shift: u32,
+    bank_mask: u32,
+    pub uart: Uart,
+    pub gpio: Gpio,
+    pub timer: Timer,
+    pub spi_adc: SpiAdc,
+    pub spi_flash: SpiFlash,
+    pub dma: Dma,
+    pub power: PowerCtrl,
+    pub cgra_dev: CgraDevice,
+    pub mailbox: Mailbox,
+    pub cs_dram: CsDram,
+    /// Set by any peripheral register write; the SoC uses it to skip the
+    /// write-triggered half of its post-step work on the (overwhelmingly
+    /// common) steps that never touch a device (§Perf opt 2).
+    pub periph_touched: bool,
+}
+
+impl Bus {
+    pub fn new(
+        num_banks: usize,
+        bank_size: u32,
+        cs_dram_size: usize,
+        flash: SpiFlash,
+    ) -> Self {
+        assert!(num_banks > 0 && bank_size.is_power_of_two());
+        Self {
+            banks: (0..num_banks).map(|_| SramBank::new(bank_size as usize)).collect(),
+            bank_size,
+            bank_shift: bank_size.trailing_zeros(),
+            bank_mask: bank_size - 1,
+            uart: Uart::new(),
+            gpio: Gpio::new(),
+            timer: Timer::new(),
+            spi_adc: SpiAdc::new(),
+            spi_flash: flash,
+            dma: Dma::new(),
+            power: PowerCtrl::new(num_banks),
+            cgra_dev: CgraDevice::new(),
+            mailbox: Mailbox::new(),
+            cs_dram: CsDram::new(cs_dram_size),
+            periph_touched: false,
+        }
+    }
+
+    fn sram_end(&self) -> u32 {
+        SRAM_BASE + self.banks.len() as u32 * self.bank_size
+    }
+
+    /// Which bank serves `addr`, if any.
+    #[inline]
+    pub fn bank_index(&self, addr: u32) -> Option<usize> {
+        if (SRAM_BASE..self.sram_end()).contains(&addr) {
+            Some(((addr - SRAM_BASE) >> self.bank_shift) as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Offset within a bank (shift/mask fast path).
+    #[inline]
+    pub fn bank_offset(&self, addr: u32) -> usize {
+        ((addr - SRAM_BASE) & self.bank_mask) as usize
+    }
+
+    fn mem_err(_e: MemError) -> BusFault {
+        match _e {
+            MemError::NotPowered(_) => BusFault::NotPowered,
+            MemError::OutOfRange => BusFault::Access,
+        }
+    }
+
+    /// Debug/CS access: read a word anywhere without side effects on
+    /// devices (SRAM and bridge window only). Ignores power states — this
+    /// is the debugger-virtualization path.
+    pub fn debug_read32(&self, addr: u32) -> Option<u32> {
+        if let Some(i) = self.bank_index(addr) {
+            let off = self.bank_offset(addr);
+            let b = self.banks[i].dump(off, 4).ok()?;
+            return Some(u32::from_le_bytes(b.try_into().unwrap()));
+        }
+        if addr >= BRIDGE_BASE {
+            let off = (addr - BRIDGE_BASE) as usize;
+            return self.cs_dram.read32(off).ok();
+        }
+        None
+    }
+
+    /// Debug/CS access: write a word (SRAM / bridge window), ignoring
+    /// power states.
+    pub fn debug_write32(&mut self, addr: u32, value: u32) -> Option<()> {
+        if let Some(i) = self.bank_index(addr) {
+            let off = self.bank_offset(addr);
+            return self.banks[i].load(off, &value.to_le_bytes()).ok();
+        }
+        if addr >= BRIDGE_BASE {
+            let off = (addr - BRIDGE_BASE) as usize;
+            return self.cs_dram.write32(off, value).ok();
+        }
+        None
+    }
+
+    fn periph_read(&mut self, offset: u32, now: u64) -> Result<(u32, u32), BusFault> {
+        let dev = offset & !(map::WINDOW - 1);
+        let reg = offset & (map::WINDOW - 1);
+        let v = match dev {
+            map::UART => self.uart.read(reg),
+            map::GPIO => self.gpio.read(reg),
+            map::TIMER => self.timer.read(reg, now),
+            map::SPI_ADC => {
+                let v = self.spi_adc.read(reg, now);
+                // popping a sample costs the SPI word-transfer time
+                if reg == crate::periph::spi_adc::regs::RXDATA {
+                    return Ok((v, PERIPH_WAIT + crate::periph::spi_adc::WORD_CYCLES));
+                }
+                v
+            }
+            map::SPI_FLASH => {
+                let (v, wait) = self.spi_flash.read(reg);
+                return Ok((v, PERIPH_WAIT + wait));
+            }
+            map::DMA => self.dma.read(reg),
+            map::POWER => self.power.read(reg),
+            map::CGRA => self.cgra_dev.read(reg, now),
+            map::MAILBOX => self.mailbox.read(reg, now),
+            _ => return Err(BusFault::Access),
+        };
+        Ok((v, PERIPH_WAIT))
+    }
+
+    fn periph_write(&mut self, offset: u32, value: u32, now: u64) -> Result<u32, BusFault> {
+        self.periph_touched = true;
+        let dev = offset & !(map::WINDOW - 1);
+        let reg = offset & (map::WINDOW - 1);
+        match dev {
+            map::UART => self.uart.write(reg, value),
+            map::GPIO => self.gpio.write(reg, value),
+            map::TIMER => self.timer.write(reg, value),
+            map::SPI_ADC => self.spi_adc.write(reg, value),
+            map::SPI_FLASH => {
+                let wait = self.spi_flash.write(reg, value);
+                return Ok(PERIPH_WAIT + wait);
+            }
+            map::DMA => self.dma.write(reg, value, now),
+            map::POWER => self.power.write(reg, value),
+            map::CGRA => self.cgra_dev.write(reg, value),
+            map::MAILBOX => self.mailbox.write(reg, value),
+            _ => return Err(BusFault::Access),
+        }
+        Ok(PERIPH_WAIT)
+    }
+
+    /// Fast external interrupt lines (see [`crate::periph::irq`]),
+    /// recomputed by the SoC after every step/event.
+    pub fn fast_irq_lines(&self, now: u64) -> u32 {
+        use crate::periph::irq;
+        let mut lines = 0u32;
+        if self.spi_adc.irq_pending(now) {
+            lines |= 1 << irq::ADC;
+        }
+        if self.dma.irq_pending() {
+            lines |= 1 << irq::DMA;
+        }
+        if self.cgra_dev.irq_pending() {
+            lines |= 1 << irq::CGRA;
+        }
+        if self.mailbox.irq_pending() {
+            lines |= 1 << irq::MAILBOX;
+        }
+        lines
+    }
+}
+
+impl BusAccess for Bus {
+    #[inline]
+    fn fetch32(&mut self, addr: u32, _now: u64) -> Result<(u32, u32), BusFault> {
+        // instruction fetch only from SRAM (no execute-from-periph/bridge)
+        let i = self.bank_index(addr).ok_or(BusFault::Access)?;
+        let off = self.bank_offset(addr);
+        let w = self.banks[i].fetch32(off).map_err(Self::mem_err)?;
+        Ok((w, 0))
+    }
+
+    #[inline]
+    fn read(&mut self, addr: u32, size: Size, now: u64) -> Result<(u32, u32), BusFault> {
+        if let Some(i) = self.bank_index(addr) {
+            let off = self.bank_offset(addr);
+            let bank = &mut self.banks[i];
+            let v = match size {
+                Size::Byte => bank.read8(off).map(|v| v as u32),
+                Size::Half => bank.read16(off).map(|v| v as u32),
+                Size::Word => bank.read32(off),
+            }
+            .map_err(Self::mem_err)?;
+            return Ok((v, 0));
+        }
+        if (PERIPH_BASE..PERIPH_BASE + map::REGION).contains(&addr) {
+            // registers are word-access only
+            if size != Size::Word {
+                return Err(BusFault::Access);
+            }
+            return self.periph_read(addr - PERIPH_BASE, now);
+        }
+        if addr >= BRIDGE_BASE {
+            let off = (addr - BRIDGE_BASE) as usize;
+            let v = match size {
+                Size::Byte => self.cs_dram.read8(off).map(|v| v as u32),
+                Size::Half => self.cs_dram.read16(off).map(|v| v as u32),
+                Size::Word => self.cs_dram.read32(off),
+            }
+            .map_err(Self::mem_err)?;
+            return Ok((v, BRIDGE_WAIT));
+        }
+        Err(BusFault::Access)
+    }
+
+    #[inline]
+    fn write(&mut self, addr: u32, size: Size, value: u32, now: u64) -> Result<u32, BusFault> {
+        if let Some(i) = self.bank_index(addr) {
+            let off = self.bank_offset(addr);
+            let bank = &mut self.banks[i];
+            match size {
+                Size::Byte => bank.write8(off, value as u8),
+                Size::Half => bank.write16(off, value as u16),
+                Size::Word => bank.write32(off, value),
+            }
+            .map_err(Self::mem_err)?;
+            return Ok(0);
+        }
+        if (PERIPH_BASE..PERIPH_BASE + map::REGION).contains(&addr) {
+            if size != Size::Word {
+                return Err(BusFault::Access);
+            }
+            return self.periph_write(addr - PERIPH_BASE, value, now);
+        }
+        if addr >= BRIDGE_BASE {
+            let off = (addr - BRIDGE_BASE) as usize;
+            match size {
+                Size::Byte => self.cs_dram.write8(off, value as u8),
+                Size::Half => self.cs_dram.write16(off, value as u16),
+                Size::Word => self.cs_dram.write32(off, value),
+            }
+            .map_err(Self::mem_err)?;
+            return Ok(BRIDGE_WAIT);
+        }
+        Err(BusFault::Access)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::periph::FlashTiming;
+
+    fn bus() -> Bus {
+        Bus::new(2, 0x2_0000, 1 << 20, SpiFlash::new(1 << 16, FlashTiming::virtualized()))
+    }
+
+    #[test]
+    fn sram_rw_across_banks() {
+        let mut b = bus();
+        b.write(0x0000_0004, Size::Word, 0xAA55, 0).unwrap();
+        b.write(0x0002_0008, Size::Word, 0x1234, 0).unwrap(); // bank 1
+        assert_eq!(b.read(0x0000_0004, Size::Word, 0).unwrap().0, 0xAA55);
+        assert_eq!(b.read(0x0002_0008, Size::Word, 0).unwrap().0, 0x1234);
+        assert_eq!(b.bank_index(0x0002_0008), Some(1));
+    }
+
+    #[test]
+    fn periph_access_and_waits() {
+        let mut b = bus();
+        let uart_tx = PERIPH_BASE + map::UART;
+        let w = b.write(uart_tx, Size::Word, b'x' as u32, 0).unwrap();
+        assert_eq!(w, PERIPH_WAIT);
+        assert_eq!(b.uart.peek(), b"x");
+        // byte access to registers is a fault
+        assert!(b.write(uart_tx, Size::Byte, 0, 0).is_err());
+    }
+
+    #[test]
+    fn bridge_window_reaches_cs_dram() {
+        let mut b = bus();
+        let addr = BRIDGE_BASE + 0x100;
+        let w = b.write(addr, Size::Word, 77, 0).unwrap();
+        assert_eq!(w, BRIDGE_WAIT);
+        assert_eq!(b.cs_dram.read32(0x100).unwrap(), 77);
+        let (v, w) = b.read(addr, Size::Word, 0).unwrap();
+        assert_eq!((v, w), (77, BRIDGE_WAIT));
+    }
+
+    #[test]
+    fn unmapped_faults() {
+        let mut b = bus();
+        assert!(b.read(0x1000_0000, Size::Word, 0).is_err());
+        assert!(b.fetch32(PERIPH_BASE, 0).is_err());
+        assert!(b.fetch32(BRIDGE_BASE, 0).is_err());
+    }
+
+    #[test]
+    fn flash_word_cost_propagates() {
+        let mut b = bus();
+        use crate::periph::spi_flash::regs as f;
+        let base = PERIPH_BASE + map::SPI_FLASH;
+        b.write(base + f::ADDR, Size::Word, 0, 0).unwrap();
+        let (_, wait) = b.read(base + f::DATA, Size::Word, 0).unwrap();
+        assert_eq!(wait, PERIPH_WAIT + FlashTiming::virtualized().cycles_per_word);
+    }
+
+    #[test]
+    fn debug_access_ignores_power_state() {
+        let mut b = bus();
+        b.write(0x10, Size::Word, 42, 0).unwrap();
+        b.banks[0].set_state(crate::perfmon::PowerState::Retention);
+        assert!(b.read(0x10, Size::Word, 0).is_err());
+        assert_eq!(b.debug_read32(0x10), Some(42));
+        b.debug_write32(0x14, 7).unwrap();
+        b.banks[0].set_state(crate::perfmon::PowerState::Active);
+        assert_eq!(b.read(0x14, Size::Word, 0).unwrap().0, 7);
+    }
+
+    #[test]
+    fn fast_irq_aggregation() {
+        let mut b = bus();
+        assert_eq!(b.fast_irq_lines(0), 0);
+        b.spi_adc.configure_stream(4, 100, 0);
+        b.spi_adc.refill(&[1, 2, 3, 4]);
+        b.spi_adc.write(crate::periph::spi_adc::regs::CTRL, 0b11);
+        assert_eq!(b.fast_irq_lines(0), 1 << crate::periph::irq::ADC);
+    }
+}

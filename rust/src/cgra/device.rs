@@ -1,0 +1,205 @@
+//! Guest-visible CGRA control port (the accelerator's register file on
+//! the SoC bus).
+//!
+//! The guest programs kernel id + arguments, then writes START. The SoC
+//! (which owns both the CGRA core and the SRAM banks) services the launch:
+//! it builds the configuration passes, executes them over guest memory,
+//! and completes the launch at `now + total_cycles` — the CPU can WFI
+//! until the DONE interrupt, which is exactly the co-design flow the
+//! paper's design cycle prototypes (§III-B step 7).
+
+use super::CgraRun;
+
+/// Register offsets within the CGRA window.
+pub mod regs {
+    pub const STATUS: u32 = 0x00; // R: bit0 done, bit1 busy
+    pub const START: u32 = 0x04; // W: bit0 launches KERNEL with ARGs
+    pub const KERNEL: u32 = 0x08; // R/W: kernel id
+    pub const CYCLES_LO: u32 = 0x0C; // R: cycles of last completed run
+    pub const CYCLES_HI: u32 = 0x10; // R
+    pub const CTRL: u32 = 0x14; // R/W: bit0 irq enable
+    pub const ARG_BASE: u32 = 0x40; // R/W: ARG0.. at ARG_BASE + 4*i
+    pub const NUM_ARGS: usize = 10;
+}
+
+/// Kernel ids (KERNEL register values).
+pub mod kernel_id {
+    pub const MATMUL: u32 = 0;
+    pub const CONV2D: u32 = 1;
+    /// All FFT stages (guest must bit-reverse first).
+    pub const FFT: u32 = 2;
+}
+
+/// A launch the SoC must service.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaunchRequest {
+    pub kernel: u32,
+    pub args: [u32; regs::NUM_ARGS],
+}
+
+#[derive(Clone, Debug)]
+pub struct CgraDevice {
+    kernel: u32,
+    args: [u32; regs::NUM_ARGS],
+    irq_enabled: bool,
+    /// Launch awaiting SoC service.
+    pending: Option<LaunchRequest>,
+    /// Completion time of the in-flight run.
+    busy_until: Option<u64>,
+    /// Cycle count of the last completed run.
+    last_run: Option<CgraRun>,
+    irq_level: bool,
+}
+
+impl Default for CgraDevice {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CgraDevice {
+    pub fn new() -> Self {
+        Self {
+            kernel: 0,
+            args: [0; regs::NUM_ARGS],
+            irq_enabled: false,
+            pending: None,
+            busy_until: None,
+            last_run: None,
+            irq_level: false,
+        }
+    }
+
+    pub fn read(&mut self, offset: u32, now: u64) -> u32 {
+        match offset {
+            regs::STATUS => {
+                let busy = self.pending.is_some()
+                    || self.busy_until.map(|t| now < t).unwrap_or(false);
+                let done = !busy && self.last_run.is_some();
+                (done as u32) | ((busy as u32) << 1)
+            }
+            regs::KERNEL => self.kernel,
+            regs::CYCLES_LO => self.last_run.map(|r| r.total_cycles() as u32).unwrap_or(0),
+            regs::CYCLES_HI => {
+                self.last_run.map(|r| (r.total_cycles() >> 32) as u32).unwrap_or(0)
+            }
+            regs::CTRL => self.irq_enabled as u32,
+            o if (regs::ARG_BASE..regs::ARG_BASE + 4 * regs::NUM_ARGS as u32).contains(&o) => {
+                self.args[((o - regs::ARG_BASE) / 4) as usize]
+            }
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, offset: u32, value: u32) {
+        match offset {
+            regs::KERNEL => self.kernel = value,
+            regs::CTRL => self.irq_enabled = value & 1 != 0,
+            regs::START => {
+                if value & 1 != 0 && self.pending.is_none() && self.busy_until.is_none() {
+                    self.pending = Some(LaunchRequest { kernel: self.kernel, args: self.args });
+                    self.irq_level = false;
+                }
+            }
+            o if (regs::ARG_BASE..regs::ARG_BASE + 4 * regs::NUM_ARGS as u32).contains(&o) => {
+                self.args[((o - regs::ARG_BASE) / 4) as usize] = value;
+            }
+            _ => {}
+        }
+    }
+
+    /// SoC side: take a pending launch for servicing.
+    pub fn take_pending(&mut self) -> Option<LaunchRequest> {
+        self.pending.take()
+    }
+
+    /// SoC side: record the serviced run; the accelerator appears busy
+    /// until `now + run.total_cycles()`.
+    pub fn complete(&mut self, run: CgraRun, now: u64) {
+        self.busy_until = Some(now + run.total_cycles());
+        self.last_run = Some(run);
+    }
+
+    /// SoC side: called as time advances; fires the DONE irq when the run
+    /// finishes.
+    pub fn tick(&mut self, now: u64) {
+        if let Some(t) = self.busy_until {
+            if now >= t {
+                self.busy_until = None;
+                if self.irq_enabled {
+                    self.irq_level = true;
+                }
+            }
+        }
+    }
+
+    pub fn irq_pending(&self) -> bool {
+        self.irq_level
+    }
+
+    pub fn clear_irq(&mut self) {
+        self.irq_level = false;
+    }
+
+    /// Completion time for WFI fast-forwarding.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        self.busy_until.map(|t| t.max(now))
+    }
+
+    pub fn last_run(&self) -> Option<CgraRun> {
+        self.last_run
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(cycles: u64) -> CgraRun {
+        CgraRun { compute_cycles: cycles, config_cycles: 0, contexts: cycles, mem_stalls: 0 }
+    }
+
+    #[test]
+    fn launch_lifecycle() {
+        let mut d = CgraDevice::new();
+        d.write(regs::KERNEL, kernel_id::CONV2D, );
+        d.write(regs::ARG_BASE, 0x1000);
+        d.write(regs::ARG_BASE + 4, 0x2000);
+        d.write(regs::CTRL, 1);
+        d.write(regs::START, 1);
+        assert_eq!(d.read(regs::STATUS, 0), 0b10); // busy (pending)
+        let req = d.take_pending().unwrap();
+        assert_eq!(req.kernel, kernel_id::CONV2D);
+        assert_eq!(req.args[0], 0x1000);
+        d.complete(run(100), 10);
+        assert_eq!(d.read(regs::STATUS, 50), 0b10); // still busy
+        d.tick(110);
+        assert_eq!(d.read(regs::STATUS, 110), 0b01); // done
+        assert!(d.irq_pending());
+        d.clear_irq();
+        assert_eq!(d.read(regs::CYCLES_LO, 110), 100);
+    }
+
+    #[test]
+    fn start_while_busy_ignored() {
+        let mut d = CgraDevice::new();
+        d.write(regs::START, 1);
+        assert!(d.pending.is_some());
+        d.write(regs::KERNEL, 5);
+        d.write(regs::START, 1); // ignored: pending not yet serviced
+        let req = d.take_pending().unwrap();
+        assert_eq!(req.kernel, 0);
+        assert!(d.take_pending().is_none());
+    }
+
+    #[test]
+    fn no_irq_when_disabled() {
+        let mut d = CgraDevice::new();
+        d.write(regs::START, 1);
+        d.take_pending().unwrap();
+        d.complete(run(10), 0);
+        d.tick(10);
+        assert!(!d.irq_pending());
+        assert_eq!(d.read(regs::STATUS, 10), 0b01);
+    }
+}

@@ -1,0 +1,240 @@
+//! CGRA configuration-word ISA.
+//!
+//! Models an OpenEdgeCGRA-class array (paper ref [31]): a 4x4 torus of
+//! processing elements executing one configuration word each per cycle in
+//! lockstep. A configuration *context* is the set of per-PE words for one
+//! cycle; a kernel is a prologue, a two-level hardware loop (inner body ×
+//! `body_iterations`, then per-outer-iteration `outer` contexts, repeated
+//! `outer_iterations` times), and an epilogue — the loop structure the
+//! OpenEdgeCGRA sequencer's counters provide.
+//!
+//! Each PE has a 16-entry register file, an output register visible to
+//! its four torus neighbors on the *next* cycle, and a port into the
+//! array's shared memory masters (2 OBI ports into the SoC bus — see
+//! [`super::MEM_PORTS`]; concurrent memory ops beyond the port count
+//! serialize, which is what keeps load-heavy mappings from scaling
+//! linearly with PE count, the Fig 5 shape).
+
+/// Grid dimensions (4x4, as in OpenEdgeCGRA).
+pub const ROWS: usize = 4;
+pub const COLS: usize = 4;
+pub const NUM_PES: usize = ROWS * COLS;
+/// Registers per PE.
+pub const NUM_REGS: usize = 16;
+
+/// Operand source for a PE instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Src {
+    /// Own register.
+    Reg(u8),
+    /// The instruction's immediate field.
+    Imm,
+    /// Neighbor output registers (previous cycle's value, torus wrap).
+    North,
+    East,
+    South,
+    West,
+    /// This PE's row / column index (constants wired into the fabric).
+    Row,
+    Col,
+    /// The array's shared broadcast bus: PE (0,0)'s output register from
+    /// the previous cycle (used to fan one loaded operand out to all PEs,
+    /// e.g. the conv weights every PE multiplies by).
+    Bcast,
+    /// Constant zero.
+    Zero,
+}
+
+/// PE operation. Integer ops match the RV32/ref semantics bit-for-bit
+/// (wrap-around adds/muls, arithmetic shifts, Q15 multiply with 64-bit
+/// intermediate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Nop,
+    /// dst = a + b
+    Add,
+    /// dst = a - b
+    Sub,
+    /// dst = a * b (low 32)
+    Mul,
+    /// dst = (a * b) >> 15 with 64-bit intermediate (Q15 FU).
+    MulQ15,
+    /// dst = a >> b (arithmetic)
+    Sra,
+    /// dst = a >> b (logical)
+    Srl,
+    /// dst = a << b
+    Sll,
+    And,
+    Or,
+    Xor,
+    /// dst = (a < b) signed
+    Slt,
+    /// dst = a (move/select)
+    Mov,
+    /// dst = mem[a + b] (byte address; b is usually `Imm` or `Zero`).
+    Load,
+    /// dst = mem[a]; then the a-register += imm (post-increment
+    /// addressing; a must be `Src::Reg`).
+    LoadInc,
+    /// mem[a + imm] = b.
+    Store,
+    /// mem[a] = b; then the a-register += imm (a must be `Src::Reg`).
+    StoreInc,
+}
+
+impl Op {
+    /// True for ops that use a memory port (contention accounting).
+    pub fn is_mem(self) -> bool {
+        matches!(self, Op::Load | Op::LoadInc | Op::Store | Op::StoreInc)
+    }
+}
+
+/// One PE's configuration word for one context.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PeInstr {
+    pub op: Op,
+    /// Destination register (ignored for stores/Nop).
+    pub dst: u8,
+    pub a: Src,
+    pub b: Src,
+    pub imm: i32,
+}
+
+impl PeInstr {
+    pub const NOP: PeInstr = PeInstr { op: Op::Nop, dst: 0, a: Src::Zero, b: Src::Zero, imm: 0 };
+
+    pub fn new(op: Op, dst: u8, a: Src, b: Src, imm: i32) -> Self {
+        Self { op, dst, a, b, imm }
+    }
+}
+
+/// One cycle of configuration for the whole grid.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Context {
+    pub pe: [PeInstr; NUM_PES],
+}
+
+impl Context {
+    pub fn nops() -> Self {
+        Self { pe: [PeInstr::NOP; NUM_PES] }
+    }
+
+    /// Build with a closure over (row, col). Return [`PeInstr::NOP`] for
+    /// PEs that idle in this context.
+    pub fn from_fn(mut f: impl FnMut(usize, usize) -> PeInstr) -> Self {
+        let mut pe = [PeInstr::NOP; NUM_PES];
+        for r in 0..ROWS {
+            for c in 0..COLS {
+                pe[r * COLS + c] = f(r, c);
+            }
+        }
+        Self { pe }
+    }
+
+    /// Same instruction on every PE.
+    pub fn broadcast(ins: PeInstr) -> Self {
+        Self { pe: [ins; NUM_PES] }
+    }
+}
+
+/// A complete kernel configuration with the two-level hardware loop:
+///
+/// ```text
+/// prologue
+/// repeat outer_iterations:
+///     repeat body_iterations:
+///         body
+///     outer
+/// epilogue
+/// ```
+#[derive(Clone, Debug)]
+pub struct CgraProgram {
+    pub name: String,
+    pub prologue: Vec<Context>,
+    pub body: Vec<Context>,
+    pub body_iterations: u32,
+    /// Contexts run once per outer iteration, after the body loop
+    /// (pointer adjustments between tiles; empty for single-level loops).
+    pub outer: Vec<Context>,
+    pub outer_iterations: u32,
+    pub epilogue: Vec<Context>,
+}
+
+impl CgraProgram {
+    /// Single-level loop helper.
+    pub fn simple(
+        name: &str,
+        prologue: Vec<Context>,
+        body: Vec<Context>,
+        body_iterations: u32,
+        epilogue: Vec<Context>,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            prologue,
+            body,
+            body_iterations,
+            outer: Vec::new(),
+            outer_iterations: 1,
+            epilogue,
+        }
+    }
+
+    /// Total configuration words (for the reconfiguration-cost model).
+    pub fn config_words(&self) -> usize {
+        (self.prologue.len() + self.body.len() + self.outer.len() + self.epilogue.len()) * NUM_PES
+    }
+
+    /// Contexts executed (ignoring memory stalls).
+    pub fn contexts_executed(&self) -> u64 {
+        self.prologue.len() as u64
+            + self.outer_iterations as u64
+                * (self.body.len() as u64 * self.body_iterations as u64 + self.outer.len() as u64)
+            + self.epilogue.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_from_fn_layout() {
+        let ctx = Context::from_fn(|r, c| {
+            PeInstr::new(Op::Mov, 0, Src::Imm, Src::Zero, (r * 10 + c) as i32)
+        });
+        assert_eq!(ctx.pe[0].imm, 0);
+        assert_eq!(ctx.pe[5].imm, 11); // r=1, c=1
+        assert_eq!(ctx.pe[15].imm, 33);
+    }
+
+    #[test]
+    fn program_accounting_two_level() {
+        let p = CgraProgram {
+            name: "t".into(),
+            prologue: vec![Context::nops(); 2],
+            body: vec![Context::nops(); 3],
+            body_iterations: 10,
+            outer: vec![Context::nops(); 1],
+            outer_iterations: 5,
+            epilogue: vec![Context::nops()],
+        };
+        assert_eq!(p.contexts_executed(), 2 + 5 * (30 + 1) + 1);
+        assert_eq!(p.config_words(), 7 * 16);
+    }
+
+    #[test]
+    fn simple_constructor() {
+        let p = CgraProgram::simple("s", vec![], vec![Context::nops()], 4, vec![]);
+        assert_eq!(p.contexts_executed(), 4);
+        assert_eq!(p.outer_iterations, 1);
+    }
+
+    #[test]
+    fn mem_op_classification() {
+        assert!(Op::LoadInc.is_mem());
+        assert!(Op::Store.is_mem());
+        assert!(!Op::MulQ15.is_mem());
+    }
+}

@@ -1,0 +1,226 @@
+//! CGRA mapping for INT32 valid conv2d (Fig 5 "CONV").
+//!
+//! Output-stationary spatial mapping: each active PE (r, c) owns output
+//! pixel (ty0 + r, tile_x*4 + c); the unrolled tap loop (KH*KW*Cin
+//! load/load/mul/add quads with constant immediate offsets) runs inside
+//! the body, the body loop walks output channels (weights advance by one
+//! filter per iteration), and the outer loop walks column tiles (constant
+//! x/y pointer strides). One pass per (row-tile, full/remainder column
+//! block) — the launch sequence a static mapper would emit.
+//!
+//! Register map per PE: R0 acc, R1 x_ptr (top-left of this PE's patch),
+//! R2 w_ptr (current filter), R3 y_ptr (current output element),
+//! R4 x_val, R5 w_val, R6 product.
+
+use crate::cgra::isa::{CgraProgram, Context, Op, PeInstr, Src, COLS, ROWS};
+
+/// Generate the passes for y = conv2d(x, w), 'valid', stride 1.
+/// x: (h, w, cin) HWC; wts: (f, kh, kw, cin); y: (oh, ow, f) HWC.
+/// All base addresses are byte addresses of i32 arrays.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_passes(
+    x_base: u32,
+    w_base: u32,
+    y_base: u32,
+    h: usize,
+    w: usize,
+    cin: usize,
+    f: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<CgraProgram> {
+    assert!(h >= kh && w >= kw && cin > 0 && f > 0);
+    let oh = h - kh + 1;
+    let ow = w - kw + 1;
+    let mut passes = Vec::new();
+    let full_col_tiles = ow / COLS;
+    let rem_cols = ow % COLS;
+    for ty0 in (0..oh).step_by(ROWS) {
+        let active_rows = ROWS.min(oh - ty0);
+        if full_col_tiles > 0 {
+            passes.push(gen_pass(
+                x_base,
+                w_base,
+                y_base,
+                w,
+                cin,
+                f,
+                kh,
+                kw,
+                ow,
+                ty0,
+                active_rows,
+                0,
+                COLS,
+                full_col_tiles as u32,
+            ));
+        }
+        if rem_cols > 0 {
+            passes.push(gen_pass(
+                x_base,
+                w_base,
+                y_base,
+                w,
+                cin,
+                f,
+                kh,
+                kw,
+                ow,
+                ty0,
+                active_rows,
+                full_col_tiles * COLS,
+                rem_cols,
+                1,
+            ));
+        }
+    }
+    passes
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gen_pass(
+    x_base: u32,
+    w_base: u32,
+    y_base: u32,
+    w: usize,
+    cin: usize,
+    f: usize,
+    kh: usize,
+    kw: usize,
+    ow: usize,
+    ty0: usize,
+    active_rows: usize,
+    tx0: usize,
+    active_cols: usize,
+    col_tiles: u32,
+) -> CgraProgram {
+    let active = |r: usize, c: usize| r < active_rows && c < active_cols;
+    let pe = PeInstr::new;
+    let filter_words = kh * kw * cin;
+
+    let prologue = vec![
+        // x_ptr: top-left of the receptive field of pixel (ty0+r, tx0+c)
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            let off = ((ty0 + r) * w + (tx0 + c)) * cin * 4;
+            pe(Op::Mov, 1, Src::Imm, Src::Zero, (x_base as usize + off) as i32)
+        }),
+        // w_ptr: filter 0
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Mov, 2, Src::Imm, Src::Zero, w_base as i32)
+        }),
+        // y_ptr: (ty0+r, tx0+c, f=0)
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            let off = ((ty0 + r) * ow + (tx0 + c)) * f * 4;
+            pe(Op::Mov, 3, Src::Imm, Src::Zero, (y_base as usize + off) as i32)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Mov, 0, Src::Zero, Src::Zero, 0)
+        }),
+    ];
+
+    // body: all taps for one output channel, then store + advance filter.
+    // The filter tap is shared by every PE (they differ only in pixel):
+    // PE (0,0) loads it through one memory port and the broadcast bus fans
+    // it out — the key operand-reuse trick that makes CONV the
+    // best-scaling Fig 5 kernel.
+    let mut body = Vec::with_capacity(filter_words * 4 + 3);
+    for di in 0..kh {
+        for dj in 0..kw {
+            for ci in 0..cin {
+                let x_off = (((di * w) + dj) * cin + ci) * 4;
+                let w_off = ((di * kw + dj) * cin + ci) * 4;
+                body.push(Context::from_fn(|r, c| {
+                    if !active(r, c) {
+                        return PeInstr::NOP;
+                    }
+                    pe(Op::Load, 4, Src::Reg(1), Src::Imm, x_off as i32)
+                }));
+                // weight load: PE (0,0) only; lands on the broadcast bus
+                body.push(Context::from_fn(|r, c| {
+                    if r == 0 && c == 0 {
+                        pe(Op::Load, 5, Src::Reg(2), Src::Imm, w_off as i32)
+                    } else {
+                        PeInstr::NOP
+                    }
+                }));
+                body.push(Context::from_fn(|r, c| {
+                    if !active(r, c) {
+                        return PeInstr::NOP;
+                    }
+                    pe(Op::Mul, 6, Src::Reg(4), Src::Bcast, 0)
+                }));
+                body.push(Context::from_fn(|r, c| {
+                    if !active(r, c) {
+                        return PeInstr::NOP;
+                    }
+                    pe(Op::Add, 0, Src::Reg(0), Src::Reg(6), 0)
+                }));
+            }
+        }
+    }
+    // store y[..., fi] and step to the next channel
+    body.push(Context::from_fn(|r, c| {
+        if !active(r, c) {
+            return PeInstr::NOP;
+        }
+        pe(Op::StoreInc, 0, Src::Reg(3), Src::Reg(0), 4)
+    }));
+    body.push(Context::from_fn(|r, c| {
+        if !active(r, c) {
+            return PeInstr::NOP;
+        }
+        pe(Op::Mov, 0, Src::Zero, Src::Zero, 0)
+    }));
+    body.push(Context::from_fn(|r, c| {
+        if !active(r, c) {
+            return PeInstr::NOP;
+        }
+        pe(Op::Add, 2, Src::Reg(2), Src::Imm, (filter_words * 4) as i32)
+    }));
+
+    // outer: advance to the next column tile (x_ptr += 4 pixels,
+    // y_ptr += 4 pixels minus the F words the StoreIncs already added),
+    // rewind w_ptr.
+    let outer = vec![
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Add, 1, Src::Reg(1), Src::Imm, (COLS * cin * 4) as i32)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Add, 3, Src::Reg(3), Src::Imm, ((COLS - 1) * f * 4) as i32)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Add, 2, Src::Reg(2), Src::Imm, -((f * filter_words * 4) as i32))
+        }),
+    ];
+
+    CgraProgram {
+        name: format!("conv_ty{ty0}_tx{tx0}"),
+        prologue,
+        body,
+        body_iterations: f as u32,
+        outer,
+        outer_iterations: col_tiles,
+        epilogue: vec![],
+    }
+}

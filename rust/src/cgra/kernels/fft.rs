@@ -1,0 +1,121 @@
+//! CGRA mapping for the Q15 radix-2 FFT (Fig 5 "FFT").
+//!
+//! One pass per stage, reconfigured between stages (the VWR2A-style flow:
+//! a reconfigurable array reloads per-phase configurations). Input must be
+//! **bit-reversed** by the driver first (the guest does this on the CPU;
+//! see `workloads::reference::bit_reverse_permute`).
+//!
+//! Within a stage, the flat butterfly index k (0..n/2) is distributed
+//! round-robin over the active PEs; each PE derives the even/odd/twiddle
+//! addresses from k with shift/mask arithmetic (half = 1 << (s-1) is a
+//! power of two, so no division is needed):
+//!
+//! ```text
+//! even = ((k >> (s-1)) << s) + (k & (half-1))
+//! odd  = even + half
+//! tw   = (k & (half-1)) << (stages - s)
+//! ```
+//!
+//! Register map per PE: R1 k, R2 even byte offset (scratch), R3 twiddle
+//! byte offset (scratch), R4 er, R5 ei, R6 or, R7 oi, R8 twr, R9 twi,
+//! R10 tr, R11 ti, R12..R15 butterfly outputs.
+
+use crate::cgra::isa::{CgraProgram, Context, Op, PeInstr, Src, COLS, NUM_PES};
+
+/// Generate one pass per stage for an n-point FFT (n a power of two >= 2).
+/// re/im/wr/wi are byte addresses of the data and twiddle arrays
+/// (wr/wi hold n/2 Q15 words as produced by
+/// [`crate::workloads::reference::twiddles_q15`]).
+pub fn fft_passes(re_base: u32, im_base: u32, wr_base: u32, wi_base: u32, n: usize) -> Vec<CgraProgram> {
+    assert!(n.is_power_of_two() && n >= 2, "n must be a power of two >= 2");
+    let stages = n.trailing_zeros() as usize;
+    let butterflies = n / 2;
+    let active_pes = NUM_PES.min(butterflies);
+    let iters = (butterflies / active_pes) as u32;
+    (1..=stages)
+        .map(|s| gen_stage(re_base, im_base, wr_base, wi_base, n, s, stages, active_pes, iters))
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gen_stage(
+    re_base: u32,
+    im_base: u32,
+    wr_base: u32,
+    wi_base: u32,
+    _n: usize,
+    s: usize,
+    stages: usize,
+    active_pes: usize,
+    iters: u32,
+) -> CgraProgram {
+    let half = 1i32 << (s - 1);
+    let pe = PeInstr::new;
+    let act = |r: usize, c: usize, ins: PeInstr| {
+        if r * COLS + c < active_pes {
+            ins
+        } else {
+            PeInstr::NOP
+        }
+    };
+
+    // prologue: k = linear PE index
+    let prologue = vec![
+        Context::from_fn(|r, c| act(r, c, pe(Op::Mul, 1, Src::Row, Src::Imm, COLS as i32))),
+        Context::from_fn(|r, c| act(r, c, pe(Op::Add, 1, Src::Reg(1), Src::Col, 0))),
+    ];
+
+    let mut body = Vec::with_capacity(32);
+    let mut push = |ins: PeInstr| {
+        body.push(Context::from_fn(|r, c| act(r, c, ins)));
+    };
+
+    // address generation
+    push(pe(Op::Srl, 2, Src::Reg(1), Src::Imm, (s - 1) as i32));
+    push(pe(Op::Sll, 2, Src::Reg(2), Src::Imm, s as i32));
+    push(pe(Op::And, 3, Src::Reg(1), Src::Imm, half - 1));
+    push(pe(Op::Add, 2, Src::Reg(2), Src::Reg(3), 0)); // even index
+    push(pe(Op::Sll, 3, Src::Reg(3), Src::Imm, (stages - s) as i32)); // tw index
+    push(pe(Op::Sll, 2, Src::Reg(2), Src::Imm, 2)); // even byte offset
+    push(pe(Op::Sll, 3, Src::Reg(3), Src::Imm, 2)); // tw byte offset
+    // operand loads
+    push(pe(Op::Load, 4, Src::Reg(2), Src::Imm, re_base as i32));
+    push(pe(Op::Load, 5, Src::Reg(2), Src::Imm, im_base as i32));
+    push(pe(Op::Load, 6, Src::Reg(2), Src::Imm, re_base as i32 + half * 4));
+    push(pe(Op::Load, 7, Src::Reg(2), Src::Imm, im_base as i32 + half * 4));
+    push(pe(Op::Load, 8, Src::Reg(3), Src::Imm, wr_base as i32));
+    push(pe(Op::Load, 9, Src::Reg(3), Src::Imm, wi_base as i32));
+    // t = W * odd (Q15 complex multiply)
+    push(pe(Op::MulQ15, 10, Src::Reg(6), Src::Reg(8), 0));
+    push(pe(Op::MulQ15, 11, Src::Reg(7), Src::Reg(9), 0));
+    push(pe(Op::Sub, 10, Src::Reg(10), Src::Reg(11), 0)); // tr
+    push(pe(Op::MulQ15, 11, Src::Reg(6), Src::Reg(9), 0));
+    push(pe(Op::MulQ15, 12, Src::Reg(7), Src::Reg(8), 0));
+    push(pe(Op::Add, 11, Src::Reg(11), Src::Reg(12), 0)); // ti
+    // scaled butterfly outputs
+    push(pe(Op::Add, 12, Src::Reg(4), Src::Reg(10), 0));
+    push(pe(Op::Sra, 12, Src::Reg(12), Src::Imm, 1)); // new even re
+    push(pe(Op::Add, 13, Src::Reg(5), Src::Reg(11), 0));
+    push(pe(Op::Sra, 13, Src::Reg(13), Src::Imm, 1)); // new even im
+    push(pe(Op::Sub, 14, Src::Reg(4), Src::Reg(10), 0));
+    push(pe(Op::Sra, 14, Src::Reg(14), Src::Imm, 1)); // new odd re
+    push(pe(Op::Sub, 15, Src::Reg(5), Src::Reg(11), 0));
+    push(pe(Op::Sra, 15, Src::Reg(15), Src::Imm, 1)); // new odd im
+    // writeback
+    push(pe(Op::Store, 0, Src::Reg(2), Src::Reg(12), re_base as i32));
+    push(pe(Op::Store, 0, Src::Reg(2), Src::Reg(13), im_base as i32));
+    push(pe(Op::Store, 0, Src::Reg(2), Src::Reg(14), re_base as i32 + half * 4));
+    push(pe(Op::Store, 0, Src::Reg(2), Src::Reg(15), im_base as i32 + half * 4));
+    // next butterfly for this PE
+    push(pe(Op::Add, 1, Src::Reg(1), Src::Imm, active_pes as i32));
+
+    CgraProgram {
+        name: format!("fft_stage{s}"),
+        prologue,
+        body,
+        body_iterations: iters,
+        outer: vec![],
+        outer_iterations: 1,
+        epilogue: vec![],
+    }
+}

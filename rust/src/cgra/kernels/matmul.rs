@@ -1,0 +1,161 @@
+//! CGRA mapping for INT32 matmul (Fig 5 "MM").
+//!
+//! Output-stationary mapping: each active PE (r, c) owns output element
+//! C[tile_row*4 + r, col_tile*4 + c] and walks the K dimension with
+//! post-increment loads. The two-level hardware loop runs K in the inner
+//! body and row-tiles in the outer loop; column tiles (n > 4) and the
+//! row remainder (m % 4) become extra passes, each paying its own
+//! reconfiguration cost — exactly how a real OpenEdgeCGRA launch sequence
+//! would look.
+//!
+//! Register map per PE: R0 acc, R1 a_ptr, R2 b_ptr, R3 c_ptr,
+//! R4 a_val, R5 b_val, R6 product.
+
+use crate::cgra::isa::{CgraProgram, Context, Op, PeInstr, Src, COLS, ROWS};
+
+/// Generate the passes for C = A(m x k) @ B(k x n). Addresses are byte
+/// addresses of row-major i32 arrays in CGRA-visible memory.
+pub fn matmul_passes(a_base: u32, b_base: u32, c_base: u32, m: usize, k: usize, n: usize) -> Vec<CgraProgram> {
+    assert!(m > 0 && k > 0 && n > 0);
+    let mut passes = Vec::new();
+    let full_row_tiles = m / ROWS;
+    let rem_rows = m % ROWS;
+    for c0 in (0..n).step_by(COLS) {
+        let active_cols = COLS.min(n - c0);
+        if full_row_tiles > 0 {
+            passes.push(gen_pass(
+                a_base, b_base, c_base, k, n, 0, full_row_tiles as u32, ROWS, c0, active_cols,
+            ));
+        }
+        if rem_rows > 0 {
+            passes.push(gen_pass(
+                a_base,
+                b_base,
+                c_base,
+                k,
+                n,
+                full_row_tiles * ROWS,
+                1,
+                rem_rows,
+                c0,
+                active_cols,
+            ));
+        }
+    }
+    passes
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gen_pass(
+    a_base: u32,
+    b_base: u32,
+    c_base: u32,
+    k: usize,
+    n: usize,
+    row0: usize,
+    row_tiles: u32,
+    active_rows: usize,
+    c0: usize,
+    active_cols: usize,
+) -> CgraProgram {
+    let active = |r: usize, c: usize| r < active_rows && c < active_cols;
+    let pe = PeInstr::new;
+
+    // prologue: pointer setup + acc clear
+    let prologue = vec![
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Mov, 1, Src::Imm, Src::Zero, (a_base as usize + (row0 + r) * k * 4) as i32)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Mov, 2, Src::Imm, Src::Zero, (b_base as usize + (c0 + c) * 4) as i32)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Mov, 3, Src::Imm, Src::Zero, (c_base as usize + ((row0 + r) * n + c0 + c) * 4) as i32)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Mov, 0, Src::Zero, Src::Zero, 0)
+        }),
+    ];
+
+    // body: one K step
+    let body = vec![
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::LoadInc, 4, Src::Reg(1), Src::Zero, 4)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::LoadInc, 5, Src::Reg(2), Src::Zero, (n * 4) as i32)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Mul, 6, Src::Reg(4), Src::Reg(5), 0)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Add, 0, Src::Reg(0), Src::Reg(6), 0)
+        }),
+    ];
+
+    // outer (per row tile): store C, clear acc, advance A to row r+4,
+    // rewind B to the top of its columns.
+    let outer = vec![
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            // store then advance c_ptr by 4 rows of C
+            pe(Op::StoreInc, 0, Src::Reg(3), Src::Reg(0), (ROWS * n * 4) as i32)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            pe(Op::Mov, 0, Src::Zero, Src::Zero, 0)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            // a_ptr is at end of row (row0+r): advance (ROWS-1) more rows
+            pe(Op::Add, 1, Src::Reg(1), Src::Imm, ((ROWS - 1) * k * 4) as i32)
+        }),
+        Context::from_fn(|r, c| {
+            if !active(r, c) {
+                return PeInstr::NOP;
+            }
+            // b_ptr walked K rows: rewind
+            pe(Op::Add, 2, Src::Reg(2), Src::Imm, -((k * n * 4) as i32))
+        }),
+    ];
+
+    CgraProgram {
+        name: format!("mm_r{row0}_c{c0}"),
+        prologue,
+        body,
+        body_iterations: k as u32,
+        outer,
+        outer_iterations: row_tiles,
+        epilogue: vec![],
+    }
+}

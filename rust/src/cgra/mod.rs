@@ -1,0 +1,454 @@
+//! CGRA emulator: the "RTL-stage" accelerator of the design cycle.
+//!
+//! Executes [`isa::CgraProgram`] configurations over guest memory,
+//! producing both **results** (bit-exact with the ref oracle / Pallas
+//! kernels / RV32 kernels) and **cycle counts** (contexts + memory-port
+//! stalls + reconfiguration cost), which the perf monitor attributes to
+//! the CGRA power domain and the energy model prices.
+//!
+//! Microarchitecture model (documented deltas from OpenEdgeCGRA in
+//! DESIGN.md): 4x4 torus, lockstep contexts, [`MEM_PORTS`] shared memory
+//! masters into the SoC bus (memory ops beyond the port count in one
+//! context serialize — this keeps load-heavy kernels like FFT from
+//! scaling as well as compute-dense CONV, which is the Fig 5 shape),
+//! neighbor routing reads the previous context's outputs
+//! (double-buffered), stores commit at end of context.
+
+pub mod device;
+pub mod isa;
+pub mod kernels;
+
+pub use device::CgraDevice;
+pub use isa::{CgraProgram, Context, Op, PeInstr, Src, COLS, NUM_PES, NUM_REGS, ROWS};
+
+/// Word-addressed memory the CGRA masters (implemented by the SoC over
+/// the SRAM banks, and by flat vectors in tests).
+pub trait CgraMem {
+    fn read32(&mut self, addr: u32) -> Result<u32, ()>;
+    fn write32(&mut self, addr: u32, value: u32) -> Result<(), ()>;
+}
+
+impl CgraMem for Vec<u32> {
+    fn read32(&mut self, addr: u32) -> Result<u32, ()> {
+        self.get((addr / 4) as usize).copied().ok_or(())
+    }
+
+    fn write32(&mut self, addr: u32, value: u32) -> Result<(), ()> {
+        match self.get_mut((addr / 4) as usize) {
+            Some(slot) => {
+                *slot = value;
+                Ok(())
+            }
+            None => Err(()),
+        }
+    }
+}
+
+/// Shared memory masters between the array and the SoC bus.
+pub const MEM_PORTS: u64 = 2;
+
+/// Reconfiguration cost: cycles per configuration word streamed into the
+/// context memories (AXI-lite at one word/cycle in OpenEdgeCGRA).
+pub const CONFIG_CYCLES_PER_WORD: u64 = 1;
+
+/// Execution outcome.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CgraRun {
+    /// Compute cycles (contexts + memory stalls).
+    pub compute_cycles: u64,
+    /// Reconfiguration cycles (config streaming).
+    pub config_cycles: u64,
+    /// Total contexts executed.
+    pub contexts: u64,
+    /// Memory-port stall cycles included in `compute_cycles`.
+    pub mem_stalls: u64,
+}
+
+impl CgraRun {
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles + self.config_cycles
+    }
+
+    /// Merge a subsequent run (multi-pass kernels: per-stage FFT,
+    /// remainder tiles).
+    pub fn merge(&mut self, other: CgraRun) {
+        self.compute_cycles += other.compute_cycles;
+        self.config_cycles += other.config_cycles;
+        self.contexts += other.contexts;
+        self.mem_stalls += other.mem_stalls;
+    }
+}
+
+/// Runtime error (bad memory access in a mapping — an emulation bug, not
+/// a guest-recoverable fault).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CgraFault {
+    pub context_index: u64,
+    pub pe: usize,
+    pub addr: u32,
+}
+
+impl std::fmt::Display for CgraFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CGRA fault: pe {} at context {} touched bad address {:#x}",
+            self.pe, self.context_index, self.addr
+        )
+    }
+}
+
+impl std::error::Error for CgraFault {}
+
+/// The PE-array state machine.
+#[derive(Clone, Debug)]
+pub struct CgraCore {
+    regs: [[i32; NUM_REGS]; NUM_PES],
+    /// Output registers: `out[pe]` as produced by the previous context.
+    out: [i32; NUM_PES],
+}
+
+impl Default for CgraCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CgraCore {
+    pub fn new() -> Self {
+        Self { regs: [[0; NUM_REGS]; NUM_PES], out: [0; NUM_PES] }
+    }
+
+    pub fn reset(&mut self) {
+        self.regs = [[0; NUM_REGS]; NUM_PES];
+        self.out = [0; NUM_PES];
+    }
+
+    #[inline]
+    fn src_value(&self, pe: usize, s: Src, imm: i32) -> i32 {
+        let r = pe / COLS;
+        let c = pe % COLS;
+        match s {
+            Src::Reg(i) => self.regs[pe][i as usize],
+            Src::Imm => imm,
+            Src::Zero => 0,
+            Src::Bcast => self.out[0],
+            Src::Row => r as i32,
+            Src::Col => c as i32,
+            // torus neighbors, previous-context outputs
+            Src::North => self.out[((r + ROWS - 1) % ROWS) * COLS + c],
+            Src::South => self.out[((r + 1) % ROWS) * COLS + c],
+            Src::West => self.out[r * COLS + (c + COLS - 1) % COLS],
+            Src::East => self.out[r * COLS + (c + 1) % COLS],
+        }
+    }
+
+    /// Execute one context. Returns memory stall cycles beyond the base
+    /// context cycle.
+    fn step<M: CgraMem>(
+        &mut self,
+        ctx: &Context,
+        mem: &mut M,
+        ctx_index: u64,
+    ) -> Result<u64, CgraFault> {
+        let mut new_out = self.out;
+        let mut mem_ops = 0u64;
+        // deferred stores commit after all reads in this context
+        let mut stores: [(u32, u32, usize); NUM_PES] = [(0, 0, usize::MAX); NUM_PES];
+        let mut n_stores = 0usize;
+
+        for pe in 0..NUM_PES {
+            let ins = &ctx.pe[pe];
+            if ins.op == Op::Nop {
+                continue;
+            }
+            let a = self.src_value(pe, ins.a, ins.imm);
+            let b = self.src_value(pe, ins.b, ins.imm);
+            if ins.op.is_mem() {
+                mem_ops += 1;
+            }
+            let result: Option<i32> = match ins.op {
+                Op::Nop => None,
+                Op::Add => Some(a.wrapping_add(b)),
+                Op::Sub => Some(a.wrapping_sub(b)),
+                Op::Mul => Some(a.wrapping_mul(b)),
+                Op::MulQ15 => Some(((a as i64 * b as i64) >> 15) as i32),
+                Op::Sra => Some(a >> (b & 31)),
+                Op::Srl => Some(((a as u32) >> (b & 31)) as i32),
+                Op::Sll => Some(((a as u32) << (b & 31)) as i32),
+                Op::And => Some(a & b),
+                Op::Or => Some(a | b),
+                Op::Xor => Some(a ^ b),
+                Op::Slt => Some((a < b) as i32),
+                Op::Mov => Some(a),
+                Op::Load => {
+                    let addr = a.wrapping_add(b) as u32;
+                    let v = mem
+                        .read32(addr)
+                        .map_err(|_| CgraFault { context_index: ctx_index, pe, addr })?;
+                    Some(v as i32)
+                }
+                Op::LoadInc => {
+                    let addr = a as u32;
+                    let v = mem
+                        .read32(addr)
+                        .map_err(|_| CgraFault { context_index: ctx_index, pe, addr })?;
+                    if let Src::Reg(i) = ins.a {
+                        self.regs[pe][i as usize] =
+                            self.regs[pe][i as usize].wrapping_add(ins.imm);
+                    }
+                    Some(v as i32)
+                }
+                Op::Store => {
+                    stores[n_stores] = ((a.wrapping_add(ins.imm)) as u32, b as u32, pe);
+                    n_stores += 1;
+                    None
+                }
+                Op::StoreInc => {
+                    stores[n_stores] = (a as u32, b as u32, pe);
+                    n_stores += 1;
+                    if let Src::Reg(i) = ins.a {
+                        self.regs[pe][i as usize] =
+                            self.regs[pe][i as usize].wrapping_add(ins.imm);
+                    }
+                    None
+                }
+            };
+            if let Some(v) = result {
+                self.regs[pe][ins.dst as usize] = v;
+                new_out[pe] = v;
+            }
+        }
+
+        for &(addr, value, pe) in &stores[..n_stores] {
+            mem.write32(addr, value)
+                .map_err(|_| CgraFault { context_index: ctx_index, pe, addr })?;
+        }
+        self.out = new_out;
+
+        // Memory-port contention: MEM_PORTS ops issue per cycle; the
+        // lockstep grid stalls for the rest.
+        let stalls = mem_ops.div_ceil(MEM_PORTS).saturating_sub(1);
+        Ok(stalls)
+    }
+
+    /// Run a full program over `mem`. The core is *not* reset first —
+    /// multi-pass kernels may carry register state between passes; call
+    /// [`CgraCore::reset`] between unrelated kernels.
+    pub fn execute<M: CgraMem>(
+        &mut self,
+        prog: &CgraProgram,
+        mem: &mut M,
+    ) -> Result<CgraRun, CgraFault> {
+        let mut contexts = 0u64;
+        let mut stalls = 0u64;
+        for ctx in &prog.prologue {
+            stalls += self.step(ctx, mem, contexts)?;
+            contexts += 1;
+        }
+        for _ in 0..prog.outer_iterations {
+            for _ in 0..prog.body_iterations {
+                for ctx in &prog.body {
+                    stalls += self.step(ctx, mem, contexts)?;
+                    contexts += 1;
+                }
+            }
+            for ctx in &prog.outer {
+                stalls += self.step(ctx, mem, contexts)?;
+                contexts += 1;
+            }
+        }
+        for ctx in &prog.epilogue {
+            stalls += self.step(ctx, mem, contexts)?;
+            contexts += 1;
+        }
+        let config_cycles = prog.config_words() as u64 * CONFIG_CYCLES_PER_WORD;
+        Ok(CgraRun {
+            compute_cycles: contexts + stalls,
+            config_cycles,
+            contexts,
+            mem_stalls: stalls,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_one(pe: usize, ins: PeInstr) -> Context {
+        let mut c = Context::nops();
+        c.pe[pe] = ins;
+        c
+    }
+
+    fn run_prologue(contexts: Vec<Context>, mem: &mut Vec<u32>) -> CgraRun {
+        let mut core = CgraCore::new();
+        let prog = CgraProgram::simple("t", contexts, vec![], 0, vec![]);
+        core.execute(&prog, mem).unwrap()
+    }
+
+    #[test]
+    fn alu_and_store() {
+        let mut mem: Vec<u32> = vec![0; 16];
+        run_prologue(
+            vec![
+                ctx_one(0, PeInstr::new(Op::Mov, 1, Src::Imm, Src::Zero, 21)),
+                ctx_one(0, PeInstr::new(Op::Add, 2, Src::Reg(1), Src::Reg(1), 0)),
+                ctx_one(0, PeInstr::new(Op::Store, 0, Src::Zero, Src::Reg(2), 0)),
+            ],
+            &mut mem,
+        );
+        assert_eq!(mem[0], 42);
+    }
+
+    #[test]
+    fn q15_multiply_matches_ref_semantics() {
+        let mut mem: Vec<u32> = vec![0; 4];
+        run_prologue(
+            vec![
+                ctx_one(0, PeInstr::new(Op::Mov, 1, Src::Imm, Src::Zero, -30000)),
+                ctx_one(0, PeInstr::new(Op::Mov, 2, Src::Imm, Src::Zero, 0x4000)),
+                ctx_one(0, PeInstr::new(Op::MulQ15, 3, Src::Reg(1), Src::Reg(2), 0)),
+                ctx_one(0, PeInstr::new(Op::Store, 0, Src::Zero, Src::Reg(3), 0)),
+            ],
+            &mut mem,
+        );
+        assert_eq!(mem[0] as i32, -15000);
+    }
+
+    #[test]
+    fn routing_previous_cycle_value() {
+        let mut mem: Vec<u32> = vec![0; 4];
+        // PE0 produces 5; PE1 (east of PE0) reads West the next context.
+        run_prologue(
+            vec![
+                ctx_one(0, PeInstr::new(Op::Mov, 0, Src::Imm, Src::Zero, 5)),
+                ctx_one(1, PeInstr::new(Op::Mov, 0, Src::West, Src::Zero, 0)),
+                ctx_one(1, PeInstr::new(Op::Store, 0, Src::Zero, Src::Reg(0), 0)),
+            ],
+            &mut mem,
+        );
+        assert_eq!(mem[0], 5);
+    }
+
+    #[test]
+    fn torus_wraparound() {
+        let mut mem: Vec<u32> = vec![0; 4];
+        // PE0 (row 0) reading North wraps to row 3 (PE12).
+        run_prologue(
+            vec![
+                ctx_one(12, PeInstr::new(Op::Mov, 0, Src::Imm, Src::Zero, 9)),
+                ctx_one(0, PeInstr::new(Op::Mov, 0, Src::North, Src::Zero, 0)),
+                ctx_one(0, PeInstr::new(Op::Store, 0, Src::Zero, Src::Reg(0), 0)),
+            ],
+            &mut mem,
+        );
+        assert_eq!(mem[0], 9);
+    }
+
+    #[test]
+    fn load_with_offset_and_loadinc() {
+        let mut mem: Vec<u32> = vec![10, 20, 30, 0];
+        let mut core = CgraCore::new();
+        let prog = CgraProgram::simple(
+            "ldinc",
+            vec![ctx_one(0, PeInstr::new(Op::Mov, 1, Src::Zero, Src::Zero, 0))],
+            vec![
+                ctx_one(0, PeInstr::new(Op::LoadInc, 2, Src::Reg(1), Src::Zero, 4)),
+                ctx_one(0, PeInstr::new(Op::Add, 3, Src::Reg(3), Src::Reg(2), 0)),
+            ],
+            3,
+            vec![ctx_one(0, PeInstr::new(Op::Store, 0, Src::Zero, Src::Reg(3), 12))],
+        );
+        core.execute(&prog, &mut mem).unwrap();
+        assert_eq!(mem[3], 60);
+        // Load with a=Imm base + b=Zero and offset via imm in a
+        let mut mem2: Vec<u32> = vec![7, 8, 9, 0];
+        run_prologue(
+            vec![
+                ctx_one(0, PeInstr::new(Op::Mov, 1, Src::Imm, Src::Zero, 4)),
+                ctx_one(0, PeInstr::new(Op::Load, 2, Src::Reg(1), Src::Imm, 4)), // mem[4+4]=9
+                ctx_one(0, PeInstr::new(Op::Store, 0, Src::Zero, Src::Reg(2), 12)),
+            ],
+            &mut mem2,
+        );
+        assert_eq!(mem2[3], 9);
+    }
+
+    #[test]
+    fn mem_port_contention_stalls() {
+        let mut mem: Vec<u32> = vec![0; 64];
+        // 16 loads in one context over MEM_PORTS=2 -> ceil(16/2)-1 = 7 stalls.
+        let ctx = Context::from_fn(|r, c| {
+            PeInstr::new(Op::Load, 0, Src::Imm, Src::Zero, ((r * 4 + c) * 4) as i32)
+        });
+        let run = run_prologue(vec![ctx], &mut mem);
+        assert_eq!(run.contexts, 1);
+        assert_eq!(run.mem_stalls, 7);
+        assert_eq!(run.compute_cycles, 8);
+    }
+
+    #[test]
+    fn two_mem_ops_no_stall() {
+        let mut mem: Vec<u32> = vec![0; 64];
+        let mut ctx = Context::nops();
+        ctx.pe[0] = PeInstr::new(Op::Load, 0, Src::Imm, Src::Zero, 0);
+        ctx.pe[5] = PeInstr::new(Op::Load, 0, Src::Imm, Src::Zero, 4);
+        let run = run_prologue(vec![ctx], &mut mem);
+        assert_eq!(run.mem_stalls, 0);
+    }
+
+    #[test]
+    fn two_level_loop_execution() {
+        // acc += 1, body_iters=3, outer: store acc to slot[t] and bump ptr,
+        // outer_iters=2 -> slots get 3 and 6.
+        let mut mem: Vec<u32> = vec![0; 4];
+        let mut core = CgraCore::new();
+        let prog = CgraProgram {
+            name: "2lvl".into(),
+            prologue: vec![ctx_one(0, PeInstr::new(Op::Mov, 1, Src::Zero, Src::Zero, 0))],
+            body: vec![ctx_one(0, PeInstr::new(Op::Add, 2, Src::Reg(2), Src::Imm, 1))],
+            body_iterations: 3,
+            outer: vec![ctx_one(0, PeInstr::new(Op::StoreInc, 0, Src::Reg(1), Src::Reg(2), 4))],
+            outer_iterations: 2,
+            epilogue: vec![],
+        };
+        core.execute(&prog, &mut mem).unwrap();
+        assert_eq!(mem[0], 3);
+        assert_eq!(mem[1], 6);
+    }
+
+    #[test]
+    fn bad_address_faults() {
+        let mut mem: Vec<u32> = vec![0; 1];
+        let mut core = CgraCore::new();
+        let prog = CgraProgram::simple(
+            "bad",
+            vec![ctx_one(3, PeInstr::new(Op::Load, 0, Src::Imm, Src::Zero, 0x1000))],
+            vec![],
+            0,
+            vec![],
+        );
+        let f = core.execute(&prog, &mut mem).unwrap_err();
+        assert_eq!(f.pe, 3);
+        assert_eq!(f.addr, 0x1000);
+    }
+
+    #[test]
+    fn row_col_sources() {
+        let mut mem: Vec<u32> = vec![0; NUM_PES];
+        // each PE stores row*4+col at its own slot
+        let compute =
+            Context::broadcast(PeInstr::new(Op::Mul, 1, Src::Row, Src::Imm, COLS as i32));
+        let add = Context::broadcast(PeInstr::new(Op::Add, 1, Src::Reg(1), Src::Col, 0));
+        let addr = Context::broadcast(PeInstr::new(Op::Mul, 2, Src::Reg(1), Src::Imm, 4));
+        let store = Context::broadcast(PeInstr::new(Op::Store, 0, Src::Reg(2), Src::Reg(1), 0));
+        let run = run_prologue(vec![compute, add, addr, store], &mut mem);
+        for (i, v) in mem.iter().enumerate() {
+            assert_eq!(*v as usize, i);
+        }
+        // store context: 16 stores over 2 ports -> 7 stalls
+        assert_eq!(run.mem_stalls, 7);
+    }
+}

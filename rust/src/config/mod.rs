@@ -1,0 +1,207 @@
+//! Configuration system: platform TOML files ("configurable" is in the
+//! paper's title — bank counts, clock, timing model, energy calibration,
+//! flash timing are all data, not code).
+//!
+//! A platform file looks like:
+//!
+//! ```toml
+//! name = "x-heep-femu"
+//! freq_hz = 20000000
+//! energy_model = "femu"        # or "heepocrates"
+//!
+//! [mem]
+//! num_banks = 2
+//! bank_size = 0x20000
+//! cs_dram_size = 0x1000000
+//!
+//! [flash]
+//! mode = "virtualized"          # or "physical"
+//! size = 0x400000
+//!
+//! [timing]
+//! div = 34
+//! load = 2
+//! # ... any cpu::Timing field
+//!
+//! [energy.cpu]                  # optional per-domain overrides (mW)
+//! active = 1.9
+//! clock_gated = 0.21
+//! power_gated = 0.012
+//! retention = 0.0
+//! ```
+//!
+//! Missing keys fall back to the X-HEEP-FEMU defaults, so a config file
+//! only states its deltas.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cpu::Timing;
+use crate::energy::{DomainPower, EnergyModel};
+use crate::periph::FlashTiming;
+use crate::soc::SocConfig;
+use crate::util::toml::Doc;
+
+/// Everything needed to build a platform instance.
+#[derive(Clone, Debug)]
+pub struct PlatformConfig {
+    pub name: String,
+    pub soc: SocConfig,
+    pub timing: Timing,
+    pub energy: EnergyModel,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        Self {
+            name: "x-heep-femu".into(),
+            soc: SocConfig::default(),
+            timing: Timing::default(),
+            energy: EnergyModel::femu(),
+        }
+    }
+}
+
+impl PlatformConfig {
+    /// Parse a platform TOML document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = Doc::parse(text)?;
+        let mut cfg = PlatformConfig::default();
+        cfg.name = doc.str_or("name", &cfg.name)?;
+
+        let freq = doc.u64_or("freq_hz", cfg.soc.freq_hz)?;
+        cfg.soc.freq_hz = freq;
+        cfg.energy.freq_hz = freq;
+
+        cfg.soc.num_banks = doc.u64_or("mem.num_banks", cfg.soc.num_banks as u64)? as usize;
+        cfg.soc.bank_size = doc.u64_or("mem.bank_size", cfg.soc.bank_size as u64)? as u32;
+        if !cfg.soc.bank_size.is_power_of_two() {
+            bail!("mem.bank_size must be a power of two");
+        }
+        cfg.soc.cs_dram_size =
+            doc.u64_or("mem.cs_dram_size", cfg.soc.cs_dram_size as u64)? as usize;
+        cfg.soc.flash_size = doc.u64_or("flash.size", cfg.soc.flash_size as u64)? as usize;
+        cfg.soc.flash_timing = match doc.str_or("flash.mode", "virtualized")?.as_str() {
+            "virtualized" => FlashTiming::virtualized(),
+            "physical" => FlashTiming::physical(),
+            other => bail!("flash.mode `{other}` (want virtualized|physical)"),
+        };
+
+        // timing overrides
+        let t = &mut cfg.timing;
+        t.alu = doc.u64_or("timing.alu", t.alu as u64)? as u32;
+        t.mul = doc.u64_or("timing.mul", t.mul as u64)? as u32;
+        t.div = doc.u64_or("timing.div", t.div as u64)? as u32;
+        t.load = doc.u64_or("timing.load", t.load as u64)? as u32;
+        t.store = doc.u64_or("timing.store", t.store as u64)? as u32;
+        t.branch = doc.u64_or("timing.branch", t.branch as u64)? as u32;
+        t.branch_taken_penalty =
+            doc.u64_or("timing.branch_taken_penalty", t.branch_taken_penalty as u64)? as u32;
+        t.jump = doc.u64_or("timing.jump", t.jump as u64)? as u32;
+        t.csr = doc.u64_or("timing.csr", t.csr as u64)? as u32;
+        t.trap_entry = doc.u64_or("timing.trap_entry", t.trap_entry as u64)? as u32;
+        t.wake = doc.u64_or("timing.wake", t.wake as u64)? as u32;
+
+        // energy calibration: named base + optional per-domain overrides
+        let base = doc.str_or("energy_model", "femu")?;
+        let mut energy = EnergyModel::by_name(&base)
+            .ok_or_else(|| anyhow::anyhow!("unknown energy_model `{base}`"))?;
+        energy.freq_hz = freq;
+        for (domain, slot) in [
+            ("cpu", 0usize),
+            ("bus", 1),
+            ("periph", 2),
+            ("mem_bank", 3),
+            ("cgra", 4),
+        ] {
+            let get = |field: &str, default: f64| -> Result<f64> {
+                doc.f64_or(&format!("energy.{domain}.{field}"), default)
+            };
+            let current = match slot {
+                0 => energy.cpu,
+                1 => energy.bus,
+                2 => energy.periph,
+                3 => energy.mem_bank,
+                _ => energy.cgra,
+            };
+            let updated = DomainPower::new(
+                get("active", current.mw[0])?,
+                get("clock_gated", current.mw[1])?,
+                get("power_gated", current.mw[2])?,
+                get("retention", current.mw[3])?,
+            );
+            match slot {
+                0 => energy.cpu = updated,
+                1 => energy.bus = updated,
+                2 => energy.periph = updated,
+                3 => energy.mem_bank = updated,
+                _ => energy.cgra = updated,
+            }
+        }
+        cfg.energy = energy;
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading platform config {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parsing platform config {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_without_file() {
+        let cfg = PlatformConfig::default();
+        assert_eq!(cfg.soc.num_banks, 2);
+        assert_eq!(cfg.energy.name, "femu");
+    }
+
+    #[test]
+    fn parse_full_overrides() {
+        let cfg = PlatformConfig::parse(
+            r#"
+            name = "custom"
+            freq_hz = 50_000_000
+            energy_model = "heepocrates"
+            [mem]
+            num_banks = 4
+            bank_size = 0x10000
+            [flash]
+            mode = "physical"
+            [timing]
+            div = 10
+            [energy.cgra]
+            active = 9.9
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "custom");
+        assert_eq!(cfg.soc.freq_hz, 50_000_000);
+        assert_eq!(cfg.soc.num_banks, 4);
+        assert_eq!(cfg.soc.flash_timing, FlashTiming::physical());
+        assert_eq!(cfg.timing.div, 10);
+        assert_eq!(cfg.timing.mul, Timing::default().mul); // untouched
+        assert_eq!(cfg.energy.name, "heepocrates");
+        assert_eq!(cfg.energy.cgra.mw[0], 9.9);
+        assert_eq!(cfg.energy.freq_hz, 50_000_000);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(PlatformConfig::parse("[mem]\nbank_size = 1000").is_err()); // not pow2
+        assert!(PlatformConfig::parse("[flash]\nmode = \"warp\"").is_err());
+        assert!(PlatformConfig::parse("energy_model = \"mystery\"").is_err());
+    }
+
+    #[test]
+    fn empty_config_is_defaults() {
+        let cfg = PlatformConfig::parse("").unwrap();
+        assert_eq!(cfg.soc.bank_size, SocConfig::default().bank_size);
+    }
+}

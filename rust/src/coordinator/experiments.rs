@@ -1,0 +1,408 @@
+//! Experiment drivers for every table and figure in the paper's §V
+//! evaluation (DESIGN.md §5 maps each to its bench target).
+//!
+//! * [`fig4_sweep`] — §V-A signal-acquisition characterization,
+//! * [`fig5_all`] — §V-B TinyAI kernels (CPU vs CGRA, FEMU vs chip),
+//! * [`case_c`] — §V-C flash-virtualization transfer study,
+//! * Table I lives in [`super::table1`].
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::PlatformConfig;
+use crate::energy::EnergyModel;
+use crate::isa::assemble;
+use crate::periph::FlashTiming;
+use crate::perfmon::PowerState;
+use crate::virt::FlashService;
+use crate::workloads::{programs, reference as refimpl, signals};
+
+use super::{AppExit, Platform};
+
+// =====================================================================
+// Fig 4 — signal acquisition characterization
+// =====================================================================
+
+/// The sampling frequencies of Fig 4.
+pub const FIG4_FREQS_HZ: [f64; 6] = [100.0, 500.0, 1_000.0, 5_000.0, 10_000.0, 100_000.0];
+
+/// One bar group of Fig 4 under one calibration.
+#[derive(Clone, Debug)]
+pub struct Fig4Point {
+    pub sample_rate_hz: f64,
+    pub model: String,
+    /// Wall-clock of the acquisition window (s).
+    pub total_s: f64,
+    /// Time with the CPU domain active / asleep (s).
+    pub active_s: f64,
+    pub sleep_s: f64,
+    /// Energy split (mJ).
+    pub active_mj: f64,
+    pub sleep_mj: f64,
+    pub total_mj: f64,
+}
+
+/// Run the §V-A acquisition kernel for `window_s` seconds at
+/// `sample_rate_hz`, under both energy calibrations (FEMU + chip).
+pub fn fig4_point(
+    cfg: &PlatformConfig,
+    sample_rate_hz: f64,
+    window_s: f64,
+    seed: u64,
+) -> Result<Vec<Fig4Point>> {
+    let n_samples = (sample_rate_hz * window_s).round() as u64;
+    if n_samples == 0 {
+        bail!("window too short for {sample_rate_hz} Hz");
+    }
+    let mut p = Platform::new(cfg.clone());
+    // retention sleep for memories — the ULP acquisition configuration
+    p.dbg.load_source(&programs::acquisition(n_samples, 2))?;
+    let sig = signals::biosignal(seed, n_samples as usize, sample_rate_hz);
+    p.start_adc(sig.samples, sample_rate_hz);
+    let budget = (cfg.soc.freq_hz as f64 * window_s * 3.0) as u64 + 10_000_000;
+    match p.run_app(budget)? {
+        AppExit::Halted(_) => {}
+        AppExit::Budget => bail!("acquisition did not finish within budget"),
+    }
+    if p.dbg.soc.bus.spi_adc.underrun() {
+        bail!("ADC underrun during fig4 acquisition");
+    }
+    let snap = p.snapshot();
+    let freq = cfg.soc.freq_hz as f64;
+    let active_cycles = snap.cpu.get(PowerState::Active);
+    let sleep_cycles = snap.cycles - active_cycles;
+    let mut out = Vec::new();
+    for model in [EnergyModel::femu(), EnergyModel::heepocrates()] {
+        let report = model.estimate(&snap);
+        out.push(Fig4Point {
+            sample_rate_hz,
+            model: model.name.clone(),
+            total_s: snap.cycles as f64 / freq,
+            active_s: active_cycles as f64 / freq,
+            sleep_s: sleep_cycles as f64 / freq,
+            active_mj: report.active_mj,
+            sleep_mj: report.sleep_mj,
+            total_mj: report.total_mj,
+        });
+    }
+    Ok(out)
+}
+
+/// The full Fig 4 sweep. `window_s` defaults to the paper's 5 s via
+/// [`fig4_sweep_default`]; benches shrink it to keep runtimes sane (the
+/// active/sleep *fractions* are window-invariant).
+pub fn fig4_sweep(cfg: &PlatformConfig, window_s: f64, seed: u64) -> Result<Vec<Fig4Point>> {
+    let mut all = Vec::new();
+    for f in FIG4_FREQS_HZ {
+        all.extend(fig4_point(cfg, f, window_s, seed)?);
+    }
+    Ok(all)
+}
+
+pub fn fig4_sweep_default(cfg: &PlatformConfig) -> Result<Vec<Fig4Point>> {
+    fig4_sweep(cfg, 5.0, 0xF16_4)
+}
+
+// =====================================================================
+// Fig 5 — TinyAI kernels: CPU vs CGRA, FEMU vs chip
+// =====================================================================
+
+/// The three §V-B kernels at the paper's shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fig5Kernel {
+    /// 121x16 @ 16x4 INT32.
+    Mm,
+    /// 16x16x3 input, 8 3x3 filters, INT32.
+    Conv,
+    /// 512-point FxP32 (Q15).
+    Fft,
+}
+
+impl Fig5Kernel {
+    pub const ALL: [Fig5Kernel; 3] = [Fig5Kernel::Mm, Fig5Kernel::Conv, Fig5Kernel::Fft];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Fig5Kernel::Mm => "MM",
+            Fig5Kernel::Conv => "CONV",
+            Fig5Kernel::Fft => "FFT",
+        }
+    }
+}
+
+/// Execution stage (the paper's two configurations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fig5Impl {
+    Cpu,
+    Cgra,
+}
+
+impl Fig5Impl {
+    pub fn name(self) -> &'static str {
+        match self {
+            Fig5Impl::Cpu => "CPU",
+            Fig5Impl::Cgra => "CGRA",
+        }
+    }
+}
+
+/// One bar of Fig 5 under one calibration.
+#[derive(Clone, Debug)]
+pub struct Fig5Point {
+    pub kernel: &'static str,
+    pub implementation: &'static str,
+    pub model: String,
+    pub cycles: u64,
+    pub time_s: f64,
+    pub energy_mj: f64,
+    /// Output checked bit-exact against the shared oracle.
+    pub validated: bool,
+}
+
+/// Run one (kernel, impl) cell; returns one point per calibration.
+pub fn fig5_run(cfg: &PlatformConfig, kernel: Fig5Kernel, imp: Fig5Impl, seed: u64) -> Result<Vec<Fig5Point>> {
+    let mut p = Platform::new(cfg.clone());
+    let soc_freq = cfg.soc.freq_hz as f64;
+
+    // assemble + load the guest
+    let src = match (kernel, imp) {
+        (Fig5Kernel::Mm, Fig5Impl::Cpu) => programs::mm_cpu(121, 16, 4),
+        (Fig5Kernel::Mm, Fig5Impl::Cgra) => programs::mm_cgra(121, 16, 4),
+        (Fig5Kernel::Conv, Fig5Impl::Cpu) => programs::conv_cpu(16, 16, 3, 8, 3, 3),
+        (Fig5Kernel::Conv, Fig5Impl::Cgra) => programs::conv_cgra(16, 16, 3, 8, 3, 3),
+        (Fig5Kernel::Fft, Fig5Impl::Cpu) => programs::fft_cpu(512),
+        (Fig5Kernel::Fft, Fig5Impl::Cgra) => programs::fft_cgra(512),
+    };
+    let prog = p.dbg.load_source(&src)?;
+
+    // stage operands + compute expected outputs
+    let mut rng = crate::util::Rng::new(seed);
+    let validated: bool;
+    match kernel {
+        Fig5Kernel::Mm => {
+            let (m, k, n) = (121, 16, 4);
+            let a = rng.vec_i32(m * k, -4096, 4096);
+            let b = rng.vec_i32(k * n, -4096, 4096);
+            p.dbg.write_i32_slice(prog.symbol("a_buf")?, &a)?;
+            p.dbg.write_i32_slice(prog.symbol("b_buf")?, &b)?;
+            run_to_halt(&mut p)?;
+            let got = p.dbg.read_i32_slice(prog.symbol("c_buf")?, m * n)?;
+            validated = got == refimpl::matmul_i32(&a, &b, m, k, n);
+        }
+        Fig5Kernel::Conv => {
+            let (h, w, cin, f, kh, kw) = (16, 16, 3, 8, 3, 3);
+            let x = rng.vec_i32(h * w * cin, -2048, 2048);
+            let wts = rng.vec_i32(f * kh * kw * cin, -2048, 2048);
+            p.dbg.write_i32_slice(prog.symbol("x_buf")?, &x)?;
+            p.dbg.write_i32_slice(prog.symbol("w_buf")?, &wts)?;
+            run_to_halt(&mut p)?;
+            let oh = h - kh + 1;
+            let ow = w - kw + 1;
+            let got = p.dbg.read_i32_slice(prog.symbol("y_buf")?, oh * ow * f)?;
+            validated = got == refimpl::conv2d_i32(&x, &wts, h, w, cin, f, kh, kw);
+        }
+        Fig5Kernel::Fft => {
+            let n = 512;
+            let re = rng.vec_i32(n, -(1 << 15), 1 << 15);
+            let im = rng.vec_i32(n, -(1 << 15), 1 << 15);
+            let (wr, wi) = refimpl::twiddles_q15(n);
+            let rev: Vec<i32> =
+                refimpl::bit_reverse_indices(n).iter().map(|&x| x as i32).collect();
+            p.dbg.write_i32_slice(prog.symbol("re_buf")?, &re)?;
+            p.dbg.write_i32_slice(prog.symbol("im_buf")?, &im)?;
+            p.dbg.write_i32_slice(prog.symbol("rev_tbl")?, &rev)?;
+            p.dbg.write_i32_slice(prog.symbol("wr_tbl")?, &wr)?;
+            p.dbg.write_i32_slice(prog.symbol("wi_tbl")?, &wi)?;
+            run_to_halt(&mut p)?;
+            let got_re = p.dbg.read_i32_slice(prog.symbol("re_buf")?, n)?;
+            let got_im = p.dbg.read_i32_slice(prog.symbol("im_buf")?, n)?;
+            let mut want_re = re.clone();
+            let mut want_im = im.clone();
+            refimpl::fft_q15(&mut want_re, &mut want_im);
+            validated = got_re == want_re && got_im == want_im;
+        }
+    }
+
+    // perf window (manual mode) covers exactly the compute region
+    let window = p
+        .dbg
+        .soc
+        .perf
+        .window_snapshot()
+        .ok_or_else(|| anyhow!("kernel did not toggle the perf GPIO"))?
+        .clone();
+    let mut out = Vec::new();
+    for model in [EnergyModel::femu(), EnergyModel::heepocrates()] {
+        let report = model.estimate(&window);
+        out.push(Fig5Point {
+            kernel: kernel.name(),
+            implementation: imp.name(),
+            model: model.name.clone(),
+            cycles: window.cycles,
+            time_s: window.cycles as f64 / soc_freq,
+            energy_mj: report.total_mj,
+            validated,
+        });
+    }
+    Ok(out)
+}
+
+fn run_to_halt(p: &mut Platform) -> Result<()> {
+    match p.run_app(2_000_000_000)? {
+        AppExit::Halted(_) => Ok(()),
+        AppExit::Budget => bail!("kernel did not halt within budget"),
+    }
+}
+
+/// The full Fig 5 grid: 3 kernels x {CPU, CGRA} x {femu, chip}.
+pub fn fig5_all(cfg: &PlatformConfig, seed: u64) -> Result<Vec<Fig5Point>> {
+    let mut all = Vec::new();
+    for kernel in Fig5Kernel::ALL {
+        for imp in [Fig5Impl::Cpu, Fig5Impl::Cgra] {
+            all.extend(fig5_run(cfg, kernel, imp, seed)?);
+        }
+    }
+    Ok(all)
+}
+
+// =====================================================================
+// Case C — §V-C flash virtualization transfer study
+// =====================================================================
+
+/// Result of the §V-C study.
+#[derive(Clone, Debug)]
+pub struct CaseCResult {
+    pub windows: usize,
+    pub samples_per_window: usize,
+    /// Per-window transfer time (s).
+    pub virt_window_s: f64,
+    pub phys_window_s: f64,
+    /// Full-experiment transfer time (all windows).
+    pub virt_total_s: f64,
+    pub phys_total_s: f64,
+    pub speedup: f64,
+}
+
+/// Guest program: stream `windows x words` from flash, discarding data
+/// (transfer characterization, like the paper's measurement).
+fn flash_reader(windows: usize, words: usize) -> String {
+    format!(
+        r#"{prelude}
+.equ WINDOWS, {windows}
+.equ WORDS, {words}
+.equ WBYTES, {wbytes}
+_start:
+    li  s0, SPI_FLASH
+    li  s1, WINDOWS
+    li  s5, 0            # window base addr
+outer:
+    sw  s5, 8(s0)        # ADDR
+    li  s3, WORDS
+inner:
+    lw  t0, 12(s0)       # DATA
+    addi s3, s3, -1
+    bnez s3, inner
+    li  t1, WBYTES
+    add s5, s5, t1
+    addi s1, s1, -1
+    bnez s1, outer
+    ebreak
+"#,
+        prelude = programs::PRELUDE,
+        wbytes = words * 4,
+    )
+}
+
+/// Run the transfer study with one flash timing; returns (cycles_total,
+/// cycles_per_window).
+fn case_c_one(cfg: &PlatformConfig, timing: FlashTiming, windows: usize, words: usize, seed: u64) -> Result<u64> {
+    let mut cfg = cfg.clone();
+    cfg.soc.flash_timing = timing;
+    cfg.soc.flash_size = (windows * words * 4).next_power_of_two().max(1 << 20);
+    let mut p = Platform::new(cfg);
+    // stage real windows, packed two 16-bit samples per word (the §V-C
+    // image layout; content irrelevant for timing, staged for fidelity)
+    let data = signals::ultrasound_windows(seed, windows, words * 2);
+    let mut off = 0usize;
+    for w in &data {
+        FlashService::stage_bytes(&mut p.dbg.soc, off, &signals::pack_i16_pairs(w));
+        off += w.len() * 2;
+    }
+    let prog = assemble(&flash_reader(windows, words))?;
+    p.dbg.load_program(&prog)?;
+    let start = p.dbg.soc.now;
+    match p.run_app(1u64 << 40)? {
+        AppExit::Halted(_) => Ok(p.dbg.soc.now - start),
+        AppExit::Budget => bail!("flash reader did not halt"),
+    }
+}
+
+/// §V-C: 240 windows of 35 000 16-bit samples (packed two per word =
+/// 70 KiB/window), virtualized vs physical flash. `scale` shrinks the
+/// workload for quick runs (1 = paper size).
+pub fn case_c(cfg: &PlatformConfig, scale: usize) -> Result<CaseCResult> {
+    let windows = (240 / scale.max(1)).max(2);
+    let samples = (35_000 / scale.max(1)).max(200);
+    let words = samples / 2;
+    let virt_cycles = case_c_one(cfg, FlashTiming::virtualized(), windows, words, 0xCC)?;
+    let phys_cycles = case_c_one(cfg, FlashTiming::physical(), windows, words, 0xCC)?;
+    let f = cfg.soc.freq_hz as f64;
+    let virt_total_s = virt_cycles as f64 / f;
+    let phys_total_s = phys_cycles as f64 / f;
+    Ok(CaseCResult {
+        windows,
+        samples_per_window: samples,
+        virt_window_s: virt_total_s / windows as f64,
+        phys_window_s: phys_total_s / windows as f64,
+        virt_total_s,
+        phys_total_s,
+        speedup: phys_total_s / virt_total_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PlatformConfig {
+        PlatformConfig::default()
+    }
+
+    #[test]
+    fn fig4_point_low_freq_sleep_dominated() {
+        // 100 Hz, shortened window: active share must be < 1% of time.
+        let points = fig4_point(&cfg(), 100.0, 0.5, 1).unwrap();
+        assert_eq!(points.len(), 2);
+        let p = &points[0];
+        assert!(p.active_s / p.total_s < 0.01, "active frac {}", p.active_s / p.total_s);
+        assert!((p.total_s - 0.5).abs() < 0.05, "total {}", p.total_s);
+    }
+
+    #[test]
+    fn fig4_point_high_freq_active_dominated() {
+        let points = fig4_point(&cfg(), 100_000.0, 0.05, 1).unwrap();
+        let p = &points[0];
+        assert!(p.active_s / p.total_s > 0.70, "active frac {}", p.active_s / p.total_s);
+        // energy follows
+        assert!(p.active_mj > p.sleep_mj);
+    }
+
+    #[test]
+    fn fig5_mm_cpu_vs_cgra() {
+        let cpu = fig5_run(&cfg(), Fig5Kernel::Mm, Fig5Impl::Cpu, 5).unwrap();
+        let cgra = fig5_run(&cfg(), Fig5Kernel::Mm, Fig5Impl::Cgra, 5).unwrap();
+        assert!(cpu[0].validated && cgra[0].validated);
+        let speedup = cpu[0].cycles as f64 / cgra[0].cycles as f64;
+        assert!(speedup > 2.0 && speedup < 20.0, "MM speedup {speedup}");
+        // CGRA also reduces energy (both calibrations)
+        for (c, g) in cpu.iter().zip(&cgra) {
+            assert!(g.energy_mj < c.energy_mj, "{} vs {}", g.energy_mj, c.energy_mj);
+        }
+    }
+
+    #[test]
+    fn case_c_speedup_scale() {
+        let r = case_c(&cfg(), 40).unwrap();
+        assert!(r.speedup > 150.0 && r.speedup < 350.0, "speedup {}", r.speedup);
+        assert!(r.phys_window_s > r.virt_window_s * 100.0);
+    }
+}

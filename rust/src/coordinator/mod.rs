@@ -1,0 +1,155 @@
+//! The FEMU coordinator: platform assembly, the CS service loop, and the
+//! paper's experiment drivers.
+//!
+//! [`Platform`] is one X-HEEP-FEMU instance: the emulated RH (SoC behind
+//! a [`DebugSession`]) plus the CS services (ADC / flash / accelerator
+//! virtualization) and the two energy calibrations. [`Platform::run_app`]
+//! is the CS event loop: run the guest, answer service hand-offs, repeat
+//! — the in-process equivalent of the PL/PS control flow.
+//!
+//! [`experiments`] implements §V: every figure/table has a driver that
+//! benches and the CLI share (DESIGN.md §5 maps them).
+
+pub mod experiments;
+pub mod table1;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::PlatformConfig;
+use crate::cpu::Halt;
+use crate::energy::{EnergyModel, EnergyReport};
+use crate::perfmon::PerfSnapshot;
+use crate::runtime::Runtime;
+use crate::soc::{RunExit, Soc};
+use crate::virt::{AccelService, AdcService, DebugSession};
+
+/// Why [`Platform::run_app`] returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppExit {
+    Halted(Halt),
+    Budget,
+}
+
+/// One X-HEEP-FEMU platform instance.
+pub struct Platform {
+    pub dbg: DebugSession,
+    pub cfg: PlatformConfig,
+    pub adc: Option<AdcService>,
+    pub accel: Option<AccelService>,
+}
+
+impl Platform {
+    /// Build a platform from a config (no AOT artifacts — accelerator
+    /// virtualization disabled until [`Platform::attach_artifacts`]).
+    pub fn new(cfg: PlatformConfig) -> Self {
+        let mut soc = Soc::new(cfg.soc.clone());
+        soc.cpu.timing = cfg.timing;
+        Self { dbg: DebugSession::new(soc), cfg, adc: None, accel: None }
+    }
+
+    /// Attach the AOT artifact runtime (enables accelerator
+    /// virtualization / the mailbox path).
+    pub fn attach_artifacts(&mut self, dir: impl AsRef<std::path::Path>) -> Result<()> {
+        let rt = Runtime::load(dir).context("loading AOT artifacts (run `make artifacts`)")?;
+        self.accel = Some(AccelService::new(rt));
+        Ok(())
+    }
+
+    /// Attach an ADC dataset and start streaming at `sample_rate_hz`.
+    pub fn start_adc(&mut self, dataset: Vec<i32>, sample_rate_hz: f64) {
+        let mut adc = AdcService::new(dataset);
+        adc.start(&mut self.dbg.soc, sample_rate_hz);
+        self.adc = Some(adc);
+    }
+
+    /// The CS event loop: run the guest, servicing ADC refills and
+    /// mailbox rings, until halt or budget exhaustion.
+    pub fn run_app(&mut self, max_cycles: u64) -> Result<AppExit> {
+        let deadline = self.dbg.soc.now.saturating_add(max_cycles);
+        loop {
+            let left = deadline.saturating_sub(self.dbg.soc.now);
+            if left == 0 {
+                return Ok(AppExit::Budget);
+            }
+            match self.dbg.run(left) {
+                crate::virt::debugger::DebugStop::Halted(h) => return Ok(AppExit::Halted(h)),
+                crate::virt::debugger::DebugStop::Budget => return Ok(AppExit::Budget),
+                crate::virt::debugger::DebugStop::Breakpoint(pc) => {
+                    return Err(anyhow!("unexpected breakpoint at {pc:#x} in run_app"))
+                }
+                crate::virt::debugger::DebugStop::Service(RunExit::AdcRefill) => {
+                    let adc = self
+                        .adc
+                        .as_mut()
+                        .ok_or_else(|| anyhow!("guest used the ADC but no dataset attached"))?;
+                    adc.refill(&mut self.dbg.soc);
+                }
+                crate::virt::debugger::DebugStop::Service(RunExit::MailboxRing(off)) => {
+                    let accel = self.accel.as_mut().ok_or_else(|| {
+                        anyhow!("guest rang the mailbox but no artifacts attached")
+                    })?;
+                    accel.service(&mut self.dbg.soc, off)?;
+                }
+                crate::virt::debugger::DebugStop::Service(RunExit::DeadSleep) => {
+                    return Err(anyhow!(
+                        "guest dead-sleep at cycle {} (no wake source)",
+                        self.dbg.soc.now
+                    ))
+                }
+                crate::virt::debugger::DebugStop::Service(other) => {
+                    return Err(anyhow!("unhandled service exit {other:?}"))
+                }
+            }
+        }
+    }
+
+    /// Perf counters since reset (automatic mode).
+    pub fn snapshot(&self) -> PerfSnapshot {
+        self.dbg.soc.perf.snapshot(self.dbg.soc.now)
+    }
+
+    /// Estimate energy for a snapshot under a named calibration.
+    pub fn estimate(&self, snap: &PerfSnapshot, model: &EnergyModel) -> EnergyReport {
+        model.estimate(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::programs;
+
+    #[test]
+    fn run_app_plain_program() {
+        let mut p = Platform::new(PlatformConfig::default());
+        p.dbg.load_source("_start: li a0, 3\nebreak").unwrap();
+        assert_eq!(p.run_app(10_000).unwrap(), AppExit::Halted(Halt::Ebreak));
+    }
+
+    #[test]
+    fn run_app_with_adc() {
+        let mut p = Platform::new(PlatformConfig::default());
+        p.dbg.load_source(&programs::acquisition(600, 0)).unwrap();
+        p.start_adc((0..600).collect(), 100_000.0);
+        assert_eq!(p.run_app(10_000_000).unwrap(), AppExit::Halted(Halt::Ebreak));
+        assert!(!p.dbg.soc.bus.spi_adc.underrun());
+    }
+
+    #[test]
+    fn run_app_mailbox_without_artifacts_errors() {
+        let mut p = Platform::new(PlatformConfig::default());
+        p.dbg
+            .load_source(
+                r#"
+                .equ MBOX, 0x20000800
+                _start:
+                    li t0, MBOX
+                    li t1, 1
+                    sw t1, 0(t0)
+                    ebreak
+                "#,
+            )
+            .unwrap();
+        assert!(p.run_app(10_000).is_err());
+    }
+}

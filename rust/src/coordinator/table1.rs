@@ -1,0 +1,170 @@
+//! Table I — comparison of FPGA-based platforms across the five key
+//! features. The survey data is encoded here and the table is rendered
+//! programmatically (`femu table1`, `benches/table1.rs`), including the
+//! paper's filtering argument (§II): features are applied in descending
+//! frequency order and the platform set narrows until only FEMU remains.
+
+/// The five feature dimensions of Table I.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Feature {
+    HsBasedRh,
+    OsBasedCs,
+    IpVirtualization,
+    PerformanceEstimation,
+    EnergyEstimation,
+}
+
+impl Feature {
+    pub const ALL: [Feature; 5] = [
+        Feature::HsBasedRh,
+        Feature::OsBasedCs,
+        Feature::IpVirtualization,
+        Feature::PerformanceEstimation,
+        Feature::EnergyEstimation,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Feature::HsBasedRh => "HS-based RH",
+            Feature::OsBasedCs => "OS-based CS",
+            Feature::IpVirtualization => "IP Virtualization",
+            Feature::PerformanceEstimation => "Performance Estimation",
+            Feature::EnergyEstimation => "Energy Estimation",
+        }
+    }
+}
+
+/// One surveyed platform row.
+#[derive(Clone, Copy, Debug)]
+pub struct PlatformRow {
+    pub name: &'static str,
+    pub reference: &'static str,
+    /// Feature support in [`Feature::ALL`] order.
+    pub features: [bool; 5],
+}
+
+impl PlatformRow {
+    pub fn supports(&self, f: Feature) -> bool {
+        self.features[Feature::ALL.iter().position(|&x| x == f).unwrap()]
+    }
+}
+
+/// The Table I survey data, exactly as published.
+pub const TABLE1: [PlatformRow; 14] = [
+    PlatformRow { name: "LiME", reference: "[13]", features: [false, false, false, true, false] },
+    PlatformRow { name: "Hybrid", reference: "[14]", features: [false, true, true, true, false] },
+    PlatformRow { name: "FAME", reference: "[15]", features: [false, true, false, true, false] },
+    PlatformRow {
+        name: "Extrapolator",
+        reference: "[16]",
+        features: [false, true, false, true, false],
+    },
+    PlatformRow { name: "ULPemu", reference: "[17]", features: [true, false, false, true, true] },
+    PlatformRow { name: "ACE", reference: "[18]", features: [false, true, false, true, false] },
+    PlatformRow {
+        name: "SnifferSoC",
+        reference: "[19]",
+        features: [false, false, false, true, true],
+    },
+    PlatformRow {
+        name: "ThermalMPSoC",
+        reference: "[20]",
+        features: [false, false, false, true, true],
+    },
+    PlatformRow { name: "HLL", reference: "[21]", features: [false, false, false, true, false] },
+    PlatformRow { name: "HERO", reference: "[22]", features: [true, true, true, true, false] },
+    PlatformRow { name: "Plug", reference: "[23]", features: [true, false, true, true, false] },
+    PlatformRow {
+        name: "SoftPower",
+        reference: "[24]",
+        features: [true, false, false, true, true],
+    },
+    PlatformRow { name: "DAQ", reference: "[25]", features: [true, false, false, false, false] },
+    PlatformRow {
+        name: "FEMU (this work)",
+        reference: "",
+        features: [true, true, true, true, true],
+    },
+];
+
+/// Render the table as Markdown (the regenerated artifact).
+pub fn render_markdown() -> String {
+    let mut s = String::new();
+    s.push_str("| FPGA Platforms |");
+    for f in Feature::ALL {
+        s.push_str(&format!(" {} |", f.name()));
+    }
+    s.push('\n');
+    s.push_str("|---|---|---|---|---|---|\n");
+    for row in TABLE1 {
+        s.push_str(&format!("| {} {} |", row.name, row.reference));
+        for f in Feature::ALL {
+            s.push_str(if row.supports(f) { " yes |" } else { " - |" });
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// The §II filtering argument: apply features in descending support
+/// frequency; return (feature, surviving platforms) per step.
+pub fn filtering_steps() -> Vec<(Feature, Vec<&'static str>)> {
+    // order features by how many surveyed platforms (excluding FEMU)
+    // support them, descending — the paper's narrative order
+    let mut order: Vec<Feature> = Feature::ALL.to_vec();
+    let count = |f: Feature| {
+        TABLE1.iter().take(TABLE1.len() - 1).filter(|r| r.supports(f)).count()
+    };
+    order.sort_by_key(|&f| std::cmp::Reverse(count(f)));
+
+    let mut surviving: Vec<&PlatformRow> = TABLE1.iter().collect();
+    let mut steps = Vec::new();
+    for f in order {
+        surviving.retain(|r| r.supports(f));
+        steps.push((f, surviving.iter().map(|r| r.name).collect()));
+    }
+    steps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn only_femu_supports_all_five() {
+        let full: Vec<_> =
+            TABLE1.iter().filter(|r| Feature::ALL.iter().all(|&f| r.supports(f))).collect();
+        assert_eq!(full.len(), 1);
+        assert_eq!(full[0].name, "FEMU (this work)");
+    }
+
+    #[test]
+    fn filtering_narrows_to_femu() {
+        let steps = filtering_steps();
+        assert_eq!(steps.len(), 5);
+        // first filter is performance estimation (most common, 13/13
+        // minus DAQ)
+        assert_eq!(steps[0].0, Feature::PerformanceEstimation);
+        assert!(!steps[0].1.contains(&"DAQ"));
+        // final set: FEMU alone
+        assert_eq!(steps.last().unwrap().1, vec!["FEMU (this work)"]);
+    }
+
+    #[test]
+    fn paper_row_spot_checks() {
+        let hero = TABLE1.iter().find(|r| r.name == "HERO").unwrap();
+        assert!(hero.supports(Feature::HsBasedRh));
+        assert!(hero.supports(Feature::OsBasedCs));
+        assert!(!hero.supports(Feature::EnergyEstimation));
+        let ulp = TABLE1.iter().find(|r| r.name == "ULPemu").unwrap();
+        assert!(ulp.supports(Feature::EnergyEstimation));
+        assert!(!ulp.supports(Feature::OsBasedCs));
+    }
+
+    #[test]
+    fn markdown_renders_all_rows() {
+        let md = render_markdown();
+        assert_eq!(md.lines().count(), 2 + 14);
+        assert!(md.contains("FEMU (this work)"));
+    }
+}

@@ -1,0 +1,147 @@
+//! Machine-mode CSR file.
+
+use crate::isa::csr;
+
+/// mstatus bits we implement.
+const MSTATUS_MIE: u32 = 1 << 3;
+const MSTATUS_MPIE: u32 = 1 << 7;
+
+#[derive(Clone, Debug, Default)]
+pub struct Csrs {
+    pub mstatus: u32,
+    pub mie: u32,
+    pub mip: u32,
+    pub mtvec: u32,
+    pub mscratch: u32,
+    pub mepc: u32,
+    pub mcause: u32,
+    pub mtval: u32,
+}
+
+impl Csrs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Global machine interrupt enable.
+    pub fn mie_global(&self) -> bool {
+        self.mstatus & MSTATUS_MIE != 0
+    }
+
+    pub fn set_mie_global(&mut self, on: bool) {
+        if on {
+            self.mstatus |= MSTATUS_MIE;
+        } else {
+            self.mstatus &= !MSTATUS_MIE;
+        }
+    }
+
+    /// Trap entry: MPIE <- MIE, MIE <- 0.
+    pub fn push_mie(&mut self) {
+        let mie = self.mstatus & MSTATUS_MIE != 0;
+        self.mstatus &= !(MSTATUS_MIE | MSTATUS_MPIE);
+        if mie {
+            self.mstatus |= MSTATUS_MPIE;
+        }
+    }
+
+    /// MRET: MIE <- MPIE, MPIE <- 1.
+    pub fn pop_mie(&mut self) {
+        let mpie = self.mstatus & MSTATUS_MPIE != 0;
+        self.mstatus |= MSTATUS_MPIE;
+        if mpie {
+            self.mstatus |= MSTATUS_MIE;
+        } else {
+            self.mstatus &= !MSTATUS_MIE;
+        }
+    }
+
+    /// CSR read; `None` for unimplemented addresses (illegal instruction).
+    pub fn read(&self, addr: u16, cycle: u64, instret: u64) -> Option<u32> {
+        Some(match addr {
+            csr::MSTATUS => self.mstatus,
+            csr::MIE => self.mie,
+            csr::MIP => self.mip,
+            csr::MTVEC => self.mtvec,
+            csr::MSCRATCH => self.mscratch,
+            csr::MEPC => self.mepc,
+            csr::MCAUSE => self.mcause,
+            csr::MTVAL => self.mtval,
+            csr::MCYCLE => cycle as u32,
+            csr::MCYCLEH => (cycle >> 32) as u32,
+            csr::MINSTRET => instret as u32,
+            csr::MINSTRETH => (instret >> 32) as u32,
+            csr::MHARTID => 0,
+            _ => return None,
+        })
+    }
+
+    /// CSR write; returns false for unimplemented/read-only addresses.
+    pub fn write(&mut self, addr: u16, value: u32) -> bool {
+        match addr {
+            csr::MSTATUS => self.mstatus = value & (MSTATUS_MIE | MSTATUS_MPIE),
+            csr::MIE => self.mie = value,
+            // mip is hardware-driven in this model; writes are ignored but
+            // legal (some firmware clears it defensively)
+            csr::MIP => {}
+            csr::MTVEC => self.mtvec = value,
+            csr::MSCRATCH => self.mscratch = value,
+            csr::MEPC => self.mepc = value & !1,
+            csr::MCAUSE => self.mcause = value,
+            csr::MTVAL => self.mtval = value,
+            // cycle/instret are read-only in this core
+            csr::MCYCLE | csr::MCYCLEH | csr::MINSTRET | csr::MINSTRETH | csr::MHARTID => {
+                return false
+            }
+            _ => return false,
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mie_push_pop() {
+        let mut c = Csrs::new();
+        c.set_mie_global(true);
+        c.push_mie();
+        assert!(!c.mie_global());
+        assert!(c.mstatus & MSTATUS_MPIE != 0);
+        c.pop_mie();
+        assert!(c.mie_global());
+    }
+
+    #[test]
+    fn push_preserves_disabled_state() {
+        let mut c = Csrs::new();
+        c.push_mie(); // MIE was 0
+        c.pop_mie();
+        assert!(!c.mie_global());
+    }
+
+    #[test]
+    fn counters_read_only() {
+        let mut c = Csrs::new();
+        assert!(!c.write(csr::MCYCLE, 5));
+        assert!(!c.write(csr::MHARTID, 5));
+        assert_eq!(c.read(csr::MCYCLE, 0x1_2345_6789, 0), Some(0x2345_6789));
+        assert_eq!(c.read(csr::MCYCLEH, 0x1_2345_6789, 0), Some(1));
+    }
+
+    #[test]
+    fn unknown_csr_rejected() {
+        let mut c = Csrs::new();
+        assert_eq!(c.read(0x7C0, 0, 0), None);
+        assert!(!c.write(0x7C0, 1));
+    }
+
+    #[test]
+    fn mepc_aligned() {
+        let mut c = Csrs::new();
+        c.write(csr::MEPC, 0x1003);
+        assert_eq!(c.mepc, 0x1002);
+    }
+}

@@ -1,0 +1,771 @@
+//! RV32IM machine-mode CPU core with an instruction-level timing model.
+//!
+//! Models the X-HEEP host core (a CV32E40-class in-order RISC-V): one
+//! instruction per step with per-class cycle costs, machine-mode CSRs,
+//! machine-timer + fast external interrupts, and WFI clock-gating (the
+//! hook the acquisition workloads use to sleep between samples, which is
+//! what Fig 4's active/sleep split measures).
+//!
+//! The core is bus-agnostic: [`BusAccess`] is implemented by
+//! [`crate::bus::Bus`]; tests use flat test buses.
+
+mod csrs;
+mod timing;
+
+pub use csrs::Csrs;
+pub use timing::Timing;
+
+use crate::isa::{self, AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp};
+
+/// Memory access width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Size {
+    Byte,
+    Half,
+    Word,
+}
+
+/// Bus fault kinds, mapped to RISC-V access-fault causes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BusFault {
+    /// No device at this address, or device rejected the access.
+    Access,
+    /// Target memory bank is power-gated / in retention.
+    NotPowered,
+}
+
+/// The CPU's window onto the interconnect. All methods return the value
+/// (for reads) plus the number of **extra** wait-state cycles beyond the
+/// base instruction cost.
+pub trait BusAccess {
+    fn fetch32(&mut self, addr: u32, now: u64) -> Result<(u32, u32), BusFault>;
+    fn read(&mut self, addr: u32, size: Size, now: u64) -> Result<(u32, u32), BusFault>;
+    fn write(&mut self, addr: u32, size: Size, value: u32, now: u64) -> Result<u32, BusFault>;
+}
+
+/// Why the core stopped executing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Halt {
+    /// `ebreak` — the program-finished / debugger-breakpoint convention.
+    Ebreak,
+    /// Trap taken with `mtvec == 0` (no handler installed): a guest bug;
+    /// halting beats spinning through the zero page.
+    UnhandledTrap { cause: u32, pc: u32 },
+}
+
+/// Core execution state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CpuState {
+    Running,
+    /// In WFI: clock-gated until an enabled interrupt is pending.
+    Sleeping,
+    Halted(Halt),
+}
+
+/// Result of one `step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepResult {
+    /// Cycles consumed by this step (base cost + wait states).
+    pub cycles: u32,
+    /// Instruction retired (false for WFI sleep poll / halted).
+    pub retired: bool,
+}
+
+/// Machine-level interrupt cause bits in `mip`/`mie`.
+pub mod int {
+    /// Machine timer interrupt (standard bit 7).
+    pub const MTIP: u32 = 1 << 7;
+    /// Fast external lines (CV32E40P-style custom bits 16..): see
+    /// [`crate::periph::irq`] for the line assignments.
+    pub const FAST_BASE: u32 = 16;
+
+    pub fn fast(line: u32) -> u32 {
+        1 << (FAST_BASE + line)
+    }
+}
+
+/// Trap causes.
+pub mod cause {
+    pub const ILLEGAL_INSTR: u32 = 2;
+    pub const BREAKPOINT: u32 = 3;
+    pub const LOAD_MISALIGNED: u32 = 4;
+    pub const LOAD_FAULT: u32 = 5;
+    pub const STORE_MISALIGNED: u32 = 6;
+    pub const STORE_FAULT: u32 = 7;
+    pub const ECALL_M: u32 = 11;
+    pub const INT_FLAG: u32 = 0x8000_0000;
+
+    pub fn interrupt(bit: u32) -> u32 {
+        INT_FLAG | bit
+    }
+}
+
+/// Decode-cache capacity in words (covers the low SRAM region where code
+/// lives; 64K words = 256 KiB of text).
+const ICACHE_WORDS: usize = 1 << 16;
+
+#[derive(Clone, Debug)]
+pub struct Cpu {
+    pub regs: [u32; 32],
+    pub pc: u32,
+    pub csrs: Csrs,
+    pub state: CpuState,
+    pub timing: Timing,
+    /// Retired instruction counter (also visible as minstret).
+    pub instret: u64,
+    /// Pre-decoded instruction cache, tagged by the raw fetched word:
+    /// `icache[pc >> 2] = (word, decoded)`. Tagging by the word itself
+    /// makes the cache self-invalidating under self-modifying code and
+    /// reprogramming (if memory changed, the tag mismatches and the slot
+    /// is re-decoded) — the §Perf pass's first optimization
+    /// (EXPERIMENTS.md §Perf, opt 1).
+    icache: Vec<(u32, Instr)>,
+}
+
+impl Cpu {
+    pub fn new(pc: u32) -> Self {
+        Self {
+            regs: [0; 32],
+            pc,
+            csrs: Csrs::new(),
+            state: CpuState::Running,
+            timing: Timing::default(),
+            instret: 0,
+            // tag 0 never matches a real instruction word 0 because word
+            // 0 does not decode; pre-fill with an unencodable pair
+            icache: vec![(0, Instr::Fence); ICACHE_WORDS],
+        }
+    }
+
+    pub fn reset(&mut self, pc: u32) {
+        self.regs = [0; 32];
+        self.pc = pc;
+        self.csrs = Csrs::new();
+        self.state = CpuState::Running;
+        self.instret = 0;
+    }
+
+    #[inline]
+    fn set_reg(&mut self, rd: u8, v: u32) {
+        if rd != 0 {
+            self.regs[rd as usize] = v;
+        }
+    }
+
+    /// Update the external interrupt pending lines (level-sensitive: the
+    /// SoC recomputes them after every step / event).
+    pub fn set_irq_lines(&mut self, mtip: bool, fast_lines: u32) {
+        let mut mip = self.csrs.mip & !(int::MTIP | (0xFFFF << int::FAST_BASE));
+        if mtip {
+            mip |= int::MTIP;
+        }
+        mip |= fast_lines << int::FAST_BASE;
+        self.csrs.mip = mip;
+    }
+
+    /// True if an enabled interrupt is pending (wake condition for WFI).
+    #[inline]
+    pub fn interrupt_pending(&self) -> bool {
+        self.csrs.mie & self.csrs.mip != 0
+    }
+
+    /// Take the highest-priority pending interrupt if globally enabled.
+    /// Returns the trap entry cost if one was taken.
+    fn maybe_take_interrupt(&mut self) -> Option<u32> {
+        if !self.csrs.mie_global() {
+            return None;
+        }
+        let pending = self.csrs.mie & self.csrs.mip;
+        if pending == 0 {
+            return None;
+        }
+        // priority: fast lines (high bit first), then timer
+        let bit = 31 - pending.leading_zeros();
+        self.trap(cause::interrupt(bit), 0);
+        Some(self.timing.trap_entry)
+    }
+
+    /// Enter a trap: save pc/cause, jump to mtvec. With mtvec unset the
+    /// core halts (see [`Halt::UnhandledTrap`]).
+    fn trap(&mut self, cause_val: u32, tval: u32) {
+        if self.csrs.mtvec == 0 {
+            self.state = CpuState::Halted(Halt::UnhandledTrap { cause: cause_val, pc: self.pc });
+            return;
+        }
+        self.csrs.mepc = self.pc;
+        self.csrs.mcause = cause_val;
+        self.csrs.mtval = tval;
+        self.csrs.push_mie();
+        // vectored mode (mtvec[0]=1): interrupts jump to base + 4*cause
+        let base = self.csrs.mtvec & !3;
+        if self.csrs.mtvec & 1 != 0 && cause_val & cause::INT_FLAG != 0 {
+            self.pc = base + 4 * (cause_val & 0x7FFF_FFFF);
+        } else {
+            self.pc = base;
+        }
+    }
+
+    /// Execute one instruction (or one sleep poll). `now` is the global
+    /// cycle counter at the start of the step.
+    pub fn step<B: BusAccess>(&mut self, bus: &mut B, now: u64) -> StepResult {
+        match self.state {
+            CpuState::Halted(_) => return StepResult { cycles: 0, retired: false },
+            CpuState::Sleeping => {
+                if self.interrupt_pending() {
+                    self.state = CpuState::Running;
+                    // wake: if globally enabled, vector immediately
+                    let cost = self.maybe_take_interrupt().unwrap_or(self.timing.wake);
+                    return StepResult { cycles: cost, retired: false };
+                }
+                // caller (SoC) fast-forwards to the next event; this cost
+                // covers one idle poll if it chooses to tick instead
+                return StepResult { cycles: 1, retired: false };
+            }
+            CpuState::Running => {}
+        }
+
+        if let Some(cost) = self.maybe_take_interrupt() {
+            return StepResult { cycles: cost, retired: false };
+        }
+
+        // fetch
+        let (word, fetch_wait) = match bus.fetch32(self.pc, now) {
+            Ok(w) => w,
+            Err(_) => {
+                self.trap(cause::LOAD_FAULT, self.pc);
+                return StepResult { cycles: self.timing.trap_entry, retired: false };
+            }
+        };
+        // decode (through the word-tagged cache: a hit skips the decoder
+        // entirely; word 0 never decodes, so the zero tag is safe)
+        let slot = (self.pc >> 2) as usize;
+        let instr = if slot < ICACHE_WORDS {
+            let cached = self.icache[slot];
+            if cached.0 == word {
+                cached.1
+            } else {
+                let Some(instr) = isa::decode(word) else {
+                    self.trap(cause::ILLEGAL_INSTR, word);
+                    return StepResult { cycles: self.timing.trap_entry, retired: false };
+                };
+                self.icache[slot] = (word, instr);
+                instr
+            }
+        } else {
+            let Some(instr) = isa::decode(word) else {
+                self.trap(cause::ILLEGAL_INSTR, word);
+                return StepResult { cycles: self.timing.trap_entry, retired: false };
+            };
+            instr
+        };
+
+        let mut cycles = fetch_wait;
+        let mut next_pc = self.pc.wrapping_add(4);
+
+        macro_rules! trap_ret {
+            ($cause:expr, $tval:expr) => {{
+                self.trap($cause, $tval);
+                return StepResult { cycles: cycles + self.timing.trap_entry, retired: false };
+            }};
+        }
+
+        match instr {
+            Instr::Lui { rd, imm } => {
+                self.set_reg(rd, imm as u32);
+                cycles += self.timing.alu;
+            }
+            Instr::Auipc { rd, imm } => {
+                self.set_reg(rd, self.pc.wrapping_add(imm as u32));
+                cycles += self.timing.alu;
+            }
+            Instr::Jal { rd, imm } => {
+                self.set_reg(rd, next_pc);
+                next_pc = self.pc.wrapping_add(imm as u32);
+                cycles += self.timing.jump;
+            }
+            Instr::Jalr { rd, rs1, imm } => {
+                let target = self.regs[rs1 as usize].wrapping_add(imm as u32) & !1;
+                self.set_reg(rd, next_pc);
+                next_pc = target;
+                cycles += self.timing.jump;
+            }
+            Instr::Branch { op, rs1, rs2, imm } => {
+                let a = self.regs[rs1 as usize];
+                let b = self.regs[rs2 as usize];
+                let taken = match op {
+                    BranchOp::Eq => a == b,
+                    BranchOp::Ne => a != b,
+                    BranchOp::Lt => (a as i32) < (b as i32),
+                    BranchOp::Ge => (a as i32) >= (b as i32),
+                    BranchOp::Ltu => a < b,
+                    BranchOp::Geu => a >= b,
+                };
+                cycles += self.timing.branch;
+                if taken {
+                    next_pc = self.pc.wrapping_add(imm as u32);
+                    cycles += self.timing.branch_taken_penalty;
+                }
+            }
+            Instr::Load { op, rd, rs1, imm } => {
+                let addr = self.regs[rs1 as usize].wrapping_add(imm as u32);
+                let (size, align) = match op {
+                    LoadOp::Lb | LoadOp::Lbu => (Size::Byte, 1),
+                    LoadOp::Lh | LoadOp::Lhu => (Size::Half, 2),
+                    LoadOp::Lw => (Size::Word, 4),
+                };
+                if addr % align != 0 {
+                    trap_ret!(cause::LOAD_MISALIGNED, addr);
+                }
+                let (raw, wait) = match bus.read(addr, size, now) {
+                    Ok(r) => r,
+                    Err(_) => trap_ret!(cause::LOAD_FAULT, addr),
+                };
+                let value = match op {
+                    LoadOp::Lb => raw as u8 as i8 as i32 as u32,
+                    LoadOp::Lbu => raw as u8 as u32,
+                    LoadOp::Lh => raw as u16 as i16 as i32 as u32,
+                    LoadOp::Lhu => raw as u16 as u32,
+                    LoadOp::Lw => raw,
+                };
+                self.set_reg(rd, value);
+                cycles += self.timing.load + wait;
+            }
+            Instr::Store { op, rs1, rs2, imm } => {
+                let addr = self.regs[rs1 as usize].wrapping_add(imm as u32);
+                let (size, align) = match op {
+                    StoreOp::Sb => (Size::Byte, 1),
+                    StoreOp::Sh => (Size::Half, 2),
+                    StoreOp::Sw => (Size::Word, 4),
+                };
+                if addr % align != 0 {
+                    trap_ret!(cause::STORE_MISALIGNED, addr);
+                }
+                let value = self.regs[rs2 as usize];
+                let wait = match bus.write(addr, size, value, now) {
+                    Ok(w) => w,
+                    Err(_) => trap_ret!(cause::STORE_FAULT, addr),
+                };
+                cycles += self.timing.store + wait;
+            }
+            Instr::OpImm { op, rd, rs1, imm } => {
+                let a = self.regs[rs1 as usize];
+                let v = alu(op, a, imm as u32);
+                self.set_reg(rd, v);
+                cycles += self.timing.alu;
+            }
+            Instr::Op { op, rd, rs1, rs2 } => {
+                let a = self.regs[rs1 as usize];
+                let b = self.regs[rs2 as usize];
+                let v = alu(op, a, b);
+                self.set_reg(rd, v);
+                cycles += match op {
+                    AluOp::Mul | AluOp::Mulh | AluOp::Mulhsu | AluOp::Mulhu => self.timing.mul,
+                    AluOp::Div | AluOp::Divu | AluOp::Rem | AluOp::Remu => self.timing.div,
+                    _ => self.timing.alu,
+                };
+            }
+            Instr::Fence => cycles += self.timing.alu,
+            Instr::Ecall => trap_ret!(cause::ECALL_M, 0),
+            Instr::Ebreak => {
+                self.state = CpuState::Halted(Halt::Ebreak);
+                return StepResult { cycles: cycles + self.timing.alu, retired: true };
+            }
+            Instr::Wfi => {
+                self.state = CpuState::Sleeping;
+                self.pc = next_pc;
+                self.instret += 1;
+                return StepResult { cycles: cycles + self.timing.alu, retired: true };
+            }
+            Instr::Mret => {
+                self.csrs.pop_mie();
+                next_pc = self.csrs.mepc;
+                cycles += self.timing.jump;
+            }
+            Instr::Csr { op, rd, rs1, csr, imm } => {
+                let old = match self.csrs.read(csr, now, self.instret) {
+                    Some(v) => v,
+                    None => trap_ret!(cause::ILLEGAL_INSTR, word),
+                };
+                let operand = if imm { rs1 as u32 } else { self.regs[rs1 as usize] };
+                let new = match op {
+                    CsrOp::Rw => Some(operand),
+                    // rs1=x0 (or zimm 0) means "read only, do not write"
+                    CsrOp::Rs => (rs1 != 0).then_some(old | operand),
+                    CsrOp::Rc => (rs1 != 0).then_some(old & !operand),
+                };
+                if let Some(new) = new {
+                    if !self.csrs.write(csr, new) {
+                        trap_ret!(cause::ILLEGAL_INSTR, word);
+                    }
+                }
+                self.set_reg(rd, old);
+                cycles += self.timing.csr;
+            }
+        }
+
+        self.pc = next_pc;
+        self.instret += 1;
+        StepResult { cycles, retired: true }
+    }
+}
+
+#[inline]
+fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a << (b & 31),
+        AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+        AluOp::Sltu => (a < b) as u32,
+        AluOp::Xor => a ^ b,
+        AluOp::Srl => a >> (b & 31),
+        AluOp::Sra => ((a as i32) >> (b & 31)) as u32,
+        AluOp::Or => a | b,
+        AluOp::And => a & b,
+        AluOp::Mul => a.wrapping_mul(b),
+        AluOp::Mulh => (((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32,
+        AluOp::Mulhsu => (((a as i32 as i64) * (b as u64 as i64)) >> 32) as u32,
+        AluOp::Mulhu => (((a as u64) * (b as u64)) >> 32) as u32,
+        AluOp::Div => {
+            if b == 0 {
+                u32::MAX
+            } else if a == 0x8000_0000 && b == u32::MAX {
+                a // overflow: -2^31 / -1
+            } else {
+                ((a as i32) / (b as i32)) as u32
+            }
+        }
+        AluOp::Divu => {
+            if b == 0 {
+                u32::MAX
+            } else {
+                a / b
+            }
+        }
+        AluOp::Rem => {
+            if b == 0 {
+                a
+            } else if a == 0x8000_0000 && b == u32::MAX {
+                0
+            } else {
+                ((a as i32) % (b as i32)) as u32
+            }
+        }
+        AluOp::Remu => {
+            if b == 0 {
+                a
+            } else {
+                a % b
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    /// Flat 64 KiB RAM test bus, no wait states.
+    struct FlatBus {
+        mem: Vec<u8>,
+    }
+
+    impl FlatBus {
+        fn new(prog: &crate::isa::Program) -> Self {
+            let mut mem = vec![0u8; 0x40000];
+            for (i, w) in prog.text.iter().enumerate() {
+                mem[prog.text_base as usize + i * 4..][..4].copy_from_slice(&w.to_le_bytes());
+            }
+            let db = prog.data_base as usize;
+            mem[db..db + prog.data.len()].copy_from_slice(&prog.data);
+            Self { mem }
+        }
+    }
+
+    impl BusAccess for FlatBus {
+        fn fetch32(&mut self, addr: u32, _now: u64) -> Result<(u32, u32), BusFault> {
+            let a = addr as usize;
+            if a + 4 > self.mem.len() {
+                return Err(BusFault::Access);
+            }
+            Ok((u32::from_le_bytes(self.mem[a..a + 4].try_into().unwrap()), 0))
+        }
+
+        fn read(&mut self, addr: u32, size: Size, now: u64) -> Result<(u32, u32), BusFault> {
+            let a = addr as usize;
+            let n = match size {
+                Size::Byte => 1,
+                Size::Half => 2,
+                Size::Word => 4,
+            };
+            if a + n > self.mem.len() {
+                return Err(BusFault::Access);
+            }
+            let mut bytes = [0u8; 4];
+            bytes[..n].copy_from_slice(&self.mem[a..a + n]);
+            let _ = now;
+            Ok((u32::from_le_bytes(bytes), 0))
+        }
+
+        fn write(&mut self, addr: u32, size: Size, value: u32, _now: u64) -> Result<u32, BusFault> {
+            let a = addr as usize;
+            let n = match size {
+                Size::Byte => 1,
+                Size::Half => 2,
+                Size::Word => 4,
+            };
+            if a + n > self.mem.len() {
+                return Err(BusFault::Access);
+            }
+            self.mem[a..a + n].copy_from_slice(&value.to_le_bytes()[..n]);
+            Ok(0)
+        }
+    }
+
+    fn run(src: &str) -> (Cpu, FlatBus, u64) {
+        let prog = assemble(src).expect("assemble");
+        let mut bus = FlatBus::new(&prog);
+        let mut cpu = Cpu::new(prog.entry);
+        let mut now = 0u64;
+        for _ in 0..1_000_000 {
+            if matches!(cpu.state, CpuState::Halted(_)) {
+                return (cpu, bus, now);
+            }
+            let r = cpu.step(&mut bus, now);
+            now += r.cycles as u64;
+        }
+        panic!("program did not halt; pc={:#x}", cpu.pc);
+    }
+
+    #[test]
+    fn arithmetic_program() {
+        let (cpu, _, _) = run(
+            r#"
+            _start:
+                li a0, 7
+                li a1, 6
+                mul a2, a0, a1      # 42
+                li a3, -15
+                div a4, a3, a0      # -2 (toward zero)
+                rem a5, a3, a0      # -1
+                ebreak
+            "#,
+        );
+        assert_eq!(cpu.regs[12], 42);
+        assert_eq!(cpu.regs[14] as i32, -2);
+        assert_eq!(cpu.regs[15] as i32, -1);
+        assert_eq!(cpu.state, CpuState::Halted(Halt::Ebreak));
+    }
+
+    #[test]
+    fn div_by_zero_semantics() {
+        let (cpu, _, _) = run(
+            r#"
+            li a0, 5
+            li a1, 0
+            div a2, a0, a1    # -1
+            divu a3, a0, a1   # 0xFFFFFFFF
+            rem a4, a0, a1    # 5
+            ebreak
+            "#,
+        );
+        assert_eq!(cpu.regs[12], u32::MAX);
+        assert_eq!(cpu.regs[13], u32::MAX);
+        assert_eq!(cpu.regs[14], 5);
+    }
+
+    #[test]
+    fn mulh_variants() {
+        let (cpu, _, _) = run(
+            r#"
+            li a0, -2
+            li a1, 3
+            mulh  a2, a0, a1    # high of -6 = -1
+            mulhu a3, a0, a1    # high of (2^32-2)*3
+            mulhsu a4, a0, a1   # high of -2 * 3 (unsigned b)
+            ebreak
+            "#,
+        );
+        assert_eq!(cpu.regs[12], 0xFFFF_FFFF);
+        assert_eq!(cpu.regs[13], 2); // (2^32-2)*3 = 3*2^32 - 6
+        assert_eq!(cpu.regs[14], 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn memory_and_loops() {
+        let (cpu, bus, _) = run(
+            r#"
+            .data
+            arr: .word 5, 4, 3, 2, 1
+            out: .word 0
+            .text
+            _start:
+                la  t0, arr
+                li  t1, 5       # count
+                li  t2, 0       # sum
+            loop:
+                lw  t3, 0(t0)
+                add t2, t2, t3
+                addi t0, t0, 4
+                addi t1, t1, -1
+                bnez t1, loop
+                la  t4, out
+                sw  t2, 0(t4)
+                ebreak
+            "#,
+        );
+        assert_eq!(cpu.regs[7], 15);
+        let out_addr = 0x0002_0014usize;
+        assert_eq!(
+            u32::from_le_bytes(bus.mem[out_addr..out_addr + 4].try_into().unwrap()),
+            15
+        );
+    }
+
+    #[test]
+    fn byte_halfword_sign_extension() {
+        let (cpu, _, _) = run(
+            r#"
+            .data
+            b: .byte 0xFF
+            .align 1
+            h: .half 0x8000
+            .text
+            la t0, b
+            lb t1, 0(t0)     # -1
+            lbu t2, 0(t0)    # 255
+            la t0, h
+            lh t3, 0(t0)     # -32768
+            lhu t4, 0(t0)    # 32768
+            ebreak
+            "#,
+        );
+        assert_eq!(cpu.regs[6] as i32, -1);
+        assert_eq!(cpu.regs[7], 255);
+        assert_eq!(cpu.regs[28] as i32, -32768);
+        assert_eq!(cpu.regs[29], 32768);
+    }
+
+    #[test]
+    fn misaligned_load_traps_to_halt_without_mtvec() {
+        let (cpu, _, _) = run("li t0, 2\nlw t1, 0(t0)\nebreak");
+        match cpu.state {
+            CpuState::Halted(Halt::UnhandledTrap { cause, .. }) => {
+                assert_eq!(cause, cause::LOAD_MISALIGNED);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn trap_handler_and_mret() {
+        let (cpu, _, _) = run(
+            r#"
+            _start:
+                la  t0, handler
+                csrw mtvec, t0
+                ecall              # -> handler
+                li  a1, 99         # resumed here
+                ebreak
+            handler:
+                csrr a0, mcause    # 11
+                csrr t1, mepc
+                addi t1, t1, 4
+                csrw mepc, t1
+                mret
+            "#,
+        );
+        assert_eq!(cpu.regs[10], 11);
+        assert_eq!(cpu.regs[11], 99);
+    }
+
+    #[test]
+    fn wfi_sleeps_until_interrupt() {
+        let prog = assemble(
+            r#"
+            _start:
+                la  t0, handler
+                ori t0, t0, 0      # direct mode
+                csrw mtvec, t0
+                li  t1, 0x80       # MTIP enable
+                csrw mie, t1
+                csrsi mstatus, 8   # MIE
+                wfi
+                li  a0, 1          # (not reached before irq)
+                ebreak
+            handler:
+                li  a1, 7
+                ebreak
+            "#,
+        )
+        .unwrap();
+        let mut bus = FlatBus::new(&prog);
+        let mut cpu = Cpu::new(prog.entry);
+        let mut now = 0u64;
+        // run until sleeping
+        while cpu.state == CpuState::Running {
+            now += cpu.step(&mut bus, now).cycles as u64;
+        }
+        assert_eq!(cpu.state, CpuState::Sleeping);
+        // no interrupt -> stays asleep
+        now += cpu.step(&mut bus, now).cycles as u64;
+        assert_eq!(cpu.state, CpuState::Sleeping);
+        // assert timer irq
+        cpu.set_irq_lines(true, 0);
+        while !matches!(cpu.state, CpuState::Halted(_)) {
+            now += cpu.step(&mut bus, now).cycles as u64;
+        }
+        assert_eq!(cpu.regs[11], 7); // handler ran
+        assert_eq!(cpu.regs[10], 0); // straight-line code after wfi never ran
+    }
+
+    #[test]
+    fn interrupt_priority_fast_over_timer() {
+        let mut cpu = Cpu::new(0);
+        cpu.csrs.mtvec = 0x100;
+        cpu.csrs.write(crate::isa::csr::MIE, int::MTIP | int::fast(1)).then_some(()).unwrap();
+        cpu.csrs.set_mie_global(true);
+        cpu.set_irq_lines(true, 1 << 1);
+        let prog = assemble("nop").unwrap();
+        let mut bus = FlatBus::new(&prog);
+        cpu.step(&mut bus, 0);
+        assert_eq!(cpu.csrs.mcause, cause::interrupt(int::FAST_BASE + 1));
+    }
+
+    #[test]
+    fn cycle_costs_accumulate() {
+        let prog = assemble("li a0, 1\nmul a1, a0, a0\ndiv a2, a0, a0\nebreak").unwrap();
+        let mut bus = FlatBus::new(&prog);
+        let mut cpu = Cpu::new(prog.entry);
+        let mut total = 0u64;
+        while !matches!(cpu.state, CpuState::Halted(_)) {
+            total += cpu.step(&mut bus, total).cycles as u64;
+        }
+        let t = Timing::default();
+        assert_eq!(total, (t.alu + t.mul + t.div + t.alu) as u64);
+    }
+
+    #[test]
+    fn x0_stays_zero() {
+        let (cpu, _, _) = run("li t0, 5\nadd x0, t0, t0\nsub a0, x0, t0\nebreak");
+        assert_eq!(cpu.regs[0], 0);
+        assert_eq!(cpu.regs[10] as i32, -5);
+    }
+
+    #[test]
+    fn csr_read_write_cycle_counters() {
+        let (cpu, _, _) = run(
+            r#"
+            csrr a0, mcycle
+            csrr a1, minstret
+            csrr a2, mhartid
+            ebreak
+            "#,
+        );
+        // minstret read at the second instruction sees 1 retired
+        assert_eq!(cpu.regs[11], 1);
+        assert_eq!(cpu.regs[12], 0);
+        assert!(cpu.regs[10] < 10);
+    }
+}

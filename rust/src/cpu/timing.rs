@@ -1,0 +1,65 @@
+//! Instruction-class cycle costs (CV32E40P-like defaults).
+//!
+//! The emulator is cycle-*approximate*: per-class base costs plus bus wait
+//! states. Defaults follow the CV32E40P datasheet shape (single-cycle ALU
+//! and MUL, multi-cycle DIV, taken-branch flush penalty); all values are
+//! configurable from the platform TOML ([`crate::config`]) so a different
+//! host core can be modeled without recompiling.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Timing {
+    /// ALU / LUI / AUIPC / FENCE base cost.
+    pub alu: u32,
+    /// MUL/MULH* cost (CV32E40P: 1 for MUL, 5 for MULH; we use the MUL
+    /// figure — MULH appears only in Q15 sequences where the pair is the
+    /// unit of work).
+    pub mul: u32,
+    /// DIV/REM cost (CV32E40P: 3..35; fixed worst-ish case).
+    pub div: u32,
+    /// Load base cost (plus bus wait states).
+    pub load: u32,
+    /// Store base cost (plus bus wait states).
+    pub store: u32,
+    /// Branch base cost.
+    pub branch: u32,
+    /// Extra cycles when a branch is taken (pipeline flush).
+    pub branch_taken_penalty: u32,
+    /// JAL/JALR/MRET cost.
+    pub jump: u32,
+    /// CSR access cost.
+    pub csr: u32,
+    /// Trap entry (interrupt or exception) cost.
+    pub trap_entry: u32,
+    /// WFI wake-up cost (clock ungating).
+    pub wake: u32,
+}
+
+impl Default for Timing {
+    fn default() -> Self {
+        Self {
+            alu: 1,
+            mul: 1,
+            div: 34,
+            load: 2,
+            store: 1,
+            branch: 1,
+            branch_taken_penalty: 2,
+            jump: 2,
+            csr: 1,
+            trap_entry: 4,
+            wake: 6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let t = Timing::default();
+        assert!(t.div > t.mul);
+        assert!(t.load >= 1 && t.trap_entry >= 1 && t.wake >= 1);
+    }
+}

@@ -1,0 +1,1015 @@
+//! Two-pass RV32IM assembler.
+//!
+//! Guest programs (the case-study kernels, the acquisition loops, the
+//! end-to-end TinyAI app in [`crate::workloads`]) are written in assembly
+//! text and assembled here into a loadable [`Program`]. Supported syntax:
+//!
+//! * labels (`loop:`), `.text` / `.data` sections
+//! * data directives: `.word`, `.half`, `.byte` (values or label refs),
+//!   `.space N`, `.align N`, `.equ NAME, value`
+//! * all RV32IM+Zicsr instructions from [`super::Instr`]
+//! * pseudo-instructions: `nop`, `li`, `la`, `mv`, `not`, `neg`, `j`,
+//!   `jr`, `ret`, `call`, `beqz`, `bnez`, `blez`, `bgez`, `bltz`, `bgtz`,
+//!   `seqz`, `snez`, `csrr`, `csrw`, `csrsi`, `csrci`
+//! * named CSRs (`mstatus`, `mie`, ... ) and ABI or `xN` register names
+//! * `%hi(sym)` / `%lo(sym)` relocations in `lui` / `addi` / loads / stores
+//!
+//! Diagnostics carry line numbers. Addresses: `.text` is placed at
+//! `Options::text_base`, `.data` at `Options::data_base`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{encode, parse_reg, AluOp, BranchOp, CsrOp, Instr, LoadOp, Reg, StoreOp};
+
+/// Assembly output: words for the text section, bytes for the data
+/// section, and the symbol table.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub text: Vec<u32>,
+    pub data: Vec<u8>,
+    pub text_base: u32,
+    pub data_base: u32,
+    pub symbols: BTreeMap<String, u32>,
+    /// Entry point (address of the `_start` symbol if present, else
+    /// `text_base`).
+    pub entry: u32,
+}
+
+impl Program {
+    pub fn symbol(&self, name: &str) -> Result<u32> {
+        self.symbols
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("unknown symbol `{name}`"))
+    }
+}
+
+/// Assembler placement options.
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    pub text_base: u32,
+    pub data_base: u32,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        // Matches the emulated X-HEEP address map (crate::soc): code in
+        // SRAM bank 0, data in SRAM bank 1.
+        Self { text_base: 0x0000_0000, data_base: 0x0002_0000 }
+    }
+}
+
+/// Assemble with default placement.
+pub fn assemble(src: &str) -> Result<Program> {
+    assemble_with(src, Options::default())
+}
+
+/// Assemble with explicit section bases.
+pub fn assemble_with(src: &str, opts: Options) -> Result<Program> {
+    let lines = preprocess(src);
+    let mut asm = Assembler::new(opts);
+    asm.pass1(&lines)?;
+    asm.pass2(&lines)?;
+    let entry = asm.symbols.get("_start").copied().unwrap_or(opts.text_base);
+    Ok(Program {
+        text: asm.text,
+        data: asm.data,
+        text_base: opts.text_base,
+        data_base: opts.data_base,
+        symbols: asm.symbols,
+        entry,
+    })
+}
+
+#[derive(Clone, Debug)]
+struct Line {
+    no: usize,
+    label: Option<String>,
+    op: Option<String>,
+    args: Vec<String>,
+}
+
+/// Strip comments, split labels, tokenize operands.
+fn preprocess(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let mut line = raw;
+        if let Some(p) = line.find(['#', ';']) {
+            line = &line[..p];
+        }
+        if let Some(p) = line.find("//") {
+            line = &line[..p];
+        }
+        let mut line = line.trim();
+        let mut label = None;
+        if let Some(colon) = line.find(':') {
+            let (l, rest) = line.split_at(colon);
+            let l = l.trim();
+            if !l.is_empty() && l.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.') {
+                label = Some(l.to_string());
+                line = rest[1..].trim();
+            }
+        }
+        let (op, args) = match line.split_whitespace().next() {
+            None => (None, Vec::new()),
+            Some(op) => {
+                let rest = line[op.len()..].trim();
+                let args = split_args(rest);
+                (Some(op.to_lowercase()), args)
+            }
+        };
+        if label.is_some() || op.is_some() {
+            out.push(Line { no: i + 1, label, op, args });
+        }
+    }
+    out
+}
+
+/// Split operands on commas, but keep `off(reg)` together and respect
+/// parentheses in `%lo(sym)(reg)` forms.
+fn split_args(s: &str) -> Vec<String> {
+    let mut args = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                args.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        args.push(cur.trim().to_string());
+    }
+    args
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Section {
+    Text,
+    Data,
+}
+
+struct Assembler {
+    opts: Options,
+    symbols: BTreeMap<String, u32>,
+    equs: BTreeMap<String, i64>,
+    text: Vec<u32>,
+    data: Vec<u8>,
+}
+
+impl Assembler {
+    fn new(opts: Options) -> Self {
+        Self {
+            opts,
+            symbols: BTreeMap::new(),
+            equs: BTreeMap::new(),
+            text: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Pass 1: compute section sizes and record symbol addresses.
+    fn pass1(&mut self, lines: &[Line]) -> Result<()> {
+        let mut section = Section::Text;
+        let mut text_pc = self.opts.text_base;
+        let mut data_pc = self.opts.data_base;
+        for line in lines {
+            let res: Result<()> = (|| {
+                if let Some(label) = &line.label {
+                    let addr = if section == Section::Text { text_pc } else { data_pc };
+                    if self.symbols.insert(label.clone(), addr).is_some() {
+                        bail!("duplicate label `{label}`");
+                    }
+                }
+                let Some(op) = &line.op else { return Ok(()) };
+                match op.as_str() {
+                    ".text" => section = Section::Text,
+                    ".data" => section = Section::Data,
+                    ".global" | ".globl" | ".section" | ".option" => {}
+                    ".equ" | ".set" => {
+                        if line.args.len() != 2 {
+                            bail!(".equ wants `NAME, value`");
+                        }
+                        let v = self.imm_value(&line.args[1])?;
+                        self.equs.insert(line.args[0].clone(), v);
+                    }
+                    ".word" => {
+                        self.expect_data(section, op)?;
+                        data_pc += 4 * line.args.len() as u32;
+                    }
+                    ".half" => {
+                        self.expect_data(section, op)?;
+                        data_pc += 2 * line.args.len() as u32;
+                    }
+                    ".byte" => {
+                        self.expect_data(section, op)?;
+                        data_pc += line.args.len() as u32;
+                    }
+                    ".space" => {
+                        self.expect_data(section, op)?;
+                        data_pc += self.imm_value(&line.args[0])? as u32;
+                    }
+                    ".align" => {
+                        let a = 1u32 << self.imm_value(&line.args[0])?;
+                        match section {
+                            Section::Text => text_pc = text_pc.next_multiple_of(a),
+                            Section::Data => data_pc = data_pc.next_multiple_of(a),
+                        }
+                    }
+                    _ if op.starts_with('.') => bail!("unknown directive `{op}`"),
+                    _ => {
+                        if section != Section::Text {
+                            bail!("instruction `{op}` outside .text");
+                        }
+                        text_pc += 4 * self.instr_size(op, &line.args)? as u32;
+                    }
+                }
+                Ok(())
+            })();
+            res.with_context(|| format!("line {}", line.no))?;
+        }
+        Ok(())
+    }
+
+    fn expect_data(&self, section: Section, op: &str) -> Result<()> {
+        if section != Section::Data {
+            bail!("`{op}` outside .data");
+        }
+        Ok(())
+    }
+
+    /// Number of 32-bit words an instruction expands to.
+    fn instr_size(&self, op: &str, args: &[String]) -> Result<usize> {
+        Ok(match op {
+            "li" => {
+                let v = self.imm_value(args.get(1).map(String::as_str).unwrap_or("0"))?;
+                if (-2048..2048).contains(&v) {
+                    1
+                } else {
+                    2
+                }
+            }
+            "la" | "call" => 2,
+            _ => 1,
+        })
+    }
+
+    /// Pass 2: encode.
+    fn pass2(&mut self, lines: &[Line]) -> Result<()> {
+        let mut section = Section::Text;
+        let mut text_pc = self.opts.text_base;
+        let mut data_pc = self.opts.data_base;
+        for line in lines {
+            let res: Result<()> = (|| {
+                let Some(op) = &line.op else { return Ok(()) };
+                match op.as_str() {
+                    ".text" => section = Section::Text,
+                    ".data" => section = Section::Data,
+                    ".global" | ".globl" | ".section" | ".option" | ".equ" | ".set" => {}
+                    ".word" => {
+                        for a in &line.args {
+                            let v = self.value_or_symbol(a)? as u32;
+                            self.data.extend_from_slice(&v.to_le_bytes());
+                            data_pc += 4;
+                        }
+                    }
+                    ".half" => {
+                        for a in &line.args {
+                            let v = self.value_or_symbol(a)? as u16;
+                            self.data.extend_from_slice(&v.to_le_bytes());
+                            data_pc += 2;
+                        }
+                    }
+                    ".byte" => {
+                        for a in &line.args {
+                            self.data.push(self.value_or_symbol(a)? as u8);
+                            data_pc += 1;
+                        }
+                    }
+                    ".space" => {
+                        let n = self.imm_value(&line.args[0])? as usize;
+                        self.data.extend(std::iter::repeat(0u8).take(n));
+                        data_pc += n as u32;
+                    }
+                    ".align" => {
+                        let a = 1u32 << self.imm_value(&line.args[0])?;
+                        match section {
+                            Section::Text => {
+                                while text_pc % a != 0 {
+                                    self.text.push(encode(Instr::OpImm {
+                                        op: AluOp::Add,
+                                        rd: 0,
+                                        rs1: 0,
+                                        imm: 0,
+                                    }));
+                                    text_pc += 4;
+                                }
+                            }
+                            Section::Data => {
+                                while data_pc % a != 0 {
+                                    self.data.push(0);
+                                    data_pc += 1;
+                                }
+                            }
+                        }
+                    }
+                    _ => {
+                        let instrs = self.encode_instr(op, &line.args, text_pc)?;
+                        for i in instrs {
+                            self.text.push(encode(i));
+                            text_pc += 4;
+                        }
+                    }
+                }
+                Ok(())
+            })();
+            res.with_context(|| format!("line {}", line.no))?;
+        }
+        Ok(())
+    }
+
+    // ---- operand parsing -------------------------------------------------
+
+    fn reg(&self, s: &str) -> Result<Reg> {
+        parse_reg(s).ok_or_else(|| anyhow!("bad register `{s}`"))
+    }
+
+    /// A pure numeric immediate or `.equ` constant (no labels).
+    fn imm_value(&self, s: &str) -> Result<i64> {
+        if let Some(v) = self.equs.get(s) {
+            return Ok(*v);
+        }
+        parse_int(s).ok_or_else(|| anyhow!("bad immediate `{s}`"))
+    }
+
+    /// Immediate, `.equ` constant, label address, or %hi/%lo relocation.
+    fn value_or_symbol(&self, s: &str) -> Result<i64> {
+        if let Some(inner) = s.strip_prefix("%hi(").and_then(|r| r.strip_suffix(')')) {
+            let v = self.value_or_symbol(inner)?;
+            return Ok(((v as u32).wrapping_add(0x800) >> 12) as i64);
+        }
+        if let Some(inner) = s.strip_prefix("%lo(").and_then(|r| r.strip_suffix(')')) {
+            let v = self.value_or_symbol(inner)? as u32;
+            return Ok(((v & 0xFFF) as i32 as i64).wrapping_sub(if v & 0x800 != 0 { 4096 } else { 0 }));
+        }
+        if let Some(v) = self.equs.get(s) {
+            return Ok(*v);
+        }
+        if let Some(v) = parse_int(s) {
+            return Ok(v);
+        }
+        self.symbols
+            .get(s)
+            .map(|&a| a as i64)
+            .ok_or_else(|| anyhow!("unknown symbol or bad value `{s}`"))
+    }
+
+    fn imm12(&self, s: &str) -> Result<i32> {
+        let v = self.value_or_symbol(s)?;
+        if !(-2048..2048).contains(&v) {
+            bail!("immediate {v} out of 12-bit range");
+        }
+        Ok(v as i32)
+    }
+
+    /// Parse `off(reg)` or `%lo(sym)(reg)` memory operands.
+    fn mem_operand(&self, s: &str) -> Result<(i32, Reg)> {
+        let open = s.rfind('(').ok_or_else(|| anyhow!("bad memory operand `{s}`"))?;
+        let close = s.rfind(')').ok_or_else(|| anyhow!("bad memory operand `{s}`"))?;
+        if close < open {
+            bail!("bad memory operand `{s}`");
+        }
+        let reg = self.reg(s[open + 1..close].trim())?;
+        let off_str = s[..open].trim();
+        let off = if off_str.is_empty() { 0 } else { self.imm12(off_str)? };
+        Ok((off, reg))
+    }
+
+    fn branch_target(&self, s: &str, pc: u32) -> Result<i32> {
+        let target = self.value_or_symbol(s)?;
+        let off = target - pc as i64;
+        if !(-4096..4096).contains(&off) || off % 2 != 0 {
+            bail!("branch target `{s}` out of range (offset {off})");
+        }
+        Ok(off as i32)
+    }
+
+    fn jump_target(&self, s: &str, pc: u32) -> Result<i32> {
+        let target = self.value_or_symbol(s)?;
+        let off = target - pc as i64;
+        if !(-(1 << 20)..(1 << 20)).contains(&off) || off % 2 != 0 {
+            bail!("jump target `{s}` out of range (offset {off})");
+        }
+        Ok(off as i32)
+    }
+
+    fn csr_addr(&self, s: &str) -> Result<u16> {
+        use super::csr::*;
+        Ok(match s {
+            "mstatus" => MSTATUS,
+            "mie" => MIE,
+            "mtvec" => MTVEC,
+            "mscratch" => MSCRATCH,
+            "mepc" => MEPC,
+            "mcause" => MCAUSE,
+            "mtval" => MTVAL,
+            "mip" => MIP,
+            "mcycle" => MCYCLE,
+            "minstret" => MINSTRET,
+            "mcycleh" => MCYCLEH,
+            "minstreth" => MINSTRETH,
+            "mhartid" => MHARTID,
+            other => {
+                let v = self.imm_value(other)?;
+                if !(0..4096).contains(&v) {
+                    bail!("CSR address {v} out of range");
+                }
+                v as u16
+            }
+        })
+    }
+
+    // ---- instruction encoding --------------------------------------------
+
+    fn encode_instr(&self, op: &str, args: &[String], pc: u32) -> Result<Vec<Instr>> {
+        let a = |i: usize| -> Result<&str> {
+            args.get(i).map(String::as_str).ok_or_else(|| anyhow!("missing operand {i}"))
+        };
+        let want = |n: usize| -> Result<()> {
+            if args.len() != n {
+                bail!("`{op}` wants {n} operands, got {}", args.len());
+            }
+            Ok(())
+        };
+
+        // R-type and I-type ALU tables
+        let rr = |aop: AluOp| -> Result<Vec<Instr>> {
+            want(3)?;
+            Ok(vec![Instr::Op { op: aop, rd: self.reg(a(0)?)?, rs1: self.reg(a(1)?)?, rs2: self.reg(a(2)?)? }])
+        };
+        let ri = |aop: AluOp, shift: bool| -> Result<Vec<Instr>> {
+            want(3)?;
+            let imm = if shift {
+                let v = self.imm_value(a(2)?)?;
+                if !(0..32).contains(&v) {
+                    bail!("shift amount {v} out of range");
+                }
+                v as i32
+            } else {
+                self.imm12(a(2)?)?
+            };
+            Ok(vec![Instr::OpImm { op: aop, rd: self.reg(a(0)?)?, rs1: self.reg(a(1)?)?, imm }])
+        };
+        let ld = |lop: LoadOp| -> Result<Vec<Instr>> {
+            want(2)?;
+            let (imm, rs1) = self.mem_operand(a(1)?)?;
+            Ok(vec![Instr::Load { op: lop, rd: self.reg(a(0)?)?, rs1, imm }])
+        };
+        let st = |sop: StoreOp| -> Result<Vec<Instr>> {
+            want(2)?;
+            let (imm, rs1) = self.mem_operand(a(1)?)?;
+            Ok(vec![Instr::Store { op: sop, rs1, rs2: self.reg(a(0)?)?, imm }])
+        };
+        let br = |bop: BranchOp| -> Result<Vec<Instr>> {
+            want(3)?;
+            Ok(vec![Instr::Branch {
+                op: bop,
+                rs1: self.reg(a(0)?)?,
+                rs2: self.reg(a(1)?)?,
+                imm: self.branch_target(a(2)?, pc)?,
+            }])
+        };
+        let brz = |bop: BranchOp, swap: bool| -> Result<Vec<Instr>> {
+            want(2)?;
+            let r = self.reg(a(0)?)?;
+            let (rs1, rs2) = if swap { (0, r) } else { (r, 0) };
+            Ok(vec![Instr::Branch { op: bop, rs1, rs2, imm: self.branch_target(a(1)?, pc)? }])
+        };
+
+        match op {
+            // ALU register-register
+            "add" => rr(AluOp::Add),
+            "sub" => rr(AluOp::Sub),
+            "sll" => rr(AluOp::Sll),
+            "slt" => rr(AluOp::Slt),
+            "sltu" => rr(AluOp::Sltu),
+            "xor" => rr(AluOp::Xor),
+            "srl" => rr(AluOp::Srl),
+            "sra" => rr(AluOp::Sra),
+            "or" => rr(AluOp::Or),
+            "and" => rr(AluOp::And),
+            "mul" => rr(AluOp::Mul),
+            "mulh" => rr(AluOp::Mulh),
+            "mulhsu" => rr(AluOp::Mulhsu),
+            "mulhu" => rr(AluOp::Mulhu),
+            "div" => rr(AluOp::Div),
+            "divu" => rr(AluOp::Divu),
+            "rem" => rr(AluOp::Rem),
+            "remu" => rr(AluOp::Remu),
+            // ALU immediate
+            "addi" => ri(AluOp::Add, false),
+            "slti" => ri(AluOp::Slt, false),
+            "sltiu" => ri(AluOp::Sltu, false),
+            "xori" => ri(AluOp::Xor, false),
+            "ori" => ri(AluOp::Or, false),
+            "andi" => ri(AluOp::And, false),
+            "slli" => ri(AluOp::Sll, true),
+            "srli" => ri(AluOp::Srl, true),
+            "srai" => ri(AluOp::Sra, true),
+            // loads/stores
+            "lb" => ld(LoadOp::Lb),
+            "lh" => ld(LoadOp::Lh),
+            "lw" => ld(LoadOp::Lw),
+            "lbu" => ld(LoadOp::Lbu),
+            "lhu" => ld(LoadOp::Lhu),
+            "sb" => st(StoreOp::Sb),
+            "sh" => st(StoreOp::Sh),
+            "sw" => st(StoreOp::Sw),
+            // branches
+            "beq" => br(BranchOp::Eq),
+            "bne" => br(BranchOp::Ne),
+            "blt" => br(BranchOp::Lt),
+            "bge" => br(BranchOp::Ge),
+            "bltu" => br(BranchOp::Ltu),
+            "bgeu" => br(BranchOp::Geu),
+            "bgt" => {
+                want(3)?;
+                Ok(vec![Instr::Branch {
+                    op: BranchOp::Lt,
+                    rs1: self.reg(a(1)?)?,
+                    rs2: self.reg(a(0)?)?,
+                    imm: self.branch_target(a(2)?, pc)?,
+                }])
+            }
+            "ble" => {
+                want(3)?;
+                Ok(vec![Instr::Branch {
+                    op: BranchOp::Ge,
+                    rs1: self.reg(a(1)?)?,
+                    rs2: self.reg(a(0)?)?,
+                    imm: self.branch_target(a(2)?, pc)?,
+                }])
+            }
+            "beqz" => brz(BranchOp::Eq, false),
+            "bnez" => brz(BranchOp::Ne, false),
+            "bltz" => brz(BranchOp::Lt, false),
+            "bgez" => brz(BranchOp::Ge, false),
+            "bgtz" => brz(BranchOp::Lt, true),
+            "blez" => brz(BranchOp::Ge, true),
+            // jumps
+            "jal" => match args.len() {
+                1 => Ok(vec![Instr::Jal { rd: 1, imm: self.jump_target(a(0)?, pc)? }]),
+                2 => Ok(vec![Instr::Jal { rd: self.reg(a(0)?)?, imm: self.jump_target(a(1)?, pc)? }]),
+                n => bail!("`jal` wants 1 or 2 operands, got {n}"),
+            },
+            "jalr" => match args.len() {
+                1 => Ok(vec![Instr::Jalr { rd: 1, rs1: self.reg(a(0)?)?, imm: 0 }]),
+                3 => Ok(vec![Instr::Jalr {
+                    rd: self.reg(a(0)?)?,
+                    rs1: self.reg(a(1)?)?,
+                    imm: self.imm12(a(2)?)?,
+                }]),
+                2 => {
+                    let (imm, rs1) = self.mem_operand(a(1)?)?;
+                    Ok(vec![Instr::Jalr { rd: self.reg(a(0)?)?, rs1, imm }])
+                }
+                n => bail!("`jalr` wants 1-3 operands, got {n}"),
+            },
+            "j" => {
+                want(1)?;
+                Ok(vec![Instr::Jal { rd: 0, imm: self.jump_target(a(0)?, pc)? }])
+            }
+            "jr" => {
+                want(1)?;
+                Ok(vec![Instr::Jalr { rd: 0, rs1: self.reg(a(0)?)?, imm: 0 }])
+            }
+            "ret" => {
+                want(0)?;
+                Ok(vec![Instr::Jalr { rd: 0, rs1: 1, imm: 0 }])
+            }
+            "call" => {
+                // auipc ra, %hi(off) ; jalr ra, ra, %lo(off) — fixed 2-word
+                want(1)?;
+                let target = self.value_or_symbol(a(0)?)?;
+                let off = (target - pc as i64) as i32;
+                let hi = ((off as u32).wrapping_add(0x800) & 0xFFFF_F000) as i32;
+                let lo = off.wrapping_sub(hi);
+                Ok(vec![
+                    Instr::Auipc { rd: 1, imm: hi },
+                    Instr::Jalr { rd: 1, rs1: 1, imm: lo },
+                ])
+            }
+            // upper immediates
+            "lui" => {
+                want(2)?;
+                let v = self.value_or_symbol(a(1)?)?;
+                // accept either a raw 20-bit page number or a %hi() value
+                let imm = if a(1)?.starts_with("%hi(") {
+                    ((v as u32) << 12) as i32
+                } else {
+                    if !(0..(1 << 20)).contains(&v) {
+                        bail!("lui immediate {v} out of 20-bit range");
+                    }
+                    ((v as u32) << 12) as i32
+                };
+                Ok(vec![Instr::Lui { rd: self.reg(a(0)?)?, imm }])
+            }
+            "auipc" => {
+                want(2)?;
+                let v = self.imm_value(a(1)?)?;
+                Ok(vec![Instr::Auipc { rd: self.reg(a(0)?)?, imm: ((v as u32) << 12) as i32 }])
+            }
+            // pseudo
+            "nop" => {
+                want(0)?;
+                Ok(vec![Instr::OpImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 0 }])
+            }
+            "li" => {
+                want(2)?;
+                let rd = self.reg(a(0)?)?;
+                let v64 = self.imm_value(a(1)?)?;
+                if !(-(1i64 << 31)..(1i64 << 32)).contains(&v64) {
+                    bail!("li immediate {v64} out of 32-bit range");
+                }
+                let v = v64 as u32 as i32;
+                if (-2048..2048).contains(&(v as i64)) {
+                    Ok(vec![Instr::OpImm { op: AluOp::Add, rd, rs1: 0, imm: v }])
+                } else {
+                    let hi = ((v as u32).wrapping_add(0x800) & 0xFFFF_F000) as i32;
+                    let lo = v.wrapping_sub(hi);
+                    Ok(vec![
+                        Instr::Lui { rd, imm: hi },
+                        Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: lo },
+                    ])
+                }
+            }
+            "la" => {
+                want(2)?;
+                let rd = self.reg(a(0)?)?;
+                let v = self.value_or_symbol(a(1)?)? as u32 as i32;
+                let hi = ((v as u32).wrapping_add(0x800) & 0xFFFF_F000) as i32;
+                let lo = v.wrapping_sub(hi);
+                Ok(vec![
+                    Instr::Lui { rd, imm: hi },
+                    Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: lo },
+                ])
+            }
+            "mv" => {
+                want(2)?;
+                Ok(vec![Instr::OpImm {
+                    op: AluOp::Add,
+                    rd: self.reg(a(0)?)?,
+                    rs1: self.reg(a(1)?)?,
+                    imm: 0,
+                }])
+            }
+            "not" => {
+                want(2)?;
+                Ok(vec![Instr::OpImm {
+                    op: AluOp::Xor,
+                    rd: self.reg(a(0)?)?,
+                    rs1: self.reg(a(1)?)?,
+                    imm: -1,
+                }])
+            }
+            "neg" => {
+                want(2)?;
+                Ok(vec![Instr::Op {
+                    op: AluOp::Sub,
+                    rd: self.reg(a(0)?)?,
+                    rs1: 0,
+                    rs2: self.reg(a(1)?)?,
+                }])
+            }
+            "seqz" => {
+                want(2)?;
+                Ok(vec![Instr::OpImm {
+                    op: AluOp::Sltu,
+                    rd: self.reg(a(0)?)?,
+                    rs1: self.reg(a(1)?)?,
+                    imm: 1,
+                }])
+            }
+            "snez" => {
+                want(2)?;
+                Ok(vec![Instr::Op {
+                    op: AluOp::Sltu,
+                    rd: self.reg(a(0)?)?,
+                    rs1: 0,
+                    rs2: self.reg(a(1)?)?,
+                }])
+            }
+            // system
+            "ecall" => {
+                want(0)?;
+                Ok(vec![Instr::Ecall])
+            }
+            "ebreak" => {
+                want(0)?;
+                Ok(vec![Instr::Ebreak])
+            }
+            "wfi" => {
+                want(0)?;
+                Ok(vec![Instr::Wfi])
+            }
+            "mret" => {
+                want(0)?;
+                Ok(vec![Instr::Mret])
+            }
+            "fence" | "fence.i" => Ok(vec![Instr::Fence]),
+            // CSRs
+            "csrrw" | "csrrs" | "csrrc" => {
+                want(3)?;
+                let cop = match op {
+                    "csrrw" => CsrOp::Rw,
+                    "csrrs" => CsrOp::Rs,
+                    _ => CsrOp::Rc,
+                };
+                Ok(vec![Instr::Csr {
+                    op: cop,
+                    rd: self.reg(a(0)?)?,
+                    rs1: self.reg(a(2)?)?,
+                    csr: self.csr_addr(a(1)?)?,
+                    imm: false,
+                }])
+            }
+            "csrrwi" | "csrrsi" | "csrrci" => {
+                want(3)?;
+                let cop = match op {
+                    "csrrwi" => CsrOp::Rw,
+                    "csrrsi" => CsrOp::Rs,
+                    _ => CsrOp::Rc,
+                };
+                let z = self.imm_value(a(2)?)?;
+                if !(0..32).contains(&z) {
+                    bail!("zimm {z} out of range");
+                }
+                Ok(vec![Instr::Csr {
+                    op: cop,
+                    rd: self.reg(a(0)?)?,
+                    rs1: z as u8,
+                    csr: self.csr_addr(a(1)?)?,
+                    imm: true,
+                }])
+            }
+            "csrr" => {
+                want(2)?;
+                Ok(vec![Instr::Csr {
+                    op: CsrOp::Rs,
+                    rd: self.reg(a(0)?)?,
+                    rs1: 0,
+                    csr: self.csr_addr(a(1)?)?,
+                    imm: false,
+                }])
+            }
+            "csrw" => {
+                want(2)?;
+                Ok(vec![Instr::Csr {
+                    op: CsrOp::Rw,
+                    rd: 0,
+                    rs1: self.reg(a(1)?)?,
+                    csr: self.csr_addr(a(0)?)?,
+                    imm: false,
+                }])
+            }
+            "csrsi" => {
+                want(2)?;
+                let z = self.imm_value(a(1)?)?;
+                Ok(vec![Instr::Csr {
+                    op: CsrOp::Rs,
+                    rd: 0,
+                    rs1: z as u8,
+                    csr: self.csr_addr(a(0)?)?,
+                    imm: true,
+                }])
+            }
+            "csrci" => {
+                want(2)?;
+                let z = self.imm_value(a(1)?)?;
+                Ok(vec![Instr::Csr {
+                    op: CsrOp::Rc,
+                    rd: 0,
+                    rs1: z as u8,
+                    csr: self.csr_addr(a(0)?)?,
+                    imm: true,
+                }])
+            }
+            other => bail!("unknown instruction `{other}`"),
+        }
+    }
+}
+
+fn parse_int(s: &str) -> Option<i64> {
+    let s = s.trim();
+    let (neg, s) = match s.strip_prefix('-') {
+        Some(rest) => (true, rest),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        i64::from_str_radix(&hex.replace('_', ""), 16).ok()?
+    } else if let Some(bin) = s.strip_prefix("0b").or_else(|| s.strip_prefix("0B")) {
+        i64::from_str_radix(&bin.replace('_', ""), 2).ok()?
+    } else {
+        s.replace('_', "").parse::<i64>().ok()?
+    };
+    Some(if neg { -v } else { v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decode;
+    use super::*;
+
+    #[test]
+    fn assemble_simple_loop() {
+        let p = assemble(
+            r#"
+            _start:
+                li   t0, 10        # counter
+                li   t1, 0         # acc
+            loop:
+                add  t1, t1, t0
+                addi t0, t0, -1
+                bnez t0, loop
+                ebreak
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.entry, 0);
+        assert_eq!(p.text.len(), 6);
+        // all words decode
+        for w in &p.text {
+            assert!(decode(*w).is_some(), "word {w:#x}");
+        }
+        assert_eq!(p.symbol("loop").unwrap(), 8);
+    }
+
+    #[test]
+    fn li_expansion_sizes() {
+        let p = assemble("li a0, 100").unwrap();
+        assert_eq!(p.text.len(), 1);
+        let p = assemble("li a0, 0x12345678").unwrap();
+        assert_eq!(p.text.len(), 2);
+        // li of value with bit 11 set needs the +0x800 correction
+        let p = assemble("li a0, 0x8800").unwrap();
+        assert_eq!(p.text.len(), 2);
+        assert_eq!(
+            decode(p.text[0]),
+            Some(Instr::Lui { rd: 10, imm: 0x9000u32 as i32 })
+        );
+        assert_eq!(
+            decode(p.text[1]),
+            Some(Instr::OpImm { op: AluOp::Add, rd: 10, rs1: 10, imm: -0x800 })
+        );
+    }
+
+    #[test]
+    fn data_section_and_symbols() {
+        let p = assemble(
+            r#"
+            .data
+            tbl:    .word 1, 2, 3
+            msg:    .byte 0x41, 0x42
+                    .align 2
+            buf:    .space 16
+            .text
+            _start: la a0, tbl
+                    lw a1, 0(a0)
+                    ebreak
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.symbol("tbl").unwrap(), 0x0002_0000);
+        assert_eq!(p.symbol("msg").unwrap(), 0x0002_000C);
+        assert_eq!(p.symbol("buf").unwrap(), 0x0002_0010);
+        assert_eq!(p.data.len(), 0x20);
+        assert_eq!(&p.data[0..4], &[1, 0, 0, 0]);
+        assert_eq!(p.data[12], 0x41);
+    }
+
+    #[test]
+    fn word_can_hold_label_address() {
+        let p = assemble(
+            r#"
+            .data
+            a:  .word 7
+            ptr:.word a
+            .text
+            nop
+            "#,
+        )
+        .unwrap();
+        let ptr_bytes = &p.data[4..8];
+        assert_eq!(u32::from_le_bytes(ptr_bytes.try_into().unwrap()), 0x0002_0000);
+    }
+
+    #[test]
+    fn equ_constants() {
+        let p = assemble(
+            r#"
+            .equ UART_BASE, 0x20000000
+            .equ N, 16
+            li a0, UART_BASE
+            li a1, N
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.text.len(), 3); // 2 for the big one, 1 small
+    }
+
+    #[test]
+    fn branches_backward_and_forward() {
+        let p = assemble(
+            r#"
+            _start:
+                beqz a0, end
+            mid:
+                addi a0, a0, -1
+                bnez a0, mid
+            end:
+                ebreak
+            "#,
+        )
+        .unwrap();
+        // beqz forward: target 12, pc 0 -> +12
+        match decode(p.text[0]).unwrap() {
+            Instr::Branch { imm, .. } => assert_eq!(imm, 12),
+            other => panic!("{other:?}"),
+        }
+        // bnez backward: target 4, pc 8 -> -4
+        match decode(p.text[2]).unwrap() {
+            Instr::Branch { imm, .. } => assert_eq!(imm, -4),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn csr_names() {
+        let p = assemble("csrr t0, mcycle\ncsrw mtvec, t1\ncsrrsi t2, mstatus, 8").unwrap();
+        match decode(p.text[0]).unwrap() {
+            Instr::Csr { csr, .. } => assert_eq!(csr, 0xB00),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = assemble("nop\nbogus x1, x2\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        let err = assemble("lw a0, 99999(a1)").unwrap_err();
+        assert!(format!("{err:#}").contains("12-bit"), "{err:#}");
+        let err = assemble("dup:\ndup:").unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+    }
+
+    #[test]
+    fn hi_lo_relocations() {
+        let p = assemble(
+            r#"
+            .data
+            var: .word 0
+            .text
+            lui  a0, %hi(var)
+            lw   a1, %lo(var)(a0)
+            sw   a1, %lo(var)(a0)
+            "#,
+        )
+        .unwrap();
+        // var = 0x20000: hi=0x20, lo=0
+        assert_eq!(decode(p.text[0]), Some(Instr::Lui { rd: 10, imm: 0x0002_0000 }));
+        assert_eq!(
+            decode(p.text[1]),
+            Some(Instr::Load { op: LoadOp::Lw, rd: 11, rs1: 10, imm: 0 })
+        );
+    }
+
+    #[test]
+    fn call_and_ret() {
+        let p = assemble(
+            r#"
+            _start:
+                call func
+                ebreak
+            func:
+                ret
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.text.len(), 4);
+        assert_eq!(decode(p.text[3]), Some(Instr::Jalr { rd: 0, rs1: 1, imm: 0 }));
+    }
+}

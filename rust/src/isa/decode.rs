@@ -1,0 +1,237 @@
+//! RV32IM instruction decoder.
+//!
+//! Decodes a raw 32-bit instruction word into [`Instr`]. Unknown encodings
+//! return `None`; the CPU raises an illegal-instruction trap for those.
+
+use super::{AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp};
+
+#[inline]
+fn bits(word: u32, hi: u32, lo: u32) -> u32 {
+    (word >> lo) & ((1 << (hi - lo + 1)) - 1)
+}
+
+#[inline]
+fn sign_extend(value: u32, bits: u32) -> i32 {
+    let shift = 32 - bits;
+    ((value << shift) as i32) >> shift
+}
+
+#[inline]
+fn imm_i(word: u32) -> i32 {
+    sign_extend(bits(word, 31, 20), 12)
+}
+
+#[inline]
+fn imm_s(word: u32) -> i32 {
+    sign_extend((bits(word, 31, 25) << 5) | bits(word, 11, 7), 12)
+}
+
+#[inline]
+fn imm_b(word: u32) -> i32 {
+    sign_extend(
+        (bits(word, 31, 31) << 12)
+            | (bits(word, 7, 7) << 11)
+            | (bits(word, 30, 25) << 5)
+            | (bits(word, 11, 8) << 1),
+        13,
+    )
+}
+
+#[inline]
+fn imm_u(word: u32) -> i32 {
+    (word & 0xFFFF_F000) as i32
+}
+
+#[inline]
+fn imm_j(word: u32) -> i32 {
+    sign_extend(
+        (bits(word, 31, 31) << 20)
+            | (bits(word, 19, 12) << 12)
+            | (bits(word, 20, 20) << 11)
+            | (bits(word, 30, 21) << 1),
+        21,
+    )
+}
+
+/// Decode one 32-bit instruction word. Returns `None` for encodings
+/// outside the supported RV32IM+Zicsr subset.
+pub fn decode(word: u32) -> Option<Instr> {
+    let opcode = bits(word, 6, 0);
+    let rd = bits(word, 11, 7) as u8;
+    let rs1 = bits(word, 19, 15) as u8;
+    let rs2 = bits(word, 24, 20) as u8;
+    let funct3 = bits(word, 14, 12);
+    let funct7 = bits(word, 31, 25);
+
+    Some(match opcode {
+        0b0110111 => Instr::Lui { rd, imm: imm_u(word) },
+        0b0010111 => Instr::Auipc { rd, imm: imm_u(word) },
+        0b1101111 => Instr::Jal { rd, imm: imm_j(word) },
+        0b1100111 if funct3 == 0 => Instr::Jalr { rd, rs1, imm: imm_i(word) },
+        0b1100011 => {
+            let op = match funct3 {
+                0b000 => BranchOp::Eq,
+                0b001 => BranchOp::Ne,
+                0b100 => BranchOp::Lt,
+                0b101 => BranchOp::Ge,
+                0b110 => BranchOp::Ltu,
+                0b111 => BranchOp::Geu,
+                _ => return None,
+            };
+            Instr::Branch { op, rs1, rs2, imm: imm_b(word) }
+        }
+        0b0000011 => {
+            let op = match funct3 {
+                0b000 => LoadOp::Lb,
+                0b001 => LoadOp::Lh,
+                0b010 => LoadOp::Lw,
+                0b100 => LoadOp::Lbu,
+                0b101 => LoadOp::Lhu,
+                _ => return None,
+            };
+            Instr::Load { op, rd, rs1, imm: imm_i(word) }
+        }
+        0b0100011 => {
+            let op = match funct3 {
+                0b000 => StoreOp::Sb,
+                0b001 => StoreOp::Sh,
+                0b010 => StoreOp::Sw,
+                _ => return None,
+            };
+            Instr::Store { op, rs1, rs2, imm: imm_s(word) }
+        }
+        0b0010011 => {
+            let imm = imm_i(word);
+            let op = match funct3 {
+                0b000 => AluOp::Add,
+                0b010 => AluOp::Slt,
+                0b011 => AluOp::Sltu,
+                0b100 => AluOp::Xor,
+                0b110 => AluOp::Or,
+                0b111 => AluOp::And,
+                0b001 if funct7 == 0 => AluOp::Sll,
+                0b101 if funct7 == 0 => AluOp::Srl,
+                0b101 if funct7 == 0b0100000 => AluOp::Sra,
+                _ => return None,
+            };
+            // shift-immediates keep only shamt in imm
+            let imm = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => (imm & 0x1F) as i32,
+                _ => imm,
+            };
+            Instr::OpImm { op, rd, rs1, imm }
+        }
+        0b0110011 => {
+            let op = match (funct7, funct3) {
+                (0b0000000, 0b000) => AluOp::Add,
+                (0b0100000, 0b000) => AluOp::Sub,
+                (0b0000000, 0b001) => AluOp::Sll,
+                (0b0000000, 0b010) => AluOp::Slt,
+                (0b0000000, 0b011) => AluOp::Sltu,
+                (0b0000000, 0b100) => AluOp::Xor,
+                (0b0000000, 0b101) => AluOp::Srl,
+                (0b0100000, 0b101) => AluOp::Sra,
+                (0b0000000, 0b110) => AluOp::Or,
+                (0b0000000, 0b111) => AluOp::And,
+                (0b0000001, 0b000) => AluOp::Mul,
+                (0b0000001, 0b001) => AluOp::Mulh,
+                (0b0000001, 0b010) => AluOp::Mulhsu,
+                (0b0000001, 0b011) => AluOp::Mulhu,
+                (0b0000001, 0b100) => AluOp::Div,
+                (0b0000001, 0b101) => AluOp::Divu,
+                (0b0000001, 0b110) => AluOp::Rem,
+                (0b0000001, 0b111) => AluOp::Remu,
+                _ => return None,
+            };
+            Instr::Op { op, rd, rs1, rs2 }
+        }
+        0b0001111 => Instr::Fence, // fence / fence.i — no-ops in this model
+        0b1110011 => match funct3 {
+            0b000 => match word {
+                0x0000_0073 => Instr::Ecall,
+                0x0010_0073 => Instr::Ebreak,
+                0x1050_0073 => Instr::Wfi,
+                0x3020_0073 => Instr::Mret,
+                _ => return None,
+            },
+            0b001 => Instr::Csr { op: CsrOp::Rw, rd, rs1, csr: bits(word, 31, 20) as u16, imm: false },
+            0b010 => Instr::Csr { op: CsrOp::Rs, rd, rs1, csr: bits(word, 31, 20) as u16, imm: false },
+            0b011 => Instr::Csr { op: CsrOp::Rc, rd, rs1, csr: bits(word, 31, 20) as u16, imm: false },
+            0b101 => Instr::Csr { op: CsrOp::Rw, rd, rs1, csr: bits(word, 31, 20) as u16, imm: true },
+            0b110 => Instr::Csr { op: CsrOp::Rs, rd, rs1, csr: bits(word, 31, 20) as u16, imm: true },
+            0b111 => Instr::Csr { op: CsrOp::Rc, rd, rs1, csr: bits(word, 31, 20) as u16, imm: true },
+            _ => return None,
+        },
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Known encodings cross-checked against the RISC-V spec / GNU as.
+    #[test]
+    fn decode_known_words() {
+        // addi x1, x0, 42  -> 0x02A00093
+        assert_eq!(
+            decode(0x02A0_0093),
+            Some(Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 0, imm: 42 })
+        );
+        // lui a0, 0x12345 -> 0x12345537
+        assert_eq!(decode(0x1234_5537), Some(Instr::Lui { rd: 10, imm: 0x1234_5000 }));
+        // add x3, x1, x2 -> 0x002081B3
+        assert_eq!(decode(0x0020_81B3), Some(Instr::Op { op: AluOp::Add, rd: 3, rs1: 1, rs2: 2 }));
+        // mul x5, x6, x7 -> 0x027302B3
+        assert_eq!(decode(0x0273_02B3), Some(Instr::Op { op: AluOp::Mul, rd: 5, rs1: 6, rs2: 7 }));
+        // lw x8, -4(x2) -> 0xFFC12403
+        assert_eq!(
+            decode(0xFFC1_2403),
+            Some(Instr::Load { op: LoadOp::Lw, rd: 8, rs1: 2, imm: -4 })
+        );
+        // sw x8, 8(x2) -> 0x00812423
+        assert_eq!(
+            decode(0x0081_2423),
+            Some(Instr::Store { op: StoreOp::Sw, rs1: 2, rs2: 8, imm: 8 })
+        );
+        // beq x1, x2, +8 -> 0x00208463
+        assert_eq!(
+            decode(0x0020_8463),
+            Some(Instr::Branch { op: BranchOp::Eq, rs1: 1, rs2: 2, imm: 8 })
+        );
+        // jal ra, +16 -> 0x010000EF
+        assert_eq!(decode(0x0100_00EF), Some(Instr::Jal { rd: 1, imm: 16 }));
+        // srai x1, x1, 3 -> 0x4030D093
+        assert_eq!(
+            decode(0x4030_D093),
+            Some(Instr::OpImm { op: AluOp::Sra, rd: 1, rs1: 1, imm: 3 })
+        );
+        // ecall / ebreak / wfi / mret
+        assert_eq!(decode(0x0000_0073), Some(Instr::Ecall));
+        assert_eq!(decode(0x0010_0073), Some(Instr::Ebreak));
+        assert_eq!(decode(0x1050_0073), Some(Instr::Wfi));
+        assert_eq!(decode(0x3020_0073), Some(Instr::Mret));
+        // csrrw x0, mstatus(0x300), x1 -> 0x30009073
+        assert_eq!(
+            decode(0x3000_9073),
+            Some(Instr::Csr { op: CsrOp::Rw, rd: 0, rs1: 1, csr: 0x300, imm: false })
+        );
+    }
+
+    #[test]
+    fn negative_branch_offset() {
+        // bne x5, x6, -12 -> imm_b encoding; from GNU as: 0xFE629AE3
+        assert_eq!(
+            decode(0xFE62_9AE3),
+            Some(Instr::Branch { op: BranchOp::Ne, rs1: 5, rs2: 6, imm: -12 })
+        );
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert_eq!(decode(0x0000_0000), None);
+        assert_eq!(decode(0xFFFF_FFFF), None);
+        // opcode 0b1100111 with funct3 != 0 is not jalr
+        assert_eq!(decode(0x0000_9067), None);
+    }
+}

@@ -1,0 +1,223 @@
+//! RV32IM disassembler.
+//!
+//! Renders decoded instructions in the same syntax [`super::asm`]
+//! accepts, so `assemble(disassemble(words)) == words` — the round-trip
+//! property `rust/tests/prop_isa.rs` checks. Used by the debugger
+//! virtualization (`disasm` protocol command, trace rendering).
+
+use super::{AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp, ABI_NAMES};
+
+fn reg(i: u8) -> &'static str {
+    ABI_NAMES[i as usize]
+}
+
+fn csr_name(addr: u16) -> String {
+    use super::csr::*;
+    match addr {
+        MSTATUS => "mstatus".into(),
+        MIE => "mie".into(),
+        MTVEC => "mtvec".into(),
+        MSCRATCH => "mscratch".into(),
+        MEPC => "mepc".into(),
+        MCAUSE => "mcause".into(),
+        MTVAL => "mtval".into(),
+        MIP => "mip".into(),
+        MCYCLE => "mcycle".into(),
+        MINSTRET => "minstret".into(),
+        MCYCLEH => "mcycleh".into(),
+        MINSTRETH => "minstreth".into(),
+        MHARTID => "mhartid".into(),
+        other => format!("{other:#x}"),
+    }
+}
+
+/// Render one instruction. Branch/jump targets are shown as absolute
+/// addresses computed from `pc` (assembler-compatible numeric targets).
+pub fn disassemble(instr: Instr, pc: u32) -> String {
+    match instr {
+        Instr::Lui { rd, imm } => format!("lui {}, {:#x}", reg(rd), (imm as u32) >> 12),
+        Instr::Auipc { rd, imm } => format!("auipc {}, {:#x}", reg(rd), (imm as u32) >> 12),
+        Instr::Jal { rd, imm } => {
+            let target = pc.wrapping_add(imm as u32);
+            if rd == 0 {
+                format!("j {target:#x}")
+            } else if rd == 1 {
+                format!("jal {target:#x}")
+            } else {
+                format!("jal {}, {target:#x}", reg(rd))
+            }
+        }
+        Instr::Jalr { rd, rs1, imm } => {
+            if rd == 0 && imm == 0 && rs1 == 1 {
+                "ret".into()
+            } else if rd == 0 && imm == 0 {
+                format!("jr {}", reg(rs1))
+            } else {
+                format!("jalr {}, {}, {}", reg(rd), reg(rs1), imm)
+            }
+        }
+        Instr::Branch { op, rs1, rs2, imm } => {
+            let target = pc.wrapping_add(imm as u32);
+            let name = match op {
+                BranchOp::Eq => "beq",
+                BranchOp::Ne => "bne",
+                BranchOp::Lt => "blt",
+                BranchOp::Ge => "bge",
+                BranchOp::Ltu => "bltu",
+                BranchOp::Geu => "bgeu",
+            };
+            format!("{name} {}, {}, {target:#x}", reg(rs1), reg(rs2))
+        }
+        Instr::Load { op, rd, rs1, imm } => {
+            let name = match op {
+                LoadOp::Lb => "lb",
+                LoadOp::Lh => "lh",
+                LoadOp::Lw => "lw",
+                LoadOp::Lbu => "lbu",
+                LoadOp::Lhu => "lhu",
+            };
+            format!("{name} {}, {}({})", reg(rd), imm, reg(rs1))
+        }
+        Instr::Store { op, rs1, rs2, imm } => {
+            let name = match op {
+                StoreOp::Sb => "sb",
+                StoreOp::Sh => "sh",
+                StoreOp::Sw => "sw",
+            };
+            format!("{name} {}, {}({})", reg(rs2), imm, reg(rs1))
+        }
+        Instr::OpImm { op, rd, rs1, imm } => {
+            if op == AluOp::Add && imm == 0 {
+                if rd == 0 && rs1 == 0 {
+                    return "nop".into();
+                }
+                return format!("mv {}, {}", reg(rd), reg(rs1));
+            }
+            if op == AluOp::Add && rs1 == 0 {
+                return format!("li {}, {}", reg(rd), imm);
+            }
+            let name = match op {
+                AluOp::Add => "addi",
+                AluOp::Slt => "slti",
+                AluOp::Sltu => "sltiu",
+                AluOp::Xor => "xori",
+                AluOp::Or => "ori",
+                AluOp::And => "andi",
+                AluOp::Sll => "slli",
+                AluOp::Srl => "srli",
+                AluOp::Sra => "srai",
+                other => unreachable!("no immediate form for {other:?}"),
+            };
+            format!("{name} {}, {}, {}", reg(rd), reg(rs1), imm)
+        }
+        Instr::Op { op, rd, rs1, rs2 } => {
+            let name = match op {
+                AluOp::Add => "add",
+                AluOp::Sub => "sub",
+                AluOp::Sll => "sll",
+                AluOp::Slt => "slt",
+                AluOp::Sltu => "sltu",
+                AluOp::Xor => "xor",
+                AluOp::Srl => "srl",
+                AluOp::Sra => "sra",
+                AluOp::Or => "or",
+                AluOp::And => "and",
+                AluOp::Mul => "mul",
+                AluOp::Mulh => "mulh",
+                AluOp::Mulhsu => "mulhsu",
+                AluOp::Mulhu => "mulhu",
+                AluOp::Div => "div",
+                AluOp::Divu => "divu",
+                AluOp::Rem => "rem",
+                AluOp::Remu => "remu",
+            };
+            format!("{name} {}, {}, {}", reg(rd), reg(rs1), reg(rs2))
+        }
+        Instr::Fence => "fence".into(),
+        Instr::Ecall => "ecall".into(),
+        Instr::Ebreak => "ebreak".into(),
+        Instr::Wfi => "wfi".into(),
+        Instr::Mret => "mret".into(),
+        Instr::Csr { op, rd, rs1, csr, imm } => {
+            let base = match (op, imm) {
+                (CsrOp::Rw, false) => "csrrw",
+                (CsrOp::Rs, false) => "csrrs",
+                (CsrOp::Rc, false) => "csrrc",
+                (CsrOp::Rw, true) => "csrrwi",
+                (CsrOp::Rs, true) => "csrrsi",
+                (CsrOp::Rc, true) => "csrrci",
+            };
+            if imm {
+                format!("{base} {}, {}, {}", reg(rd), csr_name(csr), rs1)
+            } else {
+                format!("{base} {}, {}, {}", reg(rd), csr_name(csr), reg(rs1))
+            }
+        }
+    }
+}
+
+/// Disassemble a word, or render a raw `.word` for undecodable data.
+pub fn disassemble_word(word: u32, pc: u32) -> String {
+    match super::decode(word) {
+        Some(i) => disassemble(i, pc),
+        None => format!(".word {word:#010x}"),
+    }
+}
+
+/// A listing of `words` starting at `base`: `addr: word  text` lines.
+pub fn listing(words: &[u32], base: u32) -> String {
+    let mut out = String::new();
+    for (i, &w) in words.iter().enumerate() {
+        let pc = base + (i * 4) as u32;
+        out.push_str(&format!("{pc:#010x}: {w:08x}  {}\n", disassemble_word(w, pc)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{assemble, decode};
+    use super::*;
+
+    #[test]
+    fn known_forms() {
+        let check = |src: &str, want: &str| {
+            let p = assemble(src).unwrap();
+            let got = disassemble(decode(p.text[0]).unwrap(), 0);
+            assert_eq!(got, want, "{src}");
+        };
+        check("addi a0, zero, 42", "li a0, 42");
+        check("mv a1, a0", "mv a1, a0");
+        check("nop", "nop");
+        check("mul s2, s3, s4", "mul s2, s3, s4");
+        check("lw t0, -4(sp)", "lw t0, -4(sp)");
+        check("sw t0, 8(sp)", "sw t0, 8(sp)");
+        check("ret", "ret");
+        check("wfi", "wfi");
+        check("csrr t0, mcycle", "csrrs t0, mcycle, zero");
+        check("srai a2, a3, 7", "srai a2, a3, 7");
+    }
+
+    #[test]
+    fn branch_targets_absolute() {
+        let p = assemble("_start:\nbeq a0, a1, _start").unwrap();
+        assert_eq!(disassemble(decode(p.text[0]).unwrap(), 0), "beq a0, a1, 0x0");
+        // at non-zero pc the target shifts accordingly
+        assert_eq!(disassemble(decode(p.text[0]).unwrap(), 0x100), "beq a0, a1, 0x100");
+    }
+
+    #[test]
+    fn undecodable_word_renders_as_data() {
+        assert_eq!(disassemble_word(0, 0), ".word 0x00000000");
+    }
+
+    #[test]
+    fn listing_format() {
+        let p = assemble("li a0, 1\nebreak").unwrap();
+        let l = listing(&p.text, 0);
+        assert!(l.contains("0x00000000:"));
+        assert!(l.contains("li a0, 1"));
+        assert!(l.contains("ebreak"));
+        assert_eq!(l.lines().count(), 2);
+    }
+}

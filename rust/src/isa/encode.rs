@@ -1,0 +1,215 @@
+//! RV32IM instruction encoder — the exact inverse of [`super::decode`]
+//! over the supported subset (property-tested in `rust/tests/prop_isa.rs`).
+//!
+//! Used by the assembler and by tests that need known-good words.
+
+use super::{AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp};
+
+fn enc_r(funct7: u32, rs2: u8, rs1: u8, funct3: u32, rd: u8, opcode: u32) -> u32 {
+    (funct7 << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn enc_i(imm: i32, rs1: u8, funct3: u32, rd: u8, opcode: u32) -> u32 {
+    (((imm as u32) & 0xFFF) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn enc_s(imm: i32, rs2: u8, rs1: u8, funct3: u32, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 5) & 0x7F) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | ((imm & 0x1F) << 7)
+        | opcode
+}
+
+fn enc_b(imm: i32, rs2: u8, rs1: u8, funct3: u32, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 12) & 1) << 31)
+        | (((imm >> 5) & 0x3F) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | (((imm >> 1) & 0xF) << 8)
+        | (((imm >> 11) & 1) << 7)
+        | opcode
+}
+
+fn enc_u(imm: i32, rd: u8, opcode: u32) -> u32 {
+    ((imm as u32) & 0xFFFF_F000) | ((rd as u32) << 7) | opcode
+}
+
+fn enc_j(imm: i32, rd: u8, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 20) & 1) << 31)
+        | (((imm >> 1) & 0x3FF) << 21)
+        | (((imm >> 11) & 1) << 20)
+        | (((imm >> 12) & 0xFF) << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn alu_funct(op: AluOp) -> (u32, u32) {
+    // (funct7, funct3) for the R-type form
+    match op {
+        AluOp::Add => (0b0000000, 0b000),
+        AluOp::Sub => (0b0100000, 0b000),
+        AluOp::Sll => (0b0000000, 0b001),
+        AluOp::Slt => (0b0000000, 0b010),
+        AluOp::Sltu => (0b0000000, 0b011),
+        AluOp::Xor => (0b0000000, 0b100),
+        AluOp::Srl => (0b0000000, 0b101),
+        AluOp::Sra => (0b0100000, 0b101),
+        AluOp::Or => (0b0000000, 0b110),
+        AluOp::And => (0b0000000, 0b111),
+        AluOp::Mul => (0b0000001, 0b000),
+        AluOp::Mulh => (0b0000001, 0b001),
+        AluOp::Mulhsu => (0b0000001, 0b010),
+        AluOp::Mulhu => (0b0000001, 0b011),
+        AluOp::Div => (0b0000001, 0b100),
+        AluOp::Divu => (0b0000001, 0b101),
+        AluOp::Rem => (0b0000001, 0b110),
+        AluOp::Remu => (0b0000001, 0b111),
+    }
+}
+
+/// Encode an instruction to its 32-bit word.
+///
+/// Panics on forms the ISA cannot represent (e.g. `OpImm` with `Sub`,
+/// branch offsets out of range) — the assembler validates ranges first and
+/// reports source-level errors; encode-level panics indicate internal bugs.
+pub fn encode(instr: Instr) -> u32 {
+    match instr {
+        Instr::Lui { rd, imm } => enc_u(imm, rd, 0b0110111),
+        Instr::Auipc { rd, imm } => enc_u(imm, rd, 0b0010111),
+        Instr::Jal { rd, imm } => {
+            assert!((-(1 << 20)..(1 << 20)).contains(&imm) && imm % 2 == 0, "jal imm {imm}");
+            enc_j(imm, rd, 0b1101111)
+        }
+        Instr::Jalr { rd, rs1, imm } => {
+            assert!((-2048..2048).contains(&imm), "jalr imm {imm}");
+            enc_i(imm, rs1, 0, rd, 0b1100111)
+        }
+        Instr::Branch { op, rs1, rs2, imm } => {
+            assert!((-4096..4096).contains(&imm) && imm % 2 == 0, "branch imm {imm}");
+            let funct3 = match op {
+                BranchOp::Eq => 0b000,
+                BranchOp::Ne => 0b001,
+                BranchOp::Lt => 0b100,
+                BranchOp::Ge => 0b101,
+                BranchOp::Ltu => 0b110,
+                BranchOp::Geu => 0b111,
+            };
+            enc_b(imm, rs2, rs1, funct3, 0b1100011)
+        }
+        Instr::Load { op, rd, rs1, imm } => {
+            assert!((-2048..2048).contains(&imm), "load imm {imm}");
+            let funct3 = match op {
+                LoadOp::Lb => 0b000,
+                LoadOp::Lh => 0b001,
+                LoadOp::Lw => 0b010,
+                LoadOp::Lbu => 0b100,
+                LoadOp::Lhu => 0b101,
+            };
+            enc_i(imm, rs1, funct3, rd, 0b0000011)
+        }
+        Instr::Store { op, rs1, rs2, imm } => {
+            assert!((-2048..2048).contains(&imm), "store imm {imm}");
+            let funct3 = match op {
+                StoreOp::Sb => 0b000,
+                StoreOp::Sh => 0b001,
+                StoreOp::Sw => 0b010,
+            };
+            enc_s(imm, rs2, rs1, funct3, 0b0100011)
+        }
+        Instr::OpImm { op, rd, rs1, imm } => match op {
+            AluOp::Sll | AluOp::Srl | AluOp::Sra => {
+                assert!((0..32).contains(&imm), "shamt {imm}");
+                let (funct7, funct3) = alu_funct(op);
+                enc_r(funct7, imm as u8, rs1, funct3, rd, 0b0010011)
+            }
+            AluOp::Add | AluOp::Slt | AluOp::Sltu | AluOp::Xor | AluOp::Or | AluOp::And => {
+                assert!((-2048..2048).contains(&imm), "opimm imm {imm}");
+                let (_, funct3) = alu_funct(op);
+                enc_i(imm, rs1, funct3, rd, 0b0010011)
+            }
+            other => panic!("no immediate form for {other:?}"),
+        },
+        Instr::Op { op, rd, rs1, rs2 } => {
+            let (funct7, funct3) = alu_funct(op);
+            enc_r(funct7, rs2, rs1, funct3, rd, 0b0110011)
+        }
+        Instr::Fence => 0x0000_000F,
+        Instr::Ecall => 0x0000_0073,
+        Instr::Ebreak => 0x0010_0073,
+        Instr::Wfi => 0x1050_0073,
+        Instr::Mret => 0x3020_0073,
+        Instr::Csr { op, rd, rs1, csr, imm } => {
+            let base = match op {
+                CsrOp::Rw => 0b001,
+                CsrOp::Rs => 0b010,
+                CsrOp::Rc => 0b011,
+            };
+            let funct3 = if imm { base | 0b100 } else { base };
+            enc_i(csr as i32, rs1, funct3, rd, 0b1110011)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decode;
+    use super::*;
+
+    #[test]
+    fn encode_matches_known_words() {
+        assert_eq!(encode(Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 0, imm: 42 }), 0x02A0_0093);
+        assert_eq!(encode(Instr::Op { op: AluOp::Mul, rd: 5, rs1: 6, rs2: 7 }), 0x0273_02B3);
+        assert_eq!(encode(Instr::Load { op: LoadOp::Lw, rd: 8, rs1: 2, imm: -4 }), 0xFFC1_2403);
+        assert_eq!(encode(Instr::Jal { rd: 1, imm: 16 }), 0x0100_00EF);
+        assert_eq!(encode(Instr::Wfi), 0x1050_0073);
+    }
+
+    #[test]
+    fn roundtrip_spot_checks() {
+        let cases = [
+            Instr::Lui { rd: 31, imm: -4096 },
+            Instr::Auipc { rd: 0, imm: 0x7FFF_F000 },
+            Instr::Jal { rd: 1, imm: -1048576 },
+            Instr::Jalr { rd: 2, rs1: 3, imm: -2048 },
+            Instr::Branch { op: BranchOp::Geu, rs1: 30, rs2: 31, imm: 4094 },
+            Instr::Branch { op: BranchOp::Lt, rs1: 1, rs2: 2, imm: -4096 },
+            Instr::Store { op: StoreOp::Sb, rs1: 7, rs2: 8, imm: 2047 },
+            Instr::OpImm { op: AluOp::Sra, rd: 9, rs1: 10, imm: 31 },
+            Instr::OpImm { op: AluOp::Sltu, rd: 11, rs1: 12, imm: -1 },
+            Instr::Op { op: AluOp::Remu, rd: 13, rs1: 14, rs2: 15 },
+            Instr::Csr { op: CsrOp::Rc, rd: 16, rs1: 17, csr: 0xB00, imm: true },
+            Instr::Fence,
+            Instr::Mret,
+        ];
+        for c in cases {
+            assert_eq!(decode(encode(c)), Some(c), "{c:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_sub_immediate() {
+        encode(Instr::OpImm { op: AluOp::Sub, rd: 1, rs1: 1, imm: 1 });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_branch() {
+        encode(Instr::Branch { op: BranchOp::Eq, rs1: 0, rs2: 0, imm: 5000 });
+    }
+}

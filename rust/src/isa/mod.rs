@@ -1,0 +1,190 @@
+//! RV32IM(+Zicsr) instruction-set definitions, decoder, encoder, and a
+//! two-pass assembler.
+//!
+//! This is the ISA substrate for the emulated X-HEEP host CPU (paper §IV-A
+//! picks X-HEEP, whose cores are RV32 — we model an RV32IM machine-mode
+//! core). Guest programs — the case-study kernels and acquisition loops in
+//! [`crate::workloads`] — are written in assembly, assembled by [`asm`],
+//! and executed by [`crate::cpu`].
+//!
+//! The decoder and encoder are exact inverses over the supported subset;
+//! this is property-tested in `rust/tests/prop_isa.rs`.
+
+pub mod asm;
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+
+pub use asm::{assemble, assemble_with, Program};
+pub use decode::decode;
+pub use disasm::{disassemble, disassemble_word, listing};
+pub use encode::encode;
+
+/// Architectural register index (x0..x31).
+pub type Reg = u8;
+
+/// ABI register names, indexed by register number (for disassembly and
+/// assembler diagnostics).
+pub const ABI_NAMES: [&str; 32] = [
+    "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3", "a4",
+    "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "t3", "t4",
+    "t5", "t6",
+];
+
+/// ALU operation, shared by the register-register and (where legal)
+/// immediate forms, plus the M extension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+    // M extension
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+impl AluOp {
+    /// True for the M-extension ops (they live under funct7=0000001).
+    pub fn is_m(self) -> bool {
+        matches!(
+            self,
+            AluOp::Mul
+                | AluOp::Mulh
+                | AluOp::Mulhsu
+                | AluOp::Mulhu
+                | AluOp::Div
+                | AluOp::Divu
+                | AluOp::Rem
+                | AluOp::Remu
+        )
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BranchOp {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CsrOp {
+    Rw,
+    Rs,
+    Rc,
+}
+
+/// A decoded RV32IM instruction.
+///
+/// Immediates are stored sign-extended ready for use; shift-immediates are
+/// kept in `imm` (low 5 bits significant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instr {
+    Lui { rd: Reg, imm: i32 },
+    Auipc { rd: Reg, imm: i32 },
+    Jal { rd: Reg, imm: i32 },
+    Jalr { rd: Reg, rs1: Reg, imm: i32 },
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, imm: i32 },
+    Load { op: LoadOp, rd: Reg, rs1: Reg, imm: i32 },
+    Store { op: StoreOp, rs1: Reg, rs2: Reg, imm: i32 },
+    /// Register-immediate ALU op. Only Add/Slt/Sltu/Xor/Or/And/Sll/Srl/Sra
+    /// are legal here; the decoder never produces others.
+    OpImm { op: AluOp, rd: Reg, rs1: Reg, imm: i32 },
+    /// Register-register ALU op (including the M extension).
+    Op { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    Fence,
+    Ecall,
+    Ebreak,
+    /// Wait-for-interrupt: the core clock-gates until an interrupt is
+    /// pending (paper §IV-C power states).
+    Wfi,
+    Mret,
+    /// CSR access; `imm=true` means the rs1 field is a 5-bit zimm.
+    Csr { op: CsrOp, rd: Reg, rs1: Reg, csr: u16, imm: bool },
+}
+
+/// CSR addresses implemented by the core (machine mode only, plus the
+/// counters the perf-monitor flow reads).
+pub mod csr {
+    pub const MSTATUS: u16 = 0x300;
+    pub const MIE: u16 = 0x304;
+    pub const MTVEC: u16 = 0x305;
+    pub const MSCRATCH: u16 = 0x340;
+    pub const MEPC: u16 = 0x341;
+    pub const MCAUSE: u16 = 0x342;
+    pub const MTVAL: u16 = 0x343;
+    pub const MIP: u16 = 0x344;
+    pub const MCYCLE: u16 = 0xB00;
+    pub const MINSTRET: u16 = 0xB02;
+    pub const MCYCLEH: u16 = 0xB80;
+    pub const MINSTRETH: u16 = 0xB82;
+    pub const MHARTID: u16 = 0xF14;
+}
+
+/// Parse a register name: `x0..x31` or an ABI name.
+pub fn parse_reg(s: &str) -> Option<Reg> {
+    if let Some(rest) = s.strip_prefix('x') {
+        if let Ok(n) = rest.parse::<u8>() {
+            if n < 32 {
+                return Some(n);
+            }
+        }
+    }
+    ABI_NAMES.iter().position(|&n| n == s).map(|i| i as Reg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_reg_accepts_both_names() {
+        assert_eq!(parse_reg("x0"), Some(0));
+        assert_eq!(parse_reg("zero"), Some(0));
+        assert_eq!(parse_reg("a0"), Some(10));
+        assert_eq!(parse_reg("x31"), Some(31));
+        assert_eq!(parse_reg("t6"), Some(31));
+        assert_eq!(parse_reg("x32"), None);
+        assert_eq!(parse_reg("q3"), None);
+    }
+
+    #[test]
+    fn m_ops_classified() {
+        assert!(AluOp::Mul.is_m());
+        assert!(AluOp::Remu.is_m());
+        assert!(!AluOp::Add.is_m());
+        assert!(!AluOp::Sra.is_m());
+    }
+}

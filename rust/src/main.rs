@@ -1,0 +1,388 @@
+//! `femu` — the X-HEEP-FEMU launcher.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//! ```text
+//! femu run <prog.s> [--config <platform.toml>] [--max-cycles N]
+//! femu profile <prog.s> [--config ..] [--model femu|heepocrates]
+//! femu sweep-acquisition [--window-s S] [--config ..]        (Fig 4)
+//! femu kernels [--validate] [--config ..]                    (Fig 5)
+//! femu flash-study [--scale N] [--config ..]                 (Case C)
+//! femu table1                                                (Table I)
+//! femu serve [--addr HOST:PORT] [--artifacts DIR] [--config ..]
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use femu::config::PlatformConfig;
+use femu::coordinator::{experiments, table1, AppExit, Platform};
+use femu::energy::EnergyModel;
+use femu::util::eng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("femu: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut switches = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                switches.push(name.to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags, switches }
+}
+
+fn load_config(args: &Args) -> Result<PlatformConfig> {
+    match args.flags.get("config") {
+        Some(path) => PlatformConfig::load(path),
+        None => Ok(PlatformConfig::default()),
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = parse_args(&argv[1..]);
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "profile" => cmd_profile(&args),
+        "sweep-acquisition" => cmd_sweep_acquisition(&args),
+        "kernels" => cmd_kernels(&args),
+        "flash-study" => cmd_flash_study(&args),
+        "table1" => cmd_table1(),
+        "disasm" => cmd_disasm(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `femu help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "femu — FPGA EMUlation framework for TinyAI heterogeneous systems \
+         (software reproduction)\n\n\
+         USAGE:\n  \
+         femu run <prog.s> [--config <platform.toml>] [--max-cycles N]\n  \
+         femu profile <prog.s> [--config ..] [--model ..] [--vcd out.vcd]\n  \
+         femu disasm <prog.s>                         assemble + list\n  \
+         femu sweep-acquisition [--window-s S]        reproduce Fig 4\n  \
+         femu kernels [--validate]                    reproduce Fig 5\n  \
+         femu flash-study [--scale N]                 reproduce Case C (\u{a7}V-C)\n  \
+         femu table1                                  reproduce Table I\n  \
+         femu serve [--addr HOST:PORT] [--artifacts DIR]"
+    );
+}
+
+fn load_guest(args: &Args) -> Result<(Platform, femu::isa::Program)> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("expected a guest assembly file"))?;
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut platform = Platform::new(load_config(args)?);
+    if let Some(dir) = args.flags.get("artifacts") {
+        platform.attach_artifacts(dir)?;
+    } else if std::path::Path::new("artifacts/manifest.json").exists() {
+        platform.attach_artifacts("artifacts")?;
+    }
+    let prog = platform.dbg.load_source(&src)?;
+    Ok((platform, prog))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (mut platform, _) = load_guest(args)?;
+    let budget = args
+        .flags
+        .get("max-cycles")
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .unwrap_or(1 << 33);
+    let exit = platform.run_app(budget)?;
+    let uart = platform.dbg.uart();
+    if !uart.is_empty() {
+        print!("{}", String::from_utf8_lossy(&uart));
+    }
+    println!(
+        "exit: {exit:?} after {} cycles ({}s emulated)",
+        platform.dbg.soc.now,
+        eng(platform.dbg.soc.now as f64 / platform.cfg.soc.freq_hz as f64)
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let (mut platform, _) = load_guest(args)?;
+    if args.flags.contains_key("vcd") {
+        platform.dbg.soc.perf.enable_trace();
+    }
+    let exit = platform.run_app(1 << 33)?;
+    if exit != AppExit::Halted(femu::cpu::Halt::Ebreak) {
+        eprintln!("warning: guest exit was {exit:?}");
+    }
+    let model_name = args.flags.get("model").map(String::as_str).unwrap_or("femu");
+    let model = EnergyModel::by_name(model_name)
+        .ok_or_else(|| anyhow!("unknown model `{model_name}`"))?;
+    let snap = platform.snapshot();
+    let report = model.estimate(&snap);
+    println!("== femu profile ({model_name} calibration) ==");
+    println!(
+        "cycles: {}  time: {}s  instructions: {}",
+        snap.cycles,
+        eng(report.seconds()),
+        platform.dbg.soc.stats.instructions
+    );
+    println!("domain        active       clk-gated    pwr-gated    retention    energy");
+    for (d, c) in snap.domains() {
+        println!(
+            "{:<12} {:>12} {:>12} {:>12} {:>12}    {}J",
+            d.to_string(),
+            c.counts[0],
+            c.counts[1],
+            c.counts[2],
+            c.counts[3],
+            eng(model.domain_energy_mj(d, &c) / 1e3),
+        );
+    }
+    println!(
+        "total: {}J (active {}J, sleep {}J), avg power {}W",
+        eng(report.total_mj / 1e3),
+        eng(report.active_mj / 1e3),
+        eng(report.sleep_mj / 1e3),
+        eng(report.avg_power_mw() / 1e3),
+    );
+    if let Some(w) = platform.dbg.soc.perf.window_snapshot() {
+        let wr = model.estimate(w);
+        println!("manual window: {} cycles, {}J", w.cycles, eng(wr.total_mj / 1e3));
+    }
+    if let Some(path) = args.flags.get("vcd") {
+        let trace = platform.dbg.soc.perf.trace().expect("trace enabled above");
+        std::fs::write(path, trace.to_vcd(platform.cfg.soc.freq_hz, platform.dbg.soc.now))?;
+        println!("power-domain VCD ({} transitions) -> {path}", trace.len());
+    }
+    Ok(())
+}
+
+fn cmd_disasm(args: &Args) -> Result<()> {
+    let path = args.positional.first().ok_or_else(|| anyhow!("expected an assembly file"))?;
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let prog = femu::isa::assemble(&src)?;
+    print!("{}", femu::isa::listing(&prog.text, prog.text_base));
+    if !prog.data.is_empty() {
+        println!("
+.data ({} bytes at {:#x})", prog.data.len(), prog.data_base);
+    }
+    Ok(())
+}
+
+fn cmd_sweep_acquisition(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let window_s = args
+        .flags
+        .get("window-s")
+        .map(|s| s.parse::<f64>())
+        .transpose()?
+        .unwrap_or(5.0);
+    println!("== Fig 4: normalized acquisition time & energy ({window_s} s window) ==");
+    println!(
+        "{:>10} {:>12} | {:>9} {:>9} {:>8} | {:>10} {:>10} {:>8}",
+        "f_s (Hz)", "platform", "active_s", "sleep_s", "act_t%", "act_mJ", "slp_mJ", "act_E%"
+    );
+    for f in experiments::FIG4_FREQS_HZ {
+        let points = experiments::fig4_point(&cfg, f, window_s, 0xF164)?;
+        for p in points {
+            let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
+            println!(
+                "{:>10} {:>12} | {:>9.4} {:>9.4} {:>7.2}% | {:>10.4} {:>10.4} {:>7.2}%",
+                p.sample_rate_hz,
+                plat,
+                p.active_s,
+                p.sleep_s,
+                100.0 * p.active_s / p.total_s,
+                p.active_mj,
+                p.sleep_mj,
+                100.0 * p.active_mj / p.total_mj,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_kernels(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    println!("== Fig 5: TinyAI kernels, CPU vs CGRA, FEMU vs chip ==");
+    println!(
+        "{:>6} {:>6} {:>12} | {:>12} {:>10} {:>12} {:>6}",
+        "kernel", "impl", "platform", "cycles", "time", "energy", "valid"
+    );
+    let all = experiments::fig5_all(&cfg, 0xF15)?;
+    for p in &all {
+        let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
+        println!(
+            "{:>6} {:>6} {:>12} | {:>12} {:>9}s {:>11}J {:>6}",
+            p.kernel,
+            p.implementation,
+            plat,
+            p.cycles,
+            eng(p.time_s),
+            eng(p.energy_mj / 1e3),
+            if p.validated { "yes" } else { "NO" },
+        );
+    }
+    println!("\nsummary (femu calibration):");
+    for k in ["MM", "CONV", "FFT"] {
+        let cpu = all
+            .iter()
+            .find(|p| p.kernel == k && p.implementation == "CPU" && p.model == "femu")
+            .unwrap();
+        let cgra = all
+            .iter()
+            .find(|p| p.kernel == k && p.implementation == "CGRA" && p.model == "femu")
+            .unwrap();
+        println!(
+            "  {k}: CGRA speedup {:.2}x, energy ratio {:.2}x",
+            cpu.cycles as f64 / cgra.cycles as f64,
+            cpu.energy_mj / cgra.energy_mj
+        );
+    }
+    for k in ["MM", "CONV", "FFT"] {
+        for imp in ["CPU", "CGRA"] {
+            let femu_e = all
+                .iter()
+                .find(|p| p.kernel == k && p.implementation == imp && p.model == "femu")
+                .unwrap();
+            let chip_e = all
+                .iter()
+                .find(|p| p.kernel == k && p.implementation == imp && p.model == "heepocrates")
+                .unwrap();
+            let dev = femu::energy::relative_deviation(femu_e.energy_mj, chip_e.energy_mj);
+            println!("  {k}/{imp}: FEMU-vs-chip energy deviation {:.1}%", dev * 100.0);
+        }
+    }
+    if args.switches.iter().any(|s| s == "validate") {
+        validate_virtualized()?;
+    }
+    Ok(())
+}
+
+/// §V-B step 5: run a kernel through the *virtualized* accelerator
+/// (PJRT artifacts) and cross-check against the shared oracle.
+fn validate_virtualized() -> Result<()> {
+    use femu::runtime::{Runtime, TensorI32};
+    use femu::util::Rng;
+    use femu::workloads::reference as refimpl;
+    println!("\n== virtualized-accelerator validation (PJRT artifacts) ==");
+    let rt = Runtime::load("artifacts").context("run `make artifacts` first")?;
+    let mut rng = Rng::new(0x7A);
+    let a = rng.vec_i32(121 * 16, -4096, 4096);
+    let b = rng.vec_i32(16 * 4, -4096, 4096);
+    let out = rt.execute(
+        "matmul",
+        &[TensorI32::new(vec![121, 16], a.clone())?, TensorI32::new(vec![16, 4], b.clone())?],
+    )?;
+    let ok = out[0].data() == refimpl::matmul_i32(&a, &b, 121, 16, 4).as_slice();
+    println!("  matmul virtualized == oracle: {}", if ok { "yes" } else { "NO" });
+    if !ok {
+        bail!("virtualized matmul mismatch");
+    }
+    let re = rng.vec_i32(512, -(1 << 15), 1 << 15);
+    let im = rng.vec_i32(512, -(1 << 15), 1 << 15);
+    let mut args =
+        vec![TensorI32::new(vec![512], re.clone())?, TensorI32::new(vec![512], im.clone())?];
+    args.extend(femu::virt::accel::fft_table_tensors(512));
+    let out = rt.execute("fft512", &args)?;
+    let mut wr = re.clone();
+    let mut wi = im.clone();
+    refimpl::fft_q15(&mut wr, &mut wi);
+    let ok = out[0].data() == wr.as_slice() && out[1].data() == wi.as_slice();
+    println!("  fft512 virtualized == oracle: {}", if ok { "yes" } else { "NO" });
+    if !ok {
+        bail!("virtualized fft mismatch");
+    }
+    Ok(())
+}
+
+fn cmd_flash_study(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let scale = args
+        .flags
+        .get("scale")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(1);
+    println!("== Case C (\u{a7}V-C): flash virtualization transfer study ==");
+    let r = experiments::case_c(&cfg, scale)?;
+    println!(
+        "windows: {} x {} samples ({} KiB/window)",
+        r.windows,
+        r.samples_per_window,
+        r.samples_per_window * 2 / 1024
+    );
+    println!(
+        "per-window: virtualized {}s vs physical {}s",
+        eng(r.virt_window_s),
+        eng(r.phys_window_s)
+    );
+    println!(
+        "full experiment: virtualized {}s vs physical {}s -> {:.0}x speedup",
+        eng(r.virt_total_s),
+        eng(r.phys_total_s),
+        r.speedup
+    );
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    println!("== Table I: FPGA platform comparison ==\n");
+    print!("{}", table1::render_markdown());
+    println!("\n\u{a7}II filtering argument:");
+    for (feature, survivors) in table1::filtering_steps() {
+        println!("  after `{}`: {}", feature.name(), survivors.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let addr = args.flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:9178");
+    let mut platform = Platform::new(cfg);
+    if let Some(dir) = args.flags.get("artifacts") {
+        platform.attach_artifacts(dir)?;
+    }
+    let server = femu::server::Server::spawn(platform, addr)?;
+    println!("femu control server listening on {}", server.addr());
+    println!("protocol: one JSON object per line; try {{\"cmd\":\"ping\"}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

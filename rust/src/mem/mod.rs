@@ -1,0 +1,319 @@
+//! Banked SRAM with power states, plus the CS (DRAM) memory the bridge
+//! window exposes to the guest.
+//!
+//! Models the X-HEEP memory subsystem: N independently power-switchable
+//! SRAM banks (§IV-C tracks per-bank power states: active / clock-gated /
+//! power-gated / retention). Contents survive retention but are lost on
+//! power-gating (refilled with a poison pattern so guest bugs surface
+//! deterministically).
+
+use crate::perfmon::PowerState;
+
+/// Poison word written into a bank when it loses power. 0xdeadbeef makes
+/// use-after-power-gate bugs visible and deterministic.
+pub const POISON: u32 = 0xDEAD_BEEF;
+
+/// One SRAM bank.
+#[derive(Clone, Debug)]
+pub struct SramBank {
+    data: Vec<u8>,
+    state: PowerState,
+    /// Cycles in which this bank served an access (for the auto-clock-gate
+    /// accounting in the energy model: a powered bank burns active power
+    /// only while selected).
+    access_cycles: u64,
+}
+
+/// Error for accesses that the bank cannot serve in its power state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemError {
+    /// Access while power-gated or in retention — a bus error in the real
+    /// SoC (the bank's clock is off).
+    NotPowered(PowerState),
+    /// Address beyond the bank size.
+    OutOfRange,
+}
+
+impl SramBank {
+    pub fn new(size: usize) -> Self {
+        assert!(size % 4 == 0, "bank size must be word-aligned");
+        Self { data: vec![0; size], state: PowerState::Active, access_cycles: 0 }
+    }
+
+    pub fn size(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn state(&self) -> PowerState {
+        self.state
+    }
+
+    pub fn access_cycles(&self) -> u64 {
+        self.access_cycles
+    }
+
+    /// Change the bank's power state. Power-gating poisons the contents;
+    /// retention and clock-gating preserve them.
+    pub fn set_state(&mut self, new: PowerState) {
+        if new == PowerState::PowerGated && self.state != PowerState::PowerGated {
+            for chunk in self.data.chunks_exact_mut(4) {
+                chunk.copy_from_slice(&POISON.to_le_bytes());
+            }
+        }
+        self.state = new;
+    }
+
+    #[inline]
+    fn check(&self, offset: usize, len: usize) -> Result<(), MemError> {
+        match self.state {
+            PowerState::Active | PowerState::ClockGated => {}
+            s => return Err(MemError::NotPowered(s)),
+        }
+        if offset + len > self.data.len() {
+            return Err(MemError::OutOfRange);
+        }
+        Ok(())
+    }
+
+    #[inline]
+    pub fn read8(&mut self, offset: usize) -> Result<u8, MemError> {
+        self.check(offset, 1)?;
+        self.access_cycles += 1;
+        Ok(self.data[offset])
+    }
+
+    #[inline]
+    pub fn read16(&mut self, offset: usize) -> Result<u16, MemError> {
+        self.check(offset, 2)?;
+        self.access_cycles += 1;
+        Ok(u16::from_le_bytes([self.data[offset], self.data[offset + 1]]))
+    }
+
+    #[inline]
+    pub fn read32(&mut self, offset: usize) -> Result<u32, MemError> {
+        self.check(offset, 4)?;
+        self.access_cycles += 1;
+        // single bounds check via the slice conversion (§Perf opt 5)
+        Ok(u32::from_le_bytes(self.data[offset..offset + 4].try_into().unwrap()))
+    }
+
+    /// Instruction fetch: same as read32 but does not count an access
+    /// cycle twice when the fetch pipeline hits the same bank as a data
+    /// access (the caller accounts fetch cycles).
+    #[inline]
+    pub fn fetch32(&self, offset: usize) -> Result<u32, MemError> {
+        self.check(offset, 4)?;
+        Ok(u32::from_le_bytes(self.data[offset..offset + 4].try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn write8(&mut self, offset: usize, v: u8) -> Result<(), MemError> {
+        self.check(offset, 1)?;
+        self.access_cycles += 1;
+        self.data[offset] = v;
+        Ok(())
+    }
+
+    #[inline]
+    pub fn write16(&mut self, offset: usize, v: u16) -> Result<(), MemError> {
+        self.check(offset, 2)?;
+        self.access_cycles += 1;
+        self.data[offset..offset + 2].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    #[inline]
+    pub fn write32(&mut self, offset: usize, v: u32) -> Result<(), MemError> {
+        self.check(offset, 4)?;
+        self.access_cycles += 1;
+        self.data[offset..offset + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    /// Bulk load (program loader / debugger virtualization). Ignores the
+    /// power state — the debugger can always write SRAM (the real OpenOCD
+    /// path powers the bank first).
+    pub fn load(&mut self, offset: usize, bytes: &[u8]) -> Result<(), MemError> {
+        if offset + bytes.len() > self.data.len() {
+            return Err(MemError::OutOfRange);
+        }
+        self.data[offset..offset + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Bulk read (debugger/CS inspection), ignoring power state.
+    pub fn dump(&self, offset: usize, len: usize) -> Result<&[u8], MemError> {
+        if offset + len > self.data.len() {
+            return Err(MemError::OutOfRange);
+        }
+        Ok(&self.data[offset..offset + len])
+    }
+}
+
+/// CS-side DRAM: the memory the PS owns. The guest reaches a window of it
+/// through the OBI-AXI bridge; CS services (virtual ADC/flash/accelerator
+/// models) read and write it directly.
+#[derive(Clone, Debug)]
+pub struct CsDram {
+    data: Vec<u8>,
+}
+
+impl CsDram {
+    pub fn new(size: usize) -> Self {
+        Self { data: vec![0; size] }
+    }
+
+    pub fn size(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    fn check(&self, offset: usize, len: usize) -> Result<(), MemError> {
+        if offset + len > self.data.len() {
+            return Err(MemError::OutOfRange);
+        }
+        Ok(())
+    }
+
+    pub fn read8(&self, offset: usize) -> Result<u8, MemError> {
+        self.check(offset, 1)?;
+        Ok(self.data[offset])
+    }
+
+    pub fn read16(&self, offset: usize) -> Result<u16, MemError> {
+        self.check(offset, 2)?;
+        Ok(u16::from_le_bytes([self.data[offset], self.data[offset + 1]]))
+    }
+
+    pub fn read32(&self, offset: usize) -> Result<u32, MemError> {
+        self.check(offset, 4)?;
+        Ok(u32::from_le_bytes([
+            self.data[offset],
+            self.data[offset + 1],
+            self.data[offset + 2],
+            self.data[offset + 3],
+        ]))
+    }
+
+    pub fn write8(&mut self, offset: usize, v: u8) -> Result<(), MemError> {
+        self.check(offset, 1)?;
+        self.data[offset] = v;
+        Ok(())
+    }
+
+    pub fn write16(&mut self, offset: usize, v: u16) -> Result<(), MemError> {
+        self.check(offset, 2)?;
+        self.data[offset..offset + 2].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    pub fn write32(&mut self, offset: usize, v: u32) -> Result<(), MemError> {
+        self.check(offset, 4)?;
+        self.data[offset..offset + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    /// Read a run of i32 words (tensor marshaling for the accelerator
+    /// mailbox).
+    pub fn read_i32_slice(&self, offset: usize, n: usize) -> Result<Vec<i32>, MemError> {
+        self.check(offset, n * 4)?;
+        Ok(self.data[offset..offset + n * 4]
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Write a run of i32 words.
+    pub fn write_i32_slice(&mut self, offset: usize, vals: &[i32]) -> Result<(), MemError> {
+        self.check(offset, vals.len() * 4)?;
+        for (i, v) in vals.iter().enumerate() {
+            self.data[offset + i * 4..offset + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    pub fn load(&mut self, offset: usize, bytes: &[u8]) -> Result<(), MemError> {
+        self.check(offset, bytes.len())?;
+        self.data[offset..offset + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    pub fn dump(&self, offset: usize, len: usize) -> Result<&[u8], MemError> {
+        self.check(offset, len)?;
+        Ok(&self.data[offset..offset + len])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_roundtrip_all_widths() {
+        let mut b = SramBank::new(64);
+        b.write32(0, 0x1234_5678).unwrap();
+        assert_eq!(b.read32(0).unwrap(), 0x1234_5678);
+        assert_eq!(b.read16(0).unwrap(), 0x5678);
+        assert_eq!(b.read16(2).unwrap(), 0x1234);
+        assert_eq!(b.read8(3).unwrap(), 0x12);
+        b.write8(1, 0xAB).unwrap();
+        assert_eq!(b.read32(0).unwrap(), 0x1234_AB78);
+        b.write16(2, 0xCDEF).unwrap();
+        assert_eq!(b.read32(0).unwrap(), 0xCDEF_AB78);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut b = SramBank::new(8);
+        assert_eq!(b.read32(8), Err(MemError::OutOfRange));
+        assert_eq!(b.write32(5, 0), Err(MemError::OutOfRange));
+        assert_eq!(b.read8(7).unwrap(), 0); // last byte fine
+    }
+
+    #[test]
+    fn power_gating_poisons_contents() {
+        let mut b = SramBank::new(16);
+        b.write32(4, 42).unwrap();
+        b.set_state(PowerState::PowerGated);
+        assert_eq!(b.read32(4), Err(MemError::NotPowered(PowerState::PowerGated)));
+        b.set_state(PowerState::Active);
+        assert_eq!(b.read32(4).unwrap(), POISON);
+    }
+
+    #[test]
+    fn retention_preserves_contents_but_blocks_access() {
+        let mut b = SramBank::new(16);
+        b.write32(0, 7).unwrap();
+        b.set_state(PowerState::Retention);
+        assert_eq!(b.read32(0), Err(MemError::NotPowered(PowerState::Retention)));
+        b.set_state(PowerState::Active);
+        assert_eq!(b.read32(0).unwrap(), 7);
+    }
+
+    #[test]
+    fn access_cycles_counted() {
+        let mut b = SramBank::new(16);
+        b.write32(0, 1).unwrap();
+        b.read32(0).unwrap();
+        b.read8(1).unwrap();
+        assert_eq!(b.access_cycles(), 3);
+    }
+
+    #[test]
+    fn debugger_load_ignores_power_state() {
+        let mut b = SramBank::new(16);
+        b.set_state(PowerState::Retention);
+        b.load(0, &[1, 2, 3, 4]).unwrap();
+        b.set_state(PowerState::Active);
+        assert_eq!(b.read32(0).unwrap(), 0x0403_0201);
+    }
+
+    #[test]
+    fn dram_i32_slices() {
+        let mut d = CsDram::new(64);
+        d.write_i32_slice(8, &[-1, 2, -3]).unwrap();
+        assert_eq!(d.read_i32_slice(8, 3).unwrap(), vec![-1, 2, -3]);
+        assert_eq!(d.read32(8).unwrap(), 0xFFFF_FFFF);
+        assert!(d.read_i32_slice(60, 2).is_err());
+    }
+}

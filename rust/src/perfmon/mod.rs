@@ -1,0 +1,422 @@
+//! Performance monitor: per-domain power-state cycle counters.
+//!
+//! Models the counters the paper integrates into the PL next to X-HEEP
+//! (§IV-C): for every power domain they count the cycles spent in each of
+//! the four power states — (1) active, (2) clock-gated, (3) power-gated,
+//! (4) retention (memories) — plus two operating modes:
+//!
+//! * **automatic** — armed at program start, stopped when the program
+//!   halts (no guest intervention);
+//! * **manual** — the guest toggles a dedicated GPIO bit
+//!   ([`crate::periph::gpio::PERF_GPIO_BIT`]) around a region of interest,
+//!   enabling fine-grained profiling of code sections.
+//!
+//! Counter values are read CS-side (memory-mapped on the PS bus in the
+//! paper; a struct access here) and combined with the energy model
+//! ([`crate::energy`]) into per-domain energy estimates.
+//!
+//! Implementation note: counters accumulate on *state transitions*
+//! (`last_change` timestamping) rather than per cycle, so the emulator hot
+//! loop pays one branch per transition, not per cycle.
+
+pub mod vcd;
+
+use std::fmt;
+
+use vcd::TransitionLog;
+
+/// The four power states of §IV-C.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PowerState {
+    Active = 0,
+    ClockGated = 1,
+    PowerGated = 2,
+    Retention = 3,
+}
+
+impl PowerState {
+    pub const ALL: [PowerState; 4] =
+        [PowerState::Active, PowerState::ClockGated, PowerState::PowerGated, PowerState::Retention];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PowerState::Active => "active",
+            PowerState::ClockGated => "clock_gated",
+            PowerState::PowerGated => "power_gated",
+            PowerState::Retention => "retention",
+        }
+    }
+}
+
+impl fmt::Display for PowerState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A power domain of the emulated platform. Matches the HEEPocrates
+/// domain partitioning: CPU, bus/always-on, peripheral subsystem,
+/// individually switchable memory banks, and the accelerator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Domain {
+    Cpu,
+    Bus,
+    Periph,
+    MemBank(usize),
+    Cgra,
+}
+
+impl fmt::Display for Domain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Domain::Cpu => write!(f, "cpu"),
+            Domain::Bus => write!(f, "bus"),
+            Domain::Periph => write!(f, "periph"),
+            Domain::MemBank(i) => write!(f, "mem_bank{i}"),
+            Domain::Cgra => write!(f, "cgra"),
+        }
+    }
+}
+
+/// Cycle counts per power state for one domain.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StateCycles {
+    pub counts: [u64; 4],
+}
+
+impl StateCycles {
+    pub fn get(&self, s: PowerState) -> u64 {
+        self.counts[s as usize]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    fn add(&mut self, s: PowerState, cycles: u64) {
+        self.counts[s as usize] += cycles;
+    }
+}
+
+/// Transition-accumulating tracker for one domain.
+#[derive(Clone, Debug)]
+struct DomainTracker {
+    state: PowerState,
+    last_change: u64,
+    cycles: StateCycles,
+}
+
+impl DomainTracker {
+    fn new(initial: PowerState, now: u64) -> Self {
+        Self { state: initial, last_change: now, cycles: StateCycles::default() }
+    }
+
+    fn set_state(&mut self, new: PowerState, now: u64) {
+        debug_assert!(now >= self.last_change, "time went backwards");
+        if new != self.state {
+            self.cycles.add(self.state, now - self.last_change);
+            self.state = new;
+            self.last_change = now;
+        }
+    }
+
+    fn snapshot(&self, now: u64) -> StateCycles {
+        let mut c = self.cycles;
+        c.add(self.state, now - self.last_change);
+        c
+    }
+}
+
+/// The full performance monitor: one tracker per domain plus measurement
+/// windowing (automatic/manual modes).
+#[derive(Clone, Debug)]
+pub struct PerfMonitor {
+    cpu: DomainTracker,
+    bus: DomainTracker,
+    periph: DomainTracker,
+    banks: Vec<DomainTracker>,
+    cgra: DomainTracker,
+    /// Measurement window state (manual mode gates against this).
+    measuring: bool,
+    window_start: Option<u64>,
+    window_cycles: u64,
+    /// Snapshot taken when the current window opened.
+    window_base: Option<PerfSnapshot>,
+    /// Accumulated per-window deltas (manual mode may open/close several
+    /// windows; they accumulate like the paper's start/stop GPIO).
+    window_acc: Option<PerfSnapshot>,
+    /// Optional transition recorder (VCD export); None keeps the hot
+    /// path allocation-free.
+    trace: Option<TransitionLog>,
+}
+
+/// Counter values for every domain at one instant (or a window delta).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PerfSnapshot {
+    pub cpu: StateCycles,
+    pub bus: StateCycles,
+    pub periph: StateCycles,
+    pub banks: Vec<StateCycles>,
+    pub cgra: StateCycles,
+    pub cycles: u64,
+}
+
+impl PerfSnapshot {
+    /// Per-domain iteration in a stable order (for reports and the energy
+    /// estimator).
+    pub fn domains(&self) -> Vec<(Domain, StateCycles)> {
+        let mut v = vec![
+            (Domain::Cpu, self.cpu),
+            (Domain::Bus, self.bus),
+            (Domain::Periph, self.periph),
+        ];
+        for (i, b) in self.banks.iter().enumerate() {
+            v.push((Domain::MemBank(i), *b));
+        }
+        v.push((Domain::Cgra, self.cgra));
+        v
+    }
+
+    fn sub(&self, base: &PerfSnapshot) -> PerfSnapshot {
+        fn d(a: StateCycles, b: StateCycles) -> StateCycles {
+            let mut out = StateCycles::default();
+            for i in 0..4 {
+                out.counts[i] = a.counts[i] - b.counts[i];
+            }
+            out
+        }
+        PerfSnapshot {
+            cpu: d(self.cpu, base.cpu),
+            bus: d(self.bus, base.bus),
+            periph: d(self.periph, base.periph),
+            banks: self.banks.iter().zip(&base.banks).map(|(a, b)| d(*a, *b)).collect(),
+            cgra: d(self.cgra, base.cgra),
+            cycles: self.cycles - base.cycles,
+        }
+    }
+
+    fn add(&mut self, delta: &PerfSnapshot) {
+        fn a(acc: &mut StateCycles, d: StateCycles) {
+            for i in 0..4 {
+                acc.counts[i] += d.counts[i];
+            }
+        }
+        a(&mut self.cpu, delta.cpu);
+        a(&mut self.bus, delta.bus);
+        a(&mut self.periph, delta.periph);
+        if self.banks.len() < delta.banks.len() {
+            self.banks.resize(delta.banks.len(), StateCycles::default());
+        }
+        for (acc, d) in self.banks.iter_mut().zip(&delta.banks) {
+            a(acc, *d);
+        }
+        a(&mut self.cgra, delta.cgra);
+        self.cycles += delta.cycles;
+    }
+}
+
+impl PerfMonitor {
+    pub fn new(num_banks: usize) -> Self {
+        Self {
+            cpu: DomainTracker::new(PowerState::Active, 0),
+            bus: DomainTracker::new(PowerState::Active, 0),
+            periph: DomainTracker::new(PowerState::Active, 0),
+            banks: (0..num_banks).map(|_| DomainTracker::new(PowerState::Active, 0)).collect(),
+            cgra: DomainTracker::new(PowerState::PowerGated, 0),
+            measuring: false,
+            window_start: None,
+            window_cycles: 0,
+            window_base: None,
+            window_acc: None,
+            trace: None,
+        }
+    }
+
+    /// Start recording domain transitions for VCD export.
+    pub fn enable_trace(&mut self) {
+        let n = self.banks.len();
+        self.trace = Some(TransitionLog::for_domains(n));
+    }
+
+    /// The recorded transition log, if tracing is enabled.
+    pub fn trace(&self) -> Option<&TransitionLog> {
+        self.trace.as_ref()
+    }
+
+    fn tracker(&mut self, d: Domain) -> &mut DomainTracker {
+        match d {
+            Domain::Cpu => &mut self.cpu,
+            Domain::Bus => &mut self.bus,
+            Domain::Periph => &mut self.periph,
+            Domain::MemBank(i) => &mut self.banks[i],
+            Domain::Cgra => &mut self.cgra,
+        }
+    }
+
+    /// Record a domain state transition at cycle `now`.
+    pub fn set_state(&mut self, d: Domain, s: PowerState, now: u64) {
+        let changed = {
+            let t = self.tracker(d);
+            let changed = t.state != s;
+            t.set_state(s, now);
+            changed
+        };
+        if changed {
+            let num_banks = self.banks.len();
+            if let Some(trace) = self.trace.as_mut() {
+                let idx = trace.index_of(d, num_banks);
+                trace.record(now, idx, s);
+            }
+        }
+    }
+
+    /// Current state of a domain.
+    pub fn state(&self, d: Domain) -> PowerState {
+        match d {
+            Domain::Cpu => self.cpu.state,
+            Domain::Bus => self.bus.state,
+            Domain::Periph => self.periph.state,
+            Domain::MemBank(i) => self.banks[i].state,
+            Domain::Cgra => self.cgra.state,
+        }
+    }
+
+    pub fn num_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Counters for everything since reset (the automatic-mode window).
+    pub fn snapshot(&self, now: u64) -> PerfSnapshot {
+        PerfSnapshot {
+            cpu: self.cpu.snapshot(now),
+            bus: self.bus.snapshot(now),
+            periph: self.periph.snapshot(now),
+            banks: self.banks.iter().map(|b| b.snapshot(now)).collect(),
+            cgra: self.cgra.snapshot(now),
+            cycles: now,
+        }
+    }
+
+    // ---- manual measurement windows (GPIO-toggled in the paper) --------
+
+    /// Open a manual measurement window.
+    pub fn window_open(&mut self, now: u64) {
+        if !self.measuring {
+            self.measuring = true;
+            self.window_start = Some(now);
+            self.window_base = Some(self.snapshot(now));
+        }
+    }
+
+    /// Close the current manual window, accumulating its delta.
+    pub fn window_close(&mut self, now: u64) {
+        if self.measuring {
+            self.measuring = false;
+            let base = self.window_base.take().expect("window_base set while measuring");
+            let delta = self.snapshot(now).sub(&base);
+            self.window_cycles += delta.cycles;
+            match &mut self.window_acc {
+                Some(acc) => acc.add(&delta),
+                None => self.window_acc = Some(delta),
+            }
+            self.window_start = None;
+        }
+    }
+
+    /// True while a manual window is open.
+    pub fn measuring(&self) -> bool {
+        self.measuring
+    }
+
+    /// Accumulated manual-window counters (None if no window ever closed).
+    pub fn window_snapshot(&self) -> Option<&PerfSnapshot> {
+        self.window_acc.as_ref()
+    }
+
+    /// Clear accumulated manual windows.
+    pub fn window_reset(&mut self) {
+        self.window_acc = None;
+        self.window_cycles = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transitions_accumulate() {
+        let mut pm = PerfMonitor::new(2);
+        pm.set_state(Domain::Cpu, PowerState::ClockGated, 100);
+        pm.set_state(Domain::Cpu, PowerState::Active, 150);
+        let snap = pm.snapshot(200);
+        assert_eq!(snap.cpu.get(PowerState::Active), 100 + 50);
+        assert_eq!(snap.cpu.get(PowerState::ClockGated), 50);
+        assert_eq!(snap.cpu.total(), 200);
+    }
+
+    #[test]
+    fn same_state_transition_is_noop() {
+        let mut pm = PerfMonitor::new(1);
+        pm.set_state(Domain::Cpu, PowerState::Active, 10);
+        pm.set_state(Domain::Cpu, PowerState::Active, 20);
+        let snap = pm.snapshot(30);
+        assert_eq!(snap.cpu.get(PowerState::Active), 30);
+    }
+
+    #[test]
+    fn cgra_starts_power_gated() {
+        let pm = PerfMonitor::new(1);
+        let snap = pm.snapshot(1000);
+        assert_eq!(snap.cgra.get(PowerState::PowerGated), 1000);
+        assert_eq!(snap.cgra.get(PowerState::Active), 0);
+    }
+
+    #[test]
+    fn bank_retention_counts() {
+        let mut pm = PerfMonitor::new(2);
+        pm.set_state(Domain::MemBank(1), PowerState::Retention, 10);
+        pm.set_state(Domain::MemBank(1), PowerState::Active, 110);
+        let snap = pm.snapshot(120);
+        assert_eq!(snap.banks[1].get(PowerState::Retention), 100);
+        assert_eq!(snap.banks[1].get(PowerState::Active), 20);
+        // bank 0 untouched
+        assert_eq!(snap.banks[0].get(PowerState::Active), 120);
+    }
+
+    #[test]
+    fn manual_windows_accumulate() {
+        let mut pm = PerfMonitor::new(1);
+        // window 1: cycles 100..200, cpu active
+        pm.window_open(100);
+        pm.window_close(200);
+        // state change outside window is not attributed to the window
+        pm.set_state(Domain::Cpu, PowerState::ClockGated, 300);
+        pm.window_open(400);
+        pm.set_state(Domain::Cpu, PowerState::Active, 450);
+        pm.window_close(500);
+        let w = pm.window_snapshot().unwrap();
+        assert_eq!(w.cycles, 200);
+        assert_eq!(w.cpu.get(PowerState::Active), 100 + 50);
+        assert_eq!(w.cpu.get(PowerState::ClockGated), 50);
+    }
+
+    #[test]
+    fn window_reset_clears() {
+        let mut pm = PerfMonitor::new(1);
+        pm.window_open(0);
+        pm.window_close(10);
+        assert!(pm.window_snapshot().is_some());
+        pm.window_reset();
+        assert!(pm.window_snapshot().is_none());
+    }
+
+    #[test]
+    fn double_open_ignored() {
+        let mut pm = PerfMonitor::new(1);
+        pm.window_open(0);
+        pm.window_open(5); // ignored — already measuring
+        pm.window_close(10);
+        assert_eq!(pm.window_snapshot().unwrap().cycles, 10);
+    }
+}

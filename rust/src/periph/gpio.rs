@@ -1,0 +1,109 @@
+//! GPIO block.
+//!
+//! Two paper-relevant uses: (1) the perf-monitor **manual mode** — the
+//! guest toggles a dedicated GPIO bit around a region of interest to
+//! open/close a measurement window (§IV-C); (2) general pin I/O the CS can
+//! observe/drive (the JTAG pins of the real platform are virtualized at a
+//! higher level by [`crate::virt::debugger`], so they do not appear here).
+
+/// Register offsets within the GPIO window.
+pub mod regs {
+    pub const OUT: u32 = 0x00; // R/W: output pins
+    pub const IN: u32 = 0x04; // R: input pins (driven by CS)
+    pub const DIR: u32 = 0x08; // R/W: 1 = output (bookkeeping only)
+}
+
+/// Output bit reserved for the perf-monitor manual start/stop signal.
+pub const PERF_GPIO_BIT: u32 = 16;
+
+/// Edge events the SoC consumes after each guest write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GpioEvent {
+    PerfWindowOpen,
+    PerfWindowClose,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Gpio {
+    out: u32,
+    input: u32,
+    dir: u32,
+    pending: Vec<GpioEvent>,
+}
+
+impl Gpio {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn read(&self, offset: u32) -> u32 {
+        match offset {
+            regs::OUT => self.out,
+            regs::IN => self.input,
+            regs::DIR => self.dir,
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, offset: u32, value: u32) {
+        match offset {
+            regs::OUT => {
+                let old = self.out;
+                self.out = value;
+                let perf_mask = 1 << PERF_GPIO_BIT;
+                if old & perf_mask == 0 && value & perf_mask != 0 {
+                    self.pending.push(GpioEvent::PerfWindowOpen);
+                } else if old & perf_mask != 0 && value & perf_mask == 0 {
+                    self.pending.push(GpioEvent::PerfWindowClose);
+                }
+            }
+            regs::DIR => self.dir = value,
+            _ => {}
+        }
+    }
+
+    /// CS side: drive input pins.
+    pub fn set_input(&mut self, value: u32) {
+        self.input = value;
+    }
+
+    /// CS side: observe outputs.
+    pub fn out(&self) -> u32 {
+        self.out
+    }
+
+    /// SoC consumes pending edge events after each store.
+    pub fn take_events(&mut self) -> Vec<GpioEvent> {
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perf_bit_edges_generate_events() {
+        let mut g = Gpio::new();
+        g.write(regs::OUT, 1 << PERF_GPIO_BIT);
+        g.write(regs::OUT, 1 << PERF_GPIO_BIT); // no edge
+        g.write(regs::OUT, 0);
+        assert_eq!(g.take_events(), vec![GpioEvent::PerfWindowOpen, GpioEvent::PerfWindowClose]);
+        assert!(g.take_events().is_empty());
+    }
+
+    #[test]
+    fn other_bits_do_not_trigger() {
+        let mut g = Gpio::new();
+        g.write(regs::OUT, 0xFF);
+        assert!(g.take_events().is_empty());
+        assert_eq!(g.read(regs::OUT), 0xFF);
+    }
+
+    #[test]
+    fn input_pins_cs_driven() {
+        let mut g = Gpio::new();
+        g.set_input(0xA5);
+        assert_eq!(g.read(regs::IN), 0xA5);
+    }
+}

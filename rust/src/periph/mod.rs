@@ -1,0 +1,52 @@
+//! Memory-mapped peripherals of the emulated X-HEEP host.
+//!
+//! Register blocks live at [`crate::bus::PERIPH_BASE`], one 256-byte
+//! window each (offsets in [`regs`]). The set mirrors what X-HEEP-FEMU
+//! wires up (§IV-B): UART (logging), GPIO (perf-monitor manual mode),
+//! machine timer, the two SPI-AXI bridges (virtual ADC and virtual/
+//! physical flash), a DMA engine, and the power-control block, plus the
+//! CGRA control port and the CS mailbox doorbell.
+
+pub mod dma;
+pub mod gpio;
+pub mod power;
+pub mod spi_adc;
+pub mod spi_flash;
+pub mod timer;
+pub mod uart;
+
+pub use dma::Dma;
+pub use gpio::Gpio;
+pub use power::PowerCtrl;
+pub use spi_adc::SpiAdc;
+pub use spi_flash::{FlashTiming, SpiFlash};
+pub use timer::Timer;
+pub use uart::Uart;
+
+/// Peripheral register offsets relative to each device's 0x100 window.
+/// Device windows (offsets from `PERIPH_BASE`):
+pub mod map {
+    pub const UART: u32 = 0x000;
+    pub const GPIO: u32 = 0x100;
+    pub const TIMER: u32 = 0x200;
+    pub const SPI_ADC: u32 = 0x300;
+    pub const SPI_FLASH: u32 = 0x400;
+    pub const DMA: u32 = 0x500;
+    pub const POWER: u32 = 0x600;
+    pub const CGRA: u32 = 0x700;
+    pub const MAILBOX: u32 = 0x800;
+    /// Size of one device window.
+    pub const WINDOW: u32 = 0x100;
+    /// Total peripheral region size.
+    pub const REGION: u32 = 0x1000;
+}
+
+/// Interrupt line numbers (bit indices in the machine external interrupt
+/// pending word; see [`crate::cpu`]).
+pub mod irq {
+    pub const TIMER: u32 = 0; // machine timer (MTIP, modeled separately)
+    pub const ADC: u32 = 1; // ADC sample ready
+    pub const DMA: u32 = 2; // DMA transfer complete
+    pub const CGRA: u32 = 3; // CGRA kernel done
+    pub const MAILBOX: u32 = 4; // CS completion doorbell
+}

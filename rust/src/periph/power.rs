@@ -1,0 +1,182 @@
+//! Power-control block: guest-visible knobs for domain power states.
+//!
+//! Mirrors X-HEEP's power manager: the guest (or the CS, via the same
+//! registers) can gate individual memory banks, park the CGRA, and choose
+//! the sleep policy applied to memories while the CPU sits in WFI. The
+//! perf monitor observes the resulting domain-state transitions and the
+//! energy model prices them (§IV-C/D).
+
+use crate::perfmon::PowerState;
+
+/// Register offsets within the power-control window.
+pub mod regs {
+    /// R/W: sleep policy for memory banks during WFI:
+    /// 0 = stay active, 1 = clock-gate, 2 = retention.
+    pub const SLEEP_MEM_MODE: u32 = 0x00;
+    /// R/W: CGRA domain state (0 active, 1 clock-gated, 2 power-gated).
+    pub const CGRA_STATE: u32 = 0x04;
+    /// R/W base: per-bank explicit state (0 active, 1 clock-gated,
+    /// 2 power-gated, 3 retention); bank i at `BANK_STATE + 4*i`.
+    pub const BANK_STATE: u32 = 0x40;
+}
+
+/// Sleep policy for memory banks while the CPU is in WFI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SleepMemMode {
+    Active,
+    ClockGated,
+    Retention,
+}
+
+impl SleepMemMode {
+    pub fn as_power_state(self) -> PowerState {
+        match self {
+            SleepMemMode::Active => PowerState::Active,
+            SleepMemMode::ClockGated => PowerState::ClockGated,
+            SleepMemMode::Retention => PowerState::Retention,
+        }
+    }
+}
+
+fn decode_state(v: u32) -> PowerState {
+    match v & 3 {
+        0 => PowerState::Active,
+        1 => PowerState::ClockGated,
+        2 => PowerState::PowerGated,
+        _ => PowerState::Retention,
+    }
+}
+
+fn encode_state(s: PowerState) -> u32 {
+    match s {
+        PowerState::Active => 0,
+        PowerState::ClockGated => 1,
+        PowerState::PowerGated => 2,
+        PowerState::Retention => 3,
+    }
+}
+
+/// A request the SoC applies after the store completes (bank/CGRA state
+/// changes go through the SoC so the perf monitor sees them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PowerRequest {
+    Bank(usize, PowerState),
+    Cgra(PowerState),
+}
+
+#[derive(Clone, Debug)]
+pub struct PowerCtrl {
+    sleep_mem_mode: SleepMemMode,
+    bank_states: Vec<PowerState>,
+    cgra_state: PowerState,
+    pending: Vec<PowerRequest>,
+}
+
+impl PowerCtrl {
+    pub fn new(num_banks: usize) -> Self {
+        Self {
+            sleep_mem_mode: SleepMemMode::Active,
+            bank_states: vec![PowerState::Active; num_banks],
+            cgra_state: PowerState::PowerGated,
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn sleep_mem_mode(&self) -> SleepMemMode {
+        self.sleep_mem_mode
+    }
+
+    pub fn bank_state(&self, i: usize) -> PowerState {
+        self.bank_states[i]
+    }
+
+    pub fn cgra_state(&self) -> PowerState {
+        self.cgra_state
+    }
+
+    pub fn read(&self, offset: u32) -> u32 {
+        match offset {
+            regs::SLEEP_MEM_MODE => match self.sleep_mem_mode {
+                SleepMemMode::Active => 0,
+                SleepMemMode::ClockGated => 1,
+                SleepMemMode::Retention => 2,
+            },
+            regs::CGRA_STATE => encode_state(self.cgra_state),
+            o if o >= regs::BANK_STATE => {
+                let i = ((o - regs::BANK_STATE) / 4) as usize;
+                self.bank_states.get(i).map(|s| encode_state(*s)).unwrap_or(0)
+            }
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, offset: u32, value: u32) {
+        match offset {
+            regs::SLEEP_MEM_MODE => {
+                self.sleep_mem_mode = match value & 3 {
+                    0 => SleepMemMode::Active,
+                    1 => SleepMemMode::ClockGated,
+                    _ => SleepMemMode::Retention,
+                };
+            }
+            regs::CGRA_STATE => {
+                let s = decode_state(value);
+                self.cgra_state = s;
+                self.pending.push(PowerRequest::Cgra(s));
+            }
+            o if o >= regs::BANK_STATE => {
+                let i = ((o - regs::BANK_STATE) / 4) as usize;
+                if i < self.bank_states.len() {
+                    let s = decode_state(value);
+                    self.bank_states[i] = s;
+                    self.pending.push(PowerRequest::Bank(i, s));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// SoC consumes state-change requests after each store.
+    pub fn take_requests(&mut self) -> Vec<PowerRequest> {
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_state_requests() {
+        let mut p = PowerCtrl::new(2);
+        p.write(regs::BANK_STATE + 4, 3); // bank1 -> retention
+        assert_eq!(p.bank_state(1), PowerState::Retention);
+        assert_eq!(p.take_requests(), vec![PowerRequest::Bank(1, PowerState::Retention)]);
+        assert!(p.take_requests().is_empty());
+    }
+
+    #[test]
+    fn out_of_range_bank_ignored() {
+        let mut p = PowerCtrl::new(1);
+        p.write(regs::BANK_STATE + 4 * 9, 2);
+        assert!(p.take_requests().is_empty());
+    }
+
+    #[test]
+    fn sleep_mode_roundtrip() {
+        let mut p = PowerCtrl::new(1);
+        p.write(regs::SLEEP_MEM_MODE, 2);
+        assert_eq!(p.sleep_mem_mode(), SleepMemMode::Retention);
+        assert_eq!(p.read(regs::SLEEP_MEM_MODE), 2);
+        assert_eq!(p.sleep_mem_mode().as_power_state(), PowerState::Retention);
+    }
+
+    #[test]
+    fn cgra_wakeup() {
+        let mut p = PowerCtrl::new(1);
+        assert_eq!(p.cgra_state(), PowerState::PowerGated);
+        p.write(regs::CGRA_STATE, 0);
+        assert_eq!(p.cgra_state(), PowerState::Active);
+        assert_eq!(p.take_requests(), vec![PowerRequest::Cgra(PowerState::Active)]);
+    }
+}

@@ -1,0 +1,309 @@
+//! SPI-ADC bridge: the guest-visible half of ADC virtualization.
+//!
+//! Paper §IV-B: an SPI-to-AXI bridge in the PL translates the guest's SPI
+//! reads into AXI reads of a hardware FIFO, which a PS-side software FIFO
+//! keeps topped up from storage — the dual circular-buffer mechanism that
+//! paces pre-recorded samples at the configured sampling rate.
+//!
+//! Model: sample `k` becomes available exactly at
+//! `start_cycle + k * period_cycles` (the HW FIFO guarantees availability
+//! at the nominal rate). The device holds a bounded FIFO chunk; when it
+//! runs low it raises a refill request the CS ADC service
+//! ([`crate::virt::adc`]) answers between run slices. If the CS fails to
+//! refill in time an **underrun** is latched — the ablation bench uses
+//! this to show why the dual-FIFO pacing matters.
+
+use std::collections::VecDeque;
+
+/// Register offsets within the SPI-ADC window.
+pub mod regs {
+    pub const CTRL: u32 = 0x00; // R/W: bit0 enable, bit1 irq enable
+    pub const STATUS: u32 = 0x04; // R: bit0 sample ready, bit1 underrun, bit2 stream done
+    pub const RXDATA: u32 = 0x08; // R: pop next sample (i32)
+    pub const PERIOD_LO: u32 = 0x0C; // R: sampling period in cycles (CS-configured)
+    pub const PERIOD_HI: u32 = 0x10; // R
+    pub const COUNT: u32 = 0x14; // R: samples consumed so far
+}
+
+/// Cycles one 32-bit SPI sample transfer occupies the core (SPI clock at
+/// 1/6.4 of the 20 MHz core clock: 32 bits ≈ 128 core cycles, visible as
+/// wait states on the RXDATA read — this is what makes the acquisition
+/// active phase dominate at 100 kHz, the right side of Fig 4).
+pub const WORD_CYCLES: u32 = 128;
+
+/// Capacity of the modeled hardware FIFO (samples).
+pub const HW_FIFO_DEPTH: usize = 256;
+/// Refill request threshold: below this the device asks the CS for more.
+pub const REFILL_THRESHOLD: usize = 64;
+
+#[derive(Clone, Debug)]
+pub struct SpiAdc {
+    enabled: bool,
+    irq_enabled: bool,
+    /// HW FIFO contents (filled by the CS service in chunks).
+    fifo: VecDeque<i32>,
+    /// Cycle at which streaming started.
+    start_cycle: u64,
+    /// Sampling period in CPU cycles (cpu_freq / sample_rate).
+    period_cycles: u64,
+    /// Samples consumed by the guest so far.
+    consumed: u64,
+    /// Total samples the CS intends to stream (0 = not configured).
+    total: u64,
+    /// Samples pushed by the CS so far.
+    pushed: u64,
+    underrun: bool,
+}
+
+impl Default for SpiAdc {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            irq_enabled: false,
+            fifo: VecDeque::new(),
+            start_cycle: 0,
+            period_cycles: 1,
+            consumed: 0,
+            total: 0,
+            pushed: 0,
+            underrun: false,
+        }
+    }
+}
+
+impl SpiAdc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- CS-side configuration (virt::adc) -----------------------------
+
+    /// Configure a stream of `total` samples at `period_cycles`, starting
+    /// at cycle `now`. Clears any previous stream.
+    pub fn configure_stream(&mut self, total: u64, period_cycles: u64, now: u64) {
+        assert!(period_cycles > 0, "period must be positive");
+        self.fifo.clear();
+        self.start_cycle = now;
+        self.period_cycles = period_cycles;
+        self.consumed = 0;
+        self.total = total;
+        self.pushed = 0;
+        self.underrun = false;
+    }
+
+    /// CS pushes a chunk of samples into the HW FIFO. Returns how many
+    /// were accepted (FIFO capacity permitting).
+    pub fn refill(&mut self, samples: &[i32]) -> usize {
+        let space = HW_FIFO_DEPTH - self.fifo.len();
+        let n = space.min(samples.len()).min((self.total - self.pushed) as usize);
+        self.fifo.extend(samples[..n].iter().copied());
+        self.pushed += n as u64;
+        n
+    }
+
+    /// True when the CS should push more samples.
+    pub fn wants_refill(&self) -> bool {
+        self.pushed < self.total && self.fifo.len() < REFILL_THRESHOLD
+    }
+
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    // ---- guest-visible behavior ----------------------------------------
+
+    /// Number of samples whose nominal arrival time has passed.
+    fn available_by_schedule(&self, now: u64) -> u64 {
+        if !self.enabled || self.total == 0 || now < self.start_cycle {
+            return 0;
+        }
+        let elapsed = now - self.start_cycle;
+        (elapsed / self.period_cycles + 1).min(self.total)
+    }
+
+    /// Sample ready = schedule says one is due AND the FIFO actually has
+    /// it (otherwise underrun).
+    fn ready(&self, now: u64) -> bool {
+        self.consumed < self.available_by_schedule(now) && !self.fifo.is_empty()
+    }
+
+    pub fn read(&mut self, offset: u32, now: u64) -> u32 {
+        match offset {
+            regs::CTRL => (self.enabled as u32) | ((self.irq_enabled as u32) << 1),
+            regs::STATUS => {
+                let mut s = 0;
+                if self.ready(now) {
+                    s |= 1;
+                }
+                if self.underrun {
+                    s |= 2;
+                }
+                if self.consumed >= self.total && self.total > 0 {
+                    s |= 4;
+                }
+                s
+            }
+            regs::RXDATA => {
+                if self.consumed < self.available_by_schedule(now) {
+                    match self.fifo.pop_front() {
+                        Some(v) => {
+                            self.consumed += 1;
+                            v as u32
+                        }
+                        None => {
+                            // schedule says ready but CS failed to refill
+                            self.underrun = true;
+                            0
+                        }
+                    }
+                } else {
+                    // read before the sample's nominal time: underrun-style
+                    // protocol violation, latched for the CS to see
+                    self.underrun = true;
+                    0
+                }
+            }
+            regs::PERIOD_LO => self.period_cycles as u32,
+            regs::PERIOD_HI => (self.period_cycles >> 32) as u32,
+            regs::COUNT => self.consumed as u32,
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, offset: u32, value: u32) {
+        if offset == regs::CTRL {
+            self.enabled = value & 1 != 0;
+            self.irq_enabled = value & 2 != 0;
+        }
+    }
+
+    /// Sample-ready interrupt level.
+    pub fn irq_pending(&self, now: u64) -> bool {
+        self.irq_enabled && self.ready(now)
+    }
+
+    /// Next cycle at which a new sample becomes due (WFI fast-forward).
+    /// A starved (underrun) stream has no future events — the SoC reports
+    /// the guest as dead-sleeping rather than spinning.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        if !self.enabled || self.total == 0 || self.consumed >= self.total || self.underrun {
+            return None;
+        }
+        let avail = self.available_by_schedule(now);
+        if self.consumed < avail {
+            if self.fifo.is_empty() {
+                // due but no data: the CS failed the pacing contract
+                return None;
+            }
+            return Some(now); // already due
+        }
+        // next sample index = avail, due at start + avail*period
+        Some(self.start_cycle + avail * self.period_cycles)
+    }
+
+    /// Time-advance hook (SoC post-step): a sample whose nominal time has
+    /// passed while the FIFO is empty latches the underrun flag — the
+    /// hardware FIFO missed its deadline.
+    pub fn tick(&mut self, now: u64) {
+        if self.enabled
+            && !self.underrun
+            && self.consumed < self.available_by_schedule(now)
+            && self.fifo.is_empty()
+            && self.total > 0
+        {
+            self.underrun = true;
+        }
+    }
+
+    pub fn underrun(&self) -> bool {
+        self.underrun
+    }
+
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(total: u64, period: u64) -> SpiAdc {
+        let mut a = SpiAdc::new();
+        a.configure_stream(total, period, 0);
+        let chunk: Vec<i32> = (0..total.min(HW_FIFO_DEPTH as u64) as i32).collect();
+        a.refill(&chunk);
+        a.write(regs::CTRL, 0b11); // enable + irq
+        a
+    }
+
+    #[test]
+    fn samples_paced_by_schedule() {
+        let mut a = setup(4, 100);
+        // t=0: sample 0 due immediately
+        assert_eq!(a.read(regs::STATUS, 0) & 1, 1);
+        assert_eq!(a.read(regs::RXDATA, 0), 0);
+        // sample 1 not due until t=100
+        assert_eq!(a.read(regs::STATUS, 50) & 1, 0);
+        assert_eq!(a.next_event(50), Some(100));
+        assert_eq!(a.read(regs::STATUS, 100) & 1, 1);
+        assert_eq!(a.read(regs::RXDATA, 100) as i32, 1);
+    }
+
+    #[test]
+    fn early_read_latches_underrun() {
+        let mut a = setup(4, 100);
+        let _ = a.read(regs::RXDATA, 0);
+        let _ = a.read(regs::RXDATA, 10); // too early
+        assert!(a.underrun());
+        assert_eq!(a.read(regs::STATUS, 10) & 2, 2);
+    }
+
+    #[test]
+    fn stream_done_flag() {
+        let mut a = setup(2, 10);
+        let _ = a.read(regs::RXDATA, 0);
+        let _ = a.read(regs::RXDATA, 10);
+        assert_eq!(a.read(regs::STATUS, 20) & 4, 4);
+        assert_eq!(a.next_event(20), None);
+    }
+
+    #[test]
+    fn refill_protocol() {
+        let mut a = SpiAdc::new();
+        a.configure_stream(1000, 10, 0);
+        a.write(regs::CTRL, 1);
+        assert!(a.wants_refill());
+        let chunk: Vec<i32> = (0..HW_FIFO_DEPTH as i32).collect();
+        assert_eq!(a.refill(&chunk), HW_FIFO_DEPTH);
+        assert!(!a.wants_refill());
+        // consume until below threshold
+        for k in 0..(HW_FIFO_DEPTH - REFILL_THRESHOLD + 1) as u64 {
+            let _ = a.read(regs::RXDATA, k * 10);
+        }
+        assert!(a.wants_refill());
+    }
+
+    #[test]
+    fn empty_fifo_with_due_sample_is_underrun() {
+        let mut a = SpiAdc::new();
+        a.configure_stream(10, 10, 0);
+        a.write(regs::CTRL, 1);
+        // no refill happened
+        let _ = a.read(regs::RXDATA, 0);
+        assert!(a.underrun());
+    }
+
+    #[test]
+    fn irq_follows_ready() {
+        let mut a = setup(2, 100);
+        assert!(a.irq_pending(0));
+        let _ = a.read(regs::RXDATA, 0);
+        assert!(!a.irq_pending(1));
+        assert!(a.irq_pending(100));
+    }
+}

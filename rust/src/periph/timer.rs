@@ -1,0 +1,121 @@
+//! Machine timer (CLINT-style mtime/mtimecmp).
+//!
+//! Lives in the always-on domain; it is the wake-up source for the
+//! acquisition workloads' sleep phases. `mtime` mirrors the global cycle
+//! counter; when `mtime >= mtimecmp` and the interrupt is enabled, the
+//! machine-timer interrupt (MTIP) is asserted until the guest rewrites
+//! `mtimecmp`.
+
+/// Register offsets within the timer window.
+pub mod regs {
+    pub const MTIME_LO: u32 = 0x00; // R
+    pub const MTIME_HI: u32 = 0x04; // R
+    pub const MTIMECMP_LO: u32 = 0x08; // R/W
+    pub const MTIMECMP_HI: u32 = 0x0C; // R/W
+    pub const CTRL: u32 = 0x10; // R/W: bit0 = irq enable
+}
+
+#[derive(Clone, Debug)]
+pub struct Timer {
+    mtimecmp: u64,
+    irq_enable: bool,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self { mtimecmp: u64::MAX, irq_enable: false }
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn read(&self, offset: u32, now: u64) -> u32 {
+        match offset {
+            regs::MTIME_LO => now as u32,
+            regs::MTIME_HI => (now >> 32) as u32,
+            regs::MTIMECMP_LO => self.mtimecmp as u32,
+            regs::MTIMECMP_HI => (self.mtimecmp >> 32) as u32,
+            regs::CTRL => self.irq_enable as u32,
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, offset: u32, value: u32) {
+        match offset {
+            regs::MTIMECMP_LO => {
+                self.mtimecmp = (self.mtimecmp & 0xFFFF_FFFF_0000_0000) | value as u64;
+            }
+            regs::MTIMECMP_HI => {
+                self.mtimecmp = (self.mtimecmp & 0xFFFF_FFFF) | ((value as u64) << 32);
+            }
+            regs::CTRL => self.irq_enable = value & 1 != 0,
+            _ => {}
+        }
+    }
+
+    /// MTIP level at cycle `now`.
+    pub fn irq_pending(&self, now: u64) -> bool {
+        self.irq_enable && now >= self.mtimecmp
+    }
+
+    /// Next cycle at which this timer changes state (for WFI
+    /// fast-forwarding), if any.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        if self.irq_enable && now < self.mtimecmp {
+            Some(self.mtimecmp)
+        } else {
+            None
+        }
+    }
+
+    pub fn mtimecmp(&self) -> u64 {
+        self.mtimecmp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mtime_reflects_cycle_counter() {
+        let t = Timer::new();
+        assert_eq!(t.read(regs::MTIME_LO, 0x1_0000_0002), 2);
+        assert_eq!(t.read(regs::MTIME_HI, 0x1_0000_0002), 1);
+    }
+
+    #[test]
+    fn cmp_write_and_irq() {
+        let mut t = Timer::new();
+        t.write(regs::MTIMECMP_LO, 100);
+        t.write(regs::MTIMECMP_HI, 0);
+        assert!(!t.irq_pending(50)); // irq not enabled yet
+        t.write(regs::CTRL, 1);
+        assert!(!t.irq_pending(50));
+        assert!(t.irq_pending(100));
+        assert!(t.irq_pending(150));
+        assert_eq!(t.next_event(50), Some(100));
+        assert_eq!(t.next_event(100), None); // already fired
+    }
+
+    #[test]
+    fn disabled_timer_has_no_event() {
+        let t = Timer::new();
+        assert_eq!(t.next_event(0), None);
+        assert!(!t.irq_pending(u64::MAX - 1));
+    }
+
+    #[test]
+    fn rewriting_cmp_clears_irq() {
+        let mut t = Timer::new();
+        t.write(regs::CTRL, 1);
+        t.write(regs::MTIMECMP_LO, 10);
+        t.write(regs::MTIMECMP_HI, 0);
+        assert!(t.irq_pending(20));
+        t.write(regs::MTIMECMP_LO, 100);
+        assert!(!t.irq_pending(20));
+    }
+}

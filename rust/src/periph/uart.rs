@@ -1,0 +1,69 @@
+//! UART peripheral — application-level logging.
+//!
+//! In X-HEEP-FEMU the X-HEEP UART is routed to a PS UART port so the CS
+//! sees guest printf output (§IV-B "debugger virtualization"). Here the TX
+//! stream lands in a byte buffer the CS/debugger drains.
+
+/// Register offsets within the UART window.
+pub mod regs {
+    pub const TXDATA: u32 = 0x00; // W: transmit one byte
+    pub const STATUS: u32 = 0x04; // R: bit0 tx_ready (always 1 here)
+    pub const RXDATA: u32 = 0x08; // R: reads 0 (no host->guest channel)
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Uart {
+    tx: Vec<u8>,
+}
+
+impl Uart {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn read(&mut self, offset: u32) -> u32 {
+        match offset {
+            regs::STATUS => 1, // always ready (CS drains instantly)
+            regs::RXDATA => 0,
+            _ => 0,
+        }
+    }
+
+    pub fn write(&mut self, offset: u32, value: u32) {
+        if offset == regs::TXDATA {
+            self.tx.push(value as u8);
+        }
+    }
+
+    /// Drain everything transmitted so far (CS side).
+    pub fn drain(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.tx)
+    }
+
+    /// Peek at the TX stream without draining.
+    pub fn peek(&self) -> &[u8] {
+        &self.tx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tx_collects_and_drains() {
+        let mut u = Uart::new();
+        for b in b"hi\n" {
+            u.write(regs::TXDATA, *b as u32);
+        }
+        assert_eq!(u.peek(), b"hi\n");
+        assert_eq!(u.drain(), b"hi\n".to_vec());
+        assert!(u.peek().is_empty());
+    }
+
+    #[test]
+    fn status_always_ready() {
+        let mut u = Uart::new();
+        assert_eq!(u.read(regs::STATUS) & 1, 1);
+    }
+}

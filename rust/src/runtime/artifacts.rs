@@ -1,0 +1,156 @@
+//! Artifact manifest: the AOT interchange contract with `python/compile/aot.py`.
+//!
+//! `manifest.json` describes, for every lowered entry point, the operand
+//! and result tensor specs. The runtime validates operands against it and
+//! uses the result specs to reshape execution outputs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+use super::TensorI32;
+
+/// Shape + dtype of one tensor operand/result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(Json::as_usize)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { shape, dtype: v.str_field("dtype")?.to_string() })
+    }
+}
+
+/// One AOT entry point (one `.hlo.txt` file).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(Self {
+            file: v.str_field("file")?.to_string(),
+            args: specs("args")?,
+            results: specs("results")?,
+        })
+    }
+
+    /// Check operand count/shapes/dtypes against the manifest spec.
+    pub fn validate_args(&self, inputs: &[TensorI32]) -> Result<()> {
+        if inputs.len() != self.args.len() {
+            bail!("expected {} operands, got {}", self.args.len(), inputs.len());
+        }
+        for (i, (spec, t)) in self.args.iter().zip(inputs).enumerate() {
+            if spec.dtype != "int32" {
+                bail!("operand {i}: manifest dtype {} unsupported (int32 only)", spec.dtype);
+            }
+            if t.shape() != spec.shape.as_slice() {
+                bail!("operand {i}: expected shape {:?}, got {:?}", spec.shape, t.shape());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The whole manifest (BTreeMap for deterministic iteration order).
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub format: String,
+    pub return_tuple: bool,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let format = v.str_field("format")?.to_string();
+        if format != "hlo-text" {
+            bail!("manifest format `{format}` unsupported (want hlo-text)");
+        }
+        let return_tuple = v.get("return_tuple")?.as_bool()?;
+        if !return_tuple {
+            bail!("manifest must be lowered with return_tuple=True");
+        }
+        let mut entries = BTreeMap::new();
+        for (name, e) in v.get("entries")?.as_obj()? {
+            entries.insert(
+                name.clone(),
+                ArtifactEntry::from_json(e).with_context(|| format!("entry `{name}`"))?,
+            );
+        }
+        Ok(Self { format, return_tuple, entries })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
+        Self::parse(&text).with_context(|| format!("parsing manifest {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry() -> ArtifactEntry {
+        ArtifactEntry {
+            file: "x.hlo.txt".into(),
+            args: vec![
+                TensorSpec { shape: vec![2, 3], dtype: "int32".into() },
+                TensorSpec { shape: vec![3], dtype: "int32".into() },
+            ],
+            results: vec![TensorSpec { shape: vec![2], dtype: "int32".into() }],
+        }
+    }
+
+    #[test]
+    fn validate_accepts_matching_args() {
+        let e = entry();
+        let ok = [TensorI32::zeros(vec![2, 3]), TensorI32::zeros(vec![3])];
+        assert!(e.validate_args(&ok).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_wrong_count_and_shape() {
+        let e = entry();
+        assert!(e.validate_args(&[TensorI32::zeros(vec![2, 3])]).is_err());
+        let bad = [TensorI32::zeros(vec![3, 2]), TensorI32::zeros(vec![3])];
+        assert!(e.validate_args(&bad).is_err());
+    }
+
+    #[test]
+    fn manifest_parses_and_checks_format() {
+        let json = r#"{"format":"hlo-text","return_tuple":true,
+            "entries":{"e":{"file":"e.hlo.txt","args":[],"results":[]}}}"#;
+        let m = ArtifactManifest::parse(json).unwrap();
+        assert!(m.return_tuple);
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries["e"].file, "e.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_rejects_wrong_format() {
+        let json = r#"{"format":"proto","return_tuple":true,"entries":{}}"#;
+        assert!(ArtifactManifest::parse(json).is_err());
+        let json2 = r#"{"format":"hlo-text","return_tuple":false,"entries":{}}"#;
+        assert!(ArtifactManifest::parse(json2).is_err());
+    }
+}

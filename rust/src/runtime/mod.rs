@@ -1,0 +1,184 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the emulator touches XLA. `python/compile/aot.py`
+//! lowers the L2 JAX entry points (which call the L1 Pallas kernels with
+//! `interpret=True`) to HLO *text* once at build time; at emulation time the
+//! CS accelerator-virtualization service ([`crate::virt::accel`]) executes
+//! them through [`Runtime`]. Python never runs on the emulation path.
+//!
+//! Interchange contract (see DESIGN.md §3 and artifacts/manifest.json):
+//! HLO text (not serialized protos — xla_extension 0.5.1 rejects jax>=0.5's
+//! 64-bit instruction ids), `return_tuple=True` so every result is a tuple.
+
+mod artifacts;
+mod tensor;
+
+pub use artifacts::{ArtifactEntry, ArtifactManifest, TensorSpec};
+pub use tensor::TensorI32;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A PJRT CPU client plus the compiled executables for every artifact
+/// entry listed in `manifest.json`.
+///
+/// Compilation happens once at load; execution is reentrant and allocation
+/// is limited to the operand/result literals.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` (expects `manifest.json` plus the
+    /// `*.hlo.txt` files it references) and compile them on the PJRT CPU
+    /// client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ArtifactManifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let mut executables = HashMap::new();
+        for (name, entry) in &manifest.entries {
+            let path = dir.join(&entry.file);
+            let exe = Self::compile_one(&client, &path)
+                .with_context(|| format!("compiling artifact `{name}` from {path:?}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Self { client, manifest, executables, dir })
+    }
+
+    /// Load a single extra HLO-text computation not listed in the manifest
+    /// (used by tests and by user-supplied accelerator models).
+    pub fn load_extra(&mut self, name: &str, hlo_path: impl AsRef<Path>) -> Result<()> {
+        let exe = Self::compile_one(&self.client, hlo_path.as_ref())?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn compile_one(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str =
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parse HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| anyhow!("XLA compile {path:?}: {e}"))
+    }
+
+    /// Names of all loaded entry points.
+    pub fn entry_names(&self) -> Vec<&str> {
+        self.manifest.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// The manifest the artifacts were loaded from.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Directory the artifacts were loaded from.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute entry `name` with int32 tensor operands, returning the
+    /// int32 tensor results (the result tuple, flattened).
+    ///
+    /// Operand shapes are validated against the manifest before execution
+    /// so shape bugs surface as errors here, not as XLA aborts.
+    pub fn execute(&self, name: &str, inputs: &[TensorI32]) -> Result<Vec<TensorI32>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact entry `{name}`"))?;
+        if let Some(entry) = self.manifest.entries.get(name) {
+            entry.validate_args(inputs)?;
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(TensorI32::to_literal).collect::<Result<_>>()?;
+        let result =
+            exe.execute::<xla::Literal>(&literals).map_err(|e| anyhow!("execute `{name}`: {e}"))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("execute `{name}`: empty result"))?;
+        let literal =
+            first.to_literal_sync().map_err(|e| anyhow!("fetch result of `{name}`: {e}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts =
+            literal.to_tuple().map_err(|e| anyhow!("untuple result of `{name}`: {e}"))?;
+        let specs = self.manifest.entries.get(name).map(|e| e.results.as_slice());
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, part) in parts.into_iter().enumerate() {
+            let shape = match specs.and_then(|s| s.get(i)) {
+                Some(spec) => spec.shape.clone(),
+                None => vec![part.element_count()],
+            };
+            out.push(TensorI32::from_literal(&part, shape)?);
+        }
+        if let Some(specs) = specs {
+            if out.len() != specs.len() {
+                bail!(
+                    "entry `{name}`: manifest promises {} results, got {}",
+                    specs.len(),
+                    out.len()
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_and_list_entries() {
+        let rt = Runtime::load(artifact_dir()).expect("load artifacts");
+        let mut names = rt.entry_names();
+        names.sort();
+        assert_eq!(names, vec!["conv2d", "fft512", "matmul", "model"]);
+    }
+
+    #[test]
+    fn matmul_identity_roundtrip() {
+        let rt = Runtime::load(artifact_dir()).unwrap();
+        // B = 16x4 "identity-ish": first 4 rows identity, rest zero, so
+        // C[:, j] = A[:, j] for j < 4.
+        let a = TensorI32::from_fn(vec![121, 16], |idx| (idx[0] * 16 + idx[1]) as i32);
+        let mut b = TensorI32::zeros(vec![16, 4]);
+        for j in 0..4 {
+            b.set(&[j, j], 1);
+        }
+        let out = rt.execute("matmul", &[a.clone(), b]).unwrap();
+        assert_eq!(out.len(), 1);
+        let c = &out[0];
+        assert_eq!(c.shape(), &[121, 4]);
+        for i in 0..121 {
+            for j in 0..4 {
+                assert_eq!(c.get(&[i, j]), a.get(&[i, j]));
+            }
+        }
+    }
+
+    #[test]
+    fn execute_rejects_bad_shape() {
+        let rt = Runtime::load(artifact_dir()).unwrap();
+        let a = TensorI32::zeros(vec![2, 2]);
+        let b = TensorI32::zeros(vec![16, 4]);
+        assert!(rt.execute("matmul", &[a, b]).is_err());
+    }
+
+    #[test]
+    fn execute_rejects_unknown_entry() {
+        let rt = Runtime::load(artifact_dir()).unwrap();
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Dense int32 tensors — the operand/result type of the PJRT runtime and
+//! the payload format of the accelerator-virtualization mailbox.
+//!
+//! Row-major (C order), matching both JAX's default layout and the flat
+//! little-endian word layout the RV32 guest uses in mailbox DRAM, so a
+//! mailbox region can be reinterpreted as a tensor without copying or
+//! reordering.
+
+use anyhow::{anyhow, bail, Result};
+
+/// A dense, row-major int32 tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorI32 {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl TensorI32 {
+    /// Build from shape + data; `data.len()` must equal the shape product.
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0; n] }
+    }
+
+    /// Build element-wise from a function of the multi-index.
+    pub fn from_fn(shape: Vec<usize>, mut f: impl FnMut(&[usize]) -> i32) -> Self {
+        let n: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        let mut idx = vec![0usize; shape.len()];
+        for _ in 0..n {
+            data.push(f(&idx));
+            // increment the multi-index, last axis fastest (row-major)
+            for ax in (0..shape.len()).rev() {
+                idx[ax] += 1;
+                if idx[ax] < shape[ax] {
+                    break;
+                }
+                idx[ax] = 0;
+            }
+        }
+        Self { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<i32> {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn flat_index(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut flat = 0usize;
+        for (i, (&x, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < dim, "index {idx:?} out of bounds at axis {i}");
+            flat = flat * dim + x;
+        }
+        flat
+    }
+
+    pub fn get(&self, idx: &[usize]) -> i32 {
+        self.data[self.flat_index(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: i32) {
+        let i = self.flat_index(idx);
+        self.data[i] = v;
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("literal reshape to {dims:?}: {e}"))
+    }
+
+    /// Read an XLA literal back into a tensor, trusting `shape` from the
+    /// manifest (the literal itself only knows its element count here).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Self> {
+        let data = lit.to_vec::<i32>().map_err(|e| anyhow!("literal to_vec<i32>: {e}"))?;
+        Self::new(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(TensorI32::new(vec![2, 3], vec![0; 6]).is_ok());
+        assert!(TensorI32::new(vec![2, 3], vec![0; 5]).is_err());
+    }
+
+    #[test]
+    fn from_fn_row_major_order() {
+        let t = TensorI32::from_fn(vec![2, 3], |i| (i[0] * 10 + i[1]) as i32);
+        assert_eq!(t.data(), &[0, 1, 2, 10, 11, 12]);
+        assert_eq!(t.get(&[1, 2]), 12);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut t = TensorI32::zeros(vec![3, 3]);
+        t.set(&[2, 1], -7);
+        assert_eq!(t.get(&[2, 1]), -7);
+        assert_eq!(t.data()[7], -7);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let t = TensorI32::from_fn(vec![], |_| 42);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(&[]), 42);
+    }
+}

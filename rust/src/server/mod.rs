@@ -1,0 +1,353 @@
+//! Control server: the user-interface layer of the platform.
+//!
+//! Paper §IV-E wraps the platform in a Python class served through
+//! Jupyter so "any HTTP client can connect to the platform and access its
+//! internal functionalities". The equivalent here is a TCP JSON-line
+//! protocol (one JSON object per line, request/response) exposing the
+//! same functionality: program loading, execution control, memory and
+//! register access, perf counters, and energy estimation. [`Client`] is
+//! the in-repo convenience wrapper (`examples/remote_control.rs` drives
+//! it end to end).
+//!
+//! Threading note: the std TCP listener + thread-per-connection model is
+//! used because tokio is unavailable in the offline build environment
+//! (Cargo.toml); the protocol is line-oriented and stateless per request,
+//! so the transport choice is invisible to clients.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{AppExit, Platform};
+use crate as femu;
+use crate::energy::EnergyModel;
+use crate::util::Json;
+
+/// Platform wrapper moved into the server thread. The `xla` crate's PJRT
+/// handles are `Rc`-based and thus not `Send`; every access here happens
+/// with the `Mutex` held and the `Rc`s never escape the platform, so
+/// moving the whole platform between threads is sound.
+struct SendPlatform(Platform);
+// SAFETY: see above — Mutex-serialized access, no Rc clones escape.
+unsafe impl Send for SendPlatform {}
+
+/// A running control server.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve `platform` on `addr` (use port 0 for ephemeral).
+    pub fn spawn(platform: Platform, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).context("binding control server")?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let platform = Arc::new(Mutex::new(SendPlatform(platform)));
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let p = platform.clone();
+                        let stop3 = stop2.clone();
+                        std::thread::spawn(move || {
+                            let _ = serve_connection(stream, p, stop3);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Server { addr: local, stop, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    platform: Arc<Mutex<SendPlatform>>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    while !stop.load(Ordering::Relaxed) {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let response = match handle_request(&line, &platform) {
+            Ok(v) => Json::obj(vec![("ok", Json::Bool(true)), ("result", v)]),
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(format!("{e:#}"))),
+            ]),
+        };
+        writeln!(writer, "{response}")?;
+    }
+    Ok(())
+}
+
+fn handle_request(line: &str, platform: &Arc<Mutex<SendPlatform>>) -> Result<Json> {
+    let req = Json::parse(line.trim()).context("parsing request")?;
+    let cmd = req.str_field("cmd")?;
+    let mut guard = platform.lock().map_err(|_| anyhow!("platform lock poisoned"))?;
+    let p = &mut guard.0;
+    match cmd {
+        "ping" => Ok(Json::from("pong")),
+        "load_asm" => {
+            let src = req.str_field("source")?;
+            let prog = p.dbg.load_source(src)?;
+            let symbols = Json::Obj(
+                prog.symbols
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                    .collect(),
+            );
+            Ok(Json::obj(vec![
+                ("entry", Json::from(prog.entry as i64)),
+                ("text_words", Json::from(prog.text.len() as i64)),
+                ("symbols", symbols),
+            ]))
+        }
+        "run" => {
+            let budget = req.opt("max_cycles").map(|v| v.as_i64()).transpose()?.unwrap_or(1 << 33)
+                as u64;
+            let exit = p.run_app(budget)?;
+            let (kind, detail) = match exit {
+                AppExit::Halted(h) => ("halted", format!("{h:?}")),
+                AppExit::Budget => ("budget", String::new()),
+            };
+            Ok(Json::obj(vec![
+                ("exit", Json::from(kind)),
+                ("detail", Json::Str(detail)),
+                ("cycles", Json::from(p.dbg.soc.now as i64)),
+            ]))
+        }
+        "reset" => {
+            let entry = req.opt("entry").map(|v| v.as_i64()).transpose()?.unwrap_or(0) as u32;
+            p.dbg.reset(entry);
+            Ok(Json::Null)
+        }
+        "regs" => Ok(Json::Arr(
+            p.dbg.soc.cpu.regs.iter().map(|&r| Json::Num(r as i32 as f64)).collect(),
+        )),
+        "read_mem" => {
+            let addr = req.get("addr")?.as_i64()? as u32;
+            let n = req.get("n")?.as_usize()?;
+            let vals = p.dbg.read_i32_slice(addr, n)?;
+            Ok(Json::arr_i32(&vals))
+        }
+        "write_mem" => {
+            let addr = req.get("addr")?.as_i64()? as u32;
+            let vals: Vec<i32> = req
+                .get("values")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_i64().map(|x| x as i32))
+                .collect::<Result<_>>()?;
+            p.dbg.write_i32_slice(addr, &vals)?;
+            Ok(Json::Null)
+        }
+        "disasm" => {
+            let addr = req.get("addr")?.as_i64()? as u32;
+            let n = req.get("n")?.as_usize()?;
+            let words: Vec<u32> = (0..n)
+                .map(|i| p.dbg.read32(addr + (i * 4) as u32).map(|w| w))
+                .collect::<Result<_>>()?;
+            Ok(Json::Str(femu::isa::listing(&words, addr)))
+        }
+        "step" => {
+            let stop = p.dbg.step();
+            Ok(Json::obj(vec![
+                ("stop", Json::Str(format!("{stop:?}"))),
+                ("pc", Json::from(p.dbg.pc() as i64)),
+            ]))
+        }
+        "add_breakpoint" => {
+            let addr = req.get("addr")?.as_i64()? as u32;
+            p.dbg.add_breakpoint(addr);
+            Ok(Json::Null)
+        }
+        "remove_breakpoint" => {
+            let addr = req.get("addr")?.as_i64()? as u32;
+            p.dbg.remove_breakpoint(addr);
+            Ok(Json::Null)
+        }
+        "uart" => {
+            let bytes = p.dbg.uart();
+            Ok(Json::Str(String::from_utf8_lossy(&bytes).into_owned()))
+        }
+        "perf" => {
+            let snap = p.snapshot();
+            let mut domains = std::collections::BTreeMap::new();
+            for (d, c) in snap.domains() {
+                domains.insert(
+                    d.to_string(),
+                    Json::obj(vec![
+                        ("active", Json::from(c.counts[0] as i64)),
+                        ("clock_gated", Json::from(c.counts[1] as i64)),
+                        ("power_gated", Json::from(c.counts[2] as i64)),
+                        ("retention", Json::from(c.counts[3] as i64)),
+                    ]),
+                );
+            }
+            Ok(Json::obj(vec![
+                ("cycles", Json::from(snap.cycles as i64)),
+                ("domains", Json::Obj(domains)),
+            ]))
+        }
+        "energy" => {
+            let model_name = req.opt("model").map(|v| v.as_str()).transpose()?.unwrap_or("femu");
+            let model = EnergyModel::by_name(model_name)
+                .ok_or_else(|| anyhow!("unknown energy model `{model_name}`"))?;
+            let snap = p.snapshot();
+            let r = model.estimate(&snap);
+            Ok(Json::obj(vec![
+                ("model", Json::from(model_name)),
+                ("total_mj", Json::Num(r.total_mj)),
+                ("active_mj", Json::Num(r.active_mj)),
+                ("sleep_mj", Json::Num(r.sleep_mj)),
+                ("seconds", Json::Num(r.seconds())),
+            ]))
+        }
+        other => Err(anyhow!("unknown command `{other}`")),
+    }
+}
+
+/// Line-protocol client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to control server")?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Send one request object; returns the `result` payload.
+    pub fn call(&mut self, request: Json) -> Result<Json> {
+        writeln!(self.writer, "{request}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = Json::parse(line.trim())?;
+        if resp.get("ok")?.as_bool()? {
+            Ok(resp.opt("result").cloned().unwrap_or(Json::Null))
+        } else {
+            Err(anyhow!("server error: {}", resp.str_field("error").unwrap_or("?")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn spawn() -> (Server, Client) {
+        let platform = Platform::new(PlatformConfig::default());
+        let server = Server::spawn(platform, "127.0.0.1:0").unwrap();
+        let client = Client::connect(server.addr()).unwrap();
+        (server, client)
+    }
+
+    #[test]
+    fn ping_pong() {
+        let (server, mut client) = spawn();
+        let r = client.call(Json::obj(vec![("cmd", Json::from("ping"))])).unwrap();
+        assert_eq!(r.as_str().unwrap(), "pong");
+        server.shutdown();
+    }
+
+    #[test]
+    fn load_run_read_cycle() {
+        let (server, mut client) = spawn();
+        let src = r#"
+            _start:
+                la t0, out
+                li t1, 77
+                sw t1, 0(t0)
+                ebreak
+            .data
+            out: .word 0
+        "#;
+        let loaded = client
+            .call(Json::obj(vec![("cmd", Json::from("load_asm")), ("source", Json::from(src))]))
+            .unwrap();
+        let out_addr = loaded.get("symbols").unwrap().get("out").unwrap().as_i64().unwrap();
+        let run = client.call(Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        assert_eq!(run.str_field("exit").unwrap(), "halted");
+        let mem = client
+            .call(Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(out_addr)),
+                ("n", Json::from(1i64)),
+            ]))
+            .unwrap();
+        assert_eq!(mem.as_arr().unwrap()[0].as_i64().unwrap(), 77);
+        server.shutdown();
+    }
+
+    #[test]
+    fn energy_and_perf_queries() {
+        let (server, mut client) = spawn();
+        client
+            .call(Json::obj(vec![
+                ("cmd", Json::from("load_asm")),
+                ("source", Json::from("_start: li a0, 1\nebreak")),
+            ]))
+            .unwrap();
+        client.call(Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        let perf = client.call(Json::obj(vec![("cmd", Json::from("perf"))])).unwrap();
+        assert!(perf.get("cycles").unwrap().as_i64().unwrap() > 0);
+        let energy = client
+            .call(Json::obj(vec![
+                ("cmd", Json::from("energy")),
+                ("model", Json::from("heepocrates")),
+            ]))
+            .unwrap();
+        assert!(energy.get("total_mj").unwrap().as_f64().unwrap() > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_error_cleanly() {
+        let (server, mut client) = spawn();
+        assert!(client.call(Json::obj(vec![("cmd", Json::from("warp"))])).is_err());
+        assert!(client
+            .call(Json::obj(vec![("cmd", Json::from("read_mem")), ("addr", Json::from(0i64))]))
+            .is_err());
+        // connection still usable
+        assert!(client.call(Json::obj(vec![("cmd", Json::from("ping"))])).is_ok());
+        server.shutdown();
+    }
+}

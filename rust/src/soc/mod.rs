@@ -1,0 +1,702 @@
+//! The emulated X-HEEP SoC: CPU + interconnect + CGRA + performance
+//! monitor, with event-driven sleep and the CS hand-off points.
+//!
+//! This is the RH region of the FEMU split. [`Soc::run`] executes the
+//! guest until it halts, exhausts the cycle budget, or needs the CS:
+//! a mailbox doorbell (accelerator virtualization) or an ADC FIFO refill
+//! (the software half of the dual-FIFO pacing). The coordinator
+//! ([`crate::coordinator`]) services those and resumes — the exact
+//! PL↔PS control flow of the paper, collapsed into one process.
+//!
+//! Power-state bookkeeping: the CPU domain is Active while running and
+//! ClockGated in WFI; memory banks follow the guest-configured sleep
+//! policy during WFI and explicit power-control writes otherwise; the
+//! CGRA domain is Active exactly during its busy window. All transitions
+//! are timestamped into the [`PerfMonitor`], which is what the energy
+//! model integrates (§IV-C/D).
+
+mod loader;
+
+pub use loader::load_program;
+
+use crate::bus::{Bus, BRIDGE_BASE, SRAM_BASE};
+use crate::cgra::device::{kernel_id, LaunchRequest};
+use crate::cgra::{kernels, CgraCore, CgraMem, CgraRun};
+use crate::cpu::{Cpu, CpuState, Halt};
+use crate::isa::Program;
+use crate::mem::SramBank;
+use crate::periph::gpio::GpioEvent;
+use crate::periph::power::PowerRequest;
+use crate::periph::{FlashTiming, SpiFlash};
+use crate::perfmon::{Domain, PerfMonitor, PowerState};
+
+/// Why [`Soc::run`] returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunExit {
+    /// Guest halted (ebreak or unhandled trap).
+    Halted(Halt),
+    /// Guest rang the mailbox doorbell; the CS accelerator service must
+    /// handle the request block at this CS-DRAM byte offset.
+    MailboxRing(u32),
+    /// The ADC hardware FIFO wants more samples from the CS software FIFO.
+    AdcRefill,
+    /// Cycle budget exhausted.
+    CycleBudget,
+    /// Asleep with no pending or future wake-up source — a guest hang.
+    DeadSleep,
+}
+
+/// Construction parameters (defaults mirror the X-HEEP-FEMU build).
+#[derive(Clone, Debug)]
+pub struct SocConfig {
+    pub num_banks: usize,
+    pub bank_size: u32,
+    pub cs_dram_size: usize,
+    pub flash_size: usize,
+    pub flash_timing: FlashTiming,
+    /// Emulated core clock (HEEPocrates runs 20 MHz @ 0.8 V).
+    pub freq_hz: u64,
+}
+
+impl Default for SocConfig {
+    fn default() -> Self {
+        Self {
+            num_banks: 2,
+            bank_size: 0x2_0000, // 128 KiB per bank
+            cs_dram_size: 16 << 20,
+            flash_size: 4 << 20,
+            flash_timing: FlashTiming::virtualized(),
+            freq_hz: 20_000_000,
+        }
+    }
+}
+
+/// Run statistics beyond the perf counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SocStats {
+    pub instructions: u64,
+    pub cgra_launches: u64,
+    pub cgra_run: CgraRun,
+    pub mailbox_rings: u64,
+    pub dma_errors: u64,
+}
+
+pub struct Soc {
+    pub cpu: Cpu,
+    pub bus: Bus,
+    pub cgra: CgraCore,
+    pub perf: PerfMonitor,
+    pub now: u64,
+    pub freq_hz: u64,
+    pub stats: SocStats,
+    /// Bank states saved at WFI entry (sleep policy restore).
+    saved_bank_states: Option<Vec<PowerState>>,
+    /// Pending CGRA completion time (perf-domain restore).
+    cgra_busy_until: Option<u64>,
+    was_sleeping: bool,
+    /// Sticky CGRA mapping fault (emulation diagnostics).
+    pub cgra_fault: Option<crate::cgra::CgraFault>,
+}
+
+impl Soc {
+    pub fn new(cfg: SocConfig) -> Self {
+        let flash = SpiFlash::new(cfg.flash_size, cfg.flash_timing);
+        Self {
+            cpu: Cpu::new(SRAM_BASE),
+            bus: Bus::new(cfg.num_banks, cfg.bank_size, cfg.cs_dram_size, flash),
+            cgra: CgraCore::new(),
+            perf: PerfMonitor::new(cfg.num_banks),
+            now: 0,
+            freq_hz: cfg.freq_hz,
+            stats: SocStats::default(),
+            saved_bank_states: None,
+            cgra_busy_until: None,
+            was_sleeping: false,
+            cgra_fault: None,
+        }
+    }
+
+    /// Load a guest program and point the CPU at its entry (the debugger
+    /// virtualization path does the same through [`crate::virt::debugger`]).
+    pub fn load(&mut self, prog: &Program) -> anyhow::Result<()> {
+        load_program(&mut self.bus, prog)?;
+        self.cpu.reset(prog.entry);
+        Ok(())
+    }
+
+    /// Seconds represented by `cycles` at the emulated clock.
+    pub fn secs(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_hz as f64
+    }
+
+    // ---- event-driven execution ----------------------------------------
+
+    fn refresh_irq_lines(&mut self) {
+        let mtip = self.bus.timer.irq_pending(self.now);
+        let fast = self.bus.fast_irq_lines(self.now);
+        self.cpu.set_irq_lines(mtip, fast);
+    }
+
+    /// Earliest future device event (wake source while sleeping).
+    fn next_event(&self) -> Option<u64> {
+        let mut next: Option<u64> = None;
+        let mut consider = |e: Option<u64>| {
+            if let Some(t) = e {
+                next = Some(next.map_or(t, |n| n.min(t)));
+            }
+        };
+        consider(self.bus.timer.next_event(self.now));
+        consider(self.bus.spi_adc.next_event(self.now));
+        consider(self.bus.dma.next_event(self.now));
+        consider(self.bus.cgra_dev.next_event(self.now));
+        consider(self.bus.mailbox.next_event(self.now));
+        next
+    }
+
+    /// Handle everything that may have happened after a CPU step or a
+    /// sleep fast-forward.
+    fn post_step(&mut self) {
+        // Write-triggered work: only when a peripheral register was
+        // actually written this step (§Perf opt 2 — the flag check keeps
+        // the per-instruction overhead flat on compute-only code).
+        if self.bus.periph_touched {
+            self.bus.periph_touched = false;
+            // GPIO edges: perf-monitor manual windows
+            for ev in self.bus.gpio.take_events() {
+                match ev {
+                    GpioEvent::PerfWindowOpen => self.perf.window_open(self.now),
+                    GpioEvent::PerfWindowClose => self.perf.window_close(self.now),
+                }
+            }
+            // power-control requests
+            for req in self.bus.power.take_requests() {
+                match req {
+                    PowerRequest::Bank(i, s) => {
+                        self.bus.banks[i].set_state(s);
+                        self.perf.set_state(Domain::MemBank(i), s, self.now);
+                    }
+                    PowerRequest::Cgra(s) => {
+                        // explicit CGRA state applies when not mid-run
+                        if self.cgra_busy_until.is_none() {
+                            self.perf.set_state(Domain::Cgra, s, self.now);
+                        }
+                    }
+                }
+            }
+            // CGRA launch service
+            if let Some(req) = self.bus.cgra_dev.take_pending() {
+                self.service_cgra_launch(req);
+            }
+        }
+        // DMA completion: apply the copy transactionally (time-triggered)
+        if let Some(req) = self.bus.dma.take_completed(self.now) {
+            if self.apply_dma(req).is_err() {
+                self.stats.dma_errors += 1;
+            }
+        }
+        // CGRA completion: restore the domain to its configured state
+        if let Some(t) = self.cgra_busy_until {
+            if self.now >= t {
+                self.cgra_busy_until = None;
+                self.perf.set_state(Domain::Cgra, self.bus.power.cgra_state(), t);
+            }
+        }
+        self.bus.cgra_dev.tick(self.now);
+        self.bus.mailbox.tick(self.now);
+        self.bus.spi_adc.tick(self.now);
+
+        // WFI domain transitions
+        let sleeping = self.cpu.state == CpuState::Sleeping;
+        if sleeping && !self.was_sleeping {
+            self.enter_sleep();
+        } else if !sleeping && self.was_sleeping {
+            self.exit_sleep();
+        }
+        self.was_sleeping = sleeping;
+
+        self.refresh_irq_lines();
+    }
+
+    fn enter_sleep(&mut self) {
+        self.perf.set_state(Domain::Cpu, PowerState::ClockGated, self.now);
+        self.perf.set_state(Domain::Bus, PowerState::ClockGated, self.now);
+        self.perf.set_state(Domain::Periph, PowerState::ClockGated, self.now);
+        let mode = self.bus.power.sleep_mem_mode().as_power_state();
+        if mode != PowerState::Active {
+            let saved: Vec<PowerState> = self.bus.banks.iter().map(|b| b.state()).collect();
+            for (i, bank) in self.bus.banks.iter_mut().enumerate() {
+                if bank.state() == PowerState::Active {
+                    bank.set_state(mode);
+                    self.perf.set_state(Domain::MemBank(i), mode, self.now);
+                }
+            }
+            self.saved_bank_states = Some(saved);
+        }
+    }
+
+    fn exit_sleep(&mut self) {
+        self.perf.set_state(Domain::Cpu, PowerState::Active, self.now);
+        self.perf.set_state(Domain::Bus, PowerState::Active, self.now);
+        self.perf.set_state(Domain::Periph, PowerState::Active, self.now);
+        if let Some(saved) = self.saved_bank_states.take() {
+            for (i, s) in saved.into_iter().enumerate() {
+                if s == PowerState::Active {
+                    self.bus.banks[i].set_state(PowerState::Active);
+                    self.perf.set_state(Domain::MemBank(i), PowerState::Active, self.now);
+                }
+            }
+        }
+    }
+
+    fn apply_dma(&mut self, req: crate::periph::dma::DmaRequest) -> Result<(), ()> {
+        let words = (req.len as usize).div_ceil(4);
+        for i in 0..words {
+            let src = req.src + (i * 4) as u32;
+            let dst = req.dst + (i * 4) as u32;
+            let v = self.mem_read32(src)?;
+            self.mem_write32(dst, v)?;
+        }
+        Ok(())
+    }
+
+    /// Word access honoring power states (DMA + CGRA master path).
+    fn mem_read32(&mut self, addr: u32) -> Result<u32, ()> {
+        if let Some(i) = self.bus.bank_index(addr) {
+            let off = self.bus.bank_offset(addr);
+            return self.bus.banks[i].read32(off).map_err(|_| ());
+        }
+        if addr >= BRIDGE_BASE {
+            return self.bus.cs_dram.read32((addr - BRIDGE_BASE) as usize).map_err(|_| ());
+        }
+        Err(())
+    }
+
+    fn mem_write32(&mut self, addr: u32, v: u32) -> Result<(), ()> {
+        if let Some(i) = self.bus.bank_index(addr) {
+            let off = self.bus.bank_offset(addr);
+            return self.bus.banks[i].write32(off, v).map_err(|_| ());
+        }
+        if addr >= BRIDGE_BASE {
+            return self.bus.cs_dram.write32((addr - BRIDGE_BASE) as usize, v).map_err(|_| ());
+        }
+        Err(())
+    }
+
+    fn service_cgra_launch(&mut self, req: LaunchRequest) {
+        let a = &req.args;
+        let passes = match req.kernel {
+            kernel_id::MATMUL => kernels::matmul_passes(
+                a[0],
+                a[1],
+                a[2],
+                a[3] as usize,
+                a[4] as usize,
+                a[5] as usize,
+            ),
+            kernel_id::CONV2D => kernels::conv2d_passes(
+                a[0],
+                a[1],
+                a[2],
+                a[3] as usize,
+                a[4] as usize,
+                a[5] as usize,
+                a[6] as usize,
+                a[7] as usize,
+                a[8] as usize,
+            ),
+            kernel_id::FFT => kernels::fft_passes(a[0], a[1], a[2], a[3], a[4] as usize),
+            _ => {
+                // unknown kernel: complete immediately with zero cycles
+                self.bus.cgra_dev.complete(CgraRun::default(), self.now);
+                return;
+            }
+        };
+        let mut view = BankView {
+            banks: &mut self.bus.banks,
+            bank_size: self.bus.bank_size,
+            cs_dram: &mut self.bus.cs_dram,
+        };
+        let result = kernels::run_passes(&mut self.cgra, &passes, &mut view);
+        match result {
+            Ok(run) => {
+                self.stats.cgra_launches += 1;
+                self.stats.cgra_run.merge(run);
+                // CGRA domain active for the duration of the run
+                self.perf.set_state(Domain::Cgra, PowerState::Active, self.now);
+                self.cgra_busy_until = Some(self.now + run.total_cycles());
+                self.bus.cgra_dev.complete(run, self.now);
+            }
+            Err(fault) => {
+                self.cgra_fault = Some(fault);
+                self.bus.cgra_dev.complete(CgraRun::default(), self.now);
+            }
+        }
+    }
+
+    /// Run until a CS hand-off point or `max_cycles` elapse.
+    pub fn run(&mut self, max_cycles: u64) -> RunExit {
+        let deadline = self.now.saturating_add(max_cycles);
+        self.refresh_irq_lines();
+        loop {
+            match self.cpu.state {
+                CpuState::Halted(h) => {
+                    // ensure final domain states are flushed
+                    return RunExit::Halted(h);
+                }
+                CpuState::Sleeping if !self.cpu.interrupt_pending() => {
+                    match self.next_event() {
+                        None => return RunExit::DeadSleep,
+                        Some(t) if t > deadline => {
+                            self.now = deadline;
+                            self.post_step();
+                            return RunExit::CycleBudget;
+                        }
+                        Some(t) => {
+                            let before = self.now;
+                            self.now = t.max(self.now);
+                            self.post_step();
+                            // forward-progress guard: a past-time event
+                            // that neither advances the clock nor wakes
+                            // the core would spin forever
+                            if self.now == before
+                                && self.cpu.state == CpuState::Sleeping
+                                && !self.cpu.interrupt_pending()
+                            {
+                                // step the clock one cycle and re-evaluate
+                                self.now += 1;
+                            }
+                            continue;
+                        }
+                    }
+                }
+                _ => {}
+            }
+            if self.now >= deadline {
+                return RunExit::CycleBudget;
+            }
+            let r = self.cpu.step(&mut self.bus, self.now);
+            self.now += r.cycles as u64;
+            if r.retired {
+                self.stats.instructions += 1;
+            }
+            self.post_step();
+            if let Some(off) = self.bus.mailbox.take_pending() {
+                self.stats.mailbox_rings += 1;
+                return RunExit::MailboxRing(off);
+            }
+            if self.bus.spi_adc.wants_refill() {
+                return RunExit::AdcRefill;
+            }
+        }
+    }
+
+    /// Convenience: run to halt, panicking on CS hand-offs (for guests
+    /// that don't use virtualization services) and on budget exhaustion.
+    pub fn run_to_halt(&mut self, max_cycles: u64) -> Halt {
+        match self.run(max_cycles) {
+            RunExit::Halted(h) => h,
+            other => panic!("guest did not halt: {other:?} at cycle {}", self.now),
+        }
+    }
+}
+
+/// CGRA master view over the SRAM banks + bridge window.
+struct BankView<'a> {
+    banks: &'a mut Vec<SramBank>,
+    bank_size: u32,
+    cs_dram: &'a mut crate::mem::CsDram,
+}
+
+impl BankView<'_> {
+    #[inline]
+    fn split(&self, addr: u32) -> (usize, usize) {
+        let shift = self.bank_size.trailing_zeros();
+        ((addr >> shift) as usize, (addr & (self.bank_size - 1)) as usize)
+    }
+}
+
+impl CgraMem for BankView<'_> {
+    fn read32(&mut self, addr: u32) -> Result<u32, ()> {
+        let end = self.banks.len() as u32 * self.bank_size;
+        if addr < end {
+            let (i, off) = self.split(addr);
+            return self.banks[i].read32(off).map_err(|_| ());
+        }
+        if addr >= BRIDGE_BASE {
+            return self.cs_dram.read32((addr - BRIDGE_BASE) as usize).map_err(|_| ());
+        }
+        Err(())
+    }
+
+    fn write32(&mut self, addr: u32, value: u32) -> Result<(), ()> {
+        let end = self.banks.len() as u32 * self.bank_size;
+        if addr < end {
+            let (i, off) = self.split(addr);
+            return self.banks[i].write32(off, value).map_err(|_| ());
+        }
+        if addr >= BRIDGE_BASE {
+            return self.cs_dram.write32((addr - BRIDGE_BASE) as usize, value).map_err(|_| ());
+        }
+        Err(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    fn soc_with(src: &str) -> Soc {
+        let prog = assemble(src).expect("assemble");
+        let mut soc = Soc::new(SocConfig::default());
+        soc.load(&prog).unwrap();
+        soc
+    }
+
+    #[test]
+    fn runs_simple_program_to_halt() {
+        let mut soc = soc_with(
+            r#"
+            _start:
+                li a0, 5
+                li a1, 7
+                add a2, a0, a1
+                ebreak
+            "#,
+        );
+        assert_eq!(soc.run_to_halt(10_000), Halt::Ebreak);
+        assert_eq!(soc.cpu.regs[12], 12);
+        assert!(soc.stats.instructions >= 4);
+    }
+
+    #[test]
+    fn uart_output_reaches_cs() {
+        let mut soc = soc_with(
+            r#"
+            .equ UART_TX, 0x20000000
+            _start:
+                li t0, UART_TX
+                li t1, 72        # 'H'
+                sw t1, 0(t0)
+                li t1, 105       # 'i'
+                sw t1, 0(t0)
+                ebreak
+            "#,
+        );
+        soc.run_to_halt(10_000);
+        assert_eq!(soc.bus.uart.drain(), b"Hi".to_vec());
+    }
+
+    #[test]
+    fn wfi_timer_wakeup_counts_sleep_cycles() {
+        let mut soc = soc_with(
+            r#"
+            .equ TIMER, 0x20000200
+            _start:
+                la  t0, handler
+                csrw mtvec, t0
+                li  t0, TIMER
+                li  t1, 100000       # mtimecmp_lo
+                sw  t1, 8(t0)
+                sw  zero, 12(t0)     # mtimecmp_hi
+                li  t1, 1
+                sw  t1, 16(t0)       # irq enable
+                li  t1, 0x80
+                csrw mie, t1
+                csrsi mstatus, 8
+                wfi
+                ebreak
+            handler:
+                ebreak
+            "#,
+        );
+        soc.run_to_halt(1_000_000);
+        // woke at ~100000
+        assert!(soc.now >= 100_000 && soc.now < 100_200, "now={}", soc.now);
+        let snap = soc.perf.snapshot(soc.now);
+        let gated = snap.cpu.get(PowerState::ClockGated);
+        assert!(gated > 99_000, "sleep cycles {gated}");
+        assert!(snap.cpu.get(PowerState::Active) < 1_000);
+    }
+
+    #[test]
+    fn sleep_mem_retention_policy() {
+        let mut soc = soc_with(
+            r#"
+            .equ TIMER, 0x20000200
+            .equ POWER, 0x20000600
+            _start:
+                la  t0, handler
+                csrw mtvec, t0
+                li  t0, POWER
+                li  t1, 2            # retention during sleep
+                sw  t1, 0(t0)
+                li  t0, TIMER
+                li  t1, 50000
+                sw  t1, 8(t0)
+                sw  zero, 12(t0)
+                li  t1, 1
+                sw  t1, 16(t0)
+                li  t1, 0x80
+                csrw mie, t1
+                csrsi mstatus, 8
+                wfi
+                ebreak
+            handler:
+                # memory must be usable again after wake
+                la  t2, marker
+                lw  t3, 0(t2)
+                ebreak
+            .data
+            marker: .word 1234
+            "#,
+        );
+        soc.run_to_halt(1_000_000);
+        assert_eq!(soc.cpu.regs[28], 1234); // retention preserved data
+        let snap = soc.perf.snapshot(soc.now);
+        assert!(snap.banks[1].get(PowerState::Retention) > 40_000);
+        assert_eq!(soc.bus.banks[1].state(), PowerState::Active); // restored
+    }
+
+    #[test]
+    fn dma_memcpy() {
+        let mut soc = soc_with(
+            r#"
+            .equ DMA, 0x20000500
+            _start:
+                la  t0, src
+                la  t1, dst
+                li  t2, DMA
+                sw  t0, 0(t2)      # SRC
+                sw  t1, 4(t2)      # DST
+                li  t3, 12
+                sw  t3, 8(t2)      # LEN
+                li  t3, 1
+                sw  t3, 12(t2)     # CTRL: start
+            wait:
+                lw  t4, 16(t2)     # STATUS
+                andi t4, t4, 1
+                beqz t4, wait
+                la  t1, dst
+                lw  a0, 0(t1)
+                lw  a1, 4(t1)
+                lw  a2, 8(t1)
+                ebreak
+            .data
+            src: .word 11, 22, 33
+            dst: .word 0, 0, 0
+            "#,
+        );
+        soc.run_to_halt(100_000);
+        assert_eq!(soc.cpu.regs[10], 11);
+        assert_eq!(soc.cpu.regs[11], 22);
+        assert_eq!(soc.cpu.regs[12], 33);
+    }
+
+    #[test]
+    fn cgra_matmul_launch_from_guest() {
+        // 4x4 identity times vector via CGRA control port
+        let mut soc = soc_with(
+            r#"
+            .equ CGRA, 0x20000700
+            _start:
+                li  t0, CGRA
+                sw  zero, 8(t0)    # KERNEL = MATMUL
+                la  t1, a
+                sw  t1, 0x40(t0)   # ARG0 = a
+                la  t1, b
+                sw  t1, 0x44(t0)   # ARG1 = b
+                la  t1, c
+                sw  t1, 0x48(t0)   # ARG2 = c
+                li  t1, 4
+                sw  t1, 0x4C(t0)   # m
+                sw  t1, 0x50(t0)   # k
+                sw  t1, 0x54(t0)   # n
+                li  t1, 1
+                sw  t1, 4(t0)      # START
+            wait:
+                lw  t2, 0(t0)
+                andi t2, t2, 1
+                beqz t2, wait
+                la  t3, c
+                lw  a0, 0(t3)      # c[0,0]
+                lw  a1, 20(t3)     # c[1,1]
+                ebreak
+            .data
+            a:  .word 1, 0, 0, 0
+                .word 0, 2, 0, 0
+                .word 0, 0, 3, 0
+                .word 0, 0, 0, 4
+            b:  .word 1, 1, 1, 1
+                .word 1, 1, 1, 1
+                .word 1, 1, 1, 1
+                .word 1, 1, 1, 1
+            c:  .space 64
+            "#,
+        );
+        soc.run_to_halt(1_000_000);
+        assert_eq!(soc.cpu.regs[10], 1);
+        assert_eq!(soc.cpu.regs[11], 2);
+        assert_eq!(soc.stats.cgra_launches, 1);
+        assert!(soc.cgra_fault.is_none());
+        // CGRA domain saw active time
+        let snap = soc.perf.snapshot(soc.now);
+        assert!(snap.cgra.get(PowerState::Active) > 0);
+    }
+
+    #[test]
+    fn mailbox_ring_surfaces_to_coordinator() {
+        let mut soc = soc_with(
+            r#"
+            .equ MBOX, 0x20000800
+            _start:
+                li  t0, MBOX
+                li  t1, 0x100
+                sw  t1, 12(t0)     # REQ_OFF
+                li  t1, 1
+                sw  t1, 0(t0)      # DOORBELL
+                ebreak
+            "#,
+        );
+        match soc.run(100_000) {
+            RunExit::MailboxRing(off) => assert_eq!(off, 0x100),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(soc.stats.mailbox_rings, 1);
+    }
+
+    #[test]
+    fn dead_sleep_detected() {
+        let mut soc = soc_with("_start: wfi\nebreak");
+        assert_eq!(soc.run(100_000), RunExit::DeadSleep);
+    }
+
+    #[test]
+    fn budget_exhaustion() {
+        let mut soc = soc_with("_start: j _start");
+        assert_eq!(soc.run(1_000), RunExit::CycleBudget);
+        assert!(soc.now >= 1_000);
+    }
+
+    #[test]
+    fn perf_manual_window_via_gpio() {
+        let mut soc = soc_with(
+            r#"
+            .equ GPIO, 0x20000100
+            _start:
+                li  t0, GPIO
+                li  t1, 0x10000   # PERF bit
+                sw  t1, 0(t0)     # open window
+                li  t2, 100
+            loop:
+                addi t2, t2, -1
+                bnez t2, loop
+                sw  zero, 0(t0)   # close window
+                ebreak
+            "#,
+        );
+        soc.run_to_halt(100_000);
+        let w = soc.perf.window_snapshot().expect("window recorded");
+        assert!(w.cycles > 300 && w.cycles < 1_000, "{}", w.cycles);
+    }
+}

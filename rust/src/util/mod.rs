@@ -1,0 +1,57 @@
+//! Small in-repo substrates replacing crates that are unavailable in the
+//! offline build environment (see Cargo.toml): JSON, a TOML subset, a
+//! deterministic PRNG, and misc helpers.
+
+pub mod json;
+pub mod rng;
+pub mod toml;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// Format a cycle count at a clock frequency as seconds (helper used by
+/// reports and benches).
+pub fn cycles_to_secs(cycles: u64, freq_hz: u64) -> f64 {
+    cycles as f64 / freq_hz as f64
+}
+
+/// Pretty engineering formatting for report tables: 1234567 -> "1.235M".
+pub fn eng(x: f64) -> String {
+    let ax = x.abs();
+    let (v, suffix) = if ax >= 1e9 {
+        (x / 1e9, "G")
+    } else if ax >= 1e6 {
+        (x / 1e6, "M")
+    } else if ax >= 1e3 {
+        (x / 1e3, "k")
+    } else if ax >= 1.0 || x == 0.0 {
+        (x, "")
+    } else if ax >= 1e-3 {
+        (x * 1e3, "m")
+    } else if ax >= 1e-6 {
+        (x * 1e6, "u")
+    } else {
+        (x * 1e9, "n")
+    };
+    format!("{v:.3}{suffix}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_to_secs_at_20mhz() {
+        assert_eq!(cycles_to_secs(20_000_000, 20_000_000), 1.0);
+        assert_eq!(cycles_to_secs(10_000, 20_000_000), 0.0005);
+    }
+
+    #[test]
+    fn eng_formats() {
+        assert_eq!(eng(0.0), "0.000");
+        assert_eq!(eng(1_500.0), "1.500k");
+        assert_eq!(eng(2.5e6), "2.500M");
+        assert_eq!(eng(0.002), "2.000m");
+        assert_eq!(eng(3.2e-7), "320.000n");
+    }
+}

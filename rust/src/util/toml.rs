@@ -1,0 +1,299 @@
+//! Minimal TOML-subset parser (offline substrate — the `toml` crate is not
+//! available; see Cargo.toml).
+//!
+//! Supports what the FEMU config system uses: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! boolean / array-of-number values, `#` comments, and bare or quoted
+//! keys. Everything parses into a flat `section.key -> Value` map, which
+//! is all the typed config layer ([`crate::config`]) needs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A TOML scalar/array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        let i = self.as_i64()?;
+        u64::try_from(i).map_err(|_| anyhow!("expected non-negative integer, got {i}"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[Value]> {
+        match self {
+            Value::Array(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+/// A parsed TOML document: flat map of `section.key` (or bare `key` for
+/// the root table) to values.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = line[..eq].trim().trim_matches('"');
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if entries.insert(full.clone(), val).is_some() {
+                bail!("line {}: duplicate key `{full}`", lineno + 1);
+            }
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        self.entries.get(key).ok_or_else(|| anyhow!("missing config key `{key}`"))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.entries.get(key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.entries.get(key) {
+            Some(v) => v.as_u64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.entries.get(key) {
+            Some(v) => v.as_f64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.entries.get(key) {
+            Some(v) => v.as_bool(),
+            None => Ok(default),
+        }
+    }
+
+    /// All keys under a `section.` prefix (key names with prefix removed).
+    pub fn section_keys(&self, section: &str) -> Vec<String> {
+        let prefix = format!("{section}.");
+        self.entries
+            .keys()
+            .filter_map(|k| k.strip_prefix(&prefix).map(str::to_string))
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        // minimal escapes; config strings are paths/names
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => bail!("bad escape `\\{other:?}`"),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut vals = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // trailing comma
+                }
+                vals.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Array(vals));
+    }
+    // numbers: allow underscores, hex ints, floats with exponents
+    let cleaned = s.replace('_', "");
+    if let Some(hex) = cleaned.strip_prefix("0x").or_else(|| cleaned.strip_prefix("0X")) {
+        return Ok(Value::Int(
+            i64::from_str_radix(hex, 16).map_err(|_| anyhow!("bad hex int `{s}`"))?,
+        ));
+    }
+    if !cleaned.contains('.') && !cleaned.contains('e') && !cleaned.contains('E') {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value `{s}`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+            # energy model
+            name = "heepocrates"   # calibration id
+            [cpu]
+            active_mw = 1.8
+            gated_mw = 0.35
+            states = 4
+            retention = false
+            [mem.bank0]
+            size = 0x8000
+            freqs = [100, 1_000, 10000]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "heepocrates");
+        assert_eq!(doc.get("cpu.active_mw").unwrap().as_f64().unwrap(), 1.8);
+        assert_eq!(doc.get("cpu.states").unwrap().as_i64().unwrap(), 4);
+        assert!(!doc.get("cpu.retention").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("mem.bank0.size").unwrap().as_i64().unwrap(), 0x8000);
+        let arr = doc.get("mem.bank0.freqs").unwrap().as_array().unwrap();
+        assert_eq!(arr[1].as_i64().unwrap(), 1000);
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let doc = Doc::parse("a = 1").unwrap();
+        assert_eq!(doc.u64_or("a", 9).unwrap(), 1);
+        assert_eq!(doc.u64_or("b", 9).unwrap(), 9);
+        assert!(doc.get("b").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = Doc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(Doc::parse("a = 1\na = 2").is_err());
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("k = ").is_err());
+    }
+
+    #[test]
+    fn section_keys_lists_children() {
+        let doc = Doc::parse("[d.cpu]\na=1\nb=2\n[d.mem]\nc=3").unwrap();
+        let mut keys = doc.section_keys("d.cpu");
+        keys.sort();
+        assert_eq!(keys, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn float_and_exponent_forms() {
+        let doc = Doc::parse("a = 1.5e3\nb = -2").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_f64().unwrap(), 1500.0);
+        assert_eq!(doc.get("b").unwrap().as_i64().unwrap(), -2);
+    }
+}

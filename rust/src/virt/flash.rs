@@ -1,0 +1,130 @@
+//! Flash virtualization: CS-side dataset staging and result readback.
+//!
+//! Paper §III-A: virtualized flash removes the latency/bandwidth limits
+//! of physical flash — large inputs stream in quickly, test vectors are
+//! trivially injected, and results/logs can be written back. The device
+//! half (timing + guest register interface) is
+//! [`crate::periph::SpiFlash`]; this service is the CS half that stages
+//! datasets and collects what the guest wrote.
+
+use crate::soc::Soc;
+use crate::workloads::signals;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FlashStats {
+    pub words_transferred: u64,
+    pub busy_cycles: u64,
+}
+
+/// CS-side flash dataset manager.
+#[derive(Clone, Debug, Default)]
+pub struct FlashService;
+
+impl FlashService {
+    /// Stage raw bytes at a flash byte offset.
+    pub fn stage_bytes(soc: &mut Soc, offset: usize, bytes: &[u8]) {
+        soc.bus.spi_flash.load(offset, bytes);
+    }
+
+    /// Stage i32 samples (LE words) at a flash byte offset.
+    pub fn stage_samples(soc: &mut Soc, offset: usize, samples: &[i32]) {
+        Self::stage_bytes(soc, offset, &signals::to_le_bytes(samples));
+    }
+
+    /// Stage a sequence of fixed-size windows back to back, returning the
+    /// per-window byte offsets (the §V-C layout: 240 windows of 35 000
+    /// 16-bit samples, stored as one word per sample).
+    pub fn stage_windows(soc: &mut Soc, base: usize, windows: &[Vec<i32>]) -> Vec<usize> {
+        let mut offsets = Vec::with_capacity(windows.len());
+        let mut off = base;
+        for w in windows {
+            offsets.push(off);
+            Self::stage_samples(soc, off, w);
+            off += w.len() * 4;
+        }
+        offsets
+    }
+
+    /// Read back i32 words the guest wrote to flash.
+    pub fn read_samples(soc: &Soc, offset: usize, n: usize) -> Vec<i32> {
+        soc.bus
+            .spi_flash
+            .dump(offset, n * 4)
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// Transfer statistics (for the Case C study).
+    pub fn stats(soc: &Soc) -> FlashStats {
+        FlashStats {
+            words_transferred: soc.bus.spi_flash.words_transferred(),
+            busy_cycles: soc.bus.spi_flash.busy_cycles(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::{Soc, SocConfig};
+
+    #[test]
+    fn stage_and_guest_read() {
+        let mut soc = Soc::new(SocConfig::default());
+        FlashService::stage_samples(&mut soc, 0x100, &[7, -8, 9]);
+        let prog = crate::isa::assemble(
+            r#"
+            .equ FLASH, 0x20000400
+            _start:
+                li t0, FLASH
+                li t1, 0x100
+                sw t1, 8(t0)     # ADDR
+                lw a0, 12(t0)    # DATA
+                lw a1, 12(t0)
+                lw a2, 12(t0)
+                ebreak
+            "#,
+        )
+        .unwrap();
+        soc.load(&prog).unwrap();
+        soc.run_to_halt(1_000_000);
+        assert_eq!(soc.cpu.regs[10] as i32, 7);
+        assert_eq!(soc.cpu.regs[11] as i32, -8);
+        assert_eq!(soc.cpu.regs[12] as i32, 9);
+        let stats = FlashService::stats(&soc);
+        assert_eq!(stats.words_transferred, 3);
+    }
+
+    #[test]
+    fn guest_write_cs_readback() {
+        let mut soc = Soc::new(SocConfig::default());
+        let prog = crate::isa::assemble(
+            r#"
+            .equ FLASH, 0x20000400
+            _start:
+                li t0, FLASH
+                li t1, 0x200
+                sw t1, 8(t0)
+                li t1, 1234
+                sw t1, 12(t0)   # DATA write
+                li t1, -5
+                sw t1, 12(t0)
+                ebreak
+            "#,
+        )
+        .unwrap();
+        soc.load(&prog).unwrap();
+        soc.run_to_halt(1_000_000);
+        assert_eq!(FlashService::read_samples(&soc, 0x200, 2), vec![1234, -5]);
+    }
+
+    #[test]
+    fn windows_layout() {
+        let mut soc = Soc::new(SocConfig::default());
+        let windows = vec![vec![1, 2], vec![3, 4], vec![5, 6]];
+        let offs = FlashService::stage_windows(&mut soc, 0, &windows);
+        assert_eq!(offs, vec![0, 8, 16]);
+        assert_eq!(FlashService::read_samples(&soc, 8, 2), vec![3, 4]);
+    }
+}

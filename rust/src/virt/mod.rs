@@ -1,0 +1,24 @@
+//! CS-side virtualization services (paper §III-A / §IV-B).
+//!
+//! The four virtualization capabilities that define FEMU, each decoupling
+//! guest software from physical hardware:
+//!
+//! * [`debugger`] — full control of the HS (load / run / halt /
+//!   breakpoints / inspection) without external probes; enables scripted
+//!   batch testing.
+//! * [`adc`] — the software half of the dual circular-FIFO sample
+//!   streaming (storage → CS memory → RH FIFO at the configured rate).
+//! * [`flash`] — DRAM-backed non-volatile storage with read **and**
+//!   write support (the §V-C 250x transfer-speedup mechanism).
+//! * [`accel`] — accelerator software models: mailbox requests executed
+//!   as AOT-compiled JAX/Pallas artifacts through PJRT.
+
+pub mod accel;
+pub mod adc;
+pub mod debugger;
+pub mod flash;
+
+pub use accel::AccelService;
+pub use adc::AdcService;
+pub use debugger::DebugSession;
+pub use flash::FlashService;

@@ -1,0 +1,9 @@
+//! Guest workloads: reference implementations, signal/dataset generators,
+//! and the RV32 assembly programs the case studies run on the emulated
+//! X-HEEP host.
+
+pub mod programs;
+pub mod reference;
+pub mod signals;
+
+pub use reference::{bit_reverse_permute, fft_q15, twiddles_q15};

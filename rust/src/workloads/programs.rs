@@ -1,0 +1,645 @@
+//! Guest RV32 assembly programs for the case studies.
+//!
+//! Each function renders a parameterized assembly program (assembled by
+//! [`crate::isa::assemble`]) implementing one workload:
+//!
+//! * [`acquisition`] — §V-A: sample a window from the virtualized ADC,
+//!   WFI-sleeping between samples (the active/sleep split of Fig 4);
+//! * [`mm_cpu`] / [`conv_cpu`] / [`fft_cpu`] — Fig 5 CPU baselines;
+//! * [`mm_cgra`] / [`conv_cgra`] / [`fft_cgra`] — Fig 5 CGRA drivers
+//!   (configure the control port, launch, WFI until done);
+//! * [`classifier_mailbox`] — §V-C-style end-to-end app: acquire a
+//!   window, hand it to the *virtualized* accelerator via the mailbox,
+//!   print the argmax class over UART.
+//!
+//! Data buffers live at fixed labels; the CS injects operands and reads
+//! results through debugger virtualization ([`crate::virt::debugger`]).
+
+/// Shared address-map prelude (matches `crate::bus` / `crate::periph`).
+pub const PRELUDE: &str = r#"
+.equ UART,     0x20000000
+.equ GPIO,     0x20000100
+.equ TIMER,    0x20000200
+.equ SPI_ADC,  0x20000300
+.equ SPI_FLASH,0x20000400
+.equ DMA,      0x20000500
+.equ POWER,    0x20000600
+.equ CGRA,     0x20000700
+.equ MBOX,     0x20000800
+.equ BRIDGE,   0x40000000
+.equ PERF_BIT, 0x10000
+.equ MIE_ADC,  0x20000   # fast line 1 -> mie bit 17
+.equ MIE_DMA,  0x40000   # fast line 2 -> mie bit 18
+.equ MIE_CGRA, 0x80000   # fast line 3 -> mie bit 19
+.equ MIE_MBOX, 0x100000  # fast line 4 -> mie bit 20
+"#;
+
+/// §V-A acquisition kernel: read `n_samples` from the virtualized ADC
+/// into a circular buffer, sleeping (WFI) between samples. `sleep_mem`:
+/// 0 = banks stay active, 1 = clock-gate, 2 = retention during sleep.
+pub fn acquisition(n_samples: u64, sleep_mem: u32) -> String {
+    format!(
+        r#"{PRELUDE}
+.equ NSAMPLES, {n_samples}
+_start:
+    li  s0, SPI_ADC
+    li  s1, NSAMPLES
+    la  s2, buf
+    la  s4, buf_end
+    li  s3, 0            # consumed
+    li  t0, {sleep_mem}
+    li  t1, POWER
+    sw  t0, 0(t1)        # SLEEP_MEM_MODE
+    li  t0, 3            # enable + irq
+    sw  t0, 0(s0)
+    li  t0, MIE_ADC      # ADC fast irq wakes WFI (no trap: MIE off)
+    csrw mie, t0
+loop:
+    lw  t1, 4(s0)        # STATUS
+    andi t2, t1, 1
+    bnez t2, take
+    wfi
+    j   loop
+take:
+    lw  t3, 8(s0)        # RXDATA (costs the SPI word time)
+    sw  t3, 0(s2)
+    addi s2, s2, 4
+    bltu s2, s4, nowrap
+    la  s2, buf
+nowrap:
+    addi s3, s3, 1
+    bltu s3, s1, loop
+    ebreak
+.data
+buf:     .space 4096
+buf_end: .word 0
+"#
+    )
+}
+
+/// Fig 5 MM CPU baseline: C(m x n) = A(m x k) @ B(k x n), INT32.
+/// Operand/result buffers at `a_buf` / `b_buf` / `c_buf`.
+pub fn mm_cpu(m: usize, k: usize, n: usize) -> String {
+    format!(
+        r#"{PRELUDE}
+.equ M, {m}
+.equ K, {k}
+.equ N, {n}
+.equ NB, {nb}       # N*4
+.equ KB, {kb}       # K*4
+_start:
+    li  t0, GPIO
+    li  t1, PERF_BIT
+    sw  t1, 0(t0)        # open manual perf window
+    la  s0, a_buf        # A row ptr
+    la  s2, c_buf
+    li  s3, M
+i_loop:
+    la  s1, b_buf
+    li  s4, N
+j_loop:
+    mv  t0, s0
+    mv  t1, s1
+    li  t2, K
+    li  t3, 0
+k_loop:
+    lw  t4, 0(t0)
+    lw  t5, 0(t1)
+    mul t6, t4, t5
+    add t3, t3, t6
+    addi t0, t0, 4
+    addi t1, t1, NB
+    addi t2, t2, -1
+    bnez t2, k_loop
+    sw  t3, 0(s2)
+    addi s2, s2, 4
+    addi s1, s1, 4
+    addi s4, s4, -1
+    bnez s4, j_loop
+    addi s0, s0, KB
+    addi s3, s3, -1
+    bnez s3, i_loop
+    li  t0, GPIO
+    sw  zero, 0(t0)      # close perf window
+    ebreak
+.data
+a_buf: .space {a_bytes}
+b_buf: .space {b_bytes}
+c_buf: .space {c_bytes}
+"#,
+        nb = n * 4,
+        kb = k * 4,
+        a_bytes = m * k * 4,
+        b_bytes = k * n * 4,
+        c_bytes = m * n * 4,
+    )
+}
+
+/// Fig 5 CONV CPU baseline: valid conv2d, x (h,w,cin) HWC, wts
+/// (f,kh,kw,cin), y (oh,ow,f). Buffers at `x_buf` / `w_buf` / `y_buf`.
+pub fn conv_cpu(h: usize, w: usize, cin: usize, f: usize, kh: usize, kw: usize) -> String {
+    let oh = h - kh + 1;
+    let ow = w - kw + 1;
+    format!(
+        r#"{PRELUDE}
+.equ OH, {oh}
+.equ OW, {ow}
+.equ F, {f}
+.equ KH, {kh}
+.equ KWC, {kwc}       # KW*Cin (contiguous inner run)
+.equ ROWSKIP, {rowskip}  # (W-KW)*Cin*4
+.equ XSTEP, {xstep}   # Cin*4 (next ox)
+.equ XADJ, {xadj}     # (W-OW)*Cin*4: rewind ox walk, advance one row
+_start:
+    li  t0, GPIO
+    li  t1, PERF_BIT
+    sw  t1, 0(t0)
+    la  s0, x_buf        # x patch base (oy, ox)
+    la  s2, y_buf
+    li  s3, OH
+oy_loop:
+    li  s4, OW
+ox_loop:
+    la  s1, w_buf        # filter 0
+    li  s5, F
+f_loop:
+    mv  t0, s0           # x ptr
+    li  t3, 0            # acc
+    li  s6, KH
+di_loop:
+    li  t2, KWC
+ci_loop:
+    lw  t4, 0(t0)
+    lw  t5, 0(s1)
+    mul t6, t4, t5
+    add t3, t3, t6
+    addi t0, t0, 4
+    addi s1, s1, 4
+    addi t2, t2, -1
+    bnez t2, ci_loop
+    addi t0, t0, ROWSKIP
+    addi s6, s6, -1
+    bnez s6, di_loop
+    sw  t3, 0(s2)
+    addi s2, s2, 4
+    addi s5, s5, -1
+    bnez s5, f_loop
+    addi s0, s0, XSTEP
+    addi s4, s4, -1
+    bnez s4, ox_loop
+    addi s0, s0, XADJ
+    addi s3, s3, -1
+    bnez s3, oy_loop
+    li  t0, GPIO
+    sw  zero, 0(t0)
+    ebreak
+.data
+x_buf: .space {x_bytes}
+w_buf: .space {w_bytes}
+y_buf: .space {y_bytes}
+"#,
+        kwc = kw * cin,
+        rowskip = (w - kw) * cin * 4,
+        xstep = cin * 4,
+        xadj = (w - ow) * cin * 4,
+        x_bytes = h * w * cin * 4,
+        w_bytes = f * kh * kw * cin * 4,
+        y_bytes = oh * ow * f * 4,
+    )
+}
+
+/// Fig 5 FFT CPU baseline: n-point Q15 radix-2 DIT, in-place over
+/// `re_buf`/`im_buf`; `rev_tbl`, `wr_tbl`, `wi_tbl` injected by the CS.
+pub fn fft_cpu(n: usize) -> String {
+    assert!(n.is_power_of_two() && n >= 2);
+    format!(
+        r#"{PRELUDE}
+.equ N, {n}
+.equ NHALF, {nhalf}
+_start:
+    li  t0, GPIO
+    li  t1, PERF_BIT
+    sw  t1, 0(t0)
+    la  s0, re_buf
+    la  s1, im_buf
+    la  s2, rev_tbl
+    # ---- bit-reversal permutation ----
+    li  t0, 0
+bitrev_loop:
+    slli t1, t0, 2
+    add  t2, s2, t1
+    lw   t3, 0(t2)       # j = rev[i]
+    ble  t3, t0, brskip
+    slli t4, t3, 2
+    add  t5, s0, t1
+    add  t6, s0, t4
+    lw   a0, 0(t5)
+    lw   a1, 0(t6)
+    sw   a1, 0(t5)
+    sw   a0, 0(t6)
+    add  t5, s1, t1
+    add  t6, s1, t4
+    lw   a0, 0(t5)
+    lw   a1, 0(t6)
+    sw   a1, 0(t5)
+    sw   a0, 0(t6)
+brskip:
+    addi t0, t0, 1
+    li   t1, N
+    bltu t0, t1, bitrev_loop
+    # ---- stages ----
+    la  s2, wr_tbl
+    la  s3, wi_tbl
+    li  s5, 2            # m
+    li  s9, NHALF        # twiddle stride = N/m
+stage_loop:
+    srli s6, s5, 1       # half = m/2
+    li   s7, 0           # grp
+grp_loop:
+    li   s8, 0           # j
+j_loop:
+    add  t0, s7, s8      # e
+    add  t1, t0, s6      # o
+    mul  t2, s8, s9      # tw
+    slli t0, t0, 2
+    slli t1, t1, 2
+    slli t2, t2, 2
+    add  a0, s0, t0      # &re[e]
+    add  a1, s1, t0      # &im[e]
+    add  a2, s0, t1      # &re[o]
+    add  a3, s1, t1      # &im[o]
+    add  a4, s2, t2      # &wr[tw]
+    add  a5, s3, t2      # &wi[tw]
+    lw   t3, 0(a2)       # or
+    lw   t4, 0(a3)       # oi
+    lw   t5, 0(a4)       # twr
+    lw   t6, 0(a5)       # twi
+    # q15(or*twr)
+    mul  a6, t3, t5
+    mulh a7, t3, t5
+    srli a6, a6, 15
+    slli a7, a7, 17
+    or   a6, a6, a7
+    # q15(oi*twi)
+    mul  s10, t4, t6
+    mulh s11, t4, t6
+    srli s10, s10, 15
+    slli s11, s11, 17
+    or   s10, s10, s11
+    sub  a6, a6, s10     # tr
+    # q15(or*twi)
+    mul  s10, t3, t6
+    mulh s11, t3, t6
+    srli s10, s10, 15
+    slli s11, s11, 17
+    or   s10, s10, s11
+    # q15(oi*twr)
+    mul  t3, t4, t5
+    mulh t4, t4, t5
+    srli t3, t3, 15
+    slli t4, t4, 17
+    or   t3, t3, t4
+    add  s10, s10, t3    # ti
+    lw   t5, 0(a0)       # er
+    lw   t6, 0(a1)       # ei
+    add  t3, t5, a6
+    srai t3, t3, 1
+    sw   t3, 0(a0)
+    add  t4, t6, s10
+    srai t4, t4, 1
+    sw   t4, 0(a1)
+    sub  t3, t5, a6
+    srai t3, t3, 1
+    sw   t3, 0(a2)
+    sub  t4, t6, s10
+    srai t4, t4, 1
+    sw   t4, 0(a3)
+    addi s8, s8, 1
+    bltu s8, s6, j_loop
+    add  s7, s7, s5
+    li   t0, N
+    bltu s7, t0, grp_loop
+    slli s5, s5, 1
+    srli s9, s9, 1
+    li   t0, N
+    ble  s5, t0, stage_loop
+    li  t0, GPIO
+    sw  zero, 0(t0)
+    ebreak
+.data
+re_buf:  .space {nb}
+im_buf:  .space {nb}
+rev_tbl: .space {nb}
+wr_tbl:  .space {hb}
+wi_tbl:  .space {hb}
+"#,
+        nhalf = n / 2,
+        nb = n * 4,
+        hb = (n / 2) * 4,
+    )
+}
+
+/// Shared CGRA-launch tail: wait for DONE (WFI on the CGRA irq line).
+const CGRA_WAIT: &str = r#"
+cgra_wait:
+    lw   t2, 0(t0)       # STATUS
+    andi t3, t2, 1
+    bnez t3, cgra_done
+    wfi
+    j    cgra_wait
+cgra_done:
+    li  t1, GPIO
+    sw  zero, 0(t1)      # close perf window
+    ebreak
+"#;
+
+/// Fig 5 MM on the CGRA: program the control port and launch.
+pub fn mm_cgra(m: usize, k: usize, n: usize) -> String {
+    format!(
+        r#"{PRELUDE}
+_start:
+    li  t0, GPIO
+    li  t1, PERF_BIT
+    sw  t1, 0(t0)
+    li  t0, CGRA
+    li  t1, 1
+    sw  t1, 0x14(t0)     # CTRL: irq enable
+    li  t1, MIE_CGRA
+    csrw mie, t1
+    sw  zero, 8(t0)      # KERNEL = MATMUL
+    la  t1, a_buf
+    sw  t1, 0x40(t0)
+    la  t1, b_buf
+    sw  t1, 0x44(t0)
+    la  t1, c_buf
+    sw  t1, 0x48(t0)
+    li  t1, {m}
+    sw  t1, 0x4C(t0)
+    li  t1, {k}
+    sw  t1, 0x50(t0)
+    li  t1, {n}
+    sw  t1, 0x54(t0)
+    li  t1, 1
+    sw  t1, 4(t0)        # START
+{CGRA_WAIT}
+.data
+a_buf: .space {a_bytes}
+b_buf: .space {b_bytes}
+c_buf: .space {c_bytes}
+"#,
+        a_bytes = m * k * 4,
+        b_bytes = k * n * 4,
+        c_bytes = m * n * 4,
+    )
+}
+
+/// Fig 5 CONV on the CGRA.
+pub fn conv_cgra(h: usize, w: usize, cin: usize, f: usize, kh: usize, kw: usize) -> String {
+    let oh = h - kh + 1;
+    let ow = w - kw + 1;
+    format!(
+        r#"{PRELUDE}
+_start:
+    li  t0, GPIO
+    li  t1, PERF_BIT
+    sw  t1, 0(t0)
+    li  t0, CGRA
+    li  t1, 1
+    sw  t1, 0x14(t0)
+    li  t1, MIE_CGRA
+    csrw mie, t1
+    li  t1, 1
+    sw  t1, 8(t0)        # KERNEL = CONV2D
+    la  t1, x_buf
+    sw  t1, 0x40(t0)
+    la  t1, w_buf
+    sw  t1, 0x44(t0)
+    la  t1, y_buf
+    sw  t1, 0x48(t0)
+    li  t1, {h}
+    sw  t1, 0x4C(t0)
+    li  t1, {w}
+    sw  t1, 0x50(t0)
+    li  t1, {cin}
+    sw  t1, 0x54(t0)
+    li  t1, {f}
+    sw  t1, 0x58(t0)
+    li  t1, {kh}
+    sw  t1, 0x5C(t0)
+    li  t1, {kw}
+    sw  t1, 0x60(t0)
+    li  t1, 1
+    sw  t1, 4(t0)
+{CGRA_WAIT}
+.data
+x_buf: .space {x_bytes}
+w_buf: .space {w_bytes}
+y_buf: .space {y_bytes}
+"#,
+        x_bytes = h * w * cin * 4,
+        w_bytes = f * kh * kw * cin * 4,
+        y_bytes = oh * ow * f * 4,
+    )
+}
+
+/// Fig 5 FFT on the CGRA: the guest performs the bit-reversal permutation
+/// on the CPU (cheap, irregular), then launches the stage kernels.
+pub fn fft_cgra(n: usize) -> String {
+    assert!(n.is_power_of_two() && n >= 2);
+    format!(
+        r#"{PRELUDE}
+.equ N, {n}
+_start:
+    li  t0, GPIO
+    li  t1, PERF_BIT
+    sw  t1, 0(t0)
+    la  s0, re_buf
+    la  s1, im_buf
+    la  s2, rev_tbl
+    li  t0, 0
+bitrev_loop:
+    slli t1, t0, 2
+    add  t2, s2, t1
+    lw   t3, 0(t2)
+    ble  t3, t0, brskip
+    slli t4, t3, 2
+    add  t5, s0, t1
+    add  t6, s0, t4
+    lw   a0, 0(t5)
+    lw   a1, 0(t6)
+    sw   a1, 0(t5)
+    sw   a0, 0(t6)
+    add  t5, s1, t1
+    add  t6, s1, t4
+    lw   a0, 0(t5)
+    lw   a1, 0(t6)
+    sw   a1, 0(t5)
+    sw   a0, 0(t6)
+brskip:
+    addi t0, t0, 1
+    li   t1, N
+    bltu t0, t1, bitrev_loop
+    li  t0, CGRA
+    li  t1, 1
+    sw  t1, 0x14(t0)
+    li  t1, MIE_CGRA
+    csrw mie, t1
+    li  t1, 2
+    sw  t1, 8(t0)        # KERNEL = FFT
+    la  t1, re_buf
+    sw  t1, 0x40(t0)
+    la  t1, im_buf
+    sw  t1, 0x44(t0)
+    la  t1, wr_tbl
+    sw  t1, 0x48(t0)
+    la  t1, wi_tbl
+    sw  t1, 0x4C(t0)
+    li  t1, N
+    sw  t1, 0x50(t0)
+    li  t1, 1
+    sw  t1, 4(t0)
+{CGRA_WAIT}
+.data
+re_buf:  .space {nb}
+im_buf:  .space {nb}
+rev_tbl: .space {nb}
+wr_tbl:  .space {hb}
+wi_tbl:  .space {hb}
+"#,
+        nb = n * 4,
+        hb = (n / 2) * 4,
+    )
+}
+
+/// §V-C-style end-to-end app: acquire `n` samples from the virtualized
+/// ADC, copy the window into the mailbox request block in CS DRAM, ring
+/// the doorbell for the `model` artifact (the PJRT-executed classifier),
+/// wait for completion, read the logits back, argmax, and print the class
+/// over UART.
+///
+/// Mailbox request layout at `BRIDGE + req_off` (word offsets):
+/// `[kernel_id=3(model), n_args=1, window[n], logits[n_classes]]` — the
+/// CS service knows the model shapes from the artifact manifest.
+pub fn classifier_mailbox(n: usize, n_classes: usize, req_off: u32) -> String {
+    format!(
+        r#"{PRELUDE}
+.equ NSAMPLES, {n}
+.equ NCLASSES, {n_classes}
+.equ REQ, {req}          # BRIDGE + req_off
+_start:
+    # ---- acquisition phase ----
+    li  s0, SPI_ADC
+    li  s1, NSAMPLES
+    la  s2, window
+    li  s3, 0
+    li  t0, 3
+    sw  t0, 0(s0)
+    li  t0, MIE_ADC
+    csrw mie, t0
+acq:
+    lw  t1, 4(s0)
+    andi t2, t1, 1
+    bnez t2, take
+    wfi
+    j   acq
+take:
+    lw  t3, 8(s0)
+    sw  t3, 0(s2)
+    addi s2, s2, 4
+    addi s3, s3, 1
+    bltu s3, s1, acq
+    # ---- hand off to the virtualized accelerator ----
+    li  s4, REQ
+    li  t0, 3            # kernel id: model
+    sw  t0, 0(s4)
+    li  t0, 1            # one tensor argument (the window)
+    sw  t0, 4(s4)
+    la  s2, window
+    addi s5, s4, 8       # request payload cursor
+    li  s3, 0
+copy:
+    lw  t0, 0(s2)
+    sw  t0, 0(s5)
+    addi s2, s2, 4
+    addi s5, s5, 4
+    addi s3, s3, 1
+    bltu s3, s1, copy
+    li  t0, MBOX
+    li  t1, 1
+    sw  t1, 8(t0)        # CTRL: irq enable
+    li  t1, MIE_MBOX
+    csrw mie, t1
+    li  t1, {req_off}
+    sw  t1, 12(t0)       # REQ_OFF
+    li  t1, 1
+    sw  t1, 0(t0)        # DOORBELL
+mwait:
+    lw  t2, 4(t0)        # STATUS
+    andi t3, t2, 1
+    bnez t3, mdone
+    wfi
+    j   mwait
+mdone:
+    # ---- read logits (follow the window in the request block), argmax
+    mv   t0, s5          # logits base = after window
+    li   t1, 0           # best idx
+    li   t2, 0           # i
+    lw   t3, 0(t0)       # best val
+argmax:
+    addi t2, t2, 1
+    li   t4, NCLASSES
+    bgeu t2, t4, report
+    slli t4, t2, 2
+    add  t4, t0, t4
+    lw   t5, 0(t4)
+    ble  t5, t3, argmax
+    mv   t3, t5
+    mv   t1, t2
+    j    argmax
+report:
+    li   t0, UART
+    addi t1, t1, 67      # 'C' + class index
+    sw   t1, 0(t0)
+    li   t2, 10          # newline
+    sw   t2, 0(t0)
+    ebreak
+.data
+window: .space {win_bytes}
+"#,
+        req = 0x4000_0000u32 + req_off,
+        win_bytes = n * 4,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    #[test]
+    fn all_programs_assemble() {
+        for (name, src) in [
+            ("acq", acquisition(100, 2)),
+            ("mm", mm_cpu(121, 16, 4)),
+            ("conv", conv_cpu(16, 16, 3, 8, 3, 3)),
+            ("fft", fft_cpu(512)),
+            ("mm_cgra", mm_cgra(121, 16, 4)),
+            ("conv_cgra", conv_cgra(16, 16, 3, 8, 3, 3)),
+            ("fft_cgra", fft_cgra(512)),
+            ("classifier", classifier_mailbox(512, 4, 0x1000)),
+        ] {
+            let prog = assemble(&src).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(!prog.text.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn buffers_have_expected_sizes() {
+        let p = assemble(&mm_cpu(121, 16, 4)).unwrap();
+        let a = p.symbol("a_buf").unwrap();
+        let b = p.symbol("b_buf").unwrap();
+        let c = p.symbol("c_buf").unwrap();
+        assert_eq!(b - a, 121 * 16 * 4);
+        assert_eq!(c - b, 16 * 4 * 4);
+    }
+}

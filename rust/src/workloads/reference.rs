@@ -1,0 +1,259 @@
+//! Rust mirror of the Python oracle (`python/compile/kernels/ref.py`).
+//!
+//! Every implementation in the stack — RV32 assembly on the emulated CPU,
+//! CGRA mappings, and the AOT Pallas artifacts — must agree bit-for-bit
+//! with these functions. The cross-checks live in `rust/tests/` and in
+//! the Python test suite; the shared numeric contracts are:
+//!
+//! * INT32 two's-complement wrap-around for MM/CONV,
+//! * Q15 multiplies as `(a as i64 * b as i64) >> 15`,
+//! * FFT per-stage `>> 1` scaling,
+//! * twiddle rounding `floor(x * 2^15 + 0.5)` clamped to `[-2^15, 2^15-1]`.
+
+/// Q15 fractional bits.
+pub const Q: u32 = 15;
+
+/// INT32 matmul: (m x k) @ (k x n), row-major, wrap-around.
+pub fn matmul_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc = acc.wrapping_add(a[i * k + kk].wrapping_mul(b[kk * n + j]));
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// INT32 valid conv2d: x (h x w x cin, HWC), weights (f x kh x kw x cin),
+/// output ((h-kh+1) x (w-kw+1) x f, HWC).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i32(
+    x: &[i32],
+    wts: &[i32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    f: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<i32> {
+    assert_eq!(x.len(), h * w * cin);
+    assert_eq!(wts.len(), f * kh * kw * cin);
+    let oh = h - kh + 1;
+    let ow = w - kw + 1;
+    let mut y = vec![0i32; oh * ow * f];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for fi in 0..f {
+                let mut acc = 0i32;
+                for di in 0..kh {
+                    for dj in 0..kw {
+                        for ci in 0..cin {
+                            let xv = x[((oy + di) * w + (ox + dj)) * cin + ci];
+                            let wv = wts[((fi * kh + di) * kw + dj) * cin + ci];
+                            acc = acc.wrapping_add(xv.wrapping_mul(wv));
+                        }
+                    }
+                }
+                y[(oy * ow + ox) * f + fi] = acc;
+            }
+        }
+    }
+    y
+}
+
+/// Q15 multiply with 64-bit intermediate (matches RV32 mul/mulh pair and
+/// the CGRA MulQ15 functional unit).
+#[inline]
+pub fn q15_mul(a: i32, b: i32) -> i32 {
+    ((a as i64 * b as i64) >> Q) as i32
+}
+
+/// Q15 twiddle tables for an n-point FFT: `(wr, wi)`, k in [0, n/2).
+/// Rounding rule identical to `ref.twiddles_q15` in Python.
+pub fn twiddles_q15(n: usize) -> (Vec<i32>, Vec<i32>) {
+    let half = (n / 2).max(1);
+    let scale = (1i64 << Q) as f64;
+    let mut wr = Vec::with_capacity(half);
+    let mut wi = Vec::with_capacity(half);
+    for k in 0..half {
+        let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        let re = (ang.cos() * scale + 0.5).floor() as i64;
+        let im = (ang.sin() * scale + 0.5).floor() as i64;
+        wr.push(re.clamp(-(1 << Q), (1 << Q) - 1) as i32);
+        wi.push(im.clamp(-(1 << Q), (1 << Q) - 1) as i32);
+    }
+    (wr, wi)
+}
+
+/// Per-stage twiddle tables in AOT-artifact order: stage s (1-based)
+/// uses W^(j * n/2^s) for j < 2^(s-1); the artifact expects all the twr
+/// tables, then all the twi tables (see python/compile/kernels/fft.py —
+/// the tables are artifact *parameters* because dense constants do not
+/// survive the HLO-text interchange).
+pub fn fft_stage_twiddles(n: usize) -> Vec<Vec<i32>> {
+    assert!(n.is_power_of_two() && n >= 2);
+    let (wr, wi) = twiddles_q15(n);
+    let stages = n.trailing_zeros() as usize;
+    let mut twr = Vec::with_capacity(stages);
+    let mut twi = Vec::with_capacity(stages);
+    for s in 1..=stages {
+        let half = 1usize << (s - 1);
+        let stride = n >> s;
+        twr.push((0..half).map(|j| wr[j * stride]).collect());
+        twi.push((0..half).map(|j| wi[j * stride]).collect());
+    }
+    twr.extend(twi);
+    twr
+}
+
+/// Bit-reversal permutation indices for n (power of two).
+pub fn bit_reverse_indices(n: usize) -> Vec<usize> {
+    assert!(n.is_power_of_two());
+    let bits = n.trailing_zeros();
+    (0..n)
+        .map(|i| {
+            let mut r = 0usize;
+            for b in 0..bits {
+                r |= ((i >> b) & 1) << (bits - 1 - b);
+            }
+            r
+        })
+        .collect()
+}
+
+/// Apply the bit-reversal permutation in place (the guest driver does
+/// this before launching the CGRA FFT stages).
+pub fn bit_reverse_permute(re: &mut [i32], im: &mut [i32]) {
+    let n = re.len();
+    let rev = bit_reverse_indices(n);
+    for i in 0..n {
+        let j = rev[i];
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+}
+
+/// Radix-2 DIT Q15 FFT with per-stage >>1 scaling. In-place over
+/// (re, im); input in natural order (the permutation is applied here).
+pub fn fft_q15(re: &mut [i32], im: &mut [i32]) {
+    let n = re.len();
+    assert!(n.is_power_of_two() && n >= 2, "n must be a power of two >= 2");
+    assert_eq!(im.len(), n);
+    bit_reverse_permute(re, im);
+    fft_q15_stages(re, im);
+}
+
+/// The stage loop only (expects bit-reversed input) — the exact work the
+/// CGRA stage kernels perform.
+pub fn fft_q15_stages(re: &mut [i32], im: &mut [i32]) {
+    let n = re.len();
+    let (wr, wi) = twiddles_q15(n);
+    let stages = n.trailing_zeros();
+    for s in 1..=stages {
+        let m = 1usize << s;
+        let half = m / 2;
+        let stride = n / m;
+        for grp in (0..n).step_by(m) {
+            for j in 0..half {
+                let e = grp + j;
+                let o = e + half;
+                let tw = j * stride;
+                let (er, ei) = (re[e], im[e]);
+                let (orr, oi) = (re[o], im[o]);
+                let tr = q15_mul(orr, wr[tw]).wrapping_sub(q15_mul(oi, wi[tw]));
+                let ti = q15_mul(orr, wi[tw]).wrapping_add(q15_mul(oi, wr[tw]));
+                re[e] = er.wrapping_add(tr) >> 1;
+                im[e] = ei.wrapping_add(ti) >> 1;
+                re[o] = er.wrapping_sub(tr) >> 1;
+                im[o] = ei.wrapping_sub(ti) >> 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a: Vec<i32> = (0..6).collect();
+        let eye = vec![1, 0, 0, 1];
+        assert_eq!(matmul_i32(&a, &eye, 3, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_wraps() {
+        let a = vec![i32::MAX, i32::MAX];
+        let b = vec![2, 2];
+        let c = matmul_i32(&a, &b, 1, 2, 1);
+        assert_eq!(c[0], (i32::MAX.wrapping_mul(2)).wrapping_mul(2));
+    }
+
+    #[test]
+    fn conv_delta_filter() {
+        // 4x4x1 input, single 3x3 delta filter picks the center.
+        let x: Vec<i32> = (0..16).collect();
+        let mut w = vec![0i32; 9];
+        w[4] = 1; // center tap
+        let y = conv2d_i32(&x, &w, 4, 4, 1, 1, 3, 3);
+        assert_eq!(y, vec![5, 6, 9, 10]);
+    }
+
+    #[test]
+    fn twiddles_match_python_rule() {
+        let (wr, wi) = twiddles_q15(8);
+        // k=0: (0x7FFF clamped, 0); k=2: (0, -32768)
+        assert_eq!(wr[0], 0x7FFF);
+        assert_eq!(wi[0], 0);
+        assert_eq!(wr[2], 0);
+        assert_eq!(wi[2], -32768);
+        // k=1: cos(-45deg)=0.7071 -> floor(23170.47+0.5)=23170
+        assert_eq!(wr[1], 23170);
+        assert_eq!(wi[1], -23170);
+    }
+
+    #[test]
+    fn bitrev_indices_n8() {
+        assert_eq!(bit_reverse_indices(8), vec![0, 4, 2, 6, 1, 5, 3, 7]);
+    }
+
+    #[test]
+    fn fft_impulse_flat_spectrum() {
+        let n = 64;
+        let mut re = vec![0i32; n];
+        let mut im = vec![0i32; n];
+        re[0] = 1 << 15;
+        fft_q15(&mut re, &mut im);
+        let expected = (1 << 15) >> 6;
+        assert!(re.iter().all(|&x| x == expected), "{re:?}");
+        assert!(im.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn fft_dc_with_q15_attrition() {
+        let n = 32;
+        let mut re = vec![1000i32; n];
+        let mut im = vec![0i32; n];
+        fft_q15(&mut re, &mut im);
+        assert!((990..=1000).contains(&re[0]), "{}", re[0]);
+        assert!(re[1..].iter().all(|&x| x.abs() <= 2));
+    }
+
+    #[test]
+    fn q15_mul_matches_shift_semantics() {
+        assert_eq!(q15_mul(-30000, 0x4000), -15000);
+        assert_eq!(q15_mul(i32::MIN, 0x7FFF), ((i32::MIN as i64 * 0x7FFF) >> 15) as i32);
+        // floor behavior for negative products
+        assert_eq!(q15_mul(-1, 1), -1); // -1*1 >> 15 = -1 (floor)
+    }
+}

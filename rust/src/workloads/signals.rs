@@ -1,0 +1,123 @@
+//! Synthetic signal/dataset generators.
+//!
+//! Substitutes for the paper's pre-recorded datasets (bio-signals on the
+//! SD card, ultrasound wood-moisture windows): deterministic synthetic
+//! signals with the same shape — a seeded mixture of sinusoids plus
+//! noise, quantized to 16-bit ADC codes. Determinism (seeded SplitMix64)
+//! makes every experiment in EXPERIMENTS.md exactly reproducible.
+
+use crate::util::Rng;
+
+/// A synthetic "recorded" signal: 16-bit ADC codes stored as i32 (the
+/// ADC virtualization streams one word per sample).
+#[derive(Clone, Debug)]
+pub struct Signal {
+    pub samples: Vec<i32>,
+    pub sample_rate_hz: f64,
+}
+
+/// Generate a bio-like signal: sum of sinusoids with drift and noise,
+/// clipped to 16-bit signed codes.
+pub fn biosignal(seed: u64, n: usize, sample_rate_hz: f64) -> Signal {
+    let mut rng = Rng::new(seed);
+    // a few component tones below Nyquist
+    let tones: Vec<(f64, f64, f64)> = (0..3)
+        .map(|_| {
+            let freq = 0.5 + rng.f64() * (sample_rate_hz / 8.0);
+            let amp = 2000.0 + rng.f64() * 8000.0;
+            let phase = rng.f64() * std::f64::consts::TAU;
+            (freq, amp, phase)
+        })
+        .collect();
+    let samples = (0..n)
+        .map(|i| {
+            let t = i as f64 / sample_rate_hz;
+            let mut v = 0.0;
+            for &(f, a, p) in &tones {
+                v += a * (std::f64::consts::TAU * f * t + p).sin();
+            }
+            // noise in ±256 codes
+            v += (rng.f64() - 0.5) * 512.0;
+            (v.clamp(-32768.0, 32767.0)) as i32
+        })
+        .collect();
+    Signal { samples, sample_rate_hz }
+}
+
+/// Ultrasound-like burst windows for the §V-C wood-moisture case study:
+/// `windows` windows of `window_len` 16-bit samples (the paper uses
+/// 35 000 samples per window, 240 windows).
+pub fn ultrasound_windows(seed: u64, windows: usize, window_len: usize) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..windows)
+        .map(|w| {
+            let decay = 40.0 + rng.f64() * 200.0;
+            let freq = 0.05 + rng.f64() * 0.2; // cycles per sample
+            let amp = 8000.0 + rng.f64() * 16000.0;
+            (0..window_len)
+                .map(|i| {
+                    let env = (-(i as f64) / decay).exp();
+                    let v = amp * env * (std::f64::consts::TAU * freq * i as f64).sin()
+                        + (rng.f64() - 0.5) * 128.0;
+                    let _ = w;
+                    v.clamp(-32768.0, 32767.0) as i32
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Pack i32 samples as little-endian bytes (flash/DRAM image layout).
+pub fn to_le_bytes(samples: &[i32]) -> Vec<u8> {
+    samples.iter().flat_map(|s| s.to_le_bytes()).collect()
+}
+
+/// Pack 16-bit samples two-per-word (the §V-C flash image layout: 35 000
+/// 16-bit samples per window = 70 KiB = 17 500 words).
+pub fn pack_i16_pairs(samples: &[i32]) -> Vec<u8> {
+    samples.iter().flat_map(|&s| (s as i16).to_le_bytes()).collect()
+}
+
+/// Deterministic int32 operand tensors for the Fig 5 kernels.
+pub fn kernel_operands(seed: u64, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+    Rng::new(seed).vec_i32(n, lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn biosignal_deterministic_and_bounded() {
+        let a = biosignal(42, 1000, 1000.0);
+        let b = biosignal(42, 1000, 1000.0);
+        assert_eq!(a.samples, b.samples);
+        assert!(a.samples.iter().all(|&s| (-32768..=32767).contains(&s)));
+        let c = biosignal(43, 1000, 1000.0);
+        assert_ne!(a.samples, c.samples);
+        // not degenerate
+        let distinct: std::collections::HashSet<_> = a.samples.iter().collect();
+        assert!(distinct.len() > 100);
+    }
+
+    #[test]
+    fn ultrasound_window_shape() {
+        let w = ultrasound_windows(7, 3, 500);
+        assert_eq!(w.len(), 3);
+        assert!(w.iter().all(|x| x.len() == 500));
+        // bursts decay: early samples carry more energy than late ones
+        let early: i64 = w[0][..50].iter().map(|&v| (v as i64).abs()).sum();
+        let late: i64 = w[0][450..].iter().map(|&v| (v as i64).abs()).sum();
+        assert!(early > late * 2, "early {early} late {late}");
+    }
+
+    #[test]
+    fn byte_packing_roundtrip() {
+        let s = vec![-1i32, 2, -3];
+        let b = to_le_bytes(&s);
+        assert_eq!(b.len(), 12);
+        let back: Vec<i32> =
+            b.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(back, s);
+    }
+}

@@ -1,0 +1,207 @@
+//! Cross-implementation validation: the core correctness claim of the
+//! reproduction (§V-B step 5 writ large).
+//!
+//! For each case-study kernel, four implementations must agree
+//! **bit-for-bit** on random operands:
+//!
+//! 1. the Rust oracle (`workloads::reference`, itself mirrored against
+//!    the Python `ref.py` by the pytest suite),
+//! 2. the RV32 assembly kernel executed on the emulated X-HEEP CPU,
+//! 3. the CGRA mapping executed by the CGRA emulator,
+//! 4. the AOT Pallas artifact executed through PJRT.
+
+use femu::config::PlatformConfig;
+use femu::coordinator::Platform;
+use femu::runtime::{Runtime, TensorI32};
+use femu::util::Rng;
+use femu::workloads::{programs, reference as refimpl};
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn run_guest(src: &str, stage: &[(&str, &[i32])], read: (&str, usize)) -> Vec<i32> {
+    let mut p = Platform::new(PlatformConfig::default());
+    let prog = p.dbg.load_source(src).expect("assemble");
+    for (sym, data) in stage {
+        p.dbg.write_i32_slice(prog.symbol(sym).unwrap(), data).unwrap();
+    }
+    p.run_app(1 << 33).unwrap();
+    p.dbg.read_i32_slice(prog.symbol(read.0).unwrap(), read.1).unwrap()
+}
+
+#[test]
+fn matmul_four_way_agreement() {
+    let rt = Runtime::load(artifact_dir()).unwrap();
+    let (m, k, n) = (121usize, 16usize, 4usize);
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::new(seed);
+        let a = rng.vec_i32(m * k, -30_000, 30_000);
+        let b = rng.vec_i32(k * n, -30_000, 30_000);
+        let oracle = refimpl::matmul_i32(&a, &b, m, k, n);
+
+        // RV32 CPU
+        let cpu = run_guest(
+            &programs::mm_cpu(m, k, n),
+            &[("a_buf", &a), ("b_buf", &b)],
+            ("c_buf", m * n),
+        );
+        assert_eq!(cpu, oracle, "seed {seed}: CPU vs oracle");
+
+        // CGRA
+        let cgra = run_guest(
+            &programs::mm_cgra(m, k, n),
+            &[("a_buf", &a), ("b_buf", &b)],
+            ("c_buf", m * n),
+        );
+        assert_eq!(cgra, oracle, "seed {seed}: CGRA vs oracle");
+
+        // PJRT artifact
+        let out = rt
+            .execute(
+                "matmul",
+                &[
+                    TensorI32::new(vec![m, k], a.clone()).unwrap(),
+                    TensorI32::new(vec![k, n], b.clone()).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].data(), oracle.as_slice(), "seed {seed}: PJRT vs oracle");
+    }
+}
+
+#[test]
+fn conv2d_four_way_agreement() {
+    let rt = Runtime::load(artifact_dir()).unwrap();
+    let (h, w, cin, f, kh, kw) = (16usize, 16usize, 3usize, 8usize, 3usize, 3usize);
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    for seed in [4u64, 5] {
+        let mut rng = Rng::new(seed);
+        let x = rng.vec_i32(h * w * cin, -2000, 2000);
+        let wts = rng.vec_i32(f * kh * kw * cin, -2000, 2000);
+        let oracle = refimpl::conv2d_i32(&x, &wts, h, w, cin, f, kh, kw);
+
+        let cpu = run_guest(
+            &programs::conv_cpu(h, w, cin, f, kh, kw),
+            &[("x_buf", &x), ("w_buf", &wts)],
+            ("y_buf", oh * ow * f),
+        );
+        assert_eq!(cpu, oracle, "seed {seed}: CPU vs oracle");
+
+        let cgra = run_guest(
+            &programs::conv_cgra(h, w, cin, f, kh, kw),
+            &[("x_buf", &x), ("w_buf", &wts)],
+            ("y_buf", oh * ow * f),
+        );
+        assert_eq!(cgra, oracle, "seed {seed}: CGRA vs oracle");
+
+        // PJRT artifact is fixed at the paper shape; result layout is
+        // (oh, ow, f) like the oracle
+        let out = rt
+            .execute(
+                "conv2d",
+                &[
+                    TensorI32::new(vec![h, w, cin], x.clone()).unwrap(),
+                    TensorI32::new(vec![f, kh, kw, cin], wts.clone()).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].data(), oracle.as_slice(), "seed {seed}: PJRT vs oracle");
+    }
+}
+
+#[test]
+fn fft_four_way_agreement() {
+    let rt = Runtime::load(artifact_dir()).unwrap();
+    let n = 512usize;
+    for seed in [6u64, 7] {
+        let mut rng = Rng::new(seed);
+        let re = rng.vec_i32(n, -(1 << 15), 1 << 15);
+        let im = rng.vec_i32(n, -(1 << 15), 1 << 15);
+        let mut want_re = re.clone();
+        let mut want_im = im.clone();
+        refimpl::fft_q15(&mut want_re, &mut want_im);
+
+        let (wr, wi) = refimpl::twiddles_q15(n);
+        let rev: Vec<i32> = refimpl::bit_reverse_indices(n).iter().map(|&x| x as i32).collect();
+
+        // RV32 CPU (tables injected like the CS does)
+        let mut p = Platform::new(PlatformConfig::default());
+        let prog = p.dbg.load_source(&programs::fft_cpu(n)).unwrap();
+        for (sym, data) in
+            [("re_buf", &re), ("im_buf", &im), ("rev_tbl", &rev), ("wr_tbl", &wr), ("wi_tbl", &wi)]
+        {
+            p.dbg.write_i32_slice(prog.symbol(sym).unwrap(), data).unwrap();
+        }
+        p.run_app(1 << 33).unwrap();
+        let cpu_re = p.dbg.read_i32_slice(prog.symbol("re_buf").unwrap(), n).unwrap();
+        let cpu_im = p.dbg.read_i32_slice(prog.symbol("im_buf").unwrap(), n).unwrap();
+        assert_eq!(cpu_re, want_re, "seed {seed}: CPU re");
+        assert_eq!(cpu_im, want_im, "seed {seed}: CPU im");
+
+        // CGRA
+        let mut p = Platform::new(PlatformConfig::default());
+        let prog = p.dbg.load_source(&programs::fft_cgra(n)).unwrap();
+        for (sym, data) in
+            [("re_buf", &re), ("im_buf", &im), ("rev_tbl", &rev), ("wr_tbl", &wr), ("wi_tbl", &wi)]
+        {
+            p.dbg.write_i32_slice(prog.symbol(sym).unwrap(), data).unwrap();
+        }
+        p.run_app(1 << 33).unwrap();
+        assert!(p.dbg.soc.cgra_fault.is_none(), "{:?}", p.dbg.soc.cgra_fault);
+        let cgra_re = p.dbg.read_i32_slice(prog.symbol("re_buf").unwrap(), n).unwrap();
+        let cgra_im = p.dbg.read_i32_slice(prog.symbol("im_buf").unwrap(), n).unwrap();
+        assert_eq!(cgra_re, want_re, "seed {seed}: CGRA re");
+        assert_eq!(cgra_im, want_im, "seed {seed}: CGRA im");
+
+        // PJRT artifact (twiddle tables are runtime parameters)
+        let mut args = vec![
+            TensorI32::new(vec![n], re.clone()).unwrap(),
+            TensorI32::new(vec![n], im.clone()).unwrap(),
+        ];
+        args.extend(femu::virt::accel::fft_table_tensors(n));
+        let out = rt.execute("fft512", &args).unwrap();
+        assert_eq!(out[0].data(), want_re.as_slice(), "seed {seed}: PJRT re");
+        assert_eq!(out[1].data(), want_im.as_slice(), "seed {seed}: PJRT im");
+    }
+}
+
+#[test]
+fn classifier_guest_vs_direct_artifact() {
+    // the e2e path: guest-run classifier (mailbox) result equals direct
+    // artifact execution with the same bound weights
+    use femu::workloads::signals;
+    let n = 512usize;
+    let n_classes = 4usize;
+    let req_off = 0x1000u32;
+
+    let mut platform = Platform::new(PlatformConfig::default());
+    platform.attach_artifacts(artifact_dir()).unwrap();
+    let mut rng = Rng::new(0xC1A55);
+    let params = vec![
+        TensorI32::new(vec![64, 32], rng.vec_i32(64 * 32, -(1 << 14), 1 << 14)).unwrap(),
+        TensorI32::new(vec![32], rng.vec_i32(32, -500, 500)).unwrap(),
+        TensorI32::new(vec![32, n_classes], rng.vec_i32(32 * n_classes, -(1 << 14), 1 << 14))
+            .unwrap(),
+        TensorI32::new(vec![n_classes], rng.vec_i32(n_classes, -500, 500)).unwrap(),
+    ];
+    let sig = signals::biosignal(0xAB, n, 20_000.0);
+    let expected = {
+        let mut args = vec![TensorI32::new(vec![n], sig.samples.clone()).unwrap()];
+        args.extend(params.iter().cloned());
+        args.extend(femu::virt::accel::fft_table_tensors(n));
+        platform.accel.as_ref().unwrap().runtime().execute("model", &args).unwrap()[0].clone()
+    };
+    platform.accel.as_mut().unwrap().bind_params("model", params);
+    platform.dbg.load_source(&programs::classifier_mailbox(n, n_classes, req_off)).unwrap();
+    platform.start_adc(sig.samples.clone(), 20_000.0);
+    platform.run_app(1 << 34).unwrap();
+    let logits = platform
+        .dbg
+        .soc
+        .bus
+        .cs_dram
+        .read_i32_slice(req_off as usize + 8 + n * 4, n_classes)
+        .unwrap();
+    assert_eq!(logits.as_slice(), expected.data());
+}

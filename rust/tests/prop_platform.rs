@@ -1,0 +1,228 @@
+//! Property tests over the platform/coordinator layer.
+//!
+//! Invariants:
+//! * perf-counter conservation: every domain's four state counts sum to
+//!   the global cycle counter, on arbitrary workloads;
+//! * determinism: identical (program, dataset, seed) produce identical
+//!   cycle counts and energy;
+//! * energy monotonicity: more cycles never decrease energy; active time
+//!   is never cheaper than the same time asleep;
+//! * failure injection: underrun detection when the CS starves the ADC
+//!   FIFO; poison visibility after power-gating.
+
+use femu::config::PlatformConfig;
+use femu::coordinator::Platform;
+use femu::energy::EnergyModel;
+use femu::perfmon::PowerState;
+use femu::soc::{RunExit, Soc, SocConfig};
+use femu::util::Rng;
+use femu::workloads::programs;
+
+/// Generate a random but halting guest program.
+fn random_program(rng: &mut Rng) -> String {
+    let mut body = String::from("_start:\n");
+    let n = rng.range_usize(4, 40);
+    for _ in 0..n {
+        match rng.below(6) {
+            0 => body.push_str(&format!(
+                "    li t{}, {}\n",
+                rng.range_i32(0, 7),
+                rng.range_i32(-10_000, 10_000)
+            )),
+            1 => body.push_str(&format!(
+                "    add t{}, t{}, t{}\n",
+                rng.range_i32(0, 7),
+                rng.range_i32(0, 7),
+                rng.range_i32(0, 7)
+            )),
+            2 => body.push_str(&format!(
+                "    mul t{}, t{}, t{}\n",
+                rng.range_i32(0, 7),
+                rng.range_i32(0, 7),
+                rng.range_i32(0, 7)
+            )),
+            3 => body.push_str(&format!(
+                "    sw t{}, {}(sp)\n",
+                rng.range_i32(0, 7),
+                rng.range_i32(0, 64) * 4
+            )),
+            4 => body.push_str(&format!(
+                "    lw t{}, {}(sp)\n",
+                rng.range_i32(0, 7),
+                rng.range_i32(0, 64) * 4
+            )),
+            _ => body.push_str(&format!(
+                "    srai t{}, t{}, {}\n",
+                rng.range_i32(0, 7),
+                rng.range_i32(0, 7),
+                rng.range_i32(0, 31)
+            )),
+        }
+    }
+    body.push_str("    ebreak\n");
+    // sp points into bank 1 (data area)
+    format!("_pre:\n    li sp, 0x20400\n    j _body\n_body:\n{}", &body["_start:\n".len()..])
+}
+
+#[test]
+fn prop_perf_counter_conservation() {
+    let mut rng = Rng::new(0x00C5);
+    for case in 0..40 {
+        let src = random_program(&mut rng);
+        let mut p = Platform::new(PlatformConfig::default());
+        p.dbg.load_source(&src).unwrap_or_else(|e| panic!("case {case}: {e:#}\n{src}"));
+        p.run_app(1_000_000).unwrap();
+        let snap = p.snapshot();
+        for (d, counts) in snap.domains() {
+            assert_eq!(
+                counts.total(),
+                snap.cycles,
+                "case {case}: domain {d} counts {counts:?} vs cycles {}",
+                snap.cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_determinism() {
+    for seed in [1u64, 9, 77] {
+        let run = |seed: u64| {
+            let mut p = Platform::new(PlatformConfig::default());
+            p.dbg.load_source(&programs::acquisition(200, 2)).unwrap();
+            let data = Rng::new(seed).vec_i32(200, -30_000, 30_000);
+            p.start_adc(data, 5_000.0);
+            p.run_app(1 << 32).unwrap();
+            let snap = p.snapshot();
+            let e = EnergyModel::femu().estimate(&snap);
+            (snap.cycles, p.dbg.soc.stats.instructions, format!("{:.9}", e.total_mj))
+        };
+        assert_eq!(run(seed), run(seed), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_energy_monotone_in_time() {
+    let model = EnergyModel::heepocrates();
+    let mut pm = femu::perfmon::PerfMonitor::new(2);
+    let mut last = 0.0;
+    for t in [10u64, 100, 1_000, 50_000] {
+        let e = model.estimate(&pm.snapshot(t)).total_mj;
+        assert!(e > last, "t={t}: {e} <= {last}");
+        last = e;
+    }
+    // active is never cheaper than clock-gated for the same duration
+    pm.set_state(femu::perfmon::Domain::Cpu, PowerState::ClockGated, 0);
+    let gated = model.estimate(&pm.snapshot(1_000)).total_mj;
+    let mut pm2 = femu::perfmon::PerfMonitor::new(2);
+    pm2.set_state(femu::perfmon::Domain::Cpu, PowerState::Active, 0);
+    let active = model.estimate(&pm2.snapshot(1_000)).total_mj;
+    assert!(active > gated);
+}
+
+#[test]
+fn failure_injection_adc_starvation() {
+    // CS never refills: the schedule says samples are due, the FIFO is
+    // empty after the prefill -> underrun latches.
+    let mut soc = Soc::new(SocConfig::default());
+    let prog = femu::isa::assemble(&programs::acquisition(600, 0)).unwrap();
+    soc.load(&prog).unwrap();
+    // configure the stream but refuse to feed more than the prefill
+    soc.bus.spi_adc.configure_stream(600, 100, 0);
+    let first: Vec<i32> = (0..256).collect();
+    soc.bus.spi_adc.refill(&first);
+    soc.bus.spi_adc.write(femu::periph::spi_adc::regs::CTRL, 0b11);
+    loop {
+        match soc.run(1 << 30) {
+            RunExit::AdcRefill => { /* starve on purpose */ }
+            RunExit::Halted(_) | RunExit::DeadSleep => break,
+            RunExit::CycleBudget => break,
+            other => panic!("{other:?}"),
+        }
+        if soc.bus.spi_adc.underrun() {
+            break;
+        }
+    }
+    assert!(soc.bus.spi_adc.underrun(), "starved FIFO must latch underrun");
+}
+
+#[test]
+fn failure_injection_power_gated_poison() {
+    // guest gates bank 1, wakes it, and reads poison — emulating the
+    // data-loss bug class the power model is meant to surface
+    let mut soc = Soc::new(SocConfig::default());
+    let prog = femu::isa::assemble(
+        r#"
+        .equ POWER, 0x20000600
+        _start:
+            la  t0, marker
+            lw  a0, 0(t0)        # a0 = 1234 (before)
+            li  t1, POWER
+            li  t2, 2            # power-gate bank 1
+            sw  t2, 0x44(t1)
+            li  t2, 0            # back on
+            sw  t2, 0x44(t1)
+            lw  a1, 0(t0)        # a1 = poison
+            ebreak
+        .data
+        marker: .word 1234
+        "#,
+    )
+    .unwrap();
+    soc.load(&prog).unwrap();
+    soc.run_to_halt(100_000);
+    assert_eq!(soc.cpu.regs[10], 1234);
+    assert_eq!(soc.cpu.regs[11], femu::mem::POISON);
+}
+
+#[test]
+fn prop_manual_window_subset_of_total() {
+    // the manual perf window can never exceed the automatic window
+    let mut rng = Rng::new(0x77);
+    for _ in 0..10 {
+        let pause = rng.range_i32(5, 60);
+        let src = format!(
+            r#"
+            .equ GPIO, 0x20000100
+            _start:
+                li t0, GPIO
+                li t1, {pause}
+            warmup:
+                addi t1, t1, -1
+                bnez t1, warmup
+                li t2, 0x10000
+                sw t2, 0(t0)
+                li t1, {pause}
+            region:
+                addi t1, t1, -1
+                bnez t1, region
+                sw zero, 0(t0)
+                ebreak
+            "#
+        );
+        let mut p = Platform::new(PlatformConfig::default());
+        p.dbg.load_source(&src).unwrap();
+        p.run_app(1_000_000).unwrap();
+        let total = p.snapshot();
+        let window = p.dbg.soc.perf.window_snapshot().unwrap();
+        assert!(window.cycles < total.cycles);
+        assert!(window.cpu.get(PowerState::Active) <= total.cpu.get(PowerState::Active));
+    }
+}
+
+#[test]
+fn config_variants_still_run() {
+    // sweep bank counts / sizes / timing via the config layer
+    for (banks, size, div) in [(1usize, 0x40000u32, 10u64), (4, 0x10000, 34), (3, 0x8000, 50)] {
+        let cfg = PlatformConfig::parse(&format!(
+            "[mem]\nnum_banks = {banks}\nbank_size = {size:#x}\n[timing]\ndiv = {div}"
+        ))
+        .unwrap();
+        let mut p = Platform::new(cfg);
+        p.dbg.load_source("_start:\nli a0, 9\nli a1, 3\ndiv a2, a0, a1\nebreak").unwrap();
+        p.run_app(10_000).unwrap();
+        assert_eq!(p.dbg.reg(12), 3);
+        let snap = p.snapshot();
+        assert_eq!(snap.banks.len(), banks);
+    }
+}
