@@ -1,43 +1,47 @@
 //! §V-A acquisition characterization (Fig 4) as a library example:
-//! sweep the sampling frequency and print the active/sleep split of the
-//! acquisition window for both platform calibrations.
+//! sweep the sampling frequency on the experiment fleet and print the
+//! active/sleep split of the acquisition window for both platform
+//! calibrations.
 //!
 //! ```sh
 //! cargo run --release --example acquisition_study
 //! ```
 
 use femu::config::PlatformConfig;
-use femu::coordinator::experiments;
+use femu::coordinator::{experiments, Fleet};
 
 fn main() -> anyhow::Result<()> {
     let cfg = PlatformConfig::default();
+    let fleet = Fleet::auto();
     // Short window: the split fractions are window-invariant; the CLI
     // (`femu sweep-acquisition`) runs the paper's full 5 s window.
     let window_s = 0.25;
-    println!("acquisition window: {window_s} s (fractions are window-invariant)");
+    println!(
+        "acquisition window: {window_s} s (fractions are window-invariant), \
+         {} fleet worker(s)",
+        fleet.workers()
+    );
     println!(
         "{:>10} {:>12} {:>10} {:>10} {:>10}",
         "f_s (Hz)", "platform", "active %", "sleep %", "energy mJ"
     );
     let mut low_active = None;
     let mut high_active = None;
-    for f in experiments::FIG4_FREQS_HZ {
-        for p in experiments::fig4_point(&cfg, f, window_s, 7)? {
-            let active_pct = 100.0 * p.active_s / p.total_s;
-            println!(
-                "{:>10} {:>12} {:>9.2}% {:>9.2}% {:>10.4}",
-                p.sample_rate_hz,
-                if p.model == "femu" { "FEMU" } else { "chip" },
-                active_pct,
-                100.0 - active_pct,
-                p.total_mj,
-            );
-            if p.model == "femu" && f == 100.0 {
-                low_active = Some(active_pct);
-            }
-            if p.model == "femu" && f == 100_000.0 {
-                high_active = Some(active_pct);
-            }
+    for p in experiments::fig4_sweep(&fleet, &cfg, window_s, 7)? {
+        let active_pct = 100.0 * p.active_s / p.total_s;
+        println!(
+            "{:>10} {:>12} {:>9.2}% {:>9.2}% {:>10.4}",
+            p.sample_rate_hz,
+            if p.model == "femu" { "FEMU" } else { "chip" },
+            active_pct,
+            100.0 - active_pct,
+            p.total_mj,
+        );
+        if p.model == "femu" && p.sample_rate_hz == 100.0 {
+            low_active = Some(active_pct);
+        }
+        if p.model == "femu" && p.sample_rate_hz == 100_000.0 {
+            high_active = Some(active_pct);
         }
     }
     // The paper's qualitative claim: sleep-dominated at low rates

@@ -15,7 +15,7 @@
 //! ```
 
 use femu::config::PlatformConfig;
-use femu::coordinator::Platform;
+use femu::coordinator::{Fleet, Platform};
 use femu::energy::EnergyModel;
 use femu::workloads::{programs, reference as refimpl, signals};
 
@@ -240,66 +240,122 @@ wi_tbl:   .space {hb}
     )
 }
 
+/// The two measurement legs of the study; each runs on its own fleet
+/// worker with a private platform.
+#[derive(Clone, Copy)]
+enum Leg {
+    /// IRQ-driven acquisition overlapped with foreground FFTs.
+    Overlapped,
+    /// Standalone FFT run, measuring the pure processing cost for the
+    /// sequential acquire-then-process bound.
+    FftBaseline,
+}
+
+enum LegOut {
+    Overlapped {
+        total_s: f64,
+        total_mj: f64,
+        avg_mw: f64,
+        /// (transition count, rendered VCD) of the power-domain trace.
+        vcd: Option<(usize, String)>,
+    },
+    FftCycles(u64),
+}
+
 fn main() -> anyhow::Result<()> {
     let cfg = PlatformConfig::default();
-    let mut p = Platform::new(cfg.clone());
-    p.dbg.soc.perf.enable_trace(); // power-state VCD of the pipeline
-
-    let prog = p.dbg.load_source(&dual_phase_program())?;
-    // tables (injected by the CS, like the Fig 5 FFT runs)
+    // shared inputs: FFT tables (injected by the CS, like the Fig 5 FFT
+    // runs) and the acquired biosignal
     let (wr, wi) = refimpl::twiddles_q15(N);
     let rev: Vec<i32> = refimpl::bit_reverse_indices(N).iter().map(|&x| x as i32).collect();
-    p.dbg.write_i32_slice(prog.symbol("wr_tbl")?, &wr)?;
-    p.dbg.write_i32_slice(prog.symbol("wi_tbl")?, &wi)?;
-    p.dbg.write_i32_slice(prog.symbol("rev_tbl")?, &rev)?;
-
     let sig = signals::biosignal(0xD0A1, N * WINDOWS, RATE_HZ);
-    p.start_adc(sig.samples.clone(), RATE_HZ);
 
     println!("running {WINDOWS} windows of {N} samples at {RATE_HZ} Hz, overlapped...");
-    p.run_app(1 << 36)?;
-    assert!(!p.dbg.soc.bus.spi_adc.underrun(), "overlap must not starve acquisition");
+    // both legs are independent platforms -> run them as a 2-point fleet
+    // sweep (the overlapped run dominates; the baseline rides along on a
+    // second worker)
+    let legs = vec![Leg::Overlapped, Leg::FftBaseline];
+    let outs = Fleet::auto().run_sweep(&cfg, 0xD0A1, legs, |cfg, leg, _seed| {
+        match leg {
+            Leg::Overlapped => {
+                let mut p = Platform::new(cfg.clone());
+                p.dbg.soc.perf.enable_trace(); // power-state VCD of the pipeline
+                let prog = p.dbg.load_source(&dual_phase_program())?;
+                p.dbg.write_i32_slice(prog.symbol("wr_tbl")?, &wr)?;
+                p.dbg.write_i32_slice(prog.symbol("wi_tbl")?, &wi)?;
+                p.dbg.write_i32_slice(prog.symbol("rev_tbl")?, &rev)?;
+                p.start_adc(sig.samples.clone(), RATE_HZ);
+                p.run_app(1 << 36)?;
+                assert!(!p.dbg.soc.bus.spi_adc.underrun(), "overlap must not starve acquisition");
 
-    // validate: the final (in-place) FFT of the last window must match
-    // the oracle applied to the captured input
-    let last_buf = if WINDOWS % 2 == 1 { "buf0" } else { "buf1" };
-    let got = p.dbg.read_i32_slice(prog.symbol(last_buf)?, N)?;
-    let mut want_re: Vec<i32> = sig.samples[(WINDOWS - 1) * N..].to_vec();
-    let mut want_im = vec![0i32; N];
-    refimpl::fft_q15(&mut want_re, &mut want_im);
-    assert_eq!(got, want_re, "in-place FFT of the last window");
+                // validate: the final (in-place) FFT of the last window
+                // must match the oracle applied to the captured input
+                let last_buf = if WINDOWS % 2 == 1 { "buf0" } else { "buf1" };
+                let got = p.dbg.read_i32_slice(prog.symbol(last_buf)?, N)?;
+                let mut want_re: Vec<i32> = sig.samples[(WINDOWS - 1) * N..].to_vec();
+                let mut want_im = vec![0i32; N];
+                refimpl::fft_q15(&mut want_re, &mut want_im);
+                assert_eq!(got, want_re, "in-place FFT of the last window");
+
+                let snap = p.snapshot();
+                let r = EnergyModel::femu().estimate(&snap);
+                let vcd = p
+                    .dbg
+                    .soc
+                    .perf
+                    .trace()
+                    .map(|t| (t.len(), t.to_vcd(cfg.soc.freq_hz, p.dbg.soc.now)));
+                Ok(vec![LegOut::Overlapped {
+                    total_s: p.dbg.soc.secs(p.dbg.soc.now),
+                    total_mj: r.total_mj,
+                    avg_mw: r.avg_power_mw(),
+                    vcd,
+                }])
+            }
+            Leg::FftBaseline => {
+                let mut q = Platform::new(cfg.clone());
+                let fprog = q.dbg.load_source(&programs::fft_cpu(N))?;
+                q.dbg.write_i32_slice(fprog.symbol("re_buf")?, &sig.samples[..N])?;
+                q.dbg.write_i32_slice(fprog.symbol("rev_tbl")?, &rev)?;
+                q.dbg.write_i32_slice(fprog.symbol("wr_tbl")?, &wr)?;
+                q.dbg.write_i32_slice(fprog.symbol("wi_tbl")?, &wi)?;
+                q.run_app(1 << 32)?;
+                Ok(vec![LegOut::FftCycles(q.dbg.soc.perf.window_snapshot().unwrap().cycles)])
+            }
+        }
+    })?;
+
+    // unpack in leg order (fleet aggregation preserves it)
+    let (total_s, total_mj, avg_mw, vcd) = match &outs[0] {
+        LegOut::Overlapped { total_s, total_mj, avg_mw, vcd } => {
+            (*total_s, *total_mj, *avg_mw, vcd.as_ref())
+        }
+        _ => unreachable!("leg order"),
+    };
+    let fft_cycles = match outs[1] {
+        LegOut::FftCycles(c) => c,
+        _ => unreachable!("leg order"),
+    };
     println!("last-window FFT validated against the oracle");
 
     // timing: total vs the sequential structure
-    let total_s = p.dbg.soc.secs(p.dbg.soc.now);
     let acq_s = WINDOWS as f64 * N as f64 / RATE_HZ;
-    // FFT-only cost measured from a standalone run
-    let fft_cycles = {
-        let mut q = Platform::new(cfg.clone());
-        let fprog = q.dbg.load_source(&programs::fft_cpu(N))?;
-        q.dbg.write_i32_slice(fprog.symbol("re_buf")?, &sig.samples[..N])?;
-        q.dbg.write_i32_slice(fprog.symbol("rev_tbl")?, &rev)?;
-        q.dbg.write_i32_slice(fprog.symbol("wr_tbl")?, &wr)?;
-        q.dbg.write_i32_slice(fprog.symbol("wi_tbl")?, &wi)?;
-        q.run_app(1 << 32)?;
-        q.dbg.soc.perf.window_snapshot().unwrap().cycles
-    };
     let proc_s = WINDOWS as f64 * fft_cycles as f64 / cfg.soc.freq_hz as f64;
     let sequential_s = acq_s + proc_s;
     println!("overlapped total : {total_s:.4} s");
     println!("sequential bound : {sequential_s:.4} s (acquire {acq_s:.4} + process {proc_s:.4})");
-    println!("overlap hides    : {:.1}% of processing time", 100.0 * (sequential_s - total_s) / proc_s);
+    println!(
+        "overlap hides    : {:.1}% of processing time",
+        100.0 * (sequential_s - total_s) / proc_s
+    );
     assert!(total_s < sequential_s, "overlap must beat sequential");
 
     // energy + VCD
-    let snap = p.snapshot();
-    let r = EnergyModel::femu().estimate(&snap);
-    println!("energy: {:.4} mJ ({:.3} mW avg)", r.total_mj, r.avg_power_mw());
-    if let Some(trace) = p.dbg.soc.perf.trace() {
-        let vcd = trace.to_vcd(cfg.soc.freq_hz, p.dbg.soc.now);
+    println!("energy: {total_mj:.4} mJ ({avg_mw:.3} mW avg)");
+    if let Some((transitions, vcd)) = vcd {
         let path = std::env::temp_dir().join("femu_dual_phase.vcd");
-        std::fs::write(&path, &vcd)?;
-        println!("power-domain waveform: {} ({} transitions)", path.display(), trace.len());
+        std::fs::write(&path, vcd)?;
+        println!("power-domain waveform: {} ({} transitions)", path.display(), transitions);
     }
     println!("dual_phase OK");
     Ok(())

@@ -1,0 +1,9 @@
+"""Pytest bootstrap: put `python/` on sys.path so `from compile import
+...` resolves no matter where pytest is invoked from (repo root as in
+CI, `python/`, or anywhere with an absolute path — this conftest sits
+in the test directory itself, so it is always collected)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -6,6 +6,11 @@ means assert_array_equal, not allclose.
 """
 
 import numpy as np
+import pytest
+
+# hypothesis is not part of the minimal offline image; the fixed-shape
+# suite (test_kernel.py) still runs there, the sweeps need the full env.
+pytest.importorskip("hypothesis", reason="hypothesis not installed (offline image)")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import conv2d_i32, fft_q15, matmul_i32, ref

@@ -9,14 +9,18 @@
 mod harness;
 
 use femu::config::PlatformConfig;
-use femu::coordinator::experiments;
+use femu::coordinator::{experiments, Fleet};
 
 fn main() {
     let scale: usize =
         std::env::var("FEMU_CASEC_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1);
     let cfg = PlatformConfig::default();
+    // the two timing variants are independent fleet points, so a 2-worker
+    // fleet overlaps the (dominant) physical-timing emulation with the
+    // virtualized one
+    let fleet = Fleet::new(2);
     harness::header(&format!("Case C (\u{a7}V-C): flash virtualization (scale 1/{scale})"));
-    let (r, wall) = harness::time(|| experiments::case_c(&cfg, scale).unwrap());
+    let (r, wall) = harness::time(|| experiments::case_c(&fleet, &cfg, scale).unwrap());
     println!(
         "workload: {} windows x {} samples ({} KiB/window)",
         r.windows,
@@ -52,4 +56,13 @@ fn main() {
         assert!((r.phys_total_s - 600.0).abs() < 120.0, "phys total {}", r.phys_total_s);
     }
     println!("shape check OK");
+
+    harness::write_json(
+        "case_c_flash",
+        vec![
+            ("scale", femu::util::Json::from(scale as i64)),
+            ("workers", femu::util::Json::from(fleet.workers() as i64)),
+        ],
+        vec![harness::json_result("study_fleet", wall)],
+    );
 }

@@ -3,6 +3,10 @@
 //! X-HEEP-FEMU (femu calibration) and the HEEPocrates chip (silicon
 //! calibration), with the active/sleep split.
 //!
+//! The sweep runs twice — on the serial reference path and on the
+//! experiment fleet — cross-checking bit-identity and reporting the
+//! parallel speedup.
+//!
 //! `cargo bench --bench fig4_acquisition` (set FEMU_FIG4_WINDOW_S to
 //! override the emulated window; default 1 s keeps the bench quick while
 //! preserving the split — fractions are window-invariant).
@@ -11,7 +15,8 @@
 mod harness;
 
 use femu::config::PlatformConfig;
-use femu::coordinator::experiments;
+use femu::coordinator::{experiments, Fleet};
+use femu::util::Json;
 
 fn main() {
     let window_s: f64 = std::env::var("FEMU_FIG4_WINDOW_S")
@@ -19,36 +24,66 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(1.0);
     let cfg = PlatformConfig::default();
+    let fleet = Fleet::auto();
     harness::header(&format!(
         "Fig 4: acquisition time & energy, {window_s} s window (normalized)"
     ));
+
+    let (serial_pts, serial_s) =
+        harness::time(|| experiments::fig4_sweep(&Fleet::serial(), &cfg, window_s, 0xF164).unwrap());
+    let (points, fleet_s) =
+        harness::time(|| experiments::fig4_sweep(&fleet, &cfg, window_s, 0xF164).unwrap());
+
     println!(
-        "{:>9} {:>12} | {:>8} {:>8} | {:>8} {:>8} | {:>9}",
-        "f_s (Hz)", "platform", "act_t%", "slp_t%", "act_E%", "slp_E%", "bench_s"
+        "{:>9} {:>12} | {:>8} {:>8} | {:>8} {:>8}",
+        "f_s (Hz)", "platform", "act_t%", "slp_t%", "act_E%", "slp_E%"
     );
-    let mut rows = Vec::new();
-    for f in experiments::FIG4_FREQS_HZ {
-        let (points, wall) =
-            harness::time(|| experiments::fig4_point(&cfg, f, window_s, 0xF164).unwrap());
-        for p in &points {
-            let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
-            println!(
-                "{:>9} {:>12} | {:>7.2}% {:>7.2}% | {:>7.2}% {:>7.2}% | {:>9}",
-                p.sample_rate_hz,
-                plat,
-                100.0 * p.active_s / p.total_s,
-                100.0 * p.sleep_s / p.total_s,
-                100.0 * p.active_mj / p.total_mj,
-                100.0 * p.sleep_mj / p.total_mj,
-                harness::eng(wall),
-            );
-        }
-        rows.push(points);
+    for p in &points {
+        let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
+        println!(
+            "{:>9} {:>12} | {:>7.2}% {:>7.2}% | {:>7.2}% {:>7.2}%",
+            p.sample_rate_hz,
+            plat,
+            100.0 * p.active_s / p.total_s,
+            100.0 * p.sleep_s / p.total_s,
+            100.0 * p.active_mj / p.total_mj,
+            100.0 * p.sleep_mj / p.total_mj,
+        );
     }
+
+    // fleet/serial bit-identity (the fleet determinism contract)
+    assert_eq!(serial_pts.len(), points.len());
+    for (a, b) in serial_pts.iter().zip(&points) {
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.sample_rate_hz.to_bits(), b.sample_rate_hz.to_bits());
+        assert_eq!(a.total_mj.to_bits(), b.total_mj.to_bits(), "{} Hz", a.sample_rate_hz);
+        assert_eq!(a.active_s.to_bits(), b.active_s.to_bits(), "{} Hz", a.sample_rate_hz);
+    }
+    println!("\ndeterminism OK: fleet({}) output bit-identical to serial", fleet.workers());
+    println!(
+        "wall-clock: serial {}s, fleet({}) {}s -> {:.2}x",
+        harness::eng(serial_s),
+        fleet.workers(),
+        harness::eng(fleet_s),
+        serial_s / fleet_s,
+    );
+
     // paper-shape checks (abort the bench loudly if the figure breaks)
-    let low = &rows[0][0];
-    let high = rows.last().unwrap().first().unwrap();
+    let low = &points[0];
+    let high = points.last().unwrap();
     assert!(low.active_s / low.total_s < 0.01, "100 Hz must be sleep-dominated");
     assert!(high.active_s / high.total_s > 0.70, "100 kHz must be active-dominated");
-    println!("\nshape check OK: <1% active at 100 Hz, >70% active at 100 kHz");
+    println!("shape check OK: <1% active at 100 Hz, >70% active at 100 kHz");
+
+    harness::write_json(
+        "fig4_acquisition",
+        vec![
+            ("window_s", Json::Num(window_s)),
+            ("workers", Json::from(fleet.workers() as i64)),
+        ],
+        vec![
+            harness::json_result("sweep_serial", serial_s),
+            harness::json_result("sweep_fleet", fleet_s),
+        ],
+    );
 }

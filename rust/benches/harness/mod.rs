@@ -1,8 +1,15 @@
 //! Tiny benchmark harness (criterion is unavailable offline; see
 //! Cargo.toml). Each bench binary is `harness = false` and uses these
-//! helpers to time emulator wall-clock and print paper-style tables.
+//! helpers to time emulator wall-clock, print paper-style tables, and
+//! emit machine-readable `BENCH_*.json` snapshots for CI.
+
+// Each bench includes this module via #[path] and uses only a subset of
+// the helpers, so per-binary dead-code analysis is meaningless here.
+#![allow(dead_code)]
 
 use std::time::Instant;
+
+use femu::util::Json;
 
 /// Wall-time one closure, returning (result, seconds).
 pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
@@ -35,4 +42,35 @@ pub fn header(title: &str) {
     println!("\n==============================================================");
     println!("{title}");
     println!("==============================================================");
+}
+
+/// Iteration count for statistics-gathering loops: `FEMU_BENCH_REPS`
+/// overrides `default` (CI's bench-smoke job sets a small value).
+pub fn reps(default: usize) -> usize {
+    std::env::var("FEMU_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
+/// One timed entry of a bench JSON report.
+pub fn json_result(name: &str, wall_s: f64) -> Json {
+    Json::obj(vec![("name", Json::from(name)), ("wall_s", Json::Num(wall_s))])
+}
+
+/// Write the machine-readable bench snapshot to `BENCH_<bench>.json` (or
+/// the path in `FEMU_BENCH_JSON`). CI uploads these as build artifacts so
+/// the perf trajectory is tracked run over run.
+pub fn write_json(bench: &str, extra: Vec<(&str, Json)>, results: Vec<Json>) {
+    let mut fields = vec![("bench", Json::from(bench))];
+    fields.extend(extra);
+    fields.push(("results", Json::Arr(results)));
+    let doc = Json::obj(fields);
+    let path =
+        std::env::var("FEMU_BENCH_JSON").unwrap_or_else(|_| format!("BENCH_{bench}.json"));
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("\nbench json -> {path}"),
+        Err(e) => eprintln!("warning: could not write bench json {path}: {e}"),
+    }
 }

@@ -1,13 +1,18 @@
 //! Bench: regenerate **Table I** — the FPGA-platform feature comparison,
 //! plus the §II filtering narrative (features applied in descending
-//! support order until only FEMU survives).
+//! support order until only FEMU survives) — and time both renderers.
 //!
 //! `cargo bench --bench table1`
+//!
+//! `FEMU_BENCH_REPS` shrinks the timing loops (CI's bench-smoke job runs
+//! with a small value); the JSON snapshot lands in `BENCH_table1.json`
+//! (or `FEMU_BENCH_JSON`) for artifact upload.
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use femu::coordinator::table1::{filtering_steps, render_markdown, Feature, TABLE1};
+use femu::util::Json;
 
 fn main() {
     harness::header("Table I: comparison of relevant FPGA-based platforms");
@@ -15,7 +20,12 @@ fn main() {
 
     harness::header("\u{a7}II filtering argument");
     for (feature, survivors) in filtering_steps() {
-        println!("after `{}`: {} platform(s): {}", feature.name(), survivors.len(), survivors.join(", "));
+        println!(
+            "after `{}`: {} platform(s): {}",
+            feature.name(),
+            survivors.len(),
+            survivors.join(", ")
+        );
     }
 
     // structural checks: the table's headline claims
@@ -26,4 +36,22 @@ fn main() {
     let steps = filtering_steps();
     assert_eq!(steps.last().unwrap().1, vec!["FEMU (this work)"]);
     println!("\nshape check OK: FEMU is the only platform with all five features");
+
+    // timing + machine-readable snapshot for the CI perf trajectory
+    let reps = harness::reps(500);
+    let (_, render_s) = harness::time_best(reps, render_markdown);
+    let (_, filter_s) = harness::time_best(reps, filtering_steps);
+    println!(
+        "\ntiming (best of {reps}): render {}s, filtering {}s",
+        harness::eng(render_s),
+        harness::eng(filter_s)
+    );
+    harness::write_json(
+        "table1",
+        vec![("reps", Json::from(reps as i64))],
+        vec![
+            harness::json_result("render_markdown", render_s),
+            harness::json_result("filtering_steps", filter_s),
+        ],
+    );
 }

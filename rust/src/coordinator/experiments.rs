@@ -5,9 +5,15 @@
 //! * [`fig5_all`] — §V-B TinyAI kernels (CPU vs CGRA, FEMU vs chip),
 //! * [`case_c`] — §V-C flash-virtualization transfer study,
 //! * Table I lives in [`super::table1`].
+//!
+//! The sweep drivers take a [`Fleet`] and shard their points across it;
+//! pass [`Fleet::serial()`] for the single-threaded reference path. Both
+//! paths are bit-identical by construction (per-point seeds come from
+//! [`super::fleet::point_seed`], aggregation preserves point order).
 
 use anyhow::{anyhow, bail, Result};
 
+use super::fleet::Fleet;
 use crate::config::PlatformConfig;
 use crate::energy::EnergyModel;
 use crate::isa::assemble;
@@ -87,19 +93,22 @@ pub fn fig4_point(
     Ok(out)
 }
 
-/// The full Fig 4 sweep. `window_s` defaults to the paper's 5 s via
-/// [`fig4_sweep_default`]; benches shrink it to keep runtimes sane (the
-/// active/sleep *fractions* are window-invariant).
-pub fn fig4_sweep(cfg: &PlatformConfig, window_s: f64, seed: u64) -> Result<Vec<Fig4Point>> {
-    let mut all = Vec::new();
-    for f in FIG4_FREQS_HZ {
-        all.extend(fig4_point(cfg, f, window_s, seed)?);
-    }
-    Ok(all)
+/// The full Fig 4 sweep, sharded across `fleet`. `window_s` defaults to
+/// the paper's 5 s via [`fig4_sweep_default`]; benches shrink it to keep
+/// runtimes sane (the active/sleep *fractions* are window-invariant).
+pub fn fig4_sweep(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    window_s: f64,
+    seed: u64,
+) -> Result<Vec<Fig4Point>> {
+    fleet.run_sweep(cfg, seed, FIG4_FREQS_HZ.to_vec(), |cfg, f, point_seed| {
+        fig4_point(cfg, f, window_s, point_seed)
+    })
 }
 
-pub fn fig4_sweep_default(cfg: &PlatformConfig) -> Result<Vec<Fig4Point>> {
-    fig4_sweep(cfg, 5.0, 0xF16_4)
+pub fn fig4_sweep_default(fleet: &Fleet, cfg: &PlatformConfig) -> Result<Vec<Fig4Point>> {
+    fig4_sweep(fleet, cfg, 5.0, 0xF16_4)
 }
 
 // =====================================================================
@@ -253,15 +262,21 @@ fn run_to_halt(p: &mut Platform) -> Result<()> {
     }
 }
 
-/// The full Fig 5 grid: 3 kernels x {CPU, CGRA} x {femu, chip}.
-pub fn fig5_all(cfg: &PlatformConfig, seed: u64) -> Result<Vec<Fig5Point>> {
-    let mut all = Vec::new();
-    for kernel in Fig5Kernel::ALL {
-        for imp in [Fig5Impl::Cpu, Fig5Impl::Cgra] {
-            all.extend(fig5_run(cfg, kernel, imp, seed)?);
-        }
-    }
-    Ok(all)
+/// Every (kernel, implementation) cell of the Fig 5 grid, in the grid's
+/// serial order (kernels outer, CPU before CGRA).
+pub fn fig5_cells() -> Vec<(Fig5Kernel, Fig5Impl)> {
+    Fig5Kernel::ALL
+        .iter()
+        .flat_map(|&k| [(k, Fig5Impl::Cpu), (k, Fig5Impl::Cgra)])
+        .collect()
+}
+
+/// The full Fig 5 grid: 3 kernels x {CPU, CGRA} x {femu, chip}, one
+/// fleet point per (kernel, impl) cell.
+pub fn fig5_all(fleet: &Fleet, cfg: &PlatformConfig, seed: u64) -> Result<Vec<Fig5Point>> {
+    fleet.run_sweep(cfg, seed, fig5_cells(), |cfg, (kernel, imp), point_seed| {
+        fig5_run(cfg, kernel, imp, point_seed)
+    })
 }
 
 // =====================================================================
@@ -338,13 +353,19 @@ fn case_c_one(cfg: &PlatformConfig, timing: FlashTiming, windows: usize, words: 
 
 /// §V-C: 240 windows of 35 000 16-bit samples (packed two per word =
 /// 70 KiB/window), virtualized vs physical flash. `scale` shrinks the
-/// workload for quick runs (1 = paper size).
-pub fn case_c(cfg: &PlatformConfig, scale: usize) -> Result<CaseCResult> {
+/// workload for quick runs (1 = paper size). The two timing variants are
+/// independent platforms, so they run as two fleet points (both stage the
+/// same 0xCC dataset: the §V-C content is timing-irrelevant and keeping
+/// it fixed preserves the seed repo's exact staging).
+pub fn case_c(fleet: &Fleet, cfg: &PlatformConfig, scale: usize) -> Result<CaseCResult> {
     let windows = (240 / scale.max(1)).max(2);
     let samples = (35_000 / scale.max(1)).max(200);
     let words = samples / 2;
-    let virt_cycles = case_c_one(cfg, FlashTiming::virtualized(), windows, words, 0xCC)?;
-    let phys_cycles = case_c_one(cfg, FlashTiming::physical(), windows, words, 0xCC)?;
+    let timings = vec![FlashTiming::virtualized(), FlashTiming::physical()];
+    let cycles = fleet.run_sweep(cfg, 0xCC, timings, |cfg, timing, _point_seed| {
+        Ok(vec![case_c_one(cfg, timing, windows, words, 0xCC)?])
+    })?;
+    let (virt_cycles, phys_cycles) = (cycles[0], cycles[1]);
     let f = cfg.soc.freq_hz as f64;
     let virt_total_s = virt_cycles as f64 / f;
     let phys_total_s = phys_cycles as f64 / f;
@@ -401,8 +422,17 @@ mod tests {
 
     #[test]
     fn case_c_speedup_scale() {
-        let r = case_c(&cfg(), 40).unwrap();
+        let r = case_c(&Fleet::auto(), &cfg(), 40).unwrap();
         assert!(r.speedup > 150.0 && r.speedup < 350.0, "speedup {}", r.speedup);
         assert!(r.phys_window_s > r.virt_window_s * 100.0);
+    }
+
+    #[test]
+    fn fig5_cells_order_is_the_serial_grid_order() {
+        let cells = fig5_cells();
+        assert_eq!(cells.len(), 6);
+        assert_eq!(cells[0], (Fig5Kernel::Mm, Fig5Impl::Cpu));
+        assert_eq!(cells[1], (Fig5Kernel::Mm, Fig5Impl::Cgra));
+        assert_eq!(cells[5], (Fig5Kernel::Fft, Fig5Impl::Cgra));
     }
 }

@@ -1,0 +1,207 @@
+//! The experiment fleet: coarse-grained parallelism across independent
+//! platform instances.
+//!
+//! FEMU's §V sweeps are embarrassingly parallel — every sweep point
+//! builds its own [`Platform`](super::Platform) from a cloned
+//! [`PlatformConfig`], owns its own RNG stream, and shares no mutable
+//! state with any other point. [`Fleet`] exploits that: it shards a
+//! sweep's points across a pool of std threads (pulling from a shared
+//! in-order work queue, so uneven points balance), gives each point a
+//! deterministic seed derived from the sweep's base seed, and aggregates
+//! the per-point result batches back into **serial order**.
+//!
+//! Determinism contract: for any worker count, [`Fleet::run_sweep`]
+//! returns results bit-identical to [`Fleet::serial`] — each point's seed
+//! depends only on (base seed, point index), and aggregation order
+//! depends only on point index. `tests/fleet_determinism.rs` holds the
+//! line on this.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::config::PlatformConfig;
+
+/// A worker pool for sweep execution. `Copy`-cheap handle: the threads
+/// are scoped to each [`Fleet::run_sweep`] call, not kept alive between
+/// sweeps (platform construction dominates thread spawn cost by orders
+/// of magnitude).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fleet {
+    workers: usize,
+}
+
+impl Fleet {
+    /// A fleet of `workers` threads (clamped to at least 1).
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// The serial reference path: runs every point in order on the
+    /// calling thread. Used for determinism cross-checks.
+    pub fn serial() -> Self {
+        Self { workers: 1 }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> Self {
+        Self::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.workers == 1
+    }
+
+    /// Run one sweep: each element of `points` is executed by
+    /// `run(cfg, point, seed)` on some worker, where `seed` is
+    /// [`point_seed`]`(base_seed, index)`. Each invocation is expected to
+    /// build its own private `Platform` from a clone of `cfg` (the
+    /// experiment drivers all do). The returned batches are concatenated
+    /// in point order, so the output is independent of the worker count.
+    ///
+    /// On error the first failing point's error (in point order) is
+    /// returned and the remaining unclaimed points are abandoned.
+    pub fn run_sweep<P, T, F>(
+        &self,
+        cfg: &PlatformConfig,
+        base_seed: u64,
+        points: Vec<P>,
+        run: F,
+    ) -> Result<Vec<T>>
+    where
+        P: Send,
+        T: Send,
+        F: Fn(&PlatformConfig, P, u64) -> Result<Vec<T>> + Sync,
+    {
+        let n = points.len();
+        if self.workers <= 1 || n <= 1 {
+            let mut all = Vec::new();
+            for (i, p) in points.into_iter().enumerate() {
+                all.extend(run(cfg, p, point_seed(base_seed, i))?);
+            }
+            return Ok(all);
+        }
+
+        // Shared sweep state: a work queue handing out (index, point)
+        // pairs in order, and one result slot per point.
+        let workers = self.workers.min(n);
+        let abort = AtomicBool::new(false);
+        let queue = Mutex::new(points.into_iter().enumerate());
+        let results: Vec<Mutex<Option<Result<Vec<T>>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Some((i, point)) = queue.lock().expect("queue poisoned").next() else {
+                        break;
+                    };
+                    let r = run(cfg, point, point_seed(base_seed, i));
+                    if r.is_err() {
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                    *results[i].lock().expect("result slot poisoned") = Some(r);
+                });
+            }
+        });
+
+        // Aggregate in point order (== serial order). Errors win over
+        // partial results; missing slots can only occur after an abort.
+        let mut err = None;
+        let mut batches = Vec::with_capacity(n);
+        for slot in results {
+            match slot.into_inner().expect("result slot poisoned") {
+                Some(Ok(batch)) => batches.push(batch),
+                Some(Err(e)) => {
+                    if err.is_none() {
+                        err = Some(e);
+                    }
+                }
+                None => {}
+            }
+        }
+        if let Some(e) = err {
+            return Err(e);
+        }
+        if batches.len() != n {
+            bail!("fleet aborted with {} of {n} points completed and no error", batches.len());
+        }
+        Ok(batches.into_iter().flatten().collect())
+    }
+}
+
+/// Deterministic per-point seed: a splitmix64 step over the base seed and
+/// the point index. Identical for every worker count by construction —
+/// this is what makes the fleet/serial bit-identity possible while still
+/// giving every sweep point an independent RNG stream.
+pub fn point_seed(base: u64, index: usize) -> u64 {
+    let mut z = base.wrapping_add((index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_seed_is_deterministic_and_spread() {
+        assert_eq!(point_seed(7, 3), point_seed(7, 3));
+        assert_ne!(point_seed(7, 3), point_seed(7, 4));
+        assert_ne!(point_seed(7, 3), point_seed(8, 3));
+        // no trivially colliding neighbours in a small window
+        let seeds: Vec<u64> = (0..64).map(|i| point_seed(0xF164, i)).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
+    }
+
+    #[test]
+    fn run_sweep_preserves_serial_order() {
+        let cfg = PlatformConfig::default();
+        // batches of varying length, tagged by (index, seed)
+        let work = |_: &PlatformConfig, p: usize, seed: u64| {
+            Ok((0..=p % 3).map(|j| (p, j, seed)).collect())
+        };
+        let points: Vec<usize> = (0..23).collect();
+        let serial = Fleet::serial().run_sweep(&cfg, 9, points.clone(), work).unwrap();
+        let fleet = Fleet::new(4).run_sweep(&cfg, 9, points, work).unwrap();
+        assert_eq!(serial, fleet);
+        // order really is point order
+        let idx: Vec<usize> = serial.iter().map(|&(p, _, _)| p).collect();
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(idx, sorted);
+    }
+
+    #[test]
+    fn run_sweep_propagates_first_error_in_order() {
+        let cfg = PlatformConfig::default();
+        let work = |_: &PlatformConfig, p: usize, _seed: u64| -> Result<Vec<usize>> {
+            if p == 5 || p == 11 {
+                bail!("point {p} failed");
+            }
+            Ok(vec![p])
+        };
+        let err = Fleet::new(4).run_sweep(&cfg, 0, (0..16).collect(), work).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("failed"), "{msg}");
+    }
+
+    #[test]
+    fn worker_counts_clamp() {
+        assert_eq!(Fleet::new(0).workers(), 1);
+        assert!(Fleet::serial().is_serial());
+        assert!(Fleet::auto().workers() >= 1);
+    }
+}

@@ -8,10 +8,16 @@
 //! — the in-process equivalent of the PL/PS control flow.
 //!
 //! [`experiments`] implements §V: every figure/table has a driver that
-//! benches and the CLI share (DESIGN.md §5 maps them).
+//! benches and the CLI share (DESIGN.md §5 maps them). The drivers run on
+//! an experiment [`Fleet`] — a worker pool that shards sweep points
+//! across threads with serial-order, bit-identical aggregation
+//! (DESIGN.md §8).
 
 pub mod experiments;
+pub mod fleet;
 pub mod table1;
+
+pub use fleet::Fleet;
 
 use anyhow::{anyhow, Context, Result};
 

@@ -11,13 +11,18 @@
 //! femu table1                                                (Table I)
 //! femu serve [--addr HOST:PORT] [--artifacts DIR] [--config ..]
 //! ```
+//!
+//! Experiment subcommands shard their sweep across an experiment fleet
+//! (one worker per core by default); `--workers N` sizes the pool and
+//! `--serial` forces the single-threaded reference path. Results are
+//! bit-identical either way.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use femu::config::PlatformConfig;
-use femu::coordinator::{experiments, table1, AppExit, Platform};
+use femu::coordinator::{experiments, table1, AppExit, Fleet, Platform};
 use femu::energy::EnergyModel;
 use femu::util::eng;
 
@@ -64,6 +69,19 @@ fn load_config(args: &Args) -> Result<PlatformConfig> {
     }
 }
 
+/// Experiment fleet sizing: `--serial` wins, then `--workers N`, then one
+/// worker per available core.
+fn fleet_from_args(args: &Args) -> Result<Fleet> {
+    if args.switches.iter().any(|s| s == "serial") {
+        Ok(Fleet::serial())
+    } else if let Some(w) = args.flags.get("workers") {
+        let n: usize = w.parse().with_context(|| format!("--workers `{w}`"))?;
+        Ok(Fleet::new(n))
+    } else {
+        Ok(Fleet::auto())
+    }
+}
+
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
@@ -100,7 +118,10 @@ fn print_usage() {
          femu kernels [--validate]                    reproduce Fig 5\n  \
          femu flash-study [--scale N]                 reproduce Case C (\u{a7}V-C)\n  \
          femu table1                                  reproduce Table I\n  \
-         femu serve [--addr HOST:PORT] [--artifacts DIR]"
+         femu serve [--addr HOST:PORT] [--artifacts DIR]\n\n\
+         Experiment subcommands accept --workers N (fleet size; default: \
+         one per core)\n  \
+         and --serial (single-threaded reference path)."
     );
 }
 
@@ -207,45 +228,50 @@ fn cmd_disasm(args: &Args) -> Result<()> {
 
 fn cmd_sweep_acquisition(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    let fleet = fleet_from_args(args)?;
     let window_s = args
         .flags
         .get("window-s")
         .map(|s| s.parse::<f64>())
         .transpose()?
         .unwrap_or(5.0);
-    println!("== Fig 4: normalized acquisition time & energy ({window_s} s window) ==");
+    println!(
+        "== Fig 4: normalized acquisition time & energy ({window_s} s window, {} worker(s)) ==",
+        fleet.workers()
+    );
     println!(
         "{:>10} {:>12} | {:>9} {:>9} {:>8} | {:>10} {:>10} {:>8}",
         "f_s (Hz)", "platform", "active_s", "sleep_s", "act_t%", "act_mJ", "slp_mJ", "act_E%"
     );
-    for f in experiments::FIG4_FREQS_HZ {
-        let points = experiments::fig4_point(&cfg, f, window_s, 0xF164)?;
-        for p in points {
-            let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
-            println!(
-                "{:>10} {:>12} | {:>9.4} {:>9.4} {:>7.2}% | {:>10.4} {:>10.4} {:>7.2}%",
-                p.sample_rate_hz,
-                plat,
-                p.active_s,
-                p.sleep_s,
-                100.0 * p.active_s / p.total_s,
-                p.active_mj,
-                p.sleep_mj,
-                100.0 * p.active_mj / p.total_mj,
-            );
-        }
+    for p in experiments::fig4_sweep(&fleet, &cfg, window_s, 0xF164)? {
+        let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
+        println!(
+            "{:>10} {:>12} | {:>9.4} {:>9.4} {:>7.2}% | {:>10.4} {:>10.4} {:>7.2}%",
+            p.sample_rate_hz,
+            plat,
+            p.active_s,
+            p.sleep_s,
+            100.0 * p.active_s / p.total_s,
+            p.active_mj,
+            p.sleep_mj,
+            100.0 * p.active_mj / p.total_mj,
+        );
     }
     Ok(())
 }
 
 fn cmd_kernels(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    println!("== Fig 5: TinyAI kernels, CPU vs CGRA, FEMU vs chip ==");
+    let fleet = fleet_from_args(args)?;
+    println!(
+        "== Fig 5: TinyAI kernels, CPU vs CGRA, FEMU vs chip ({} worker(s)) ==",
+        fleet.workers()
+    );
     println!(
         "{:>6} {:>6} {:>12} | {:>12} {:>10} {:>12} {:>6}",
         "kernel", "impl", "platform", "cycles", "time", "energy", "valid"
     );
-    let all = experiments::fig5_all(&cfg, 0xF15)?;
+    let all = experiments::fig5_all(&fleet, &cfg, 0xF15)?;
     for p in &all {
         let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
         println!(
@@ -334,6 +360,7 @@ fn validate_virtualized() -> Result<()> {
 
 fn cmd_flash_study(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    let fleet = fleet_from_args(args)?;
     let scale = args
         .flags
         .get("scale")
@@ -341,7 +368,7 @@ fn cmd_flash_study(args: &Args) -> Result<()> {
         .transpose()?
         .unwrap_or(1);
     println!("== Case C (\u{a7}V-C): flash virtualization transfer study ==");
-    let r = experiments::case_c(&cfg, scale)?;
+    let r = experiments::case_c(&fleet, &cfg, scale)?;
     println!(
         "windows: {} x {} samples ({} KiB/window)",
         r.windows,

@@ -51,6 +51,25 @@ impl Runtime {
         Ok(Self { client, manifest, executables, dir })
     }
 
+    /// Test/bench gate for artifact-backed paths: load the artifacts in
+    /// `dir`, returning `None` with a skip notice when they (or the PJRT
+    /// backend) are unavailable — offline checkouts have neither (see
+    /// vendor/xla/README.md). Setting `FEMU_REQUIRE_ARTIFACTS` turns the
+    /// skip into a hard failure, so full environments keep a regression
+    /// signal instead of silently going green on a broken loader.
+    pub fn load_or_skip(dir: impl AsRef<Path>, what: &str) -> Option<Self> {
+        match Self::load(dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                if std::env::var_os("FEMU_REQUIRE_ARTIFACTS").is_some() {
+                    panic!("FEMU_REQUIRE_ARTIFACTS is set but {what} cannot load: {e:#}");
+                }
+                eprintln!("skipping {what} (artifacts unavailable: {e:#})");
+                None
+            }
+        }
+    }
+
     /// Load a single extra HLO-text computation not listed in the manifest
     /// (used by tests and by user-supplied accelerator models).
     pub fn load_extra(&mut self, name: &str, hlo_path: impl AsRef<Path>) -> Result<()> {
@@ -139,9 +158,13 @@ mod tests {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    fn runtime() -> Option<Runtime> {
+        Runtime::load_or_skip(artifact_dir(), "runtime test")
+    }
+
     #[test]
     fn load_and_list_entries() {
-        let rt = Runtime::load(artifact_dir()).expect("load artifacts");
+        let Some(rt) = runtime() else { return };
         let mut names = rt.entry_names();
         names.sort();
         assert_eq!(names, vec!["conv2d", "fft512", "matmul", "model"]);
@@ -149,7 +172,7 @@ mod tests {
 
     #[test]
     fn matmul_identity_roundtrip() {
-        let rt = Runtime::load(artifact_dir()).unwrap();
+        let Some(rt) = runtime() else { return };
         // B = 16x4 "identity-ish": first 4 rows identity, rest zero, so
         // C[:, j] = A[:, j] for j < 4.
         let a = TensorI32::from_fn(vec![121, 16], |idx| (idx[0] * 16 + idx[1]) as i32);
@@ -170,7 +193,7 @@ mod tests {
 
     #[test]
     fn execute_rejects_bad_shape() {
-        let rt = Runtime::load(artifact_dir()).unwrap();
+        let Some(rt) = runtime() else { return };
         let a = TensorI32::zeros(vec![2, 2]);
         let b = TensorI32::zeros(vec![16, 4]);
         assert!(rt.execute("matmul", &[a, b]).is_err());
@@ -178,7 +201,7 @@ mod tests {
 
     #[test]
     fn execute_rejects_unknown_entry() {
-        let rt = Runtime::load(artifact_dir()).unwrap();
+        let Some(rt) = runtime() else { return };
         assert!(rt.execute("nope", &[]).is_err());
     }
 }

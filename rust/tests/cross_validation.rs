@@ -20,6 +20,15 @@ fn artifact_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// AOT artifacts are a build product (`make artifacts`) that needs the
+/// Python toolchain plus a real PJRT backend; clean offline checkouts
+/// have neither. The CPU/CGRA-vs-oracle legs below always run; the PJRT
+/// leg self-skips when the runtime cannot load (hard failure instead if
+/// `FEMU_REQUIRE_ARTIFACTS` is set).
+fn load_runtime() -> Option<Runtime> {
+    Runtime::load_or_skip(artifact_dir(), "PJRT cross-checks")
+}
+
 fn run_guest(src: &str, stage: &[(&str, &[i32])], read: (&str, usize)) -> Vec<i32> {
     let mut p = Platform::new(PlatformConfig::default());
     let prog = p.dbg.load_source(src).expect("assemble");
@@ -32,7 +41,7 @@ fn run_guest(src: &str, stage: &[(&str, &[i32])], read: (&str, usize)) -> Vec<i3
 
 #[test]
 fn matmul_four_way_agreement() {
-    let rt = Runtime::load(artifact_dir()).unwrap();
+    let rt = load_runtime();
     let (m, k, n) = (121usize, 16usize, 4usize);
     for seed in [1u64, 2, 3] {
         let mut rng = Rng::new(seed);
@@ -57,22 +66,24 @@ fn matmul_four_way_agreement() {
         assert_eq!(cgra, oracle, "seed {seed}: CGRA vs oracle");
 
         // PJRT artifact
-        let out = rt
-            .execute(
-                "matmul",
-                &[
-                    TensorI32::new(vec![m, k], a.clone()).unwrap(),
-                    TensorI32::new(vec![k, n], b.clone()).unwrap(),
-                ],
-            )
-            .unwrap();
-        assert_eq!(out[0].data(), oracle.as_slice(), "seed {seed}: PJRT vs oracle");
+        if let Some(rt) = &rt {
+            let out = rt
+                .execute(
+                    "matmul",
+                    &[
+                        TensorI32::new(vec![m, k], a.clone()).unwrap(),
+                        TensorI32::new(vec![k, n], b.clone()).unwrap(),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(out[0].data(), oracle.as_slice(), "seed {seed}: PJRT vs oracle");
+        }
     }
 }
 
 #[test]
 fn conv2d_four_way_agreement() {
-    let rt = Runtime::load(artifact_dir()).unwrap();
+    let rt = load_runtime();
     let (h, w, cin, f, kh, kw) = (16usize, 16usize, 3usize, 8usize, 3usize, 3usize);
     let (oh, ow) = (h - kh + 1, w - kw + 1);
     for seed in [4u64, 5] {
@@ -97,22 +108,24 @@ fn conv2d_four_way_agreement() {
 
         // PJRT artifact is fixed at the paper shape; result layout is
         // (oh, ow, f) like the oracle
-        let out = rt
-            .execute(
-                "conv2d",
-                &[
-                    TensorI32::new(vec![h, w, cin], x.clone()).unwrap(),
-                    TensorI32::new(vec![f, kh, kw, cin], wts.clone()).unwrap(),
-                ],
-            )
-            .unwrap();
-        assert_eq!(out[0].data(), oracle.as_slice(), "seed {seed}: PJRT vs oracle");
+        if let Some(rt) = &rt {
+            let out = rt
+                .execute(
+                    "conv2d",
+                    &[
+                        TensorI32::new(vec![h, w, cin], x.clone()).unwrap(),
+                        TensorI32::new(vec![f, kh, kw, cin], wts.clone()).unwrap(),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(out[0].data(), oracle.as_slice(), "seed {seed}: PJRT vs oracle");
+        }
     }
 }
 
 #[test]
 fn fft_four_way_agreement() {
-    let rt = Runtime::load(artifact_dir()).unwrap();
+    let rt = load_runtime();
     let n = 512usize;
     for seed in [6u64, 7] {
         let mut rng = Rng::new(seed);
@@ -155,14 +168,16 @@ fn fft_four_way_agreement() {
         assert_eq!(cgra_im, want_im, "seed {seed}: CGRA im");
 
         // PJRT artifact (twiddle tables are runtime parameters)
-        let mut args = vec![
-            TensorI32::new(vec![n], re.clone()).unwrap(),
-            TensorI32::new(vec![n], im.clone()).unwrap(),
-        ];
-        args.extend(femu::virt::accel::fft_table_tensors(n));
-        let out = rt.execute("fft512", &args).unwrap();
-        assert_eq!(out[0].data(), want_re.as_slice(), "seed {seed}: PJRT re");
-        assert_eq!(out[1].data(), want_im.as_slice(), "seed {seed}: PJRT im");
+        if let Some(rt) = &rt {
+            let mut args = vec![
+                TensorI32::new(vec![n], re.clone()).unwrap(),
+                TensorI32::new(vec![n], im.clone()).unwrap(),
+            ];
+            args.extend(femu::virt::accel::fft_table_tensors(n));
+            let out = rt.execute("fft512", &args).unwrap();
+            assert_eq!(out[0].data(), want_re.as_slice(), "seed {seed}: PJRT re");
+            assert_eq!(out[1].data(), want_im.as_slice(), "seed {seed}: PJRT im");
+        }
     }
 }
 
@@ -175,8 +190,12 @@ fn classifier_guest_vs_direct_artifact() {
     let n_classes = 4usize;
     let req_off = 0x1000u32;
 
+    let Some(rt) = Runtime::load_or_skip(artifact_dir(), "classifier_guest_vs_direct_artifact")
+    else {
+        return;
+    };
     let mut platform = Platform::new(PlatformConfig::default());
-    platform.attach_artifacts(artifact_dir()).unwrap();
+    platform.accel = Some(femu::virt::AccelService::new(rt));
     let mut rng = Rng::new(0xC1A55);
     let params = vec![
         TensorI32::new(vec![64, 32], rng.vec_i32(64 * 32, -(1 << 14), 1 << 14)).unwrap(),

@@ -1,0 +1,123 @@
+//! Fleet contracts: (1) sharded sweeps are bit-identical to the serial
+//! reference path for the §V experiment drivers, and (2) the control
+//! server stays correct under simultaneous TCP clients.
+
+use femu::config::PlatformConfig;
+use femu::coordinator::{experiments, Fleet, Platform};
+use femu::server::{Client, Server};
+use femu::util::Json;
+
+/// f64 equality as bit patterns — "identical" here means identical down
+/// to the last mantissa bit, not approximately equal.
+fn assert_bits_eq(a: f64, b: f64, what: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
+}
+
+#[test]
+fn fig4_sweep_fleet_bit_identical_to_serial() {
+    let cfg = PlatformConfig::default();
+    // short window keeps the debug-build runtime sane; the determinism
+    // contract is window-independent
+    let window_s = 0.05;
+    let serial = experiments::fig4_sweep(&Fleet::serial(), &cfg, window_s, 0xF164).unwrap();
+    let fleet = experiments::fig4_sweep(&Fleet::new(4), &cfg, window_s, 0xF164).unwrap();
+    assert_eq!(serial.len(), fleet.len());
+    assert_eq!(serial.len(), 2 * experiments::FIG4_FREQS_HZ.len());
+    for (a, b) in serial.iter().zip(&fleet) {
+        let what = format!("{} Hz / {}", a.sample_rate_hz, a.model);
+        assert_eq!(a.model, b.model, "{what}");
+        assert_bits_eq(a.sample_rate_hz, b.sample_rate_hz, &what);
+        assert_bits_eq(a.total_s, b.total_s, &what);
+        assert_bits_eq(a.active_s, b.active_s, &what);
+        assert_bits_eq(a.sleep_s, b.sleep_s, &what);
+        assert_bits_eq(a.active_mj, b.active_mj, &what);
+        assert_bits_eq(a.sleep_mj, b.sleep_mj, &what);
+        assert_bits_eq(a.total_mj, b.total_mj, &what);
+    }
+}
+
+#[test]
+fn fig5_all_fleet_bit_identical_to_serial() {
+    let cfg = PlatformConfig::default();
+    let serial = experiments::fig5_all(&Fleet::serial(), &cfg, 0xF15).unwrap();
+    let fleet = experiments::fig5_all(&Fleet::new(4), &cfg, 0xF15).unwrap();
+    assert_eq!(serial.len(), fleet.len());
+    assert_eq!(serial.len(), 12); // 3 kernels x 2 impls x 2 models
+    for (a, b) in serial.iter().zip(&fleet) {
+        let what = format!("{}/{}/{}", a.kernel, a.implementation, a.model);
+        assert_eq!(a.kernel, b.kernel, "{what}");
+        assert_eq!(a.implementation, b.implementation, "{what}");
+        assert_eq!(a.model, b.model, "{what}");
+        assert_eq!(a.cycles, b.cycles, "{what}");
+        assert_bits_eq(a.time_s, b.time_s, &what);
+        assert_bits_eq(a.energy_mj, b.energy_mj, &what);
+        assert_eq!(a.validated, b.validated, "{what}");
+        assert!(a.validated, "{what}: outputs must stay bit-exact vs the oracle");
+    }
+}
+
+#[test]
+fn case_c_fleet_bit_identical_to_serial() {
+    let cfg = PlatformConfig::default();
+    let serial = experiments::case_c(&Fleet::serial(), &cfg, 40).unwrap();
+    let fleet = experiments::case_c(&Fleet::new(2), &cfg, 40).unwrap();
+    assert_eq!(serial.windows, fleet.windows);
+    assert_eq!(serial.samples_per_window, fleet.samples_per_window);
+    assert_bits_eq(serial.virt_total_s, fleet.virt_total_s, "virt_total_s");
+    assert_bits_eq(serial.phys_total_s, fleet.phys_total_s, "phys_total_s");
+    assert_bits_eq(serial.speedup, fleet.speedup, "speedup");
+}
+
+#[test]
+fn server_survives_four_simultaneous_clients() {
+    let server = Server::spawn(Platform::new(PlatformConfig::default()), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    let mut handles = Vec::new();
+    // client 0 owns the load/run/read flow; the guest result must be
+    // unaffected by the three interrogating clients hammering away
+    handles.push(std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        let src = r#"
+            _start:
+                la t0, out
+                li t1, 4242
+                sw t1, 0(t0)
+                ebreak
+            .data
+            out: .word 0
+        "#;
+        let loaded = c
+            .call(Json::obj(vec![("cmd", Json::from("load_asm")), ("source", Json::from(src))]))
+            .unwrap();
+        let out_addr = loaded.get("symbols").unwrap().get("out").unwrap().as_i64().unwrap();
+        let run = c.call(Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        assert_eq!(run.str_field("exit").unwrap(), "halted");
+        let mem = c
+            .call(Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(out_addr)),
+                ("n", Json::from(1i64)),
+            ]))
+            .unwrap();
+        assert_eq!(mem.as_arr().unwrap()[0].as_i64().unwrap(), 4242);
+    }));
+    // clients 1..3: concurrent read-only traffic on the same platform
+    for _ in 1..4 {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            for _ in 0..25 {
+                let pong = c.call(Json::obj(vec![("cmd", Json::from("ping"))])).unwrap();
+                assert_eq!(pong.as_str().unwrap(), "pong");
+                let regs = c.call(Json::obj(vec![("cmd", Json::from("regs"))])).unwrap();
+                assert_eq!(regs.as_arr().unwrap().len(), 32);
+                let perf = c.call(Json::obj(vec![("cmd", Json::from("perf"))])).unwrap();
+                assert!(perf.get("cycles").unwrap().as_i64().unwrap() >= 0);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}

@@ -2,7 +2,7 @@
 //! (SoC + virtualization + coordinator + server + config).
 
 use femu::config::PlatformConfig;
-use femu::coordinator::{experiments, AppExit, Platform};
+use femu::coordinator::{experiments, AppExit, Fleet, Platform};
 use femu::cpu::Halt;
 use femu::energy::{relative_deviation, EnergyModel};
 use femu::server::{Client, Server};
@@ -31,7 +31,7 @@ fn fig5_full_grid_shape() {
     // who wins and by what factor: CGRA wins everywhere; CONV gains the
     // most; FEMU-vs-chip deviations stay inside the paper's bands
     let cfg = PlatformConfig::default();
-    let all = experiments::fig5_all(&cfg, 42).unwrap();
+    let all = experiments::fig5_all(&Fleet::auto(), &cfg, 42).unwrap();
     assert_eq!(all.len(), 12); // 3 kernels x 2 impls x 2 models
     assert!(all.iter().all(|p| p.validated), "all outputs bit-exact");
 
@@ -78,7 +78,7 @@ fn fig5_full_grid_shape() {
 #[test]
 fn case_c_flash_speedup_band() {
     let cfg = PlatformConfig::default();
-    let r = experiments::case_c(&cfg, 24).unwrap(); // 10 windows, quick
+    let r = experiments::case_c(&Fleet::auto(), &cfg, 24).unwrap(); // 10 windows, quick
     assert!(r.speedup > 180.0 && r.speedup < 320.0, "speedup {}", r.speedup);
     // absolute per-window times scale to the paper's 10 ms / 2.5 s
     let scale_up = 35_000.0 / r.samples_per_window as f64;

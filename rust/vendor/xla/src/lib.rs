@@ -1,0 +1,119 @@
+//! Offline stub of the `xla` PJRT bindings (see README.md).
+//!
+//! Mirrors exactly the API surface femu uses — [`PjRtClient`],
+//! [`PjRtLoadedExecutable`], [`HloModuleProto`], [`XlaComputation`],
+//! [`Literal`], [`PjRtBuffer`] — with every entry point returning
+//! [`Error`] at runtime. This keeps the PJRT-facing code compiling in the
+//! offline build while making its unavailability explicit and catchable
+//! (femu's `Runtime::load` surfaces it as a normal `anyhow` error).
+
+use std::fmt;
+
+/// Error type matching the upstream crate's `Display`-able error.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "XLA/PJRT backend unavailable in this offline build ({what}); \
+             see rust/vendor/xla/README.md"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Parsed HLO module (stub: retains nothing).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle (stub: construction always fails, so the
+/// downstream compile/execute methods are unreachable in practice).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Upstream accepts buffers or literals; femu always passes literals.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device-resident result buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side literal value.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+}
