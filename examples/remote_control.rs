@@ -1,6 +1,11 @@
 //! Remote control: drive the platform through the TCP control server —
 //! the paper's §IV-E "user interface" flow (Python-class-over-Jupyter in
-//! the original; JSON-line protocol here).
+//! the original; a session-oriented JSON-line protocol here).
+//!
+//! Exercises the full wire surface: session-less back-compat commands,
+//! `session.open` with named and inline configs, concurrent per-session
+//! runs, `batch` pipelining, a server-side experiment sweep, and
+//! graceful shutdown.
 //!
 //! ```sh
 //! cargo run --release --example remote_control
@@ -8,21 +13,36 @@
 
 use femu::config::PlatformConfig;
 use femu::coordinator::Platform;
-use femu::server::{Client, Server};
+use femu::server::{Client, Server, ServerOptions};
 use femu::util::Json;
 
 fn main() -> anyhow::Result<()> {
-    // spawn an in-process server on an ephemeral port
+    // spawn an in-process server on an ephemeral port, with one extra
+    // named config a client can instantiate
+    let chip = PlatformConfig::parse("name = \"chip-32mhz\"\nfreq_hz = 32_000_000")?;
+    let opts = ServerOptions {
+        max_sessions: 8,
+        workers: 4,
+        named_configs: vec![("chip-32mhz".into(), chip)],
+        ..ServerOptions::default()
+    };
     let platform = Platform::new(PlatformConfig::default());
-    let server = Server::spawn(platform, "127.0.0.1:0")?;
+    let server = Server::spawn_with(platform, "127.0.0.1:0", opts)?;
     println!("control server at {}", server.addr());
     let mut client = Client::connect(server.addr())?;
 
-    // ping
+    // session-less ping still works (targets the default session 0)
     let pong = client.call(Json::obj(vec![("cmd", Json::from("ping"))]))?;
     println!("ping -> {pong}");
 
-    // load a program remotely
+    // open a private session per "user": one on the default config, one
+    // on the named chip config
+    let mine = client.open_session(Json::Null)?;
+    let chip_session =
+        client.open_session(Json::obj(vec![("config_name", Json::from("chip-32mhz"))]))?;
+    println!("sessions: mine={mine}, chip={chip_session}");
+
+    // load a program into MY session
     let src = r#"
         .equ UART, 0x20000000
         _start:
@@ -45,51 +65,84 @@ fn main() -> anyhow::Result<()> {
         vec:    .space 16
         result: .word 0
     "#;
-    let loaded = client.call(Json::obj(vec![
-        ("cmd", Json::from("load_asm")),
-        ("source", Json::from(src)),
-    ]))?;
+    let loaded = client.call_on(
+        mine,
+        Json::obj(vec![("cmd", Json::from("load_asm")), ("source", Json::from(src))]),
+    )?;
     let vec_addr = loaded.get("symbols")?.get("vec")?.as_i64()?;
     let res_addr = loaded.get("symbols")?.get("result")?.as_i64()?;
     println!("loaded: vec at {vec_addr:#x}, result at {res_addr:#x}");
 
-    // inject operands remotely
-    client.call(Json::obj(vec![
-        ("cmd", Json::from("write_mem")),
-        ("addr", Json::from(vec_addr)),
-        ("values", Json::arr_i32(&[10, 20, 30, -18])),
-    ]))?;
+    // the chip session runs its own guest — its state is invisible to mine
+    client.call_on(
+        chip_session,
+        Json::obj(vec![
+            ("cmd", Json::from("load_asm")),
+            ("source", Json::from("_start: li a0, 5\nebreak")),
+        ]),
+    )?;
+    let chip_run =
+        client.call_on(chip_session, Json::obj(vec![("cmd", Json::from("run"))]))?;
+    println!("chip session run -> exit={}", chip_run.str_field("exit")?);
 
-    // run
-    let run = client.call(Json::obj(vec![("cmd", Json::from("run"))]))?;
-    println!("run -> exit={}", run.str_field("exit")?);
+    // pipeline inject + run + readback against MY session in ONE round trip
+    let batch = client.batch_on(
+        mine,
+        vec![
+            Json::obj(vec![
+                ("cmd", Json::from("write_mem")),
+                ("addr", Json::from(vec_addr)),
+                ("values", Json::arr_i32(&[10, 20, 30, -18])),
+            ]),
+            Json::obj(vec![("cmd", Json::from("run"))]),
+            Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(res_addr)),
+                ("n", Json::from(1i64)),
+            ]),
+            Json::obj(vec![("cmd", Json::from("uart"))]),
+        ],
+    )?;
+    assert_eq!(batch.get("completed")?.as_i64()?, 4);
+    let results = batch.get("results")?.as_arr()?.to_vec();
+    let run = results[1].get("result")?;
+    println!("batched run -> exit={}", run.str_field("exit")?);
     assert_eq!(run.str_field("exit")?, "halted");
-
-    // read the result back
-    let mem = client.call(Json::obj(vec![
-        ("cmd", Json::from("read_mem")),
-        ("addr", Json::from(res_addr)),
-        ("n", Json::from(1i64)),
-    ]))?;
-    let result = mem.as_arr()?[0].as_i64()?;
-    println!("result = {result}");
+    let result = results[2].get("result")?.as_arr()?[0].as_i64()?;
+    println!("batched result = {result}");
     assert_eq!(result, 42);
+    println!("batched uart -> {}", results[3].get("result")?.as_str()?);
 
-    // uart + perf + energy over the wire
-    let uart = client.call(Json::obj(vec![("cmd", Json::from("uart"))]))?;
-    println!("uart -> {uart}");
-    let perf = client.call(Json::obj(vec![("cmd", Json::from("perf"))]))?;
+    // perf + energy over the wire, against my session
+    let perf = client.call_on(mine, Json::obj(vec![("cmd", Json::from("perf"))]))?;
     println!("cycles -> {}", perf.get("cycles")?.as_i64()?);
-    let energy = client.call(Json::obj(vec![
-        ("cmd", Json::from("energy")),
-        ("model", Json::from("heepocrates")),
-    ]))?;
+    let energy = client.call_on(
+        mine,
+        Json::obj(vec![("cmd", Json::from("energy")), ("model", Json::from("heepocrates"))]),
+    )?;
     println!(
         "energy -> {:.6} mJ over {:.6} s",
         energy.get("total_mj")?.as_f64()?,
         energy.get("seconds")?.as_f64()?
     );
 
+    // a server-side experiment: the Fig 4 sweep sharded across the
+    // server's fleet (tiny window to keep the smoke run fast)
+    let sweep = client.call(Json::obj(vec![
+        ("cmd", Json::from("sweep_acquisition")),
+        ("window_s", Json::Num(0.02)),
+    ]))?;
+    println!(
+        "sweep_acquisition -> {} points over the wire",
+        sweep.get("points")?.as_arr()?.len()
+    );
+
+    // who's here?
+    let listed = client.call(Json::obj(vec![("cmd", Json::from("session.list"))]))?;
+    println!("sessions -> {listed}");
+
+    client.close_session(chip_session)?;
+    client.close_session(mine)?;
     server.shutdown();
     println!("remote_control OK");
     Ok(())

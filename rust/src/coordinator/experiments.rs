@@ -102,7 +102,22 @@ pub fn fig4_sweep(
     window_s: f64,
     seed: u64,
 ) -> Result<Vec<Fig4Point>> {
+    fig4_sweep_with_abort(fleet, cfg, window_s, seed, &|| false)
+}
+
+/// [`fig4_sweep`] with a cancellation hook polled before each point —
+/// the control server uses it so shutdown aborts an in-flight sweep.
+pub fn fig4_sweep_with_abort(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    window_s: f64,
+    seed: u64,
+    cancelled: &(dyn Fn() -> bool + Sync),
+) -> Result<Vec<Fig4Point>> {
     fleet.run_sweep(cfg, seed, FIG4_FREQS_HZ.to_vec(), |cfg, f, point_seed| {
+        if cancelled() {
+            bail!("experiment aborted");
+        }
         fig4_point(cfg, f, window_s, point_seed)
     })
 }
@@ -274,7 +289,20 @@ pub fn fig5_cells() -> Vec<(Fig5Kernel, Fig5Impl)> {
 /// The full Fig 5 grid: 3 kernels x {CPU, CGRA} x {femu, chip}, one
 /// fleet point per (kernel, impl) cell.
 pub fn fig5_all(fleet: &Fleet, cfg: &PlatformConfig, seed: u64) -> Result<Vec<Fig5Point>> {
+    fig5_all_with_abort(fleet, cfg, seed, &|| false)
+}
+
+/// [`fig5_all`] with a cancellation hook polled before each cell.
+pub fn fig5_all_with_abort(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    seed: u64,
+    cancelled: &(dyn Fn() -> bool + Sync),
+) -> Result<Vec<Fig5Point>> {
     fleet.run_sweep(cfg, seed, fig5_cells(), |cfg, (kernel, imp), point_seed| {
+        if cancelled() {
+            bail!("experiment aborted");
+        }
         fig5_run(cfg, kernel, imp, point_seed)
     })
 }
@@ -358,11 +386,25 @@ fn case_c_one(cfg: &PlatformConfig, timing: FlashTiming, windows: usize, words: 
 /// same 0xCC dataset: the §V-C content is timing-irrelevant and keeping
 /// it fixed preserves the seed repo's exact staging).
 pub fn case_c(fleet: &Fleet, cfg: &PlatformConfig, scale: usize) -> Result<CaseCResult> {
+    case_c_with_abort(fleet, cfg, scale, &|| false)
+}
+
+/// [`case_c`] with a cancellation hook polled before each timing point —
+/// the control server uses it so shutdown aborts an in-flight study.
+pub fn case_c_with_abort(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    scale: usize,
+    cancelled: &(dyn Fn() -> bool + Sync),
+) -> Result<CaseCResult> {
     let windows = (240 / scale.max(1)).max(2);
     let samples = (35_000 / scale.max(1)).max(200);
     let words = samples / 2;
     let timings = vec![FlashTiming::virtualized(), FlashTiming::physical()];
     let cycles = fleet.run_sweep(cfg, 0xCC, timings, |cfg, timing, _point_seed| {
+        if cancelled() {
+            bail!("experiment aborted");
+        }
         Ok(vec![case_c_one(cfg, timing, windows, words, 0xCC)?])
     })?;
     let (virt_cycles, phys_cycles) = (cycles[0], cycles[1]);

@@ -15,11 +15,21 @@
 //! depends only on (base seed, point index), and aggregation order
 //! depends only on point index. `tests/fleet_determinism.rs` holds the
 //! line on this.
+//!
+//! Two pool shapes live here:
+//!
+//! * [`Fleet`] — scoped, per-sweep threads for the experiment drivers
+//!   (workers borrow the sweep closure; nothing outlives the call);
+//! * [`WorkerPool`] — a long-lived bounded pool of named threads for
+//!   `'static` jobs. The control server dispatches every session command
+//!   onto one of these, which is what bounds its execution concurrency
+//!   regardless of how many connections are open (DESIGN.md §9).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc, Mutex};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::PlatformConfig;
 
@@ -149,6 +159,98 @@ pub fn point_seed(base: u64, index: usize) -> u64 {
     z ^ (z >> 31)
 }
 
+// =====================================================================
+// WorkerPool — long-lived bounded pool for 'static jobs
+// =====================================================================
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A bounded pool of long-lived worker threads executing `'static` jobs
+/// from a shared FIFO queue.
+///
+/// Unlike [`Fleet`] (scoped threads per sweep), a `WorkerPool` outlives
+/// any single call: jobs are boxed closures, submitters can block on a
+/// result with [`WorkerPool::submit_wait`], and [`WorkerPool::shutdown`]
+/// drains the queue — every job already submitted still runs — before
+/// joining the workers. A panicking job is contained (caught per job) and
+/// surfaces to its submitter as an error instead of killing the worker.
+pub struct WorkerPool {
+    sender: Mutex<Option<mpsc::Sender<Job>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` threads (clamped to at least 1).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("femu-pool-{i}"))
+                    .spawn(move || loop {
+                        // Receive outside the job so a panicking job can
+                        // never poison the queue lock.
+                        let job = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
+                        match job {
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Err(_) => break, // sender dropped: pool shut down
+                        }
+                    })
+                    .expect("spawning pool worker thread")
+            })
+            .collect();
+        Self { sender: Mutex::new(Some(tx)), handles: Mutex::new(handles), workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Enqueue a fire-and-forget job. Errors if the pool is shut down.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
+        let guard = self.sender.lock().unwrap_or_else(|p| p.into_inner());
+        let tx = guard.as_ref().ok_or_else(|| anyhow!("worker pool is shut down"))?;
+        tx.send(Box::new(job)).map_err(|_| anyhow!("worker pool is shut down"))
+    }
+
+    /// Enqueue `f` and block until a worker has run it, returning its
+    /// result. This is the backpressure point: with all workers busy the
+    /// caller waits in queue order.
+    pub fn submit_wait<T: Send + 'static>(
+        &self,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> Result<T> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(move || {
+            let _ = tx.send(f());
+        })?;
+        rx.recv().map_err(|_| anyhow!("worker abandoned the job (panic during execution?)"))
+    }
+
+    /// Stop accepting jobs, drain everything already queued, and join the
+    /// workers. Idempotent; callable through a shared reference.
+    pub fn shutdown(&self) {
+        drop(self.sender.lock().unwrap_or_else(|p| p.into_inner()).take());
+        let handles: Vec<_> =
+            self.handles.lock().unwrap_or_else(|p| p.into_inner()).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,5 +305,44 @@ mod tests {
         assert_eq!(Fleet::new(0).workers(), 1);
         assert!(Fleet::serial().is_serial());
         assert!(Fleet::auto().workers() >= 1);
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_returns_results() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        let results: Vec<usize> = (0..10)
+            .map(|i| pool.submit_wait(move || i * i))
+            .collect::<Result<_>>()
+            .unwrap();
+        assert_eq!(results, (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_shutdown_drains_queued_jobs_then_rejects() {
+        use std::sync::atomic::AtomicUsize;
+        let pool = WorkerPool::new(1);
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let done = done.clone();
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                done.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 8, "queued jobs must drain on shutdown");
+        assert!(pool.submit(|| ()).is_err());
+        assert!(pool.submit_wait(|| 1).is_err());
+    }
+
+    #[test]
+    fn pool_contains_a_panicking_job() {
+        let pool = WorkerPool::new(1);
+        let err = pool.submit_wait(|| -> usize { panic!("job exploded") }).unwrap_err();
+        assert!(format!("{err:#}").contains("abandoned"), "{err:#}");
+        // the worker survives and keeps serving
+        assert_eq!(pool.submit_wait(|| 7usize).unwrap(), 7);
     }
 }

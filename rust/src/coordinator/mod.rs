@@ -11,13 +11,15 @@
 //! benches and the CLI share (DESIGN.md §5 maps them). The drivers run on
 //! an experiment [`Fleet`] — a worker pool that shards sweep points
 //! across threads with serial-order, bit-identical aggregation
-//! (DESIGN.md §8).
+//! (DESIGN.md §8). The control server reuses the same pool machinery: a
+//! [`WorkerPool`] of long-lived threads executes every session command
+//! (DESIGN.md §9).
 
 pub mod experiments;
 pub mod fleet;
 pub mod table1;
 
-pub use fleet::Fleet;
+pub use fleet::{Fleet, WorkerPool};
 
 use anyhow::{anyhow, Context, Result};
 

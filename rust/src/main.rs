@@ -10,6 +10,8 @@
 //! femu flash-study [--scale N] [--config ..]                 (Case C)
 //! femu table1                                                (Table I)
 //! femu serve [--addr HOST:PORT] [--artifacts DIR] [--config ..]
+//!            [--max-sessions N] [--workers N] [--idle-timeout SECS]
+//!            [--configs DIR]
 //! ```
 //!
 //! Experiment subcommands shard their sweep across an experiment fleet
@@ -118,7 +120,8 @@ fn print_usage() {
          femu kernels [--validate]                    reproduce Fig 5\n  \
          femu flash-study [--scale N]                 reproduce Case C (\u{a7}V-C)\n  \
          femu table1                                  reproduce Table I\n  \
-         femu serve [--addr HOST:PORT] [--artifacts DIR]\n\n\
+         femu serve [--addr HOST:PORT] [--artifacts DIR] [--max-sessions N]\n  \
+         \x20          [--workers N] [--idle-timeout SECS] [--configs DIR]\n\n\
          Experiment subcommands accept --workers N (fleet size; default: \
          one per core)\n  \
          and --serial (single-threaded reference path)."
@@ -402,13 +405,52 @@ fn cmd_table1() -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let addr = args.flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:9178");
+    let mut opts = femu::server::ServerOptions::default();
+    if let Some(v) = args.flags.get("max-sessions") {
+        opts.max_sessions = v.parse().with_context(|| format!("--max-sessions `{v}`"))?;
+    }
+    if let Some(v) = args.flags.get("workers") {
+        opts.workers = v.parse().with_context(|| format!("--workers `{v}`"))?;
+    }
+    if let Some(v) = args.flags.get("idle-timeout") {
+        let secs: u64 = v.parse().with_context(|| format!("--idle-timeout `{v}`"))?;
+        if secs == 0 {
+            bail!("--idle-timeout must be at least 1 second");
+        }
+        opts.idle_timeout = std::time::Duration::from_secs(secs);
+    }
+    if let Some(dir) = args.flags.get("configs") {
+        for entry in std::fs::read_dir(dir).with_context(|| format!("reading {dir}"))? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+                continue;
+            }
+            let name = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .ok_or_else(|| anyhow!("bad config filename {path:?}"))?
+                .to_string();
+            opts.named_configs.push((name, PlatformConfig::load(&path)?));
+        }
+    }
     let mut platform = Platform::new(cfg);
     if let Some(dir) = args.flags.get("artifacts") {
         platform.attach_artifacts(dir)?;
     }
-    let server = femu::server::Server::spawn(platform, addr)?;
+    let workers = opts.workers;
+    let max_sessions = opts.max_sessions;
+    let named: Vec<String> = opts.named_configs.iter().map(|(n, _)| n.clone()).collect();
+    let server = femu::server::Server::spawn_with(platform, addr, opts)?;
     println!("femu control server listening on {}", server.addr());
-    println!("protocol: one JSON object per line; try {{\"cmd\":\"ping\"}}");
+    println!(
+        "sessions: {max_sessions} max, {workers} worker(s); named configs: default{}{}",
+        if named.is_empty() { "" } else { ", " },
+        named.join(", ")
+    );
+    println!(
+        "protocol: one JSON object per line; try {{\"cmd\":\"ping\"}} or \
+         {{\"cmd\":\"session.open\"}}"
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -3,242 +3,390 @@
 //! Paper §IV-E wraps the platform in a Python class served through
 //! Jupyter so "any HTTP client can connect to the platform and access its
 //! internal functionalities". The equivalent here is a TCP JSON-line
-//! protocol (one JSON object per line, request/response) exposing the
-//! same functionality: program loading, execution control, memory and
-//! register access, perf counters, and energy estimation. [`Client`] is
-//! the in-repo convenience wrapper (`examples/remote_control.rs` drives
-//! it end to end).
+//! protocol (one JSON object per line, request/response) — but grown into
+//! a **session-oriented control service** (DESIGN.md §9):
+//!
+//! * `session.open` gives each client a *private* [`Platform`] built from
+//!   a named or inline [`PlatformConfig`]; commands carry a `session` id.
+//!   Two sessions never contend on each other's emulator state, so
+//!   concurrent users' `run`s proceed in parallel.
+//! * every command executes on a bounded [`WorkerPool`] (the
+//!   `coordinator/fleet.rs` pool machinery), which bounds execution
+//!   concurrency regardless of connection count;
+//! * `batch` pipelines an array of commands against one session in a
+//!   single round trip;
+//! * the §V experiment drivers (`sweep_acquisition`, `kernels`,
+//!   `flash_study`) are callable over the wire and shard across a shared
+//!   [`Fleet`], same as the CLI;
+//! * shutdown is graceful: the accept loop stops, live connections are
+//!   unblocked (per-stream read timeouts + stream shutdown) and joined,
+//!   in-flight commands finish (long `run`s are interrupted at a slice
+//!   boundary), the pool drains, and sessions are torn down in id order.
+//!
+//! Requests without a `session` field target session 0 — the platform
+//! `Server::spawn` received — so the original session-less protocol keeps
+//! working unchanged. [`Client`] is the in-repo convenience wrapper
+//! (`examples/remote_control.rs` drives it end to end).
 //!
 //! Threading note: the std TCP listener + thread-per-connection model is
 //! used because tokio is unavailable in the offline build environment
-//! (Cargo.toml); the protocol is line-oriented and stateless per request,
-//! so the transport choice is invisible to clients.
+//! (Cargo.toml); connection threads only parse and route — execution
+//! concurrency is owned by the pool.
+
+pub mod protocol;
+pub mod session;
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{AppExit, Platform};
-use crate as femu;
-use crate::energy::EnergyModel;
+use crate::config::PlatformConfig;
+use crate::coordinator::fleet::WorkerPool;
+use crate::coordinator::{Fleet, Platform};
 use crate::util::Json;
 
-/// Platform wrapper moved into the server thread. The `xla` crate's PJRT
-/// handles are `Rc`-based and thus not `Send`; every access here happens
-/// with the `Mutex` held and the `Rc`s never escape the platform, so
-/// moving the whole platform between threads is sound.
-struct SendPlatform(Platform);
-// SAFETY: see above — Mutex-serialized access, no Rc clones escape.
-unsafe impl Send for SendPlatform {}
+pub use session::{ConfigRegistry, Session, SessionTable, DEFAULT_SESSION};
+
+/// How long a blocked connection read waits before re-checking the stop
+/// flag. Bounds the shutdown latency contribution of idle connections.
+const READ_TICK: Duration = Duration::from_millis(100);
+
+/// Accept-loop poll interval; idle-session reaping runs every
+/// [`REAP_EVERY_TICKS`] of these.
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
+const REAP_EVERY_TICKS: u32 = 100;
+
+/// Server sizing knobs (`femu serve --max-sessions --workers
+/// --idle-timeout`).
+pub struct ServerOptions {
+    /// Session-table capacity, *including* the default session 0.
+    pub max_sessions: usize,
+    /// Worker-pool width: how many commands execute concurrently. Also
+    /// sizes the shared experiment [`Fleet`].
+    pub workers: usize,
+    /// Idle sessions (except session 0) older than this are reaped.
+    pub idle_timeout: Duration,
+    /// Extra named configs for `session.open {"config_name": ...}`;
+    /// `"default"` (the spawn config) is always registered.
+    pub named_configs: Vec<(String, PlatformConfig)>,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self {
+            max_sessions: 8,
+            // at least 2 so one long run never serializes the server
+            workers: cores.max(2),
+            idle_timeout: Duration::from_secs(300),
+            named_configs: Vec::new(),
+        }
+    }
+}
+
+/// Live connections: one registered stream clone (for shutdown) and one
+/// join handle per connection thread.
+type ConnRegistry = Arc<Mutex<Vec<(TcpStream, std::thread::JoinHandle<()>)>>>;
+
+/// State shared by the accept loop, connection threads, and pool jobs.
+struct Shared {
+    stop: AtomicBool,
+    sessions: SessionTable,
+    registry: ConfigRegistry,
+    pool: WorkerPool,
+    fleet: Fleet,
+    /// Experiment sweeps spawn up to `fleet.workers()` scoped threads of
+    /// their own; running them one at a time keeps total execution
+    /// threads bounded at ~2x the pool width no matter how many clients
+    /// ask for sweeps concurrently. Acquired with `try_lock`: a second
+    /// concurrent experiment is refused outright rather than parking on
+    /// a pool worker (which would starve session commands).
+    experiment_lock: Mutex<()>,
+}
 
 /// A running control server.
 pub struct Server {
     addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: ConnRegistry,
 }
 
 impl Server {
-    /// Bind and serve `platform` on `addr` (use port 0 for ephemeral).
+    /// Bind and serve `platform` on `addr` (use port 0 for ephemeral)
+    /// with default sizing. `platform` becomes session 0.
     pub fn spawn(platform: Platform, addr: &str) -> Result<Server> {
+        Self::spawn_with(platform, addr, ServerOptions::default())
+    }
+
+    /// Bind and serve with explicit sizing.
+    pub fn spawn_with(platform: Platform, addr: &str, opts: ServerOptions) -> Result<Server> {
         let listener = TcpListener::bind(addr).context("binding control server")?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let platform = Arc::new(Mutex::new(SendPlatform(platform)));
-        let handle = std::thread::spawn(move || {
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let p = platform.clone();
-                        let stop3 = stop2.clone();
-                        std::thread::spawn(move || {
-                            let _ = serve_connection(stream, p, stop3);
-                        });
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
-            }
+
+        let mut registry = ConfigRegistry::new(platform.cfg.clone());
+        for (name, cfg) in opts.named_configs {
+            registry.register(name, cfg);
+        }
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            sessions: SessionTable::new(platform, opts.max_sessions, opts.idle_timeout),
+            registry,
+            pool: WorkerPool::new(opts.workers),
+            fleet: Fleet::new(opts.workers),
+            experiment_lock: Mutex::new(()),
         });
-        Ok(Server { addr: local, stop, handle: Some(handle) })
+        let conns: ConnRegistry = Arc::new(Mutex::new(Vec::new()));
+
+        let shared2 = shared.clone();
+        let conns2 = conns.clone();
+        let accept = std::thread::Builder::new()
+            .name("femu-accept".into())
+            .spawn(move || {
+                let mut tick = 0u32;
+                while !shared2.stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let registered = match stream.try_clone() {
+                                Ok(c) => c,
+                                Err(_) => continue,
+                            };
+                            stream.set_nodelay(true).ok();
+                            stream.set_read_timeout(Some(READ_TICK)).ok();
+                            let s = shared2.clone();
+                            let handle = std::thread::spawn(move || {
+                                let _ = serve_connection(stream, s);
+                            });
+                            let mut reg = conns2.lock().unwrap_or_else(|p| p.into_inner());
+                            reg.retain(|(_, h)| !h.is_finished());
+                            reg.push((registered, handle));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(ACCEPT_TICK);
+                            tick = tick.wrapping_add(1);
+                            if tick % REAP_EVERY_TICKS == 0 {
+                                shared2.sessions.reap_idle();
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawning accept thread");
+
+        Ok(Server { addr: local, shared, accept: Some(accept), conns })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
+    /// Graceful shutdown: returns only after the accept loop and **all**
+    /// connection threads are joined, the worker pool has drained, and
+    /// every session is torn down. In-flight commands finish (long runs
+    /// are interrupted at their next slice boundary).
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
             let _ = h.join();
+        }
+        // Unblock every connection first, then join: a connection thread
+        // may be waiting on a pool job, which observes the stop flag.
+        let conns: Vec<_> =
+            self.conns.lock().unwrap_or_else(|p| p.into_inner()).drain(..).collect();
+        for (stream, _) in &conns {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        for (_, handle) in conns {
+            let _ = handle.join();
+        }
+        // No submitters remain: drain queued jobs and join the workers.
+        self.shared.pool.shutdown();
+        // Deterministic teardown, session 0 first.
+        for session in self.shared.sessions.drain() {
+            drop(session);
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        self.shutdown_impl();
     }
 }
 
-fn serve_connection(
-    stream: TcpStream,
-    platform: Arc<Mutex<SendPlatform>>,
-    stop: Arc<AtomicBool>,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
+fn serve_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    let mut line = String::new();
-    while !stop.load(Ordering::Relaxed) {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+    // byte buffer (not String): read_until keeps partially-read requests
+    // across read timeouts, with no UTF-8 guard to discard them
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return Ok(());
         }
-        let response = match handle_request(&line, &platform) {
-            Ok(v) => Json::obj(vec![("ok", Json::Bool(true)), ("result", v)]),
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(format!("{e:#}"))),
-            ]),
-        };
-        writeln!(writer, "{response}")?;
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {
+                let response = match std::str::from_utf8(&buf) {
+                    Ok(line) => match dispatch(line, &shared) {
+                        Ok(v) => Json::obj(vec![("ok", Json::Bool(true)), ("result", v)]),
+                        Err(e) => Json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("error", Json::Str(format!("{e:#}"))),
+                        ]),
+                    },
+                    Err(_) => Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::from("request is not valid UTF-8")),
+                    ]),
+                };
+                buf.clear();
+                writeln!(writer, "{response}")?;
+            }
+            // read timeout: partial data (if any) stays in `buf`;
+            // re-check the stop flag and keep reading
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e.into()),
+        }
     }
-    Ok(())
 }
 
-fn handle_request(line: &str, platform: &Arc<Mutex<SendPlatform>>) -> Result<Json> {
+/// Optional `session` field, defaulting to the default session.
+fn session_field(req: &Json) -> Result<u64> {
+    match req.opt("session") {
+        None => Ok(DEFAULT_SESSION),
+        Some(v) => {
+            let id = v.as_i64()?;
+            u64::try_from(id).map_err(|_| anyhow!("`session` {id} out of range"))
+        }
+    }
+}
+
+/// Route one request line: table operations run inline on the connection
+/// thread (cheap, never blocked by running guests); everything that
+/// touches a platform or a sweep is dispatched onto the worker pool.
+fn dispatch(line: &str, shared: &Arc<Shared>) -> Result<Json> {
     let req = Json::parse(line.trim()).context("parsing request")?;
-    let cmd = req.str_field("cmd")?;
-    let mut guard = platform.lock().map_err(|_| anyhow!("platform lock poisoned"))?;
-    let p = &mut guard.0;
-    match cmd {
+    let cmd = req.str_field("cmd")?.to_string();
+    match cmd.as_str() {
+        // ping answers inline so liveness probes work even with every
+        // worker busy
         "ping" => Ok(Json::from("pong")),
-        "load_asm" => {
-            let src = req.str_field("source")?;
-            let prog = p.dbg.load_source(src)?;
-            let symbols = Json::Obj(
-                prog.symbols
-                    .iter()
-                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
-                    .collect(),
-            );
+        "session.open" => {
+            if shared.stop.load(Ordering::Relaxed) {
+                bail!("server is shutting down");
+            }
+            let (cfg, label) = shared.registry.resolve(&req)?;
+            let session = shared.sessions.open(Platform::new(cfg), label)?;
             Ok(Json::obj(vec![
-                ("entry", Json::from(prog.entry as i64)),
-                ("text_words", Json::from(prog.text.len() as i64)),
-                ("symbols", symbols),
+                ("session", Json::from(session.id() as i64)),
+                ("config", Json::from(session.config_label())),
             ]))
         }
-        "run" => {
-            let budget = req.opt("max_cycles").map(|v| v.as_i64()).transpose()?.unwrap_or(1 << 33)
-                as u64;
-            let exit = p.run_app(budget)?;
-            let (kind, detail) = match exit {
-                AppExit::Halted(h) => ("halted", format!("{h:?}")),
-                AppExit::Budget => ("budget", String::new()),
-            };
-            Ok(Json::obj(vec![
-                ("exit", Json::from(kind)),
-                ("detail", Json::Str(detail)),
-                ("cycles", Json::from(p.dbg.soc.now as i64)),
-            ]))
-        }
-        "reset" => {
-            let entry = req.opt("entry").map(|v| v.as_i64()).transpose()?.unwrap_or(0) as u32;
-            p.dbg.reset(entry);
+        "session.close" => {
+            let id = req.get("session")?.as_i64()?;
+            let id = u64::try_from(id).map_err(|_| anyhow!("`session` {id} out of range"))?;
+            shared.sessions.close(id)?;
             Ok(Json::Null)
         }
-        "regs" => Ok(Json::Arr(
-            p.dbg.soc.cpu.regs.iter().map(|&r| Json::Num(r as i32 as f64)).collect(),
-        )),
-        "read_mem" => {
-            let addr = req.get("addr")?.as_i64()? as u32;
-            let n = req.get("n")?.as_usize()?;
-            let vals = p.dbg.read_i32_slice(addr, n)?;
-            Ok(Json::arr_i32(&vals))
-        }
-        "write_mem" => {
-            let addr = req.get("addr")?.as_i64()? as u32;
-            let vals: Vec<i32> = req
-                .get("values")?
-                .as_arr()?
-                .iter()
-                .map(|v| v.as_i64().map(|x| x as i32))
-                .collect::<Result<_>>()?;
-            p.dbg.write_i32_slice(addr, &vals)?;
-            Ok(Json::Null)
-        }
-        "disasm" => {
-            let addr = req.get("addr")?.as_i64()? as u32;
-            let n = req.get("n")?.as_usize()?;
-            let words: Vec<u32> = (0..n)
-                .map(|i| p.dbg.read32(addr + (i * 4) as u32).map(|w| w))
-                .collect::<Result<_>>()?;
-            Ok(Json::Str(femu::isa::listing(&words, addr)))
-        }
-        "step" => {
-            let stop = p.dbg.step();
-            Ok(Json::obj(vec![
-                ("stop", Json::Str(format!("{stop:?}"))),
-                ("pc", Json::from(p.dbg.pc() as i64)),
-            ]))
-        }
-        "add_breakpoint" => {
-            let addr = req.get("addr")?.as_i64()? as u32;
-            p.dbg.add_breakpoint(addr);
-            Ok(Json::Null)
-        }
-        "remove_breakpoint" => {
-            let addr = req.get("addr")?.as_i64()? as u32;
-            p.dbg.remove_breakpoint(addr);
-            Ok(Json::Null)
-        }
-        "uart" => {
-            let bytes = p.dbg.uart();
-            Ok(Json::Str(String::from_utf8_lossy(&bytes).into_owned()))
-        }
-        "perf" => {
-            let snap = p.snapshot();
-            let mut domains = std::collections::BTreeMap::new();
-            for (d, c) in snap.domains() {
-                domains.insert(
-                    d.to_string(),
-                    Json::obj(vec![
-                        ("active", Json::from(c.counts[0] as i64)),
-                        ("clock_gated", Json::from(c.counts[1] as i64)),
-                        ("power_gated", Json::from(c.counts[2] as i64)),
-                        ("retention", Json::from(c.counts[3] as i64)),
-                    ]),
+        "session.list" => Ok(shared.sessions.describe()),
+        "batch" => {
+            let session = shared.sessions.get(session_field(&req)?)?;
+            let sub: Vec<Json> = req.get("requests")?.as_arr()?.to_vec();
+            if sub.len() > protocol::MAX_BATCH_REQUESTS {
+                bail!(
+                    "batch of {} exceeds the {}-request cap",
+                    sub.len(),
+                    protocol::MAX_BATCH_REQUESTS
                 );
             }
-            Ok(Json::obj(vec![
-                ("cycles", Json::from(snap.cycles as i64)),
-                ("domains", Json::Obj(domains)),
-            ]))
+            let shared2 = shared.clone();
+            shared.pool.submit_wait(move || run_batch(&shared2, &session, &sub))?
         }
-        "energy" => {
-            let model_name = req.opt("model").map(|v| v.as_str()).transpose()?.unwrap_or("femu");
-            let model = EnergyModel::by_name(model_name)
-                .ok_or_else(|| anyhow!("unknown energy model `{model_name}`"))?;
-            let snap = p.snapshot();
-            let r = model.estimate(&snap);
-            Ok(Json::obj(vec![
-                ("model", Json::from(model_name)),
-                ("total_mj", Json::Num(r.total_mj)),
-                ("active_mj", Json::Num(r.active_mj)),
-                ("sleep_mj", Json::Num(r.sleep_mj)),
-                ("seconds", Json::Num(r.seconds())),
-            ]))
+        _ if protocol::is_experiment_cmd(&cmd) => {
+            let (cfg, _) = shared.registry.resolve(&req)?;
+            let shared2 = shared.clone();
+            // the match scrutinee borrows `cmd`, so the job gets a clone
+            let cmd = cmd.clone();
+            shared.pool.submit_wait(move || {
+                let _one_at_a_time = match shared2.experiment_lock.try_lock() {
+                    Ok(guard) => guard,
+                    Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+                    Err(std::sync::TryLockError::WouldBlock) => {
+                        return Err(anyhow!(
+                            "another experiment is already running; retry when it finishes"
+                        ))
+                    }
+                };
+                let cancelled = || shared2.stop.load(Ordering::Relaxed);
+                protocol::execute_experiment_cmd(&shared2.fleet, &cfg, &cmd, &req, &cancelled)
+            })?
         }
-        other => Err(anyhow!("unknown command `{other}`")),
+        _ => {
+            let session = shared.sessions.get(session_field(&req)?)?;
+            let shared2 = shared.clone();
+            let cmd = cmd.clone();
+            shared.pool.submit_wait(move || {
+                session.with_platform(|p| {
+                    let cancelled =
+                        || shared2.stop.load(Ordering::Relaxed) || session.cancelled();
+                    protocol::execute_platform_cmd(p, &cmd, &req, &cancelled)
+                })?
+            })?
+        }
     }
+}
+
+/// Execute a `batch`'s sub-requests in order against one session,
+/// aborting after the first failure. The response carries one entry per
+/// executed sub-request plus the count of successes.
+fn run_batch(shared: &Arc<Shared>, session: &Arc<Session>, sub: &[Json]) -> Result<Json> {
+    session.with_platform(|p| {
+        let cancelled = || shared.stop.load(Ordering::Relaxed) || session.cancelled();
+        let mut results = Vec::with_capacity(sub.len());
+        let mut completed = 0i64;
+        for r in sub {
+            let outcome = r.str_field("cmd").map(str::to_string).and_then(|c| {
+                if c == "batch" || c.starts_with("session.") || protocol::is_experiment_cmd(&c) {
+                    bail!("`{c}` is not allowed inside a batch");
+                }
+                protocol::execute_platform_cmd(p, &c, r, &cancelled)
+            });
+            match outcome {
+                Ok(v) => {
+                    results.push(Json::obj(vec![("ok", Json::Bool(true)), ("result", v)]));
+                    completed += 1;
+                }
+                Err(e) => {
+                    results.push(Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::Str(format!("{e:#}"))),
+                    ]));
+                    break;
+                }
+            }
+        }
+        Ok(Json::obj(vec![
+            ("results", Json::Arr(results)),
+            ("completed", Json::from(completed)),
+        ]))
+    })?
 }
 
 /// Line-protocol client.
@@ -256,15 +404,64 @@ impl Client {
 
     /// Send one request object; returns the `result` payload.
     pub fn call(&mut self, request: Json) -> Result<Json> {
-        writeln!(self.writer, "{request}")?;
+        writeln!(self.writer, "{request}").context("sending request to control server")?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        let n = self.reader.read_line(&mut line).context("reading server response")?;
+        if n == 0 {
+            bail!("connection closed by server");
+        }
         let resp = Json::parse(line.trim())?;
         if resp.get("ok")?.as_bool()? {
             Ok(resp.opt("result").cloned().unwrap_or(Json::Null))
         } else {
             Err(anyhow!("server error: {}", resp.str_field("error").unwrap_or("?")))
         }
+    }
+
+    /// Send a request with a `session` field added.
+    pub fn call_on(&mut self, session: u64, request: Json) -> Result<Json> {
+        self.call(with_field(request, "session", Json::from(session as i64))?)
+    }
+
+    /// Open a session; `opts` is `Json::Null` for the default config, or
+    /// an object carrying `config` / `config_name`.
+    pub fn open_session(&mut self, opts: Json) -> Result<u64> {
+        let req = match opts {
+            Json::Null => Json::obj(vec![]),
+            obj @ Json::Obj(_) => obj,
+            other => bail!("open_session opts must be an object or null, got {other:?}"),
+        };
+        let resp = self.call(with_field(req, "cmd", Json::from("session.open"))?)?;
+        let id = resp.get("session")?.as_i64()?;
+        u64::try_from(id).map_err(|_| anyhow!("server returned bad session id {id}"))
+    }
+
+    pub fn close_session(&mut self, session: u64) -> Result<()> {
+        self.call(Json::obj(vec![
+            ("cmd", Json::from("session.close")),
+            ("session", Json::from(session as i64)),
+        ]))?;
+        Ok(())
+    }
+
+    /// Pipeline `requests` against one session in a single round trip;
+    /// returns the raw `{results, completed}` payload.
+    pub fn batch_on(&mut self, session: u64, requests: Vec<Json>) -> Result<Json> {
+        self.call(Json::obj(vec![
+            ("cmd", Json::from("batch")),
+            ("session", Json::from(session as i64)),
+            ("requests", Json::Arr(requests)),
+        ]))
+    }
+}
+
+fn with_field(v: Json, key: &str, val: Json) -> Result<Json> {
+    match v {
+        Json::Obj(mut m) => {
+            m.insert(key.to_string(), val);
+            Ok(Json::Obj(m))
+        }
+        other => bail!("expected a request object, got {other:?}"),
     }
 }
 
@@ -349,5 +546,54 @@ mod tests {
         // connection still usable
         assert!(client.call(Json::obj(vec![("cmd", Json::from("ping"))])).is_ok());
         server.shutdown();
+    }
+
+    #[test]
+    fn session_open_list_close_over_the_wire() {
+        let (server, mut client) = spawn();
+        let id = client.open_session(Json::Null).unwrap();
+        assert!(id > 0);
+        let listed = client.call(Json::obj(vec![("cmd", Json::from("session.list"))])).unwrap();
+        let ids: Vec<i64> = listed
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.get("session").unwrap().as_i64().unwrap())
+            .collect();
+        assert!(ids.contains(&0) && ids.contains(&(id as i64)));
+        client.close_session(id).unwrap();
+        let err = client.call_on(id, Json::obj(vec![("cmd", Json::from("regs"))])).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown session"), "{err:#}");
+        // the default session backs the session-less protocol: not closable
+        let err = client.close_session(DEFAULT_SESSION).unwrap_err();
+        assert!(format!("{err:#}").contains("cannot be closed"), "{err:#}");
+        client.call(Json::obj(vec![("cmd", Json::from("regs"))])).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_config_name_is_a_clean_error() {
+        let (server, mut client) = spawn();
+        let err = client
+            .open_session(Json::obj(vec![("config_name", Json::from("warp-chip"))]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown config"), "{err:#}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn client_reports_connection_closed_by_server() {
+        let (server, mut client) = spawn();
+        assert!(client.call(Json::obj(vec![("cmd", Json::from("ping"))])).is_ok());
+        server.shutdown();
+        let err = client.call(Json::obj(vec![("cmd", Json::from("ping"))])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("connection closed by server")
+                || msg.contains("sending request")
+                || msg.contains("reading server response"),
+            "expected a connection-level error, got: {msg}"
+        );
+        assert!(!msg.contains("parsing"), "must not surface a JSON parse error: {msg}");
     }
 }

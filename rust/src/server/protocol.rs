@@ -1,0 +1,613 @@
+//! The control-server wire protocol: request field validation and the
+//! per-platform command interpreter.
+//!
+//! One JSON object per line, request/response. Every numeric field is
+//! range-checked *before* it is cast — a negative `max_cycles` or an
+//! `addr` outside the 32-bit bus is a protocol error carried back to the
+//! client, never a silent wrap or a debug-build panic. Command execution
+//! here is pure of any transport or session concern: it takes `&mut
+//! Platform` plus the parsed request and returns the `result` payload
+//! (`server/mod.rs` owns dispatch, sessions, and the worker pool).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::PlatformConfig;
+use crate::coordinator::{experiments, AppExit, Fleet, Platform};
+use crate::energy::EnergyModel;
+use crate::util::Json;
+use crate as femu;
+
+/// Cap on `read_mem` / `write_mem` / `disasm` word counts: a protocol
+/// guard against one request pinning a worker on a gigabyte transfer.
+pub const MAX_TRANSFER_WORDS: usize = 1 << 20;
+
+/// Cap on sub-requests per `batch`.
+pub const MAX_BATCH_REQUESTS: usize = 1024;
+
+/// Cycles a `run` executes between cancellation checks. Small enough
+/// that `session.close` and server shutdown interrupt a runaway guest in
+/// well under a second; large enough that the re-entry overhead on the
+/// event-driven run loop is unmeasurable.
+pub const RUN_SLICE_CYCLES: u64 = 2_000_000;
+
+/// Default `run` budget when the request does not carry `max_cycles`.
+pub const DEFAULT_RUN_BUDGET: u64 = 1 << 33;
+
+// ---------------------------------------------------------------------
+// field validation
+// ---------------------------------------------------------------------
+
+/// A required 32-bit bus address / value field.
+pub fn u32_field(req: &Json, key: &str) -> Result<u32> {
+    let v = req.get(key)?.as_i64()?;
+    u32::try_from(v).map_err(|_| anyhow!("`{key}` {v} out of range (want 0..=4294967295)"))
+}
+
+/// An optional u32 field with a default.
+pub fn opt_u32_field(req: &Json, key: &str, default: u32) -> Result<u32> {
+    match req.opt(key) {
+        None => Ok(default),
+        Some(v) => {
+            let v = v.as_i64()?;
+            u32::try_from(v)
+                .map_err(|_| anyhow!("`{key}` {v} out of range (want 0..=4294967295)"))
+        }
+    }
+}
+
+/// A required word-count field, capped at [`MAX_TRANSFER_WORDS`].
+pub fn count_field(req: &Json, key: &str) -> Result<usize> {
+    let v = req.get(key)?.as_i64()?;
+    if v < 0 {
+        bail!("`{key}` must be non-negative, got {v}");
+    }
+    let n = v as usize;
+    if n > MAX_TRANSFER_WORDS {
+        bail!("`{key}` {n} exceeds the {MAX_TRANSFER_WORDS}-word transfer cap");
+    }
+    Ok(n)
+}
+
+/// The `run` budget: optional, non-negative (a negative budget must not
+/// wrap through `as u64` into a ~2^64-cycle run).
+pub fn budget_field(req: &Json) -> Result<u64> {
+    match req.opt("max_cycles") {
+        None => Ok(DEFAULT_RUN_BUDGET),
+        Some(v) => {
+            let b = v.as_i64()?;
+            if b < 0 {
+                bail!("`max_cycles` must be non-negative, got {b}");
+            }
+            Ok(b as u64)
+        }
+    }
+}
+
+/// An optional seed field (any integer; reinterpreted as u64 bits).
+pub fn seed_field(req: &Json, default: u64) -> Result<u64> {
+    match req.opt("seed") {
+        None => Ok(default),
+        Some(v) => Ok(v.as_i64()? as u64),
+    }
+}
+
+/// A memory-word value: accepts the i32 range and the u32 range (the
+/// bus carries 32-bit words; `read_mem` reports them signed), rejecting
+/// anything that would silently truncate through `as i32`.
+pub fn word_value(v: &Json) -> Result<i32> {
+    let v = v.as_i64()?;
+    if !(i32::MIN as i64..=u32::MAX as i64).contains(&v) {
+        bail!("memory value {v} does not fit in 32 bits");
+    }
+    Ok(v as i32) // identical low-32 bit pattern for both accepted ranges
+}
+
+/// Check that `words` 32-bit words starting at `addr` stay inside the
+/// 32-bit address space (checked arithmetic — no wrap, no panic).
+pub fn check_span(addr: u32, words: usize) -> Result<()> {
+    let end = addr as u64 + words as u64 * 4;
+    if end > 1 << 32 {
+        bail!("address range {addr:#x}+{words} words overflows the 32-bit bus");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// per-platform command execution
+// ---------------------------------------------------------------------
+
+/// Execute one platform-bound command against `p`. `cancelled` is polled
+/// between `run` slices so session close / server shutdown interrupt
+/// long runs at a bounded latency.
+pub fn execute_platform_cmd(
+    p: &mut Platform,
+    cmd: &str,
+    req: &Json,
+    cancelled: &dyn Fn() -> bool,
+) -> Result<Json> {
+    match cmd {
+        "ping" => Ok(Json::from("pong")),
+        "load_asm" => {
+            let src = req.str_field("source")?;
+            let prog = p.dbg.load_source(src)?;
+            let symbols = Json::Obj(
+                prog.symbols
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                    .collect(),
+            );
+            Ok(Json::obj(vec![
+                ("entry", Json::from(prog.entry as i64)),
+                ("text_words", Json::from(prog.text.len() as i64)),
+                ("symbols", symbols),
+            ]))
+        }
+        "run" => run_sliced(p, budget_field(req)?, cancelled),
+        "reset" => {
+            p.dbg.reset(opt_u32_field(req, "entry", 0)?);
+            Ok(Json::Null)
+        }
+        "regs" => Ok(Json::Arr(
+            p.dbg.soc.cpu.regs.iter().map(|&r| Json::Num(r as i32 as f64)).collect(),
+        )),
+        "read_mem" => {
+            let addr = u32_field(req, "addr")?;
+            let n = count_field(req, "n")?;
+            check_span(addr, n)?;
+            let vals = p.dbg.read_i32_slice(addr, n)?;
+            Ok(Json::arr_i32(&vals))
+        }
+        "write_mem" => {
+            let addr = u32_field(req, "addr")?;
+            let values = req.get("values")?.as_arr()?;
+            if values.len() > MAX_TRANSFER_WORDS {
+                bail!(
+                    "`values` length {} exceeds the {MAX_TRANSFER_WORDS}-word transfer cap",
+                    values.len()
+                );
+            }
+            check_span(addr, values.len())?;
+            let vals: Vec<i32> = values.iter().map(word_value).collect::<Result<_>>()?;
+            p.dbg.write_i32_slice(addr, &vals)?;
+            Ok(Json::Null)
+        }
+        "disasm" => {
+            let addr = u32_field(req, "addr")?;
+            let n = count_field(req, "n")?;
+            check_span(addr, n)?;
+            let words: Vec<u32> = (0..n)
+                .map(|i| {
+                    let a = addr
+                        .checked_add((i as u32) * 4)
+                        .ok_or_else(|| anyhow!("disasm address overflows at word {i}"))?;
+                    p.dbg.read32(a)
+                })
+                .collect::<Result<_>>()?;
+            Ok(Json::Str(femu::isa::listing(&words, addr)))
+        }
+        "step" => {
+            let stop = p.dbg.step();
+            Ok(Json::obj(vec![
+                ("stop", Json::Str(format!("{stop:?}"))),
+                ("pc", Json::from(p.dbg.pc() as i64)),
+            ]))
+        }
+        "add_breakpoint" => {
+            p.dbg.add_breakpoint(u32_field(req, "addr")?);
+            Ok(Json::Null)
+        }
+        "remove_breakpoint" => {
+            p.dbg.remove_breakpoint(u32_field(req, "addr")?);
+            Ok(Json::Null)
+        }
+        "uart" => {
+            let bytes = p.dbg.uart();
+            Ok(Json::Str(String::from_utf8_lossy(&bytes).into_owned()))
+        }
+        "perf" => {
+            let snap = p.snapshot();
+            let mut domains = std::collections::BTreeMap::new();
+            for (d, c) in snap.domains() {
+                domains.insert(
+                    d.to_string(),
+                    Json::obj(vec![
+                        ("active", Json::from(c.counts[0] as i64)),
+                        ("clock_gated", Json::from(c.counts[1] as i64)),
+                        ("power_gated", Json::from(c.counts[2] as i64)),
+                        ("retention", Json::from(c.counts[3] as i64)),
+                    ]),
+                );
+            }
+            Ok(Json::obj(vec![
+                ("cycles", Json::from(snap.cycles as i64)),
+                ("domains", Json::Obj(domains)),
+            ]))
+        }
+        "energy" => {
+            let model_name = req.opt("model").map(|v| v.as_str()).transpose()?.unwrap_or("femu");
+            let model = EnergyModel::by_name(model_name)
+                .ok_or_else(|| anyhow!("unknown energy model `{model_name}`"))?;
+            let snap = p.snapshot();
+            let r = model.estimate(&snap);
+            Ok(Json::obj(vec![
+                ("model", Json::from(model_name)),
+                ("total_mj", Json::Num(r.total_mj)),
+                ("active_mj", Json::Num(r.active_mj)),
+                ("sleep_mj", Json::Num(r.sleep_mj)),
+                ("seconds", Json::Num(r.seconds())),
+            ]))
+        }
+        other => Err(anyhow!("unknown command `{other}`")),
+    }
+}
+
+/// Execute a guest run in [`RUN_SLICE_CYCLES`] slices, polling
+/// `cancelled` between slices. Exit kinds on the wire: `"halted"`,
+/// `"budget"`, `"interrupted"`.
+fn run_sliced(p: &mut Platform, budget: u64, cancelled: &dyn Fn() -> bool) -> Result<Json> {
+    let mut remaining = budget;
+    let (kind, detail) = loop {
+        if cancelled() {
+            break ("interrupted", String::new());
+        }
+        let slice = remaining.min(RUN_SLICE_CYCLES);
+        match p.run_app(slice)? {
+            AppExit::Halted(h) => break ("halted", format!("{h:?}")),
+            AppExit::Budget => {
+                remaining -= slice;
+                if remaining == 0 {
+                    break ("budget", String::new());
+                }
+            }
+        }
+    };
+    Ok(Json::obj(vec![
+        ("exit", Json::from(kind)),
+        ("detail", Json::Str(detail)),
+        ("cycles", Json::from(p.dbg.soc.now as i64)),
+    ]))
+}
+
+// ---------------------------------------------------------------------
+// server-side experiment commands
+// ---------------------------------------------------------------------
+
+/// Does `cmd` name a server-side experiment driver?
+pub fn is_experiment_cmd(cmd: &str) -> bool {
+    matches!(cmd, "sweep_acquisition" | "kernels" | "flash_study")
+}
+
+/// Run one §V experiment driver through the shared fleet, against a
+/// resolved platform config. Remote clients get the same parallel sweep
+/// machinery as the CLI subcommands. `cancelled` is polled before every
+/// sweep point, so server shutdown aborts an in-flight experiment with
+/// at most one point left to finish.
+pub fn execute_experiment_cmd(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    cmd: &str,
+    req: &Json,
+    cancelled: &(dyn Fn() -> bool + Sync),
+) -> Result<Json> {
+    match cmd {
+        "sweep_acquisition" => {
+            let window_s = match req.opt("window_s") {
+                None => 5.0,
+                Some(v) => v.as_f64()?,
+            };
+            if !(window_s > 0.0 && window_s <= 60.0) {
+                bail!("`window_s` must be in (0, 60], got {window_s}");
+            }
+            let seed = seed_field(req, 0xF164)?;
+            let points = experiments::fig4_sweep_with_abort(fleet, cfg, window_s, seed, cancelled)?;
+            Ok(Json::obj(vec![(
+                "points",
+                Json::Arr(
+                    points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("sample_rate_hz", Json::Num(p.sample_rate_hz)),
+                                ("model", Json::from(p.model.as_str())),
+                                ("total_s", Json::Num(p.total_s)),
+                                ("active_s", Json::Num(p.active_s)),
+                                ("sleep_s", Json::Num(p.sleep_s)),
+                                ("active_mj", Json::Num(p.active_mj)),
+                                ("sleep_mj", Json::Num(p.sleep_mj)),
+                                ("total_mj", Json::Num(p.total_mj)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]))
+        }
+        "kernels" => {
+            let seed = seed_field(req, 0xF15)?;
+            let points = experiments::fig5_all_with_abort(fleet, cfg, seed, cancelled)?;
+            Ok(Json::obj(vec![(
+                "points",
+                Json::Arr(
+                    points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("kernel", Json::from(p.kernel)),
+                                ("implementation", Json::from(p.implementation)),
+                                ("model", Json::from(p.model.as_str())),
+                                ("cycles", Json::from(p.cycles as i64)),
+                                ("time_s", Json::Num(p.time_s)),
+                                ("energy_mj", Json::Num(p.energy_mj)),
+                                ("validated", Json::from(p.validated)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]))
+        }
+        "flash_study" => {
+            let scale = match req.opt("scale") {
+                None => 1,
+                Some(v) => {
+                    let s = v.as_i64()?;
+                    if !(1..=100_000).contains(&s) {
+                        bail!("`scale` must be in 1..=100000, got {s}");
+                    }
+                    s as usize
+                }
+            };
+            let r = experiments::case_c_with_abort(fleet, cfg, scale, cancelled)?;
+            Ok(Json::obj(vec![
+                ("windows", Json::from(r.windows as i64)),
+                ("samples_per_window", Json::from(r.samples_per_window as i64)),
+                ("virt_window_s", Json::Num(r.virt_window_s)),
+                ("phys_window_s", Json::Num(r.phys_window_s)),
+                ("virt_total_s", Json::Num(r.virt_total_s)),
+                ("phys_total_s", Json::Num(r.phys_total_s)),
+                ("speedup", Json::Num(r.speedup)),
+            ]))
+        }
+        other => Err(anyhow!("unknown experiment command `{other}`")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn platform() -> Platform {
+        Platform::new(PlatformConfig::default())
+    }
+
+    fn never() -> impl Fn() -> bool {
+        || false
+    }
+
+    fn exec(p: &mut Platform, req: Json) -> Result<Json> {
+        let cmd = req.str_field("cmd")?.to_string();
+        execute_platform_cmd(p, &cmd, &req, &never())
+    }
+
+    #[test]
+    fn negative_budget_is_a_protocol_error_not_a_wrap() {
+        let mut p = platform();
+        p.dbg.load_source("_start: li a0, 1\nebreak").unwrap();
+        let err = exec(
+            &mut p,
+            Json::obj(vec![("cmd", Json::from("run")), ("max_cycles", Json::from(-1i64))]),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("max_cycles"), "{err:#}");
+        // a zero budget is legal and returns immediately with exit=budget
+        let r = exec(
+            &mut p,
+            Json::obj(vec![("cmd", Json::from("run")), ("max_cycles", Json::from(0i64))]),
+        )
+        .unwrap();
+        assert_eq!(r.str_field("exit").unwrap(), "budget");
+    }
+
+    #[test]
+    fn out_of_range_addr_and_count_are_rejected() {
+        let mut p = platform();
+        for req in [
+            // negative address
+            Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(-4i64)),
+                ("n", Json::from(1i64)),
+            ]),
+            // address beyond the 32-bit bus
+            Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(1i64 << 33)),
+                ("n", Json::from(1i64)),
+            ]),
+            // negative count
+            Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(0i64)),
+                ("n", Json::from(-1i64)),
+            ]),
+            // count over the transfer cap
+            Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(0i64)),
+                ("n", Json::from((MAX_TRANSFER_WORDS + 1) as i64)),
+            ]),
+            // span walks off the end of the address space
+            Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(u32::MAX as i64 - 7)),
+                ("n", Json::from(4i64)),
+            ]),
+        ] {
+            let err = exec(&mut p, req).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("out of range")
+                    || msg.contains("non-negative")
+                    || msg.contains("cap")
+                    || msg.contains("overflows"),
+                "{msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn disasm_near_u32_max_errors_cleanly_instead_of_panicking() {
+        let mut p = platform();
+        // addr + i*4 would overflow u32 for i >= 1: must be a clean
+        // protocol error (debug builds used to panic here)
+        let err = exec(
+            &mut p,
+            Json::obj(vec![
+                ("cmd", Json::from("disasm")),
+                ("addr", Json::from((u32::MAX - 3) as i64)),
+                ("n", Json::from(4i64)),
+            ]),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("overflows"), "{err:#}");
+    }
+
+    #[test]
+    fn write_mem_validates_before_touching_memory() {
+        let mut p = platform();
+        let err = exec(
+            &mut p,
+            Json::obj(vec![
+                ("cmd", Json::from("write_mem")),
+                ("addr", Json::from(-8i64)),
+                ("values", Json::arr_i32(&[1, 2])),
+            ]),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    #[test]
+    fn cancelled_run_reports_interrupted() {
+        let mut p = platform();
+        p.dbg.load_source("_start:\nspin: j spin").unwrap();
+        let r = execute_platform_cmd(
+            &mut p,
+            "run",
+            &Json::obj(vec![("cmd", Json::from("run"))]),
+            &|| true,
+        )
+        .unwrap();
+        assert_eq!(r.str_field("exit").unwrap(), "interrupted");
+    }
+
+    #[test]
+    fn sliced_run_halts_like_a_plain_run() {
+        // a guest that halts well past one slice boundary must still
+        // report halted with the same final cycle count
+        let mut sliced = platform();
+        sliced
+            .dbg
+            .load_source("_start:\nli t0, 1500000\nspin: addi t0, t0, -1\nbnez t0, spin\nebreak")
+            .unwrap();
+        let r = execute_platform_cmd(
+            &mut sliced,
+            "run",
+            &Json::obj(vec![("cmd", Json::from("run"))]),
+            &never(),
+        )
+        .unwrap();
+        assert_eq!(r.str_field("exit").unwrap(), "halted");
+
+        let mut plain = platform();
+        plain
+            .dbg
+            .load_source("_start:\nli t0, 1500000\nspin: addi t0, t0, -1\nbnez t0, spin\nebreak")
+            .unwrap();
+        plain.run_app(DEFAULT_RUN_BUDGET).unwrap();
+        assert_eq!(
+            r.get("cycles").unwrap().as_i64().unwrap(),
+            plain.dbg.soc.now as i64,
+            "slicing must not change guest-visible timing"
+        );
+    }
+
+    #[test]
+    fn write_mem_values_must_fit_in_32_bits() {
+        let mut p = platform();
+        // one word past u32::MAX silently truncated through `as i32`
+        // before; now a protocol error
+        let err = exec(
+            &mut p,
+            Json::obj(vec![
+                ("cmd", Json::from("write_mem")),
+                ("addr", Json::from(0i64)),
+                ("values", Json::Arr(vec![Json::from(1i64 << 32)])),
+            ]),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("32 bits"), "{err:#}");
+        // u32-range values are accepted as bit patterns
+        exec(
+            &mut p,
+            Json::obj(vec![
+                ("cmd", Json::from("write_mem")),
+                ("addr", Json::from(0i64)),
+                ("values", Json::Arr(vec![Json::from(u32::MAX as i64)])),
+            ]),
+        )
+        .unwrap();
+        let read = exec(
+            &mut p,
+            Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(0i64)),
+                ("n", Json::from(1i64)),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(read.as_arr().unwrap()[0].as_i64().unwrap(), -1);
+    }
+
+    #[test]
+    fn experiment_commands_run_through_a_fleet() {
+        let fleet = Fleet::new(2);
+        let cfg = PlatformConfig::default();
+        let live = || false;
+        let r = execute_experiment_cmd(
+            &fleet,
+            &cfg,
+            "sweep_acquisition",
+            &Json::obj(vec![("window_s", Json::Num(0.02))]),
+            &live,
+        )
+        .unwrap();
+        let points = r.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 2 * experiments::FIG4_FREQS_HZ.len());
+        // bad params are protocol errors
+        assert!(execute_experiment_cmd(
+            &fleet,
+            &cfg,
+            "sweep_acquisition",
+            &Json::obj(vec![("window_s", Json::Num(-1.0))]),
+            &live,
+        )
+        .is_err());
+        assert!(execute_experiment_cmd(
+            &fleet,
+            &cfg,
+            "flash_study",
+            &Json::obj(vec![("scale", Json::from(0i64))]),
+            &live,
+        )
+        .is_err());
+        // a cancelled experiment aborts instead of sweeping
+        let err = execute_experiment_cmd(
+            &fleet,
+            &cfg,
+            "sweep_acquisition",
+            &Json::obj(vec![("window_s", Json::Num(0.02))]),
+            &|| true,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("aborted"), "{err:#}");
+    }
+}

@@ -1,0 +1,397 @@
+//! Session management for the control server: each connected client can
+//! open any number of private [`Platform`]s, so concurrent users never
+//! contend on each other's emulator state (DESIGN.md §9).
+//!
+//! A [`Session`] owns one platform behind a `Mutex`; the [`SessionTable`]
+//! maps session ids to live sessions with an LRU-capped population and
+//! idle reaping. Session 0 is the *default session* — the platform the
+//! server was spawned with. It is exempt from eviction and reaping so the
+//! original session-less protocol (`{"cmd":"run"}` with no `session`
+//! field) keeps working unchanged.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, TryLockError};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::PlatformConfig;
+use crate::coordinator::Platform;
+use crate::util::Json;
+
+/// The id of the default session (the platform `Server::spawn` received).
+pub const DEFAULT_SESSION: u64 = 0;
+
+/// Platform wrapper moved between pool threads. The `xla` crate's PJRT
+/// handles are `Rc`-based and thus not `Send`; every access happens with
+/// the session `Mutex` held and the `Rc`s never escape the platform, so
+/// moving the whole platform between threads is sound.
+struct SendPlatform(Platform);
+// SAFETY: see above — Mutex-serialized access, no Rc clones escape.
+unsafe impl Send for SendPlatform {}
+
+/// One client-owned platform instance.
+pub struct Session {
+    id: u64,
+    /// Human-readable config provenance (named config or inline name).
+    config_label: String,
+    platform: Mutex<SendPlatform>,
+    /// Set when the session is closed or the server shuts down; a
+    /// long `run` in flight observes it at its next slice boundary and
+    /// returns with exit `"interrupted"`.
+    cancel: AtomicBool,
+    last_used: Mutex<Instant>,
+}
+
+impl Session {
+    fn new(id: u64, config_label: String, platform: Platform) -> Self {
+        Self {
+            id,
+            config_label,
+            platform: Mutex::new(SendPlatform(platform)),
+            cancel: AtomicBool::new(false),
+            last_used: Mutex::new(Instant::now()),
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn config_label(&self) -> &str {
+        &self.config_label
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Run `f` with exclusive access to the session's platform. The
+    /// session's idle clock restarts when the command finishes, so a
+    /// long-running command never makes its own session reapable.
+    pub fn with_platform<R>(&self, f: impl FnOnce(&mut Platform) -> R) -> Result<R> {
+        let mut guard = self
+            .platform
+            .lock()
+            .map_err(|_| anyhow!("session {} platform poisoned by an earlier panic", self.id))?;
+        let r = f(&mut guard.0);
+        drop(guard);
+        self.touch();
+        Ok(r)
+    }
+
+    /// A session is busy while a command holds its platform lock.
+    pub fn busy(&self) -> bool {
+        matches!(self.platform.try_lock(), Err(TryLockError::WouldBlock))
+    }
+
+    fn touch(&self) {
+        *self.last_used.lock().unwrap_or_else(|p| p.into_inner()) = Instant::now();
+    }
+
+    fn idle_for(&self) -> Duration {
+        self.last_used.lock().unwrap_or_else(|p| p.into_inner()).elapsed()
+    }
+}
+
+/// The live-session table: LRU-capped, idle-reaped.
+pub struct SessionTable {
+    /// Capacity including the default session.
+    max_sessions: usize,
+    idle_timeout: Duration,
+    next_id: AtomicU64,
+    sessions: Mutex<BTreeMap<u64, Arc<Session>>>,
+}
+
+impl SessionTable {
+    /// Build a table seeded with `default_platform` as session 0.
+    pub fn new(default_platform: Platform, max_sessions: usize, idle_timeout: Duration) -> Self {
+        let mut map = BTreeMap::new();
+        map.insert(
+            DEFAULT_SESSION,
+            Arc::new(Session::new(DEFAULT_SESSION, "default".into(), default_platform)),
+        );
+        Self {
+            max_sessions: max_sessions.max(1),
+            // a zero timeout would reap every session before its first
+            // command; clamp to something strictly positive
+            idle_timeout: idle_timeout.max(Duration::from_millis(1)),
+            next_id: AtomicU64::new(1),
+            sessions: Mutex::new(map),
+        }
+    }
+
+    /// Open a new session. At capacity, the least-recently-used *idle*
+    /// session (never session 0) is evicted to make room; if every slot
+    /// is busy the open is refused — that is the backpressure signal.
+    pub fn open(&self, platform: Platform, config_label: String) -> Result<Arc<Session>> {
+        let mut map = self.lock_map();
+        Self::reap_locked(&mut map, self.idle_timeout);
+        if map.len() >= self.max_sessions {
+            let lru = map
+                .values()
+                .filter(|s| s.id() != DEFAULT_SESSION && !s.busy())
+                .min_by_key(|s| std::cmp::Reverse(s.idle_for()))
+                .map(|s| s.id());
+            match lru {
+                Some(id) => {
+                    if let Some(evicted) = map.remove(&id) {
+                        evicted.cancel();
+                    }
+                }
+                None => bail!(
+                    "server at session capacity ({} of {}, all busy); \
+                     close a session or retry",
+                    map.len(),
+                    self.max_sessions
+                ),
+            }
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let session = Arc::new(Session::new(id, config_label, platform));
+        map.insert(id, session.clone());
+        Ok(session)
+    }
+
+    /// Look up a session and restart its idle clock.
+    pub fn get(&self, id: u64) -> Result<Arc<Session>> {
+        match self.lock_map().get(&id) {
+            Some(s) => {
+                s.touch();
+                Ok(s.clone())
+            }
+            None => bail!("unknown session {id} (never opened, closed, evicted, or reaped)"),
+        }
+    }
+
+    /// Close a session. An in-flight command on it is cancelled at its
+    /// next slice boundary and still completes its response. Session 0
+    /// is not closable: it backs the session-less protocol and can never
+    /// be recreated (ids only count up).
+    pub fn close(&self, id: u64) -> Result<()> {
+        if id == DEFAULT_SESSION {
+            bail!("the default session 0 cannot be closed");
+        }
+        match self.lock_map().remove(&id) {
+            Some(s) => {
+                s.cancel();
+                Ok(())
+            }
+            None => bail!("unknown session {id}"),
+        }
+    }
+
+    /// Drop idle sessions older than the idle timeout (never session 0,
+    /// never a busy session). Called from the server's accept-loop tick
+    /// and on every `open`.
+    pub fn reap_idle(&self) {
+        let mut map = self.lock_map();
+        Self::reap_locked(&mut map, self.idle_timeout);
+    }
+
+    fn reap_locked(map: &mut BTreeMap<u64, Arc<Session>>, timeout: Duration) {
+        map.retain(|&id, s| {
+            let keep = id == DEFAULT_SESSION || s.busy() || s.idle_for() < timeout;
+            if !keep {
+                s.cancel();
+            }
+            keep
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock_map().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Protocol view of the table (for `session.list`).
+    pub fn describe(&self) -> Json {
+        Json::Arr(
+            self.lock_map()
+                .values()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("session", Json::from(s.id() as i64)),
+                        ("config", Json::from(s.config_label())),
+                        ("busy", Json::from(s.busy())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Remove every session (cancelling in-flight runs) and hand them
+    /// back in id order for deterministic teardown.
+    pub fn drain(&self) -> Vec<Arc<Session>> {
+        let mut map = self.lock_map();
+        let drained: Vec<Arc<Session>> = std::mem::take(&mut *map).into_values().collect();
+        for s in &drained {
+            s.cancel();
+        }
+        drained
+    }
+
+    fn lock_map(&self) -> std::sync::MutexGuard<'_, BTreeMap<u64, Arc<Session>>> {
+        self.sessions.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Named platform configurations a client can instantiate sessions from.
+/// `"default"` is always present (the config the server was spawned
+/// with); `femu serve --configs DIR` registers one entry per TOML file.
+pub struct ConfigRegistry {
+    named: BTreeMap<String, PlatformConfig>,
+}
+
+impl ConfigRegistry {
+    pub fn new(default_cfg: PlatformConfig) -> Self {
+        let mut named = BTreeMap::new();
+        named.insert("default".to_string(), default_cfg);
+        Self { named }
+    }
+
+    pub fn register(&mut self, name: impl Into<String>, cfg: PlatformConfig) {
+        self.named.insert(name.into(), cfg);
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.named.keys().map(String::as_str).collect()
+    }
+
+    /// Resolve the config a request asks for: `config` (inline TOML
+    /// text) or `config_name` (registered name), defaulting to
+    /// `"default"`. Returns the config plus a provenance label.
+    pub fn resolve(&self, req: &Json) -> Result<(PlatformConfig, String)> {
+        match (req.opt("config"), req.opt("config_name")) {
+            (Some(_), Some(_)) => bail!("pass either `config` or `config_name`, not both"),
+            (Some(inline), None) => {
+                let cfg = PlatformConfig::parse(inline.as_str()?)?;
+                let label = format!("inline:{}", cfg.name);
+                Ok((cfg, label))
+            }
+            (None, Some(name)) => {
+                let name = name.as_str()?;
+                let cfg = self.named.get(name).ok_or_else(|| {
+                    anyhow!("unknown config `{name}` (registered: {})", self.names().join(", "))
+                })?;
+                Ok((cfg.clone(), name.to_string()))
+            }
+            (None, None) => {
+                Ok((self.named["default"].clone(), "default".to_string()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(max: usize, timeout_ms: u64) -> SessionTable {
+        SessionTable::new(
+            Platform::new(PlatformConfig::default()),
+            max,
+            Duration::from_millis(timeout_ms),
+        )
+    }
+
+    fn open(t: &SessionTable) -> u64 {
+        t.open(Platform::new(PlatformConfig::default()), "default".into()).unwrap().id()
+    }
+
+    #[test]
+    fn open_get_close_roundtrip() {
+        let t = table(4, 60_000);
+        let id = open(&t);
+        assert!(id > DEFAULT_SESSION);
+        assert_eq!(t.get(id).unwrap().id(), id);
+        t.close(id).unwrap();
+        assert!(t.get(id).is_err());
+        assert!(t.close(id).is_err());
+        // default session always reachable, never closable
+        assert_eq!(t.get(DEFAULT_SESSION).unwrap().id(), DEFAULT_SESSION);
+        assert!(t.close(DEFAULT_SESSION).is_err());
+    }
+
+    #[test]
+    fn lru_eviction_spares_default_and_recently_used() {
+        let t = table(3, 60_000); // capacity includes session 0
+        let a = open(&t);
+        std::thread::sleep(Duration::from_millis(10));
+        let b = open(&t);
+        // touch a so b becomes the LRU
+        t.get(a).unwrap();
+        let c = open(&t);
+        assert!(t.get(b).is_err(), "LRU session must be evicted");
+        assert!(t.get(a).is_ok());
+        assert!(t.get(c).is_ok());
+        assert!(t.get(DEFAULT_SESSION).is_ok());
+    }
+
+    #[test]
+    fn busy_sessions_are_not_evicted() {
+        let t = table(2, 60_000);
+        let a = t.open(Platform::new(PlatformConfig::default()), "default".into()).unwrap();
+        let a2 = a.clone();
+        let _r = a2
+            .with_platform(|_| {
+                // while a's platform is locked, opening must refuse
+                assert!(a.busy());
+                let err = t
+                    .open(Platform::new(PlatformConfig::default()), "default".into())
+                    .unwrap_err();
+                assert!(format!("{err:#}").contains("capacity"), "{err:#}");
+            })
+            .unwrap();
+        // once idle again the slot can be reclaimed
+        let c = open(&t);
+        assert!(t.get(c).is_ok());
+    }
+
+    #[test]
+    fn idle_sessions_reaped_but_not_default() {
+        let t = table(8, 20);
+        let id = open(&t);
+        std::thread::sleep(Duration::from_millis(60));
+        t.reap_idle();
+        assert!(t.get(id).is_err(), "idle session must be reaped");
+        assert!(t.get(DEFAULT_SESSION).is_ok());
+    }
+
+    #[test]
+    fn registry_resolves_inline_named_and_default() {
+        let mut reg = ConfigRegistry::new(PlatformConfig::default());
+        let chip = PlatformConfig::parse("name = \"chip\"").unwrap();
+        reg.register("chip", chip);
+
+        let (cfg, label) = reg.resolve(&Json::obj(vec![])).unwrap();
+        assert_eq!(label, "default");
+        assert_eq!(cfg.name, "x-heep-femu");
+
+        let (cfg, label) = reg
+            .resolve(&Json::obj(vec![("config_name", Json::from("chip"))]))
+            .unwrap();
+        assert_eq!((cfg.name.as_str(), label.as_str()), ("chip", "chip"));
+
+        let (cfg, label) = reg
+            .resolve(&Json::obj(vec![("config", Json::from("name = \"mine\""))]))
+            .unwrap();
+        assert_eq!((cfg.name.as_str(), label.as_str()), ("mine", "inline:mine"));
+
+        assert!(reg.resolve(&Json::obj(vec![("config_name", Json::from("nope"))])).is_err());
+        assert!(reg
+            .resolve(&Json::obj(vec![
+                ("config", Json::from("")),
+                ("config_name", Json::from("chip")),
+            ]))
+            .is_err());
+    }
+}

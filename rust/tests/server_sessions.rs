@@ -1,0 +1,402 @@
+//! Session-server contracts (DESIGN.md §9): per-session platforms don't
+//! cross-talk, long runs on one session don't serialize others, `batch`
+//! pipelines against one session in one round trip, and shutdown under
+//! load joins every connection thread.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use femu::config::PlatformConfig;
+use femu::coordinator::Platform;
+use femu::server::{Client, Server, ServerOptions};
+use femu::util::Json;
+
+fn spawn_with(opts: ServerOptions) -> Server {
+    Server::spawn_with(Platform::new(PlatformConfig::default()), "127.0.0.1:0", opts).unwrap()
+}
+
+/// A guest that stores `value` to `out` and halts.
+fn store_program(value: i64) -> String {
+    format!(
+        r#"
+        _start:
+            la t0, out
+            li t1, {value}
+            sw t1, 0(t0)
+            ebreak
+        .data
+        out: .word 0
+        "#
+    )
+}
+
+/// A guest that spins until interrupted.
+const SPIN: &str = "_start:\nspin: j spin";
+
+fn load(c: &mut Client, session: u64, src: &str) -> Json {
+    c.call_on(
+        session,
+        Json::obj(vec![("cmd", Json::from("load_asm")), ("source", Json::from(src))]),
+    )
+    .unwrap()
+}
+
+#[test]
+fn concurrent_sessions_do_not_cross_talk() {
+    let server = spawn_with(ServerOptions {
+        max_sessions: 16,
+        workers: 4,
+        ..ServerOptions::default()
+    });
+    let addr = server.addr();
+
+    // N clients, each with a private session running its own program;
+    // every readback must see its own value, never a neighbour's.
+    let handles: Vec<_> = (0..6i64)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let session = c.open_session(Json::Null).unwrap();
+                let value = 1000 + i;
+                for round in 0..3 {
+                    let loaded = load(&mut c, session, &store_program(value));
+                    let out =
+                        loaded.get("symbols").unwrap().get("out").unwrap().as_i64().unwrap();
+                    let run = c
+                        .call_on(session, Json::obj(vec![("cmd", Json::from("run"))]))
+                        .unwrap();
+                    assert_eq!(run.str_field("exit").unwrap(), "halted", "round {round}");
+                    let mem = c
+                        .call_on(
+                            session,
+                            Json::obj(vec![
+                                ("cmd", Json::from("read_mem")),
+                                ("addr", Json::from(out)),
+                                ("n", Json::from(1i64)),
+                            ]),
+                        )
+                        .unwrap();
+                    assert_eq!(
+                        mem.as_arr().unwrap()[0].as_i64().unwrap(),
+                        value,
+                        "session {session} read a foreign value in round {round}"
+                    );
+                }
+                c.close_session(session).unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn long_run_on_one_session_does_not_serialize_another() {
+    let server = spawn_with(ServerOptions {
+        max_sessions: 8,
+        workers: 4,
+        ..ServerOptions::default()
+    });
+    let addr = server.addr();
+
+    // session A: a spinning guest with an effectively unbounded budget,
+    // interrupted only by session.close
+    let mut ctl = Client::connect(addr).unwrap();
+    let a = ctl.open_session(Json::Null).unwrap();
+    load(&mut ctl, a, SPIN);
+    let a_done = Arc::new(AtomicBool::new(false));
+    let a_done2 = a_done.clone();
+    let a_runner = std::thread::spawn(move || {
+        let mut ca = Client::connect(addr).unwrap();
+        let run = ca.call_on(a, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        a_done2.store(true, Ordering::SeqCst);
+        run.str_field("exit").unwrap().to_string()
+    });
+
+    // wait until A's run is actually holding a worker
+    let t0 = Instant::now();
+    loop {
+        let listed = ctl.call(Json::obj(vec![("cmd", Json::from("session.list"))])).unwrap();
+        let a_busy = listed
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|s| {
+                s.get("session").unwrap().as_i64().unwrap() == a as i64
+                    && s.get("busy").unwrap().as_bool().unwrap()
+            });
+        if a_busy {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "A's run never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // session B: a full load/run/read cycle completes while A spins —
+    // with the old global platform lock this would block behind A's
+    // 2^33-cycle run
+    let mut cb = Client::connect(addr).unwrap();
+    let b = cb.open_session(Json::Null).unwrap();
+    let loaded = load(&mut cb, b, &store_program(7777));
+    let out = loaded.get("symbols").unwrap().get("out").unwrap().as_i64().unwrap();
+    let run = cb.call_on(b, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+    assert_eq!(run.str_field("exit").unwrap(), "halted");
+    let mem = cb
+        .call_on(
+            b,
+            Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(out)),
+                ("n", Json::from(1i64)),
+            ]),
+        )
+        .unwrap();
+    assert_eq!(mem.as_arr().unwrap()[0].as_i64().unwrap(), 7777);
+    assert!(
+        !a_done.load(Ordering::SeqCst),
+        "A's unbounded run finished before B: sessions are serializing"
+    );
+
+    // closing A interrupts its run at the next slice boundary
+    ctl.close_session(a).unwrap();
+    let exit = a_runner.join().unwrap();
+    assert_eq!(exit, "interrupted");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_under_load_joins_all_connections() {
+    let server = spawn_with(ServerOptions {
+        max_sessions: 8,
+        workers: 3,
+        ..ServerOptions::default()
+    });
+    let addr = server.addr();
+
+    // three sessions each running an unbounded spin, plus one idle
+    // connection parked in a read
+    let started: Vec<_> = (0..3)
+        .map(|_| {
+            let flag = Arc::new(AtomicBool::new(false));
+            let flag2 = flag.clone();
+            let h = std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let s = c.open_session(Json::Null).unwrap();
+                load(&mut c, s, SPIN);
+                flag2.store(true, Ordering::SeqCst);
+                // the run is either interrupted by shutdown (response
+                // delivered before the stream drops) or the connection
+                // closes under us — both are clean outcomes
+                match c.call_on(s, Json::obj(vec![("cmd", Json::from("run"))])) {
+                    Ok(r) => assert_eq!(r.str_field("exit").unwrap(), "interrupted"),
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        assert!(
+                            msg.contains("connection closed")
+                                || msg.contains("reading server response")
+                                || msg.contains("sending request"),
+                            "unexpected error under shutdown: {msg}"
+                        );
+                    }
+                }
+            });
+            (flag, h)
+        })
+        .collect();
+    let _idle = Client::connect(addr).unwrap();
+
+    // wait until every run has been submitted
+    let t0 = Instant::now();
+    while !started.iter().all(|(f, _)| f.load(Ordering::SeqCst)) {
+        assert!(t0.elapsed() < Duration::from_secs(30), "runs never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    std::thread::sleep(Duration::from_millis(100)); // let the runs enter the pool
+
+    // graceful shutdown: must return with every connection thread joined
+    // even though three unbounded runs are in flight
+    let t0 = Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "shutdown took {:?} — connection threads not quiescing",
+        t0.elapsed()
+    );
+    for (_, h) in started {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn batch_pipelines_one_round_trip() {
+    let server = spawn_with(ServerOptions::default());
+    let mut c = Client::connect(server.addr()).unwrap();
+    let s = c.open_session(Json::Null).unwrap();
+
+    // stage + run + read in ONE round trip
+    let resp = c
+        .batch_on(
+            s,
+            vec![
+                Json::obj(vec![
+                    ("cmd", Json::from("load_asm")),
+                    ("source", Json::from(store_program(4242).as_str())),
+                ]),
+                Json::obj(vec![("cmd", Json::from("run"))]),
+                Json::obj(vec![("cmd", Json::from("uart"))]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(resp.get("completed").unwrap().as_i64().unwrap(), 3);
+    let results = resp.get("results").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        assert!(r.get("ok").unwrap().as_bool().unwrap());
+    }
+    assert_eq!(
+        results[1].get("result").unwrap().str_field("exit").unwrap(),
+        "halted"
+    );
+    // follow-up read through the same session sees the batch's effects
+    let out = results[0]
+        .get("result")
+        .unwrap()
+        .get("symbols")
+        .unwrap()
+        .get("out")
+        .unwrap()
+        .as_i64()
+        .unwrap();
+    let mem = c
+        .call_on(
+            s,
+            Json::obj(vec![
+                ("cmd", Json::from("read_mem")),
+                ("addr", Json::from(out)),
+                ("n", Json::from(1i64)),
+            ]),
+        )
+        .unwrap();
+    assert_eq!(mem.as_arr().unwrap()[0].as_i64().unwrap(), 4242);
+
+    // a failing sub-request aborts the rest: [ping, bogus, ping] stops
+    // after the error, reporting one success
+    let resp = c
+        .batch_on(
+            s,
+            vec![
+                Json::obj(vec![("cmd", Json::from("ping"))]),
+                Json::obj(vec![("cmd", Json::from("warp"))]),
+                Json::obj(vec![("cmd", Json::from("ping"))]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(resp.get("completed").unwrap().as_i64().unwrap(), 1);
+    let results = resp.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 2, "batch must abort after the first failure");
+    assert!(!results[1].get("ok").unwrap().as_bool().unwrap());
+
+    // nested batches and session commands are rejected inside a batch
+    let resp = c
+        .batch_on(s, vec![Json::obj(vec![("cmd", Json::from("session.close"))])])
+        .unwrap();
+    assert_eq!(resp.get("completed").unwrap().as_i64().unwrap(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn session_capacity_evicts_lru_idle() {
+    let server = spawn_with(ServerOptions {
+        max_sessions: 3, // session 0 + two client sessions
+        workers: 2,
+        ..ServerOptions::default()
+    });
+    let mut c = Client::connect(server.addr()).unwrap();
+    let s1 = c.open_session(Json::Null).unwrap();
+    std::thread::sleep(Duration::from_millis(10));
+    let s2 = c.open_session(Json::Null).unwrap();
+    // touch s1 so s2 is the LRU
+    c.call_on(s1, Json::obj(vec![("cmd", Json::from("regs"))])).unwrap();
+    let s3 = c.open_session(Json::Null).unwrap();
+    let err = c.call_on(s2, Json::obj(vec![("cmd", Json::from("regs"))])).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown session"), "{err:#}");
+    c.call_on(s1, Json::obj(vec![("cmd", Json::from("regs"))])).unwrap();
+    c.call_on(s3, Json::obj(vec![("cmd", Json::from("regs"))])).unwrap();
+    // the default session is never evicted
+    c.call(Json::obj(vec![("cmd", Json::from("regs"))])).unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn idle_sessions_reaped_by_accept_loop() {
+    let server = spawn_with(ServerOptions {
+        idle_timeout: Duration::from_millis(100),
+        ..ServerOptions::default()
+    });
+    let mut c = Client::connect(server.addr()).unwrap();
+    let s = c.open_session(Json::Null).unwrap();
+    // the accept loop reaps roughly every 500ms of idle ticking
+    std::thread::sleep(Duration::from_millis(1500));
+    let err = c.call_on(s, Json::obj(vec![("cmd", Json::from("regs"))])).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown session"), "{err:#}");
+    // the default session survives reaping
+    c.call(Json::obj(vec![("cmd", Json::from("regs"))])).unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn sessions_from_named_and_inline_configs() {
+    let chip = PlatformConfig::parse("name = \"chip\"\nfreq_hz = 32_000_000").unwrap();
+    let server = spawn_with(ServerOptions {
+        named_configs: vec![("chip".into(), chip)],
+        ..ServerOptions::default()
+    });
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    let named = c
+        .open_session(Json::obj(vec![("config_name", Json::from("chip"))]))
+        .unwrap();
+    let inline = c
+        .open_session(Json::obj(vec![(
+            "config",
+            Json::from("name = \"tiny\"\nfreq_hz = 10_000_000"),
+        )]))
+        .unwrap();
+    // both run a guest fine and report their config label in the listing
+    for s in [named, inline] {
+        load(&mut c, s, &store_program(1));
+        let run = c.call_on(s, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        assert_eq!(run.str_field("exit").unwrap(), "halted");
+    }
+    let listed = c.call(Json::obj(vec![("cmd", Json::from("session.list"))])).unwrap();
+    let labels: Vec<String> = listed
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.str_field("config").unwrap().to_string())
+        .collect();
+    assert!(labels.iter().any(|l| l == "chip"), "{labels:?}");
+    assert!(labels.iter().any(|l| l == "inline:tiny"), "{labels:?}");
+    server.shutdown();
+}
+
+#[test]
+fn experiment_command_over_the_wire() {
+    let server = spawn_with(ServerOptions::default());
+    let mut c = Client::connect(server.addr()).unwrap();
+    let r = c
+        .call(Json::obj(vec![
+            ("cmd", Json::from("sweep_acquisition")),
+            ("window_s", Json::Num(0.02)),
+        ]))
+        .unwrap();
+    let points = r.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 12); // 6 freqs x 2 calibrations
+    for p in points {
+        assert!(p.get("total_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+    server.shutdown();
+}
