@@ -297,7 +297,7 @@ fn main() -> anyhow::Result<()> {
                 refimpl::fft_q15(&mut want_re, &mut want_im);
                 assert_eq!(got, want_re, "in-place FFT of the last window");
 
-                let snap = p.snapshot();
+                let snap = p.perf_snapshot();
                 let r = EnergyModel::femu().estimate(&snap);
                 let vcd = p
                     .dbg

@@ -89,7 +89,7 @@ fn main() -> anyhow::Result<()> {
     println!("logits: {logits:?}");
 
     // whole-run performance + energy (acquisition is the dominant phase)
-    let snap = platform.snapshot();
+    let snap = platform.perf_snapshot();
     println!("\ntotal: {} cycles = {:.3} ms emulated", snap.cycles, snap.cycles as f64 / 20e3);
     for model in [EnergyModel::femu(), EnergyModel::heepocrates()] {
         let r = model.estimate(&snap);

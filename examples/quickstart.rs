@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(sum, 36);
 
     // 5. Performance counters + energy estimation (automatic mode).
-    let snap = platform.snapshot();
+    let snap = platform.perf_snapshot();
     println!("\ncycles: {} ({:.1} us at 20 MHz)", snap.cycles, snap.cycles as f64 / 20.0);
     for model in [EnergyModel::femu(), EnergyModel::heepocrates()] {
         let r = model.estimate(&snap);

@@ -2,10 +2,11 @@
 //! the paper's §IV-E "user interface" flow (Python-class-over-Jupyter in
 //! the original; a session-oriented JSON-line protocol here).
 //!
-//! Exercises the full wire surface: session-less back-compat commands,
-//! `session.open` with named and inline configs, concurrent per-session
-//! runs, `batch` pipelining, a server-side experiment sweep, and
-//! graceful shutdown.
+//! Exercises the full wire surface: the versioned hello banner,
+//! session-less back-compat commands, `session.open` with named and
+//! inline configs, concurrent per-session runs, `batch` pipelining,
+//! `session.fork` + `snapshot.save`/`snapshot.restore`, a server-side
+//! experiment sweep, and graceful shutdown.
 //!
 //! ```sh
 //! cargo run --release --example remote_control
@@ -29,7 +30,16 @@ fn main() -> anyhow::Result<()> {
     let platform = Platform::new(PlatformConfig::default());
     let server = Server::spawn_with(platform, "127.0.0.1:0", opts)?;
     println!("control server at {}", server.addr());
-    let mut client = Client::connect(server.addr())?;
+    // connect with a timeout (a hung server would error, not block) and
+    // assert on the versioned hello banner
+    let mut client =
+        Client::connect_with_timeout(server.addr(), std::time::Duration::from_secs(30))?;
+    println!("server hello -> {}", client.hello());
+    assert_eq!(client.hello().str_field("hello")?, "femu-control-server");
+    assert_eq!(
+        client.hello().get("proto")?.as_i64()?,
+        femu::server::PROTO_VERSION as i64
+    );
 
     // session-less ping still works (targets the default session 0)
     let pong = client.call(Json::obj(vec![("cmd", Json::from("ping"))]))?;
@@ -112,6 +122,57 @@ fn main() -> anyhow::Result<()> {
     println!("batched result = {result}");
     assert_eq!(result, 42);
     println!("batched uart -> {}", results[3].get("result")?.as_str()?);
+
+    // fork the warmed session: the clone starts from MY session's state
+    // (program + memory + counters) and diverges independently
+    let forked = client.call(Json::obj(vec![
+        ("cmd", Json::from("session.fork")),
+        ("session", Json::from(mine as i64)),
+    ]))?;
+    let fork_id = forked.get("session")?.as_i64()? as u64;
+    println!(
+        "session.fork -> session {fork_id} ({}) at cycle {}",
+        forked.str_field("config")?,
+        forked.get("cycles")?.as_i64()?
+    );
+    let fork_result = client.call_on(
+        fork_id,
+        Json::obj(vec![
+            ("cmd", Json::from("read_mem")),
+            ("addr", Json::from(res_addr)),
+            ("n", Json::from(1i64)),
+        ]),
+    )?;
+    assert_eq!(fork_result.as_arr()?[0].as_i64()?, 42); // warmed state travelled
+
+    // snapshot the fork over the wire, scribble on it, restore it back
+    let saved = client.call_on(fork_id, Json::obj(vec![("cmd", Json::from("snapshot.save"))]))?;
+    println!("snapshot.save -> {} bytes (hex on the wire)", saved.get("bytes")?.as_i64()?);
+    client.call_on(
+        fork_id,
+        Json::obj(vec![
+            ("cmd", Json::from("write_mem")),
+            ("addr", Json::from(res_addr)),
+            ("values", Json::arr_i32(&[-7])),
+        ]),
+    )?;
+    client.call_on(
+        fork_id,
+        Json::obj(vec![
+            ("cmd", Json::from("snapshot.restore")),
+            ("snapshot", Json::Str(saved.str_field("snapshot")?.to_string())),
+        ]),
+    )?;
+    let restored = client.call_on(
+        fork_id,
+        Json::obj(vec![
+            ("cmd", Json::from("read_mem")),
+            ("addr", Json::from(res_addr)),
+            ("n", Json::from(1i64)),
+        ]),
+    )?;
+    assert_eq!(restored.as_arr()?[0].as_i64()?, 42); // scribble undone
+    client.close_session(fork_id)?;
 
     // perf + energy over the wire, against my session
     let perf = client.call_on(mine, Json::obj(vec![("cmd", Json::from("perf"))]))?;

@@ -34,7 +34,7 @@ fn ablation_a_fifo_pacing() {
     p.start_adc((0..n as i32).collect(), rate);
     p.run_app(1 << 36).unwrap();
     let paced_s = p.dbg.soc.now as f64 / cfg.soc.freq_hz as f64;
-    let paced_e = EnergyModel::femu().estimate(&p.snapshot()).total_mj;
+    let paced_e = EnergyModel::femu().estimate(&p.perf_snapshot()).total_mj;
 
     // un-paced: period forced to 1 cycle (every sample "already there"),
     // modeling a platform that streams without rate emulation
@@ -43,7 +43,7 @@ fn ablation_a_fifo_pacing() {
     p.start_adc((0..n as i32).collect(), cfg.soc.freq_hz as f64); // 1 cycle/sample
     p.run_app(1 << 36).unwrap();
     let unpaced_s = p.dbg.soc.now as f64 / cfg.soc.freq_hz as f64;
-    let unpaced_e = EnergyModel::femu().estimate(&p.snapshot()).total_mj;
+    let unpaced_e = EnergyModel::femu().estimate(&p.perf_snapshot()).total_mj;
 
     println!("paced   : {:>9.4} s, {:>9.5} mJ  (nominal window {:.3} s)", paced_s, paced_e, n as f64 / rate);
     println!("un-paced: {:>9.4} s, {:>9.5} mJ", unpaced_s, unpaced_e);
@@ -151,7 +151,7 @@ fn ablation_d_sleep_policy() {
         p.dbg.load_source(&programs::acquisition(500, policy)).unwrap();
         p.start_adc((0..500).collect(), 1_000.0);
         p.run_app(1 << 36).unwrap();
-        let snap = p.snapshot();
+        let snap = p.perf_snapshot();
         let e = EnergyModel::heepocrates().estimate(&snap).total_mj;
         let dominant = PowerState::ALL
             .iter()

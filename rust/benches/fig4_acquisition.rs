@@ -3,9 +3,13 @@
 //! X-HEEP-FEMU (femu calibration) and the HEEPocrates chip (silicon
 //! calibration), with the active/sleep split.
 //!
-//! The sweep runs twice — on the serial reference path and on the
-//! experiment fleet — cross-checking bit-identity and reporting the
-//! parallel speedup.
+//! The sweep runs twice — on the serial boot-per-point reference path
+//! and on the fork-based experiment fleet (golden snapshot, restore per
+//! point) — cross-checking bit-identity and reporting the parallel
+//! speedup. A second section isolates the fan-out fixed cost itself:
+//! boot-per-point vs restore-per-point on one thread at a short window,
+//! where per-point setup is a visible fraction of the sweep
+//! (`sweep_boot` / `sweep_restore` + `restore_speedup` in the JSON).
 //!
 //! `cargo bench --bench fig4_acquisition` (set FEMU_FIG4_WINDOW_S to
 //! override the emulated window; default 1 s keeps the bench quick while
@@ -29,8 +33,9 @@ fn main() {
         "Fig 4: acquisition time & energy, {window_s} s window (normalized)"
     ));
 
-    let (serial_pts, serial_s) =
-        harness::time(|| experiments::fig4_sweep(&Fleet::serial(), &cfg, window_s, 0xF164).unwrap());
+    let (serial_pts, serial_s) = harness::time(|| {
+        experiments::fig4_sweep_boot(&Fleet::serial(), &cfg, window_s, 0xF164).unwrap()
+    });
     let (points, fleet_s) =
         harness::time(|| experiments::fig4_sweep(&fleet, &cfg, window_s, 0xF164).unwrap());
 
@@ -51,7 +56,8 @@ fn main() {
         );
     }
 
-    // fleet/serial bit-identity (the fleet determinism contract)
+    // forked-fleet vs serial-reboot bit-identity (the determinism
+    // contract, including snapshot-restore exactness)
     assert_eq!(serial_pts.len(), points.len());
     for (a, b) in serial_pts.iter().zip(&points) {
         assert_eq!(a.model, b.model);
@@ -59,14 +65,46 @@ fn main() {
         assert_eq!(a.total_mj.to_bits(), b.total_mj.to_bits(), "{} Hz", a.sample_rate_hz);
         assert_eq!(a.active_s.to_bits(), b.active_s.to_bits(), "{} Hz", a.sample_rate_hz);
     }
-    println!("\ndeterminism OK: fleet({}) output bit-identical to serial", fleet.workers());
     println!(
-        "wall-clock: serial {}s, fleet({}) {}s -> {:.2}x",
+        "\ndeterminism OK: forked fleet({}) output bit-identical to serial re-boot",
+        fleet.workers()
+    );
+    println!(
+        "wall-clock: serial-reboot {}s, forked fleet({}) {}s -> {:.2}x",
         harness::eng(serial_s),
         fleet.workers(),
         harness::eng(fleet_s),
         serial_s / fleet_s,
     );
+
+    // fan-out fixed cost: boot-per-point vs restore-per-point, one
+    // thread, short window so per-point setup dominates less of the
+    // noise floor. Best-of-reps for a stable estimate.
+    let fan_window: f64 = std::env::var("FEMU_FIG4_FANOUT_WINDOW_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.02);
+    let reps = harness::reps(5);
+    let (boot_pts, boot_s) = harness::time_best(reps, || {
+        experiments::fig4_sweep_boot(&Fleet::serial(), &cfg, fan_window, 0xF164).unwrap()
+    });
+    let (restore_pts, restore_s) = harness::time_best(reps, || {
+        experiments::fig4_sweep(&Fleet::serial(), &cfg, fan_window, 0xF164).unwrap()
+    });
+    assert_eq!(boot_pts.len(), restore_pts.len());
+    for (a, b) in boot_pts.iter().zip(&restore_pts) {
+        assert_eq!(a.total_mj.to_bits(), b.total_mj.to_bits(), "{} Hz", a.sample_rate_hz);
+    }
+    let restore_speedup = boot_s / restore_s;
+    println!(
+        "fan-out fixed cost ({fan_window} s window, best of {reps}): \
+         boot-per-point {}s vs restore-per-point {}s -> {restore_speedup:.2}x",
+        harness::eng(boot_s),
+        harness::eng(restore_s),
+    );
+    if restore_speedup < 1.0 {
+        println!("warning: restore-per-point showed no win on this run (noise?)");
+    }
 
     // paper-shape checks (abort the bench loudly if the figure breaks)
     let low = &points[0];
@@ -79,11 +117,15 @@ fn main() {
         "fig4_acquisition",
         vec![
             ("window_s", Json::Num(window_s)),
+            ("fanout_window_s", Json::Num(fan_window)),
             ("workers", Json::from(fleet.workers() as i64)),
+            ("restore_speedup", Json::Num(restore_speedup)),
         ],
         vec![
             harness::json_result("sweep_serial", serial_s),
             harness::json_result("sweep_fleet", fleet_s),
+            harness::json_result("sweep_boot", boot_s),
+            harness::json_result("sweep_restore", restore_s),
         ],
     );
 }

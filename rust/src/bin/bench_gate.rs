@@ -1,0 +1,250 @@
+//! CI bench-regression gate: compare fresh `BENCH_*.json` snapshots
+//! against a committed baseline and fail on regressions.
+//!
+//! ```text
+//! bench_gate <baseline.json> <BENCH_a.json> [<BENCH_b.json> ...]
+//! bench_gate --update <baseline.json> <BENCH_a.json> ...   # regenerate
+//! ```
+//!
+//! The baseline maps tracked metrics (`"<bench>/<result name>"`) to
+//! wall-second ceilings plus a relative `tolerance`:
+//!
+//! ```json
+//! {"tolerance": 0.15,
+//!  "metrics": {"table1/render_markdown": 0.01, "fig4_acquisition/sweep_serial": 60.0}}
+//! ```
+//!
+//! A metric regresses when `current > baseline * (1 + tolerance)`. A
+//! tracked metric missing from the fresh results is also a failure —
+//! the gate must not silently go blind when a bench is renamed. Extra
+//! (untracked) results are reported but never gate. The CI job retries
+//! once (re-measure) before declaring a regression real.
+
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+use femu::util::Json;
+
+/// One comparison outcome.
+#[derive(Debug, PartialEq)]
+enum Verdict {
+    Pass { ratio: f64 },
+    Regressed { ratio: f64 },
+    Missing,
+}
+
+/// Collect `"<bench>/<name>" -> wall_s` from one BENCH json document.
+fn collect_metrics(doc: &Json) -> Result<Vec<(String, f64)>> {
+    let bench = doc.str_field("bench")?;
+    let mut out = Vec::new();
+    for r in doc.get("results")?.as_arr()? {
+        out.push((format!("{bench}/{}", r.str_field("name")?), r.get("wall_s")?.as_f64()?));
+    }
+    Ok(out)
+}
+
+/// Compare fresh metrics against the baseline. Returns one verdict per
+/// tracked metric, in baseline order.
+fn compare(
+    baseline: &Json,
+    current: &[(String, f64)],
+) -> Result<Vec<(String, f64, Verdict)>> {
+    let tolerance = match baseline.opt("tolerance") {
+        Some(t) => t.as_f64()?,
+        None => 0.15,
+    };
+    if !(0.0..10.0).contains(&tolerance) {
+        bail!("baseline tolerance {tolerance} out of range");
+    }
+    let metrics = baseline.get("metrics")?.as_obj()?;
+    let mut out = Vec::new();
+    for (key, limit) in metrics {
+        let limit = limit.as_f64()?;
+        let verdict = match current.iter().find(|(k, _)| k == key) {
+            None => Verdict::Missing,
+            Some((_, wall)) => {
+                let ratio = wall / limit;
+                if ratio > 1.0 + tolerance {
+                    Verdict::Regressed { ratio }
+                } else {
+                    Verdict::Pass { ratio }
+                }
+            }
+        };
+        out.push((key.clone(), limit, verdict));
+    }
+    Ok(out)
+}
+
+fn load(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    Json::parse(&text).with_context(|| format!("parsing {path}"))
+}
+
+fn run() -> Result<bool> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (update, paths) = match args.first().map(String::as_str) {
+        Some("--update") => (true, &args[1..]),
+        _ => (false, &args[..]),
+    };
+    if paths.len() < 2 {
+        bail!(
+            "usage: bench_gate [--update] <baseline.json> <BENCH_a.json> [<BENCH_b.json> ...]"
+        );
+    }
+    let baseline_path = &paths[0];
+    let mut current: Vec<(String, f64)> = Vec::new();
+    for path in &paths[1..] {
+        current.extend(collect_metrics(&load(path)?)?);
+    }
+
+    if update {
+        // regenerate the baseline from the fresh results, keeping the
+        // existing tolerance and the maintainers' _comment
+        let old = load(baseline_path).ok();
+        let tolerance = old
+            .as_ref()
+            .and_then(|b| b.opt("tolerance").and_then(|t| t.as_f64().ok()))
+            .unwrap_or(0.15);
+        let metrics =
+            Json::Obj(current.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect());
+        let mut fields = Vec::new();
+        if let Some(comment) = old.as_ref().and_then(|b| b.opt("_comment")) {
+            fields.push(("_comment", comment.clone()));
+        }
+        fields.push(("tolerance", Json::Num(tolerance)));
+        fields.push(("metrics", metrics));
+        let doc = Json::obj(fields);
+        std::fs::write(baseline_path, format!("{doc}\n"))
+            .with_context(|| format!("writing {baseline_path}"))?;
+        println!("bench_gate: wrote {} metric(s) to {baseline_path}", current.len());
+        return Ok(true);
+    }
+
+    let baseline = load(baseline_path)?;
+    let verdicts = compare(&baseline, &current)?;
+    let mut ok = true;
+    println!("{:<40} {:>12} {:>12} {:>8}  verdict", "metric", "baseline_s", "current_s", "ratio");
+    for (key, limit, verdict) in &verdicts {
+        let wall = current.iter().find(|(k, _)| k == key).map(|(_, w)| *w);
+        match verdict {
+            Verdict::Pass { ratio } => {
+                println!("{key:<40} {limit:>12.6} {:>12.6} {ratio:>8.2}  ok", wall.unwrap());
+            }
+            Verdict::Regressed { ratio } => {
+                ok = false;
+                println!(
+                    "{key:<40} {limit:>12.6} {:>12.6} {ratio:>8.2}  REGRESSED",
+                    wall.unwrap()
+                );
+            }
+            Verdict::Missing => {
+                ok = false;
+                println!("{key:<40} {limit:>12.6} {:>12} {:>8}  MISSING", "-", "-");
+            }
+        }
+    }
+    for (key, wall) in &current {
+        if !verdicts.iter().any(|(k, _, _)| k == key) {
+            println!("{key:<40} {:>12} {wall:>12.6} {:>8}  (untracked)", "-", "-");
+        }
+    }
+    if !ok {
+        println!("bench_gate: FAIL (regressed or missing tracked metrics)");
+    } else {
+        println!("bench_gate: ok ({} tracked metric(s))", verdicts.len());
+    }
+    Ok(ok)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("bench_gate: error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bench_doc(bench: &str, results: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("bench", Json::from(bench)),
+            (
+                "results",
+                Json::Arr(
+                    results
+                        .iter()
+                        .map(|(n, w)| {
+                            Json::obj(vec![("name", Json::from(*n)), ("wall_s", Json::Num(*w))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn baseline(tolerance: f64, metrics: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("tolerance", Json::Num(tolerance)),
+            (
+                "metrics",
+                Json::Obj(
+                    metrics.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let current = collect_metrics(&bench_doc("table1", &[("render", 0.011)])).unwrap();
+        let b = baseline(0.15, &[("table1/render", 0.010)]);
+        let v = compare(&b, &current).unwrap();
+        assert!(matches!(v[0].2, Verdict::Pass { .. }), "{v:?}");
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_fails() {
+        let current = collect_metrics(&bench_doc("table1", &[("render", 0.020)])).unwrap();
+        let b = baseline(0.15, &[("table1/render", 0.010)]);
+        let v = compare(&b, &current).unwrap();
+        assert!(matches!(v[0].2, Verdict::Regressed { .. }), "{v:?}");
+    }
+
+    #[test]
+    fn synthetically_deflated_baseline_is_caught() {
+        // the gate-works demonstration: feed a baseline claiming the
+        // bench used to be 100x faster — the fresh measurement must trip
+        // the gate
+        let current =
+            collect_metrics(&bench_doc("fig4_acquisition", &[("sweep_serial", 2.0)])).unwrap();
+        let b = baseline(0.15, &[("fig4_acquisition/sweep_serial", 0.02)]);
+        let v = compare(&b, &current).unwrap();
+        match v[0].2 {
+            Verdict::Regressed { ratio } => assert!(ratio > 90.0),
+            ref other => panic!("expected regression, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_tracked_metric_fails() {
+        let current = collect_metrics(&bench_doc("table1", &[("render", 0.01)])).unwrap();
+        let b = baseline(0.15, &[("table1/filtering", 0.01)]);
+        let v = compare(&b, &current).unwrap();
+        assert_eq!(v[0].2, Verdict::Missing);
+    }
+
+    #[test]
+    fn untracked_metrics_never_gate() {
+        let current = collect_metrics(&bench_doc("table1", &[("render", 9e9)])).unwrap();
+        let b = baseline(0.15, &[]);
+        let v = compare(&b, &current).unwrap();
+        assert!(v.is_empty());
+    }
+}

@@ -112,6 +112,25 @@ impl Mailbox {
     pub fn next_event(&self, now: u64) -> Option<u64> {
         self.done_at.map(|t| t.max(now))
     }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.bool(self.irq_enabled);
+        w.u32(self.req_off);
+        w.bool(self.pending);
+        w.opt_u64(self.done_at);
+        w.bool(self.done);
+        w.bool(self.irq_level);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.irq_enabled = r.bool()?;
+        self.req_off = r.u32()?;
+        self.pending = r.bool()?;
+        self.done_at = r.opt_u64()?;
+        self.done = r.bool()?;
+        self.irq_level = r.bool()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -189,6 +189,48 @@ impl Bus {
         Ok(PERIPH_WAIT)
     }
 
+    /// Serialize every device behind the interconnect in a fixed order
+    /// (banks, then each peripheral, then CS DRAM).
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.u32(self.banks.len() as u32);
+        for b in &self.banks {
+            b.save_state(w);
+        }
+        self.uart.save_state(w);
+        self.gpio.save_state(w);
+        self.timer.save_state(w);
+        self.spi_adc.save_state(w);
+        self.spi_flash.save_state(w);
+        self.dma.save_state(w);
+        self.power.save_state(w);
+        self.cgra_dev.save_state(w);
+        self.mailbox.save_state(w);
+        self.cs_dram.save_state(w);
+        w.bool(self.periph_touched);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        let n = r.u32()? as usize;
+        if n != self.banks.len() {
+            anyhow::bail!("snapshot has {n} SRAM banks, platform has {}", self.banks.len());
+        }
+        for b in &mut self.banks {
+            b.restore_state(r)?;
+        }
+        self.uart.restore_state(r)?;
+        self.gpio.restore_state(r)?;
+        self.timer.restore_state(r)?;
+        self.spi_adc.restore_state(r)?;
+        self.spi_flash.restore_state(r)?;
+        self.dma.restore_state(r)?;
+        self.power.restore_state(r)?;
+        self.cgra_dev.restore_state(r)?;
+        self.mailbox.restore_state(r)?;
+        self.cs_dram.restore_state(r)?;
+        self.periph_touched = r.bool()?;
+        Ok(())
+    }
+
     /// Fast external interrupt lines (see [`crate::periph::irq`]),
     /// recomputed by the SoC after every step/event.
     pub fn fast_irq_lines(&self, now: u64) -> u32 {

@@ -149,6 +149,67 @@ impl CgraDevice {
     pub fn last_run(&self) -> Option<CgraRun> {
         self.last_run
     }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.u32(self.kernel);
+        for &a in &self.args {
+            w.u32(a);
+        }
+        w.bool(self.irq_enabled);
+        match &self.pending {
+            None => w.bool(false),
+            Some(req) => {
+                w.bool(true);
+                w.u32(req.kernel);
+                for &a in &req.args {
+                    w.u32(a);
+                }
+            }
+        }
+        w.opt_u64(self.busy_until);
+        match &self.last_run {
+            None => w.bool(false),
+            Some(run) => {
+                w.bool(true);
+                w.u64(run.compute_cycles);
+                w.u64(run.config_cycles);
+                w.u64(run.contexts);
+                w.u64(run.mem_stalls);
+            }
+        }
+        w.bool(self.irq_level);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.kernel = r.u32()?;
+        for a in &mut self.args {
+            *a = r.u32()?;
+        }
+        self.irq_enabled = r.bool()?;
+        self.pending = if r.bool()? {
+            let kernel = r.u32()?;
+            let mut args = [0u32; regs::NUM_ARGS];
+            for a in &mut args {
+                *a = r.u32()?;
+            }
+            Some(LaunchRequest { kernel, args })
+        } else {
+            None
+        };
+        self.busy_until = r.opt_u64()?;
+        self.last_run = if r.bool()? {
+            Some(CgraRun {
+                compute_cycles: r.u64()?,
+                config_cycles: r.u64()?,
+                contexts: r.u64()?,
+                mem_stalls: r.u64()?,
+            })
+        } else {
+            None
+        };
+        self.irq_level = r.bool()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -124,6 +124,29 @@ impl CgraCore {
         self.out = [0; NUM_PES];
     }
 
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        for pe in &self.regs {
+            for &r in pe {
+                w.i32(r);
+            }
+        }
+        for &o in &self.out {
+            w.i32(o);
+        }
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        for pe in &mut self.regs {
+            for v in pe {
+                *v = r.i32()?;
+            }
+        }
+        for o in &mut self.out {
+            *o = r.i32()?;
+        }
+        Ok(())
+    }
+
     #[inline]
     fn src_value(&self, pe: usize, s: Src, imm: i32) -> i32 {
         let r = pe / COLS;

@@ -10,6 +10,15 @@
 //! pass [`Fleet::serial()`] for the single-threaded reference path. Both
 //! paths are bit-identical by construction (per-point seeds come from
 //! [`super::fleet::point_seed`], aggregation preserves point order).
+//!
+//! Fan-out strategy: the default drivers run on
+//! [`Fleet::run_sweep_forked`] — one golden platform is booted (and, for
+//! Case C, warmed with the staged flash dataset + loaded guest) per
+//! sweep, snapshotted, and restored per point, so repeated boot/warmup
+//! work is paid once. The `*_boot` variants keep the boot-per-point
+//! reference path alive; `tests/fleet_determinism.rs` proves both paths
+//! bit-identical and `benches/fig4_acquisition.rs` reports the
+//! wall-clock win.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -19,6 +28,7 @@ use crate::energy::EnergyModel;
 use crate::isa::assemble;
 use crate::periph::FlashTiming;
 use crate::perfmon::PowerState;
+use crate::snapshot::PlatformSnapshot;
 use crate::virt::FlashService;
 use crate::workloads::{programs, reference as refimpl, signals};
 
@@ -48,9 +58,10 @@ pub struct Fig4Point {
 }
 
 /// Run the §V-A acquisition kernel for `window_s` seconds at
-/// `sample_rate_hz`, under both energy calibrations (FEMU + chip).
-pub fn fig4_point(
-    cfg: &PlatformConfig,
+/// `sample_rate_hz`, under both energy calibrations (FEMU + chip), on a
+/// platform freshly booted (or freshly restored to the golden image).
+pub fn fig4_point_on(
+    p: &mut Platform,
     sample_rate_hz: f64,
     window_s: f64,
     seed: u64,
@@ -59,12 +70,11 @@ pub fn fig4_point(
     if n_samples == 0 {
         bail!("window too short for {sample_rate_hz} Hz");
     }
-    let mut p = Platform::new(cfg.clone());
     // retention sleep for memories — the ULP acquisition configuration
     p.dbg.load_source(&programs::acquisition(n_samples, 2))?;
     let sig = signals::biosignal(seed, n_samples as usize, sample_rate_hz);
     p.start_adc(sig.samples, sample_rate_hz);
-    let budget = (cfg.soc.freq_hz as f64 * window_s * 3.0) as u64 + 10_000_000;
+    let budget = (p.cfg.soc.freq_hz as f64 * window_s * 3.0) as u64 + 10_000_000;
     match p.run_app(budget)? {
         AppExit::Halted(_) => {}
         AppExit::Budget => bail!("acquisition did not finish within budget"),
@@ -72,8 +82,8 @@ pub fn fig4_point(
     if p.dbg.soc.bus.spi_adc.underrun() {
         bail!("ADC underrun during fig4 acquisition");
     }
-    let snap = p.snapshot();
-    let freq = cfg.soc.freq_hz as f64;
+    let snap = p.perf_snapshot();
+    let freq = p.cfg.soc.freq_hz as f64;
     let active_cycles = snap.cpu.get(PowerState::Active);
     let sleep_cycles = snap.cycles - active_cycles;
     let mut out = Vec::new();
@@ -93,7 +103,19 @@ pub fn fig4_point(
     Ok(out)
 }
 
-/// The full Fig 4 sweep, sharded across `fleet`. `window_s` defaults to
+/// Boot-per-point convenience wrapper around [`fig4_point_on`].
+pub fn fig4_point(
+    cfg: &PlatformConfig,
+    sample_rate_hz: f64,
+    window_s: f64,
+    seed: u64,
+) -> Result<Vec<Fig4Point>> {
+    let mut p = Platform::new(cfg.clone());
+    fig4_point_on(&mut p, sample_rate_hz, window_s, seed)
+}
+
+/// The full Fig 4 sweep, sharded across `fleet` with fork-based fan-out
+/// (golden boot snapshot, restore per point). `window_s` defaults to
 /// the paper's 5 s via [`fig4_sweep_default`]; benches shrink it to keep
 /// runtimes sane (the active/sleep *fractions* are window-invariant).
 pub fn fig4_sweep(
@@ -114,10 +136,46 @@ pub fn fig4_sweep_with_abort(
     seed: u64,
     cancelled: &(dyn Fn() -> bool + Sync),
 ) -> Result<Vec<Fig4Point>> {
+    fig4_sweep_from(fleet, cfg, window_s, seed, None, cancelled)
+}
+
+/// [`fig4_sweep`] with an explicit golden snapshot (`femu
+/// sweep-acquisition --from-snapshot`): the sweep's per-point platforms
+/// restore from `golden` instead of a fresh boot, so results are
+/// relative to that warmed state.
+pub fn fig4_sweep_from(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    window_s: f64,
+    seed: u64,
+    golden: Option<&PlatformSnapshot>,
+    cancelled: &(dyn Fn() -> bool + Sync),
+) -> Result<Vec<Fig4Point>> {
+    fleet.run_sweep_forked(
+        cfg,
+        seed,
+        FIG4_FREQS_HZ.to_vec(),
+        golden,
+        &|_p| Ok(()),
+        |p, f, point_seed| {
+            if cancelled() {
+                bail!("experiment aborted");
+            }
+            fig4_point_on(p, f, window_s, point_seed)
+        },
+    )
+}
+
+/// Boot-per-point reference path (every point builds its own platform).
+/// Kept for the determinism proof and the boot-vs-restore bench; results
+/// are bit-identical to [`fig4_sweep`].
+pub fn fig4_sweep_boot(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    window_s: f64,
+    seed: u64,
+) -> Result<Vec<Fig4Point>> {
     fleet.run_sweep(cfg, seed, FIG4_FREQS_HZ.to_vec(), |cfg, f, point_seed| {
-        if cancelled() {
-            bail!("experiment aborted");
-        }
         fig4_point(cfg, f, window_s, point_seed)
     })
 }
@@ -182,10 +240,15 @@ pub struct Fig5Point {
     pub validated: bool,
 }
 
-/// Run one (kernel, impl) cell; returns one point per calibration.
-pub fn fig5_run(cfg: &PlatformConfig, kernel: Fig5Kernel, imp: Fig5Impl, seed: u64) -> Result<Vec<Fig5Point>> {
-    let mut p = Platform::new(cfg.clone());
-    let soc_freq = cfg.soc.freq_hz as f64;
+/// Run one (kernel, impl) cell on a freshly booted/restored platform;
+/// returns one point per calibration.
+pub fn fig5_run_on(
+    p: &mut Platform,
+    kernel: Fig5Kernel,
+    imp: Fig5Impl,
+    seed: u64,
+) -> Result<Vec<Fig5Point>> {
+    let soc_freq = p.cfg.soc.freq_hz as f64;
 
     // assemble + load the guest
     let src = match (kernel, imp) {
@@ -208,7 +271,7 @@ pub fn fig5_run(cfg: &PlatformConfig, kernel: Fig5Kernel, imp: Fig5Impl, seed: u
             let b = rng.vec_i32(k * n, -4096, 4096);
             p.dbg.write_i32_slice(prog.symbol("a_buf")?, &a)?;
             p.dbg.write_i32_slice(prog.symbol("b_buf")?, &b)?;
-            run_to_halt(&mut p)?;
+            run_to_halt(p)?;
             let got = p.dbg.read_i32_slice(prog.symbol("c_buf")?, m * n)?;
             validated = got == refimpl::matmul_i32(&a, &b, m, k, n);
         }
@@ -218,7 +281,7 @@ pub fn fig5_run(cfg: &PlatformConfig, kernel: Fig5Kernel, imp: Fig5Impl, seed: u
             let wts = rng.vec_i32(f * kh * kw * cin, -2048, 2048);
             p.dbg.write_i32_slice(prog.symbol("x_buf")?, &x)?;
             p.dbg.write_i32_slice(prog.symbol("w_buf")?, &wts)?;
-            run_to_halt(&mut p)?;
+            run_to_halt(p)?;
             let oh = h - kh + 1;
             let ow = w - kw + 1;
             let got = p.dbg.read_i32_slice(prog.symbol("y_buf")?, oh * ow * f)?;
@@ -236,7 +299,7 @@ pub fn fig5_run(cfg: &PlatformConfig, kernel: Fig5Kernel, imp: Fig5Impl, seed: u
             p.dbg.write_i32_slice(prog.symbol("rev_tbl")?, &rev)?;
             p.dbg.write_i32_slice(prog.symbol("wr_tbl")?, &wr)?;
             p.dbg.write_i32_slice(prog.symbol("wi_tbl")?, &wi)?;
-            run_to_halt(&mut p)?;
+            run_to_halt(p)?;
             let got_re = p.dbg.read_i32_slice(prog.symbol("re_buf")?, n)?;
             let got_im = p.dbg.read_i32_slice(prog.symbol("im_buf")?, n)?;
             let mut want_re = re.clone();
@@ -270,6 +333,17 @@ pub fn fig5_run(cfg: &PlatformConfig, kernel: Fig5Kernel, imp: Fig5Impl, seed: u
     Ok(out)
 }
 
+/// Boot-per-point convenience wrapper around [`fig5_run_on`].
+pub fn fig5_run(
+    cfg: &PlatformConfig,
+    kernel: Fig5Kernel,
+    imp: Fig5Impl,
+    seed: u64,
+) -> Result<Vec<Fig5Point>> {
+    let mut p = Platform::new(cfg.clone());
+    fig5_run_on(&mut p, kernel, imp, seed)
+}
+
 fn run_to_halt(p: &mut Platform) -> Result<()> {
     match p.run_app(2_000_000_000)? {
         AppExit::Halted(_) => Ok(()),
@@ -287,7 +361,7 @@ pub fn fig5_cells() -> Vec<(Fig5Kernel, Fig5Impl)> {
 }
 
 /// The full Fig 5 grid: 3 kernels x {CPU, CGRA} x {femu, chip}, one
-/// fleet point per (kernel, impl) cell.
+/// fleet point per (kernel, impl) cell, with fork-based fan-out.
 pub fn fig5_all(fleet: &Fleet, cfg: &PlatformConfig, seed: u64) -> Result<Vec<Fig5Point>> {
     fig5_all_with_abort(fleet, cfg, seed, &|| false)
 }
@@ -299,10 +373,36 @@ pub fn fig5_all_with_abort(
     seed: u64,
     cancelled: &(dyn Fn() -> bool + Sync),
 ) -> Result<Vec<Fig5Point>> {
+    fig5_all_from(fleet, cfg, seed, None, cancelled)
+}
+
+/// [`fig5_all`] with an explicit golden snapshot (`femu kernels
+/// --from-snapshot`).
+pub fn fig5_all_from(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    seed: u64,
+    golden: Option<&PlatformSnapshot>,
+    cancelled: &(dyn Fn() -> bool + Sync),
+) -> Result<Vec<Fig5Point>> {
+    fleet.run_sweep_forked(
+        cfg,
+        seed,
+        fig5_cells(),
+        golden,
+        &|_p| Ok(()),
+        |p, (kernel, imp), point_seed| {
+            if cancelled() {
+                bail!("experiment aborted");
+            }
+            fig5_run_on(p, kernel, imp, point_seed)
+        },
+    )
+}
+
+/// Boot-per-point reference path; bit-identical to [`fig5_all`].
+pub fn fig5_all_boot(fleet: &Fleet, cfg: &PlatformConfig, seed: u64) -> Result<Vec<Fig5Point>> {
     fleet.run_sweep(cfg, seed, fig5_cells(), |cfg, (kernel, imp), point_seed| {
-        if cancelled() {
-            bail!("experiment aborted");
-        }
         fig5_run(cfg, kernel, imp, point_seed)
     })
 }
@@ -397,21 +497,38 @@ pub fn case_c_with_abort(
     scale: usize,
     cancelled: &(dyn Fn() -> bool + Sync),
 ) -> Result<CaseCResult> {
+    case_c_from(fleet, cfg, scale, None, cancelled)
+}
+
+/// The sizes a `scale` factor resolves to.
+fn case_c_shape(scale: usize) -> (usize, usize, usize) {
     let windows = (240 / scale.max(1)).max(2);
     let samples = (35_000 / scale.max(1)).max(200);
-    let words = samples / 2;
-    let timings = vec![FlashTiming::virtualized(), FlashTiming::physical()];
-    let cycles = fleet.run_sweep(cfg, 0xCC, timings, |cfg, timing, _point_seed| {
-        if cancelled() {
-            bail!("experiment aborted");
-        }
-        Ok(vec![case_c_one(cfg, timing, windows, words, 0xCC)?])
-    })?;
+    (windows, samples, samples / 2)
+}
+
+/// Golden-platform warmup shared by both timing points: stage the
+/// dataset into flash and load the reader guest. Under fork-based
+/// fan-out this (signal generation + a multi-MiB staging pass +
+/// assembly) is paid once per study instead of once per point.
+fn case_c_warmup(p: &mut Platform, windows: usize, words: usize, seed: u64) -> Result<()> {
+    let data = signals::ultrasound_windows(seed, windows, words * 2);
+    let mut off = 0usize;
+    for w in &data {
+        FlashService::stage_bytes(&mut p.dbg.soc, off, &signals::pack_i16_pairs(w));
+        off += w.len() * 2;
+    }
+    let prog = assemble(&flash_reader(windows, words))?;
+    p.dbg.load_program(&prog)?;
+    Ok(())
+}
+
+fn case_c_result(cfg: &PlatformConfig, windows: usize, samples: usize, cycles: &[u64]) -> CaseCResult {
     let (virt_cycles, phys_cycles) = (cycles[0], cycles[1]);
     let f = cfg.soc.freq_hz as f64;
     let virt_total_s = virt_cycles as f64 / f;
     let phys_total_s = phys_cycles as f64 / f;
-    Ok(CaseCResult {
+    CaseCResult {
         windows,
         samples_per_window: samples,
         virt_window_s: virt_total_s / windows as f64,
@@ -419,7 +536,62 @@ pub fn case_c_with_abort(
         virt_total_s,
         phys_total_s,
         speedup: phys_total_s / virt_total_s,
-    })
+    }
+}
+
+/// [`case_c`] with an explicit golden snapshot: the study then measures
+/// *that snapshot's* loaded guest + staged flash under the two flash
+/// timings. The flash size is adopted from the snapshot; every other
+/// shape field (banks, CS DRAM, clock) must still match `cfg`, and the
+/// returned `windows`/`samples_per_window` (and the per-window figures
+/// derived from them) describe the standard §V-C layout, **not** the
+/// snapshot's workload — only the totals and speedup are meaningful
+/// then. `None` boots and warms the standard §V-C golden platform here.
+pub fn case_c_from(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    scale: usize,
+    golden: Option<&PlatformSnapshot>,
+    cancelled: &(dyn Fn() -> bool + Sync),
+) -> Result<CaseCResult> {
+    let (windows, samples, words) = case_c_shape(scale);
+    let mut golden_cfg = cfg.clone();
+    golden_cfg.soc.flash_size = match golden {
+        Some(snap) => snap.info()?.flash_size as usize,
+        None => (windows * words * 4).next_power_of_two().max(1 << 20),
+    };
+    let timings = vec![FlashTiming::virtualized(), FlashTiming::physical()];
+    let cycles = fleet.run_sweep_forked(
+        &golden_cfg,
+        0xCC,
+        timings,
+        golden,
+        &|p| case_c_warmup(p, windows, words, 0xCC),
+        |p, timing, _point_seed| {
+            if cancelled() {
+                bail!("experiment aborted");
+            }
+            // the timing model is the sweep variable; everything else is
+            // the restored golden image
+            p.dbg.soc.bus.spi_flash.set_timing(timing);
+            let start = p.dbg.soc.now;
+            match p.run_app(1u64 << 40)? {
+                AppExit::Halted(_) => Ok(vec![p.dbg.soc.now - start]),
+                AppExit::Budget => bail!("flash reader did not halt"),
+            }
+        },
+    )?;
+    Ok(case_c_result(cfg, windows, samples, &cycles))
+}
+
+/// Boot-per-point reference path; bit-identical to [`case_c`].
+pub fn case_c_boot(fleet: &Fleet, cfg: &PlatformConfig, scale: usize) -> Result<CaseCResult> {
+    let (windows, samples, words) = case_c_shape(scale);
+    let timings = vec![FlashTiming::virtualized(), FlashTiming::physical()];
+    let cycles = fleet.run_sweep(cfg, 0xCC, timings, |cfg, timing, _point_seed| {
+        Ok(vec![case_c_one(cfg, timing, windows, words, 0xCC)?])
+    })?;
+    Ok(case_c_result(cfg, windows, samples, &cycles))
 }
 
 #[cfg(test)]

@@ -32,6 +32,9 @@ use std::sync::{mpsc, Arc, Mutex};
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::PlatformConfig;
+use crate::snapshot::PlatformSnapshot;
+
+use super::Platform;
 
 /// A worker pool for sweep execution. `Copy`-cheap handle: the threads
 /// are scoped to each [`Fleet::run_sweep`] call, not kept alive between
@@ -123,29 +126,129 @@ impl Fleet {
             }
         });
 
-        // Aggregate in point order (== serial order). Errors win over
-        // partial results; missing slots can only occur after an abort.
-        let mut err = None;
-        let mut batches = Vec::with_capacity(n);
-        for slot in results {
-            match slot.into_inner().expect("result slot poisoned") {
-                Some(Ok(batch)) => batches.push(batch),
-                Some(Err(e)) => {
-                    if err.is_none() {
-                        err = Some(e);
-                    }
-                }
-                None => {}
-            }
-        }
-        if let Some(e) = err {
-            return Err(e);
-        }
-        if batches.len() != n {
-            bail!("fleet aborted with {} of {n} points completed and no error", batches.len());
-        }
-        Ok(batches.into_iter().flatten().collect())
+        gather_results(results, n)
     }
+
+    /// [`Fleet::run_sweep`] with fork-based fan-out: instead of every
+    /// point booting its own platform, the sweep boots **one** golden
+    /// platform, applies `warmup` (stage datasets, load a program, run an
+    /// init phase — whatever is identical across points), snapshots it,
+    /// and hands every point a platform *restored* from that snapshot.
+    /// Each worker keeps one reusable platform and restores it between
+    /// points, so the per-point fixed cost is a sparse state copy rather
+    /// than a full re-boot plus re-warmup.
+    ///
+    /// `golden` overrides the boot+warmup with a pre-made snapshot (the
+    /// CLI's `--from-snapshot`); its shape must match `cfg`.
+    ///
+    /// Determinism contract: identical to [`Fleet::run_sweep`] — every
+    /// point starts from the bit-identical restored image and seeds
+    /// depend only on (base seed, index), so the output is independent of
+    /// the worker count *and* bit-identical to boot-per-point sweeps
+    /// (restore reproduces a freshly-booted-and-warmed platform exactly;
+    /// `tests/fleet_determinism.rs` holds the line on both).
+    pub fn run_sweep_forked<P, T, F>(
+        &self,
+        cfg: &PlatformConfig,
+        base_seed: u64,
+        points: Vec<P>,
+        golden: Option<&PlatformSnapshot>,
+        warmup: &(dyn Fn(&mut Platform) -> Result<()> + Sync),
+        run: F,
+    ) -> Result<Vec<T>>
+    where
+        P: Send,
+        T: Send,
+        F: Fn(&mut Platform, P, u64) -> Result<Vec<T>> + Sync,
+    {
+        let owned;
+        // the golden platform itself is reused as the serial path's
+        // restore target (no second boot)
+        let mut reuse: Option<Platform> = None;
+        let snap: &PlatformSnapshot = match golden {
+            Some(s) => s,
+            None => {
+                let mut g = Platform::new(cfg.clone());
+                warmup(&mut g)?;
+                owned = g.snapshot();
+                reuse = Some(g);
+                &owned
+            }
+        };
+
+        let n = points.len();
+        if self.workers <= 1 || n <= 1 {
+            let mut platform = reuse.take().unwrap_or_else(|| Platform::new(cfg.clone()));
+            let mut all = Vec::new();
+            for (i, p) in points.into_iter().enumerate() {
+                platform.restore(snap)?;
+                all.extend(run(&mut platform, p, point_seed(base_seed, i))?);
+            }
+            return Ok(all);
+        }
+
+        let workers = self.workers.min(n);
+        let abort = AtomicBool::new(false);
+        let queue = Mutex::new(points.into_iter().enumerate());
+        let results: Vec<Mutex<Option<Result<Vec<T>>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    // one reusable platform per worker, restored per point
+                    let mut platform = Platform::new(cfg.clone());
+                    loop {
+                        if abort.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let Some((i, point)) = queue.lock().expect("queue poisoned").next()
+                        else {
+                            break;
+                        };
+                        let r = platform
+                            .restore(snap)
+                            .and_then(|()| run(&mut platform, point, point_seed(base_seed, i)));
+                        if r.is_err() {
+                            abort.store(true, Ordering::Relaxed);
+                        }
+                        *results[i].lock().expect("result slot poisoned") = Some(r);
+                    }
+                });
+            }
+        });
+
+        gather_results(results, n)
+    }
+}
+
+/// One result slot per sweep point, filled by whichever worker ran it.
+type PointSlots<T> = Vec<Mutex<Option<Result<Vec<T>>>>>;
+
+/// Aggregate per-point result slots in point order (== serial order).
+/// Errors win over partial results; missing slots can only occur after
+/// an abort.
+fn gather_results<T>(results: PointSlots<T>, n: usize) -> Result<Vec<T>> {
+    let mut err = None;
+    let mut batches = Vec::with_capacity(n);
+    for slot in results {
+        match slot.into_inner().expect("result slot poisoned") {
+            Some(Ok(batch)) => batches.push(batch),
+            Some(Err(e)) => {
+                if err.is_none() {
+                    err = Some(e);
+                }
+            }
+            None => {}
+        }
+    }
+    if let Some(e) = err {
+        return Err(e);
+    }
+    if batches.len() != n {
+        bail!("fleet aborted with {} of {n} points completed and no error", batches.len());
+    }
+    Ok(batches.into_iter().flatten().collect())
 }
 
 /// Deterministic per-point seed: a splitmix64 step over the base seed and

@@ -21,13 +21,14 @@ pub mod table1;
 
 pub use fleet::{Fleet, WorkerPool};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::PlatformConfig;
 use crate::cpu::Halt;
 use crate::energy::{EnergyModel, EnergyReport};
 use crate::perfmon::PerfSnapshot;
 use crate::runtime::Runtime;
+use crate::snapshot::{PlatformSnapshot, Reader, SnapshotInfo, Writer};
 use crate::soc::{RunExit, Soc};
 use crate::virt::{AccelService, AdcService, DebugSession};
 
@@ -112,13 +113,104 @@ impl Platform {
     }
 
     /// Perf counters since reset (automatic mode).
-    pub fn snapshot(&self) -> PerfSnapshot {
+    pub fn perf_snapshot(&self) -> PerfSnapshot {
         self.dbg.soc.perf.snapshot(self.dbg.soc.now)
     }
 
     /// Estimate energy for a snapshot under a named calibration.
     pub fn estimate(&self, snap: &PerfSnapshot, model: &EnergyModel) -> EnergyReport {
         model.estimate(snap)
+    }
+
+    // ---- snapshot / restore / fork (DESIGN.md §10) ----------------------
+
+    /// Serialize the full platform state into a versioned, checksummed
+    /// [`PlatformSnapshot`]: SoC (CPU, interconnect, every peripheral,
+    /// CGRA, perf counters), debug-session state, and the CS ADC service.
+    /// The PJRT accelerator runtime is **not** captured (process-local
+    /// handles); a restored platform keeps its current artifact binding.
+    pub fn snapshot(&self) -> PlatformSnapshot {
+        let mut w = Writer::new();
+        SnapshotInfo {
+            name: self.cfg.name.clone(),
+            freq_hz: self.cfg.soc.freq_hz,
+            num_banks: self.cfg.soc.num_banks as u32,
+            bank_size: self.cfg.soc.bank_size,
+            cs_dram_size: self.cfg.soc.cs_dram_size as u64,
+            flash_size: self.cfg.soc.flash_size as u64,
+            cycles: self.dbg.soc.now,
+        }
+        .write(&mut w);
+        self.dbg.save_state(&mut w);
+        match &self.adc {
+            None => w.bool(false),
+            Some(adc) => {
+                w.bool(true);
+                adc.save_state(&mut w);
+            }
+        }
+        PlatformSnapshot::from_payload(w.into_payload())
+    }
+
+    /// Reset this platform to `snap`. The snapshot's platform shape
+    /// (bank count/size, CS-DRAM/flash sizes, clock) must match this
+    /// platform's config — validated before any state is touched. This
+    /// is the restore-per-point hot path of forked sweeps, so it decodes
+    /// straight into the live state (pristine large memories are
+    /// skipped, not memset): if a frame-valid payload fails *mid*-decode
+    /// (possible only for hand-corrupted images that beat the checksum,
+    /// or cross-build format drift), the platform is left partially
+    /// restored and the caller must discard it. Untrusted images should
+    /// go through [`Platform::restore_transactional`].
+    pub fn restore(&mut self, snap: &PlatformSnapshot) -> Result<()> {
+        let mut r = Reader::new(snap.payload());
+        let info = SnapshotInfo::read(&mut r)?;
+        let soc = &self.cfg.soc;
+        if info.num_banks != soc.num_banks as u32
+            || info.bank_size != soc.bank_size
+            || info.cs_dram_size != soc.cs_dram_size as u64
+            || info.flash_size != soc.flash_size as u64
+            || info.freq_hz != soc.freq_hz
+        {
+            bail!(
+                "snapshot shape mismatch: snapshot `{}` has {} banks x {:#x} B, \
+                 {} B CS DRAM, {} B flash at {} Hz; platform `{}` differs",
+                info.name,
+                info.num_banks,
+                info.bank_size,
+                info.cs_dram_size,
+                info.flash_size,
+                info.freq_hz,
+                self.cfg.name,
+            );
+        }
+        self.dbg.restore_state(&mut r)?;
+        self.adc = if r.bool()? { Some(AdcService::from_state(&mut r)?) } else { None };
+        r.finish()
+    }
+
+    /// [`Platform::restore`] with all-or-nothing semantics for untrusted
+    /// images (the server's `snapshot.restore`): the image is decoded
+    /// into a scratch platform first, and this platform is only replaced
+    /// on full success — a mid-decode failure leaves it untouched. The
+    /// attached accelerator runtime (not part of snapshots) survives.
+    pub fn restore_transactional(&mut self, snap: &PlatformSnapshot) -> Result<()> {
+        let mut fresh = Platform::new(self.cfg.clone());
+        fresh.restore(snap)?;
+        fresh.accel = self.accel.take();
+        *self = fresh;
+        Ok(())
+    }
+
+    /// Clone this platform through a snapshot: a new instance with
+    /// identical state that diverges independently from here on. (The
+    /// accelerator runtime, if any, is not carried over — attach
+    /// artifacts on the fork if it needs the mailbox path.)
+    pub fn fork(&self) -> Result<Platform> {
+        let snap = self.snapshot();
+        let mut p = Platform::new(self.cfg.clone());
+        p.restore(&snap).context("restoring fork from snapshot")?;
+        Ok(p)
     }
 }
 

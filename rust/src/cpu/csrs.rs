@@ -99,6 +99,31 @@ impl Csrs {
     }
 }
 
+impl Csrs {
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.u32(self.mstatus);
+        w.u32(self.mie);
+        w.u32(self.mip);
+        w.u32(self.mtvec);
+        w.u32(self.mscratch);
+        w.u32(self.mepc);
+        w.u32(self.mcause);
+        w.u32(self.mtval);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.mstatus = r.u32()?;
+        self.mie = r.u32()?;
+        self.mip = r.u32()?;
+        self.mtvec = r.u32()?;
+        self.mscratch = r.u32()?;
+        self.mepc = r.u32()?;
+        self.mcause = r.u32()?;
+        self.mtval = r.u32()?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -409,6 +409,78 @@ impl Cpu {
     }
 }
 
+impl Cpu {
+    /// Serialize the architectural state (registers, pc, CSRs, execution
+    /// state, timing model, instret). The decode cache is **not**
+    /// captured: it is tagged by the raw instruction word, so any entry
+    /// is valid against whatever memory image is restored around it.
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        for &r in &self.regs {
+            w.u32(r);
+        }
+        w.u32(self.pc);
+        self.csrs.save_state(w);
+        match self.state {
+            CpuState::Running => w.u8(0),
+            CpuState::Sleeping => w.u8(1),
+            CpuState::Halted(Halt::Ebreak) => w.u8(2),
+            CpuState::Halted(Halt::UnhandledTrap { cause, pc }) => {
+                w.u8(3);
+                w.u32(cause);
+                w.u32(pc);
+            }
+        }
+        for t in [
+            self.timing.alu,
+            self.timing.mul,
+            self.timing.div,
+            self.timing.load,
+            self.timing.store,
+            self.timing.branch,
+            self.timing.branch_taken_penalty,
+            self.timing.jump,
+            self.timing.csr,
+            self.timing.trap_entry,
+            self.timing.wake,
+        ] {
+            w.u32(t);
+        }
+        w.u64(self.instret);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        for reg in &mut self.regs {
+            *reg = r.u32()?;
+        }
+        self.pc = r.u32()?;
+        self.csrs.restore_state(r)?;
+        self.state = match r.u8()? {
+            0 => CpuState::Running,
+            1 => CpuState::Sleeping,
+            2 => CpuState::Halted(Halt::Ebreak),
+            3 => {
+                let cause = r.u32()?;
+                let pc = r.u32()?;
+                CpuState::Halted(Halt::UnhandledTrap { cause, pc })
+            }
+            other => anyhow::bail!("snapshot corrupt: cpu state tag {other}"),
+        };
+        self.timing.alu = r.u32()?;
+        self.timing.mul = r.u32()?;
+        self.timing.div = r.u32()?;
+        self.timing.load = r.u32()?;
+        self.timing.store = r.u32()?;
+        self.timing.branch = r.u32()?;
+        self.timing.branch_taken_penalty = r.u32()?;
+        self.timing.jump = r.u32()?;
+        self.timing.csr = r.u32()?;
+        self.timing.trap_entry = r.u32()?;
+        self.timing.wake = r.u32()?;
+        self.instret = r.u64()?;
+        Ok(())
+    }
+}
+
 #[inline]
 fn alu(op: AluOp, a: u32, b: u32) -> u32 {
     match op {

@@ -3,12 +3,15 @@
 //! Subcommands (hand-rolled parsing; clap is unavailable offline):
 //!
 //! ```text
-//! femu run <prog.s> [--config <platform.toml>] [--max-cycles N]
+//! femu run [prog.s] [--config <platform.toml>] [--max-cycles N]
+//!          [--from-snapshot FILE]
 //! femu profile <prog.s> [--config ..] [--model femu|heepocrates]
-//! femu sweep-acquisition [--window-s S] [--config ..]        (Fig 4)
-//! femu kernels [--validate] [--config ..]                    (Fig 5)
-//! femu flash-study [--scale N] [--config ..]                 (Case C)
-//! femu table1                                                (Table I)
+//! femu snapshot save <prog.s> --out FILE [--cycles N] [--config ..]
+//! femu snapshot info <FILE>
+//! femu sweep-acquisition [--window-s S] [--from-snapshot FILE]   (Fig 4)
+//! femu kernels [--validate] [--from-snapshot FILE]               (Fig 5)
+//! femu flash-study [--scale N] [--from-snapshot FILE]            (Case C)
+//! femu table1                                                    (Table I)
 //! femu serve [--addr HOST:PORT] [--artifacts DIR] [--config ..]
 //!            [--max-sessions N] [--workers N] [--idle-timeout SECS]
 //!            [--configs DIR]
@@ -26,6 +29,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use femu::config::PlatformConfig;
 use femu::coordinator::{experiments, table1, AppExit, Fleet, Platform};
 use femu::energy::EnergyModel;
+use femu::snapshot::PlatformSnapshot;
 use femu::util::eng;
 
 fn main() {
@@ -94,6 +98,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&args),
         "profile" => cmd_profile(&args),
+        "snapshot" => cmd_snapshot(&args),
         "sweep-acquisition" => cmd_sweep_acquisition(&args),
         "kernels" => cmd_kernels(&args),
         "flash-study" => cmd_flash_study(&args),
@@ -113,8 +118,11 @@ fn print_usage() {
         "femu — FPGA EMUlation framework for TinyAI heterogeneous systems \
          (software reproduction)\n\n\
          USAGE:\n  \
-         femu run <prog.s> [--config <platform.toml>] [--max-cycles N]\n  \
+         femu run [prog.s] [--config <platform.toml>] [--max-cycles N]\n  \
+         \x20        [--from-snapshot FILE]\n  \
          femu profile <prog.s> [--config ..] [--model ..] [--vcd out.vcd]\n  \
+         femu snapshot save <prog.s> --out FILE [--cycles N] [--config ..]\n  \
+         femu snapshot info <FILE>                    inspect a snapshot\n  \
          femu disasm <prog.s>                         assemble + list\n  \
          femu sweep-acquisition [--window-s S]        reproduce Fig 4\n  \
          femu kernels [--validate]                    reproduce Fig 5\n  \
@@ -123,8 +131,10 @@ fn print_usage() {
          femu serve [--addr HOST:PORT] [--artifacts DIR] [--max-sessions N]\n  \
          \x20          [--workers N] [--idle-timeout SECS] [--configs DIR]\n\n\
          Experiment subcommands accept --workers N (fleet size; default: \
-         one per core)\n  \
-         and --serial (single-threaded reference path)."
+         one per core),\n  \
+         --serial (single-threaded reference path), and --from-snapshot FILE \
+         (use a saved\n  \
+         snapshot as the golden image the sweep forks from)."
     );
 }
 
@@ -145,7 +155,24 @@ fn load_guest(args: &Args) -> Result<(Platform, femu::isa::Program)> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let (mut platform, _) = load_guest(args)?;
+    let mut platform = if let Some(path) = args.flags.get("from-snapshot") {
+        // resume from a saved image; a guest file, if given, is loaded
+        // over the restored state (seamless reprogramming)
+        let snap = PlatformSnapshot::load(path)?;
+        let mut platform = Platform::new(load_config(args)?);
+        if let Some(dir) = args.flags.get("artifacts") {
+            platform.attach_artifacts(dir)?;
+        }
+        platform.restore(&snap)?;
+        if let Some(prog) = args.positional.first() {
+            let src =
+                std::fs::read_to_string(prog).with_context(|| format!("reading {prog}"))?;
+            platform.dbg.load_source(&src)?;
+        }
+        platform
+    } else {
+        load_guest(args)?.0
+    };
     let budget = args
         .flags
         .get("max-cycles")
@@ -177,7 +204,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
     let model_name = args.flags.get("model").map(String::as_str).unwrap_or("femu");
     let model = EnergyModel::by_name(model_name)
         .ok_or_else(|| anyhow!("unknown model `{model_name}`"))?;
-    let snap = platform.snapshot();
+    let snap = platform.perf_snapshot();
     let report = model.estimate(&snap);
     println!("== femu profile ({model_name} calibration) ==");
     println!(
@@ -229,9 +256,78 @@ fn cmd_disasm(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--from-snapshot FILE`: the golden image a forked experiment sweep
+/// restores per point, replacing the fresh boot (+ warmup).
+fn golden_from_args(args: &Args) -> Result<Option<PlatformSnapshot>> {
+    match args.flags.get("from-snapshot") {
+        Some(path) => Ok(Some(PlatformSnapshot::load(path)?)),
+        None => Ok(None),
+    }
+}
+
+fn cmd_snapshot(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("save") => {
+            let prog = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: femu snapshot save <prog.s> --out FILE"))?;
+            let src =
+                std::fs::read_to_string(prog).with_context(|| format!("reading {prog}"))?;
+            let mut platform = Platform::new(load_config(args)?);
+            if let Some(dir) = args.flags.get("artifacts") {
+                platform.attach_artifacts(dir)?;
+            }
+            platform.dbg.load_source(&src)?;
+            let cycles = args
+                .flags
+                .get("cycles")
+                .map(|s| s.parse::<u64>())
+                .transpose()?
+                .unwrap_or(0);
+            if cycles > 0 {
+                let exit = platform.run_app(cycles)?;
+                println!("warmup: {exit:?} at cycle {}", platform.dbg.soc.now);
+            }
+            let out = args
+                .flags
+                .get("out")
+                .map(String::as_str)
+                .unwrap_or("snapshot.femusnap");
+            let snap = platform.snapshot();
+            snap.save(out)?;
+            println!(
+                "snapshot v{} ({} bytes, cycle {}) -> {out}",
+                femu::snapshot::VERSION,
+                snap.size_bytes(),
+                platform.dbg.soc.now
+            );
+            Ok(())
+        }
+        Some("info") => {
+            let path = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: femu snapshot info <FILE>"))?;
+            let snap = PlatformSnapshot::load(path)?;
+            let info = snap.info()?;
+            println!("snapshot: {path} ({} bytes, format v{})", snap.size_bytes(), femu::snapshot::VERSION);
+            println!("platform: {} @ {} Hz", info.name, info.freq_hz);
+            println!(
+                "shape:    {} banks x {:#x} B SRAM, {} B CS DRAM, {} B flash",
+                info.num_banks, info.bank_size, info.cs_dram_size, info.flash_size
+            );
+            println!("cycles:   {} ({}s emulated)", info.cycles, eng(info.cycles as f64 / info.freq_hz as f64));
+            Ok(())
+        }
+        _ => bail!("usage: femu snapshot save <prog.s> --out FILE [--cycles N] | femu snapshot info <FILE>"),
+    }
+}
+
 fn cmd_sweep_acquisition(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let fleet = fleet_from_args(args)?;
+    let golden = golden_from_args(args)?;
     let window_s = args
         .flags
         .get("window-s")
@@ -246,7 +342,7 @@ fn cmd_sweep_acquisition(args: &Args) -> Result<()> {
         "{:>10} {:>12} | {:>9} {:>9} {:>8} | {:>10} {:>10} {:>8}",
         "f_s (Hz)", "platform", "active_s", "sleep_s", "act_t%", "act_mJ", "slp_mJ", "act_E%"
     );
-    for p in experiments::fig4_sweep(&fleet, &cfg, window_s, 0xF164)? {
+    for p in experiments::fig4_sweep_from(&fleet, &cfg, window_s, 0xF164, golden.as_ref(), &|| false)? {
         let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
         println!(
             "{:>10} {:>12} | {:>9.4} {:>9.4} {:>7.2}% | {:>10.4} {:>10.4} {:>7.2}%",
@@ -266,6 +362,7 @@ fn cmd_sweep_acquisition(args: &Args) -> Result<()> {
 fn cmd_kernels(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let fleet = fleet_from_args(args)?;
+    let golden = golden_from_args(args)?;
     println!(
         "== Fig 5: TinyAI kernels, CPU vs CGRA, FEMU vs chip ({} worker(s)) ==",
         fleet.workers()
@@ -274,7 +371,7 @@ fn cmd_kernels(args: &Args) -> Result<()> {
         "{:>6} {:>6} {:>12} | {:>12} {:>10} {:>12} {:>6}",
         "kernel", "impl", "platform", "cycles", "time", "energy", "valid"
     );
-    let all = experiments::fig5_all(&fleet, &cfg, 0xF15)?;
+    let all = experiments::fig5_all_from(&fleet, &cfg, 0xF15, golden.as_ref(), &|| false)?;
     for p in &all {
         let plat = if p.model == "femu" { "X-HEEP-FEMU" } else { "HEEPocrates" };
         println!(
@@ -364,6 +461,7 @@ fn validate_virtualized() -> Result<()> {
 fn cmd_flash_study(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let fleet = fleet_from_args(args)?;
+    let golden = golden_from_args(args)?;
     let scale = args
         .flags
         .get("scale")
@@ -371,7 +469,14 @@ fn cmd_flash_study(args: &Args) -> Result<()> {
         .transpose()?
         .unwrap_or(1);
     println!("== Case C (\u{a7}V-C): flash virtualization transfer study ==");
-    let r = experiments::case_c(&fleet, &cfg, scale)?;
+    let r = experiments::case_c_from(&fleet, &cfg, scale, golden.as_ref(), &|| false)?;
+    if golden.is_some() {
+        println!(
+            "note: measuring the snapshot's own guest + flash contents; only the \
+             totals and speedup below describe it (window figures assume the \
+             standard \u{a7}V-C layout)"
+        );
+    }
     println!(
         "windows: {} x {} samples ({} KiB/window)",
         r.windows,

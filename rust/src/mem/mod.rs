@@ -148,6 +148,19 @@ impl SramBank {
         }
         Ok(&self.data[offset..offset + len])
     }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.u8(self.state.to_u8());
+        w.u64(self.access_cycles);
+        w.filled_bytes(&self.data, 0);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.state = PowerState::from_u8(r.u8()?)?;
+        self.access_cycles = r.u64()?;
+        // banks are small (code + data live here): always fully restored
+        r.filled_bytes_into(&mut self.data, 0, false)
+    }
 }
 
 /// CS-side DRAM: the memory the PS owns. The guest reaches a window of it
@@ -156,11 +169,16 @@ impl SramBank {
 #[derive(Clone, Debug)]
 pub struct CsDram {
     data: Vec<u8>,
+    /// False while the memory is provably all-zero (never written since
+    /// construction or since the last restore-to-pristine). Lets
+    /// snapshot save skip the 16 MiB scan and restore skip the reset
+    /// memset — the restore-per-point hot path of forked sweeps.
+    touched: bool,
 }
 
 impl CsDram {
     pub fn new(size: usize) -> Self {
-        Self { data: vec![0; size] }
+        Self { data: vec![0; size], touched: false }
     }
 
     pub fn size(&self) -> usize {
@@ -197,18 +215,21 @@ impl CsDram {
 
     pub fn write8(&mut self, offset: usize, v: u8) -> Result<(), MemError> {
         self.check(offset, 1)?;
+        self.touched = true;
         self.data[offset] = v;
         Ok(())
     }
 
     pub fn write16(&mut self, offset: usize, v: u16) -> Result<(), MemError> {
         self.check(offset, 2)?;
+        self.touched = true;
         self.data[offset..offset + 2].copy_from_slice(&v.to_le_bytes());
         Ok(())
     }
 
     pub fn write32(&mut self, offset: usize, v: u32) -> Result<(), MemError> {
         self.check(offset, 4)?;
+        self.touched = true;
         self.data[offset..offset + 4].copy_from_slice(&v.to_le_bytes());
         Ok(())
     }
@@ -226,6 +247,7 @@ impl CsDram {
     /// Write a run of i32 words.
     pub fn write_i32_slice(&mut self, offset: usize, vals: &[i32]) -> Result<(), MemError> {
         self.check(offset, vals.len() * 4)?;
+        self.touched = true;
         for (i, v) in vals.iter().enumerate() {
             self.data[offset + i * 4..offset + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
         }
@@ -234,6 +256,7 @@ impl CsDram {
 
     pub fn load(&mut self, offset: usize, bytes: &[u8]) -> Result<(), MemError> {
         self.check(offset, bytes.len())?;
+        self.touched = true;
         self.data[offset..offset + bytes.len()].copy_from_slice(bytes);
         Ok(())
     }
@@ -241,6 +264,23 @@ impl CsDram {
     pub fn dump(&self, offset: usize, len: usize) -> Result<&[u8], MemError> {
         self.check(offset, len)?;
         Ok(&self.data[offset..offset + len])
+    }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.bool(self.touched);
+        if self.touched {
+            w.filled_bytes(&self.data, 0);
+        } else {
+            w.filled_bytes_clean(self.data.len());
+        }
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        let snap_touched = r.bool()?;
+        // skip the reset memset only when this memory is still pristine
+        r.filled_bytes_into(&mut self.data, 0, !self.touched)?;
+        self.touched = snap_touched;
+        Ok(())
     }
 }
 

@@ -46,6 +46,22 @@ impl PowerState {
             PowerState::Retention => "retention",
         }
     }
+
+    /// Snapshot encoding (stable: the enum discriminants are part of the
+    /// snapshot format).
+    pub fn to_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(v: u8) -> anyhow::Result<PowerState> {
+        Ok(match v {
+            0 => PowerState::Active,
+            1 => PowerState::ClockGated,
+            2 => PowerState::PowerGated,
+            3 => PowerState::Retention,
+            other => anyhow::bail!("snapshot corrupt: power state tag {other}"),
+        })
+    }
 }
 
 impl fmt::Display for PowerState {
@@ -338,6 +354,116 @@ impl PerfMonitor {
         self.window_acc = None;
         self.window_cycles = 0;
     }
+
+    /// Serialize all counters and window state. The optional VCD
+    /// transition log is **not** captured (restore clears it).
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        self.cpu.save_state(w);
+        self.bus.save_state(w);
+        self.periph.save_state(w);
+        w.u32(self.banks.len() as u32);
+        for b in &self.banks {
+            b.save_state(w);
+        }
+        self.cgra.save_state(w);
+        w.bool(self.measuring);
+        w.opt_u64(self.window_start);
+        w.u64(self.window_cycles);
+        save_opt_snap(w, &self.window_base);
+        save_opt_snap(w, &self.window_acc);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.cpu.restore_state(r)?;
+        self.bus.restore_state(r)?;
+        self.periph.restore_state(r)?;
+        let n = r.u32()? as usize;
+        if n != self.banks.len() {
+            anyhow::bail!(
+                "snapshot has {n} memory-bank trackers, platform has {}",
+                self.banks.len()
+            );
+        }
+        for b in &mut self.banks {
+            b.restore_state(r)?;
+        }
+        self.cgra.restore_state(r)?;
+        self.measuring = r.bool()?;
+        self.window_start = r.opt_u64()?;
+        self.window_cycles = r.u64()?;
+        self.window_base = read_opt_snap(r)?;
+        self.window_acc = read_opt_snap(r)?;
+        self.trace = None; // transition log is not part of the snapshot
+        Ok(())
+    }
+}
+
+impl DomainTracker {
+    fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.u8(self.state.to_u8());
+        w.u64(self.last_change);
+        for c in self.cycles.counts {
+            w.u64(c);
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.state = PowerState::from_u8(r.u8()?)?;
+        self.last_change = r.u64()?;
+        for c in &mut self.cycles.counts {
+            *c = r.u64()?;
+        }
+        Ok(())
+    }
+}
+
+fn save_state_cycles(w: &mut crate::snapshot::Writer, c: &StateCycles) {
+    for v in c.counts {
+        w.u64(v);
+    }
+}
+
+fn read_state_cycles(r: &mut crate::snapshot::Reader) -> anyhow::Result<StateCycles> {
+    let mut c = StateCycles::default();
+    for v in &mut c.counts {
+        *v = r.u64()?;
+    }
+    Ok(c)
+}
+
+fn save_opt_snap(w: &mut crate::snapshot::Writer, s: &Option<PerfSnapshot>) {
+    match s {
+        None => w.bool(false),
+        Some(snap) => {
+            w.bool(true);
+            save_state_cycles(w, &snap.cpu);
+            save_state_cycles(w, &snap.bus);
+            save_state_cycles(w, &snap.periph);
+            w.u32(snap.banks.len() as u32);
+            for b in &snap.banks {
+                save_state_cycles(w, b);
+            }
+            save_state_cycles(w, &snap.cgra);
+            w.u64(snap.cycles);
+        }
+    }
+}
+
+fn read_opt_snap(r: &mut crate::snapshot::Reader) -> anyhow::Result<Option<PerfSnapshot>> {
+    if !r.bool()? {
+        return Ok(None);
+    }
+    let cpu = read_state_cycles(r)?;
+    let bus = read_state_cycles(r)?;
+    let periph = read_state_cycles(r)?;
+    let n = r.u32()? as usize;
+    let mut banks = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        banks.push(read_state_cycles(r)?);
+    }
+    let cgra = read_state_cycles(r)?;
+    let cycles = r.u64()?;
+    Ok(Some(PerfSnapshot { cpu, bus, periph, banks, cgra, cycles }))
 }
 
 #[cfg(test)]

@@ -110,6 +110,41 @@ impl Dma {
     pub fn busy(&self) -> bool {
         self.inflight.is_some()
     }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.u32(self.src);
+        w.u32(self.dst);
+        w.u32(self.len);
+        w.bool(self.irq_enabled);
+        match self.inflight {
+            None => w.bool(false),
+            Some((req, finish)) => {
+                w.bool(true);
+                w.u32(req.src);
+                w.u32(req.dst);
+                w.u32(req.len);
+                w.u64(finish);
+            }
+        }
+        w.bool(self.done);
+        w.bool(self.irq_level);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.src = r.u32()?;
+        self.dst = r.u32()?;
+        self.len = r.u32()?;
+        self.irq_enabled = r.bool()?;
+        self.inflight = if r.bool()? {
+            let req = DmaRequest { src: r.u32()?, dst: r.u32()?, len: r.u32()? };
+            Some((req, r.u64()?))
+        } else {
+            None
+        };
+        self.done = r.bool()?;
+        self.irq_level = r.bool()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

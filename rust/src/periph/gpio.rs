@@ -76,6 +76,35 @@ impl Gpio {
     pub fn take_events(&mut self) -> Vec<GpioEvent> {
         std::mem::take(&mut self.pending)
     }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.u32(self.out);
+        w.u32(self.input);
+        w.u32(self.dir);
+        w.u32(self.pending.len() as u32);
+        for ev in &self.pending {
+            w.u8(match ev {
+                GpioEvent::PerfWindowOpen => 0,
+                GpioEvent::PerfWindowClose => 1,
+            });
+        }
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.out = r.u32()?;
+        self.input = r.u32()?;
+        self.dir = r.u32()?;
+        let n = r.u32()? as usize;
+        self.pending.clear();
+        for _ in 0..n {
+            self.pending.push(match r.u8()? {
+                0 => GpioEvent::PerfWindowOpen,
+                1 => GpioEvent::PerfWindowClose,
+                other => anyhow::bail!("snapshot corrupt: gpio event tag {other}"),
+            });
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -140,6 +140,66 @@ impl PowerCtrl {
     pub fn take_requests(&mut self) -> Vec<PowerRequest> {
         std::mem::take(&mut self.pending)
     }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.u8(match self.sleep_mem_mode {
+            SleepMemMode::Active => 0,
+            SleepMemMode::ClockGated => 1,
+            SleepMemMode::Retention => 2,
+        });
+        w.u32(self.bank_states.len() as u32);
+        for s in &self.bank_states {
+            w.u8(s.to_u8());
+        }
+        w.u8(self.cgra_state.to_u8());
+        w.u32(self.pending.len() as u32);
+        for req in &self.pending {
+            match req {
+                PowerRequest::Bank(i, s) => {
+                    w.u8(0);
+                    w.u32(*i as u32);
+                    w.u8(s.to_u8());
+                }
+                PowerRequest::Cgra(s) => {
+                    w.u8(1);
+                    w.u8(s.to_u8());
+                }
+            }
+        }
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.sleep_mem_mode = match r.u8()? {
+            0 => SleepMemMode::Active,
+            1 => SleepMemMode::ClockGated,
+            2 => SleepMemMode::Retention,
+            other => anyhow::bail!("snapshot corrupt: sleep-mem-mode tag {other}"),
+        };
+        let n = r.u32()? as usize;
+        if n != self.bank_states.len() {
+            anyhow::bail!(
+                "snapshot has {n} power-ctrl bank states, platform has {}",
+                self.bank_states.len()
+            );
+        }
+        for s in &mut self.bank_states {
+            *s = PowerState::from_u8(r.u8()?)?;
+        }
+        self.cgra_state = PowerState::from_u8(r.u8()?)?;
+        let pending = r.u32()? as usize;
+        self.pending.clear();
+        for _ in 0..pending {
+            self.pending.push(match r.u8()? {
+                0 => {
+                    let i = r.u32()? as usize;
+                    PowerRequest::Bank(i, PowerState::from_u8(r.u8()?)?)
+                }
+                1 => PowerRequest::Cgra(PowerState::from_u8(r.u8()?)?),
+                other => anyhow::bail!("snapshot corrupt: power-request tag {other}"),
+            });
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

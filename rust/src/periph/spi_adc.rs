@@ -226,6 +226,41 @@ impl SpiAdc {
     pub fn consumed(&self) -> u64 {
         self.consumed
     }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.bool(self.enabled);
+        w.bool(self.irq_enabled);
+        w.u32(self.fifo.len() as u32);
+        for &s in &self.fifo {
+            w.i32(s);
+        }
+        w.u64(self.start_cycle);
+        w.u64(self.period_cycles);
+        w.u64(self.consumed);
+        w.u64(self.total);
+        w.u64(self.pushed);
+        w.bool(self.underrun);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.enabled = r.bool()?;
+        self.irq_enabled = r.bool()?;
+        let n = r.u32()? as usize;
+        self.fifo.clear();
+        for _ in 0..n {
+            self.fifo.push_back(r.i32()?);
+        }
+        self.start_cycle = r.u64()?;
+        self.period_cycles = r.u64()?;
+        if self.period_cycles == 0 {
+            anyhow::bail!("snapshot corrupt: zero ADC period");
+        }
+        self.consumed = r.u64()?;
+        self.total = r.u64()?;
+        self.pushed = r.u64()?;
+        self.underrun = r.bool()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -59,12 +59,24 @@ pub struct SpiFlash {
     busy_cycles: u64,
     /// Words transferred (observability).
     words: u64,
+    /// False while the array is provably all-erased (0xFF) — never
+    /// written since construction or the last restore-to-pristine. Lets
+    /// snapshot save/restore skip scanning/resetting the whole array.
+    touched: bool,
 }
 
 impl SpiFlash {
     pub fn new(size: usize, timing: FlashTiming) -> Self {
         assert!(size % 4 == 0);
-        Self { mem: vec![0xFF; size], addr: 0, enabled: true, timing, busy_cycles: 0, words: 0 }
+        Self {
+            mem: vec![0xFF; size],
+            addr: 0,
+            enabled: true,
+            timing,
+            busy_cycles: 0,
+            words: 0,
+            touched: false,
+        }
     }
 
     pub fn timing(&self) -> FlashTiming {
@@ -125,6 +137,7 @@ impl SpiFlash {
             regs::DATA => {
                 let a = self.addr as usize;
                 if a + 4 <= self.mem.len() {
+                    self.touched = true;
                     self.mem[a..a + 4].copy_from_slice(&value.to_le_bytes());
                 }
                 self.addr = self.addr.wrapping_add(4);
@@ -142,12 +155,41 @@ impl SpiFlash {
     /// platform the PS writes its own DRAM).
     pub fn load(&mut self, addr: usize, bytes: &[u8]) {
         let end = (addr + bytes.len()).min(self.mem.len());
+        self.touched = true;
         self.mem[addr..end].copy_from_slice(&bytes[..end - addr]);
     }
 
     /// CS reads back data (e.g. results the guest logged to flash).
     pub fn dump(&self, addr: usize, len: usize) -> &[u8] {
         &self.mem[addr..(addr + len).min(self.mem.len())]
+    }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.bool(self.enabled);
+        w.u32(self.addr);
+        w.u32(self.timing.cycles_per_word);
+        w.u32(self.timing.setup_cycles);
+        w.u64(self.busy_cycles);
+        w.u64(self.words);
+        w.bool(self.touched);
+        if self.touched {
+            w.filled_bytes(&self.mem, 0xFF);
+        } else {
+            w.filled_bytes_clean(self.mem.len());
+        }
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.enabled = r.bool()?;
+        self.addr = r.u32()?;
+        self.timing.cycles_per_word = r.u32()?;
+        self.timing.setup_cycles = r.u32()?;
+        self.busy_cycles = r.u64()?;
+        self.words = r.u64()?;
+        let snap_touched = r.bool()?;
+        r.filled_bytes_into(&mut self.mem, 0xFF, !self.touched)?;
+        self.touched = snap_touched;
+        Ok(())
     }
 }
 

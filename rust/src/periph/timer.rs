@@ -74,6 +74,17 @@ impl Timer {
     pub fn mtimecmp(&self) -> u64 {
         self.mtimecmp
     }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.u64(self.mtimecmp);
+        w.bool(self.irq_enable);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.mtimecmp = r.u64()?;
+        self.irq_enable = r.bool()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

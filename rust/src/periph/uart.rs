@@ -44,6 +44,15 @@ impl Uart {
     pub fn peek(&self) -> &[u8] {
         &self.tx
     }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.bytes(&self.tx);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.tx = r.bytes()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

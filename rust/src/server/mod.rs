@@ -51,6 +51,23 @@ use crate::util::Json;
 
 pub use session::{ConfigRegistry, Session, SessionTable, DEFAULT_SESSION};
 
+/// Wire-protocol version, announced in the hello banner. Bumped to 2
+/// when sessions grew `session.fork` + `snapshot.save`/`snapshot.restore`
+/// and the banner itself was introduced.
+pub const PROTO_VERSION: u32 = 2;
+
+/// The one-line JSON banner every accepted connection receives before
+/// its first request: `{"hello":"femu-control-server","proto":...,
+/// "version":...}`. Clients assert on it ([`Client::hello`]) to fail
+/// fast against a mismatched or non-FEMU endpoint.
+fn hello_banner() -> Json {
+    Json::obj(vec![
+        ("hello", Json::from("femu-control-server")),
+        ("proto", Json::from(PROTO_VERSION as i64)),
+        ("version", Json::from(env!("CARGO_PKG_VERSION"))),
+    ])
+}
+
 /// How long a blocked connection read waits before re-checking the stop
 /// flag. Bounds the shutdown latency contribution of idle connections.
 const READ_TICK: Duration = Duration::from_millis(100);
@@ -227,6 +244,8 @@ impl Drop for Server {
 fn serve_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
+    // versioned hello before the first request (clients assert on it)
+    writeln!(writer, "{}", hello_banner())?;
     // byte buffer (not String): read_until keeps partially-read requests
     // across read timeouts, with no UTF-8 guard to discard them
     let mut buf: Vec<u8> = Vec::new();
@@ -304,6 +323,31 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> Result<Json> {
             let id = u64::try_from(id).map_err(|_| anyhow!("`session` {id} out of range"))?;
             shared.sessions.close(id)?;
             Ok(Json::Null)
+        }
+        "session.fork" => {
+            if shared.stop.load(Ordering::Relaxed) {
+                bail!("server is shutting down");
+            }
+            // fork = snapshot the (possibly warmed) source platform and
+            // open a new session restored from it; the clone diverges
+            // independently from here on
+            let id = req.get("session")?.as_i64()?;
+            let id = u64::try_from(id).map_err(|_| anyhow!("`session` {id} out of range"))?;
+            let src = shared.sessions.get(id)?;
+            let shared2 = shared.clone();
+            shared.pool.submit_wait(move || -> Result<Json> {
+                let (snap, cfg) = src.with_platform(|p| (p.snapshot(), p.cfg.clone()))?;
+                let mut platform = Platform::new(cfg);
+                platform.restore(&snap)?;
+                let label = format!("fork:{}", src.config_label());
+                let session = shared2.sessions.open(platform, label)?;
+                Ok(Json::obj(vec![
+                    ("session", Json::from(session.id() as i64)),
+                    ("config", Json::from(session.config_label())),
+                    ("forked_from", Json::from(src.id() as i64)),
+                    ("cycles", Json::from(snap.info()?.cycles as i64)),
+                ]))
+            })?
         }
         "session.list" => Ok(shared.sessions.describe()),
         "batch" => {
@@ -389,24 +433,102 @@ fn run_batch(shared: &Arc<Shared>, session: &Arc<Session>, sub: &[Json]) -> Resu
     })?
 }
 
-/// Line-protocol client.
+/// Line-protocol client. Reads and validates the server's hello banner
+/// on connect; an optional I/O timeout bounds how long any connect,
+/// send, or response wait may block (a hung server surfaces as a clean
+/// "timed out" error instead of blocking forever).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    hello: Json,
+    /// Set after a response timeout: the line framing is then undefined
+    /// (the late response may still arrive and would be misread as the
+    /// answer to the *next* request), so every further call refuses.
+    poisoned: bool,
+}
+
+/// True for the error kinds a socket read/write timeout surfaces as.
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
 impl Client {
+    /// How long [`Client::connect`] waits for the hello banner. Bounds
+    /// the one read that happens before the caller gets a handle back —
+    /// a mute endpoint (or a non-FEMU service waiting for the client to
+    /// speak first) errors instead of hanging the constructor forever.
+    pub const BANNER_TIMEOUT: Duration = Duration::from_secs(10);
+
+    /// Connect with no per-request I/O timeout (requests wait
+    /// indefinitely, as before); only the hello banner read is bounded,
+    /// by [`Client::BANNER_TIMEOUT`].
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting to control server")?;
-        stream.set_nodelay(true).ok();
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+        stream.set_read_timeout(Some(Self::BANNER_TIMEOUT)).ok();
+        let mut client = Self::from_stream(stream)?;
+        client.set_io_timeout(None)?;
+        Ok(client)
     }
 
-    /// Send one request object; returns the `result` payload.
+    /// Connect with `timeout` bounding the TCP connect, the banner read,
+    /// and every subsequent request/response.
+    pub fn connect_with_timeout(addr: std::net::SocketAddr, timeout: Duration) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)
+            .context("connecting to control server")?;
+        stream.set_read_timeout(Some(timeout)).ok();
+        stream.set_write_timeout(Some(timeout)).ok();
+        Self::from_stream(stream)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Client> {
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut line = String::new();
+        let n = match reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) if is_timeout(&e) => bail!("timed out waiting for the server hello banner"),
+            Err(e) => return Err(e).context("reading server hello banner"),
+        };
+        if n == 0 {
+            bail!("connection closed by server before the hello banner");
+        }
+        let hello = Json::parse(line.trim()).context("parsing server hello banner")?;
+        if hello.str_field("hello")? != "femu-control-server" {
+            bail!("endpoint did not identify as a femu control server");
+        }
+        Ok(Client { reader, writer: stream, hello, poisoned: false })
+    }
+
+    /// The server's hello banner (`hello`, `proto`, `version` fields).
+    pub fn hello(&self) -> &Json {
+        &self.hello
+    }
+
+    /// Adjust the per-operation I/O timeout after connecting (`None`
+    /// blocks indefinitely).
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout)?;
+        self.writer.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Send one request object; returns the `result` payload. After a
+    /// response timeout the connection is poisoned (the late response
+    /// would desync the framing) — reconnect to continue.
     pub fn call(&mut self, request: Json) -> Result<Json> {
+        if self.poisoned {
+            bail!("connection poisoned by an earlier response timeout; reconnect");
+        }
         writeln!(self.writer, "{request}").context("sending request to control server")?;
         let mut line = String::new();
-        let n = self.reader.read_line(&mut line).context("reading server response")?;
+        let n = match self.reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) if is_timeout(&e) => {
+                self.poisoned = true;
+                bail!("timed out waiting for control-server response");
+            }
+            Err(e) => return Err(e).context("reading server response"),
+        };
         if n == 0 {
             bail!("connection closed by server");
         }
@@ -579,6 +701,97 @@ mod tests {
             .unwrap_err();
         assert!(format!("{err:#}").contains("unknown config"), "{err:#}");
         server.shutdown();
+    }
+
+    #[test]
+    fn hello_banner_is_versioned_and_asserted() {
+        let (server, client) = spawn();
+        let hello = client.hello();
+        assert_eq!(hello.str_field("hello").unwrap(), "femu-control-server");
+        assert_eq!(hello.get("proto").unwrap().as_i64().unwrap(), PROTO_VERSION as i64);
+        assert_eq!(hello.str_field("version").unwrap(), env!("CARGO_PKG_VERSION"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn session_fork_clones_a_warmed_session() {
+        let (server, mut client) = spawn();
+        let src = client.open_session(Json::Null).unwrap();
+        let loaded = client
+            .call_on(
+                src,
+                Json::obj(vec![
+                    ("cmd", Json::from("load_asm")),
+                    (
+                        "source",
+                        Json::from(
+                            "_start:\n la t0, out\n li t1, 1234\n sw t1, 0(t0)\n ebreak\n.data\nout: .word 0",
+                        ),
+                    ),
+                ]),
+            )
+            .unwrap();
+        let out_addr = loaded.get("symbols").unwrap().get("out").unwrap().as_i64().unwrap();
+        client.call_on(src, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+
+        let forked = client
+            .call(Json::obj(vec![
+                ("cmd", Json::from("session.fork")),
+                ("session", Json::from(src as i64)),
+            ]))
+            .unwrap();
+        let fork_id = forked.get("session").unwrap().as_i64().unwrap() as u64;
+        assert_ne!(fork_id, src);
+        assert_eq!(forked.get("forked_from").unwrap().as_i64().unwrap(), src as i64);
+        assert!(forked.str_field("config").unwrap().starts_with("fork:"));
+
+        // the fork saw the warmed state...
+        let read = |c: &mut Client, session: u64| {
+            c.call_on(
+                session,
+                Json::obj(vec![
+                    ("cmd", Json::from("read_mem")),
+                    ("addr", Json::from(out_addr)),
+                    ("n", Json::from(1i64)),
+                ]),
+            )
+            .unwrap()
+            .as_arr()
+            .unwrap()[0]
+                .as_i64()
+                .unwrap()
+        };
+        assert_eq!(read(&mut client, fork_id), 1234);
+        // ...and diverges independently of the source
+        client
+            .call_on(
+                fork_id,
+                Json::obj(vec![
+                    ("cmd", Json::from("write_mem")),
+                    ("addr", Json::from(out_addr)),
+                    ("values", Json::arr_i32(&[-1])),
+                ]),
+            )
+            .unwrap();
+        assert_eq!(read(&mut client, fork_id), -1);
+        assert_eq!(read(&mut client, src), 1234);
+        server.shutdown();
+    }
+
+    #[test]
+    fn client_timeout_fails_fast_against_a_mute_endpoint() {
+        // a listener that accepts but never sends the hello banner
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || {
+            let (_stream, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(500));
+        });
+        let t0 = std::time::Instant::now();
+        let err = Client::connect_with_timeout(addr, Duration::from_millis(100)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_millis(450), "timeout must bound the wait");
+        assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+        hold.join().unwrap();
     }
 
     #[test]

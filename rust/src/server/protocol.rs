@@ -14,6 +14,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::PlatformConfig;
 use crate::coordinator::{experiments, AppExit, Fleet, Platform};
 use crate::energy::EnergyModel;
+use crate::snapshot::PlatformSnapshot;
 use crate::util::Json;
 use crate as femu;
 
@@ -23,6 +24,11 @@ pub const MAX_TRANSFER_WORDS: usize = 1 << 20;
 
 /// Cap on sub-requests per `batch`.
 pub const MAX_BATCH_REQUESTS: usize = 1024;
+
+/// Cap on the hex payload `snapshot.restore` accepts (a full platform
+/// image is ~tens of MiB of hex at worst; this guards against a request
+/// pinning a worker on gigabytes of decode).
+pub const MAX_SNAPSHOT_HEX: usize = 1 << 28;
 
 /// Cycles a `run` executes between cancellation checks. Small enough
 /// that `session.close` and server shutdown interrupt a runaway guest in
@@ -204,8 +210,28 @@ pub fn execute_platform_cmd(
             let bytes = p.dbg.uart();
             Ok(Json::Str(String::from_utf8_lossy(&bytes).into_owned()))
         }
-        "perf" => {
+        "snapshot.save" => {
             let snap = p.snapshot();
+            Ok(Json::obj(vec![
+                ("version", Json::from(crate::snapshot::VERSION as i64)),
+                ("bytes", Json::from(snap.size_bytes() as i64)),
+                ("cycles", Json::from(p.dbg.soc.now as i64)),
+                ("snapshot", Json::Str(snap.to_hex())),
+            ]))
+        }
+        "snapshot.restore" => {
+            let hex = req.str_field("snapshot")?;
+            if hex.len() > MAX_SNAPSHOT_HEX {
+                bail!("`snapshot` hex of {} bytes exceeds the {MAX_SNAPSHOT_HEX}-byte cap", hex.len());
+            }
+            let snap = PlatformSnapshot::from_hex(hex)?;
+            // transactional: a client-supplied image that fails mid-decode
+            // must not leave the session half-restored
+            p.restore_transactional(&snap)?;
+            Ok(Json::obj(vec![("cycles", Json::from(p.dbg.soc.now as i64))]))
+        }
+        "perf" => {
+            let snap = p.perf_snapshot();
             let mut domains = std::collections::BTreeMap::new();
             for (d, c) in snap.domains() {
                 domains.insert(
@@ -227,7 +253,7 @@ pub fn execute_platform_cmd(
             let model_name = req.opt("model").map(|v| v.as_str()).transpose()?.unwrap_or("femu");
             let model = EnergyModel::by_name(model_name)
                 .ok_or_else(|| anyhow!("unknown energy model `{model_name}`"))?;
-            let snap = p.snapshot();
+            let snap = p.perf_snapshot();
             let r = model.estimate(&snap);
             Ok(Json::obj(vec![
                 ("model", Json::from(model_name)),
@@ -565,6 +591,50 @@ mod tests {
         )
         .unwrap();
         assert_eq!(read.as_arr().unwrap()[0].as_i64().unwrap(), -1);
+    }
+
+    #[test]
+    fn snapshot_save_restore_roundtrip_over_protocol() {
+        let mut p = platform();
+        p.dbg.load_source("_start: li a0, 42\nebreak").unwrap();
+        exec(&mut p, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        let saved = exec(&mut p, Json::obj(vec![("cmd", Json::from("snapshot.save"))])).unwrap();
+        let hex = saved.str_field("snapshot").unwrap().to_string();
+        let cycles = saved.get("cycles").unwrap().as_i64().unwrap();
+        assert_eq!(
+            saved.get("version").unwrap().as_i64().unwrap(),
+            crate::snapshot::VERSION as i64
+        );
+
+        // diverge, then restore back
+        p.dbg.load_source("_start: li a0, 7\nebreak").unwrap();
+        exec(&mut p, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        assert_eq!(p.dbg.reg(10), 7);
+        let restored = exec(
+            &mut p,
+            Json::obj(vec![
+                ("cmd", Json::from("snapshot.restore")),
+                ("snapshot", Json::Str(hex.clone())),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(restored.get("cycles").unwrap().as_i64().unwrap(), cycles);
+        assert_eq!(p.dbg.reg(10), 42);
+
+        // corrupted hex is a protocol error, not a half-restored platform
+        let mut bad = hex;
+        let tail = bad.split_off(bad.len() - 2);
+        bad.push_str(if tail == "00" { "11" } else { "00" });
+        let err = exec(
+            &mut p,
+            Json::obj(vec![
+                ("cmd", Json::from("snapshot.restore")),
+                ("snapshot", Json::Str(bad)),
+            ]),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        assert_eq!(p.dbg.reg(10), 42); // untouched
     }
 
     #[test]

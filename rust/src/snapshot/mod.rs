@@ -1,0 +1,578 @@
+//! Platform snapshot/restore: a versioned, compact binary image of every
+//! stateful component of an X-HEEP-FEMU instance.
+//!
+//! Checkpoint-based forking is the standard trick in FPGA/hybrid
+//! emulation (FASE restores pre-validated checkpoints to skip redundant
+//! execution; CHESSY synchronizes state across emulation domains). Here
+//! it serves three layers:
+//!
+//! * the experiment fleet boots one golden platform per sweep, snapshots
+//!   it after warmup, and restores per point instead of re-booting
+//!   ([`crate::coordinator::Fleet::run_sweep_forked`]);
+//! * the control server exposes `snapshot.save` / `snapshot.restore` /
+//!   `session.fork` so a client can clone a warmed session;
+//! * the CLI persists snapshots to disk (`femu snapshot`,
+//!   `--from-snapshot`).
+//!
+//! Format (all integers little-endian):
+//!
+//! ```text
+//! magic "FEMUSNAP" | version u32 | payload_len u64 | fnv1a64(payload) | payload
+//! ```
+//!
+//! The payload starts with a [`SnapshotInfo`] header (platform shape:
+//! bank count/size, CS-DRAM and flash sizes, clock) that
+//! [`crate::coordinator::Platform::restore`] validates before touching
+//! any state, followed by every component's `save_state` output in a
+//! fixed order. Large memories use a sparse fill-aware encoding
+//! ([`Writer::filled_bytes`]) so a mostly-pristine 16 MiB CS DRAM costs
+//! a few bytes, not megabytes.
+//!
+//! **Not captured** (documented in DESIGN.md §10): the CPU's decode
+//! cache (word-tagged, semantically transparent), the perf monitor's
+//! optional VCD transition log (cleared on restore), and the PJRT
+//! accelerator runtime (`Platform::accel` — process-local handles; the
+//! restored platform keeps whatever artifact binding it already has).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// File/stream magic.
+pub const MAGIC: [u8; 8] = *b"FEMUSNAP";
+
+/// Snapshot format version. Bump on any layout change; restore rejects
+/// mismatches outright (no cross-version migration).
+pub const VERSION: u32 = 1;
+
+/// Header size in bytes: magic + version + payload_len + checksum.
+const HEADER_LEN: usize = 8 + 4 + 8 + 8;
+
+/// Sparse-encoding granularity for large memories.
+const SPARSE_CHUNK: usize = 4096;
+
+/// FNV-1a 64-bit (corruption detection, not cryptographic).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// Writer / Reader
+// ---------------------------------------------------------------------
+
+/// Append-only encoder every component's `save_state` writes into.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            None => self.bool(false),
+            Some(x) => {
+                self.bool(true);
+                self.u64(x);
+            }
+        }
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+
+    /// Length-prefixed i32 slice.
+    pub fn i32s(&mut self, vs: &[i32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.i32(v);
+        }
+    }
+
+    /// Sparse fill-aware memory image: only [`SPARSE_CHUNK`]-sized runs
+    /// that differ from `fill` are stored. A pristine memory costs a few
+    /// bytes regardless of size.
+    pub fn filled_bytes(&mut self, data: &[u8], fill: u8) {
+        self.u64(data.len() as u64);
+        // collect (offset, len) runs of dirty chunks, coalescing neighbours
+        let mut runs: Vec<(usize, usize)> = Vec::new();
+        let mut off = 0;
+        while off < data.len() {
+            let end = (off + SPARSE_CHUNK).min(data.len());
+            if data[off..end].iter().any(|&b| b != fill) {
+                match runs.last_mut() {
+                    Some((ro, rl)) if *ro + *rl == off => *rl = end - *ro,
+                    _ => runs.push((off, end - off)),
+                }
+            }
+            off = end;
+        }
+        self.u32(runs.len() as u32);
+        for (ro, rl) in runs {
+            self.u64(ro as u64);
+            self.u64(rl as u64);
+            self.buf.extend_from_slice(&data[ro..ro + rl]);
+        }
+    }
+
+    /// [`Writer::filled_bytes`] for a memory the caller knows is pristine
+    /// (all `fill`): skips the scan entirely.
+    pub fn filled_bytes_clean(&mut self, len: usize) {
+        self.u64(len as u64);
+        self.u32(0);
+    }
+
+    pub fn into_payload(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Sequential decoder every component's `restore_state` reads from.
+/// Every accessor validates bounds — a truncated snapshot is an error,
+/// never a panic.
+pub struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(payload: &'a [u8]) -> Self {
+        Self { b: payload, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // pos <= len always holds, so this cannot over/underflow even
+        // for adversarial length fields
+        if n > self.b.len() - self.pos {
+            bail!(
+                "snapshot truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            );
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("snapshot corrupt: bool byte {other}"),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn opt_u64(&mut self) -> Result<Option<u64>> {
+        Ok(if self.bool()? { Some(self.u64()?) } else { None })
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).map_err(|_| anyhow!("snapshot corrupt: bad UTF-8 string"))
+    }
+
+    pub fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        // bound the pre-allocation by what the buffer can actually hold
+        if n * 4 > self.b.len() - self.pos {
+            bail!("snapshot truncated: i32 run of {n} words");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.i32()?);
+        }
+        Ok(out)
+    }
+
+    /// Restore a sparse memory image written by [`Writer::filled_bytes`]
+    /// into `out`. `out_is_clean` asserts that `out` is already all-`fill`
+    /// (e.g. a never-written CS DRAM), letting the reset memset be
+    /// skipped; dirty runs are always applied.
+    pub fn filled_bytes_into(
+        &mut self,
+        out: &mut [u8],
+        fill: u8,
+        out_is_clean: bool,
+    ) -> Result<()> {
+        let total = self.u64()? as usize;
+        if total != out.len() {
+            bail!("snapshot memory size {total} does not match platform size {}", out.len());
+        }
+        let runs = self.u32()? as usize;
+        if !out_is_clean {
+            out.fill(fill);
+        }
+        for _ in 0..runs {
+            let off = self.u64()? as usize;
+            let len = self.u64()? as usize;
+            match off.checked_add(len) {
+                Some(end) if end <= out.len() => {}
+                _ => bail!("snapshot corrupt: sparse run {off}+{len} exceeds memory size {total}"),
+            }
+            out[off..off + len].copy_from_slice(self.take(len)?);
+        }
+        Ok(())
+    }
+
+    /// Assert the whole payload was consumed (catches format drift
+    /// between save and restore orders).
+    pub fn finish(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            bail!(
+                "snapshot has {} trailing bytes (format drift between save and restore?)",
+                self.b.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// SnapshotInfo — the validated payload header
+// ---------------------------------------------------------------------
+
+/// Platform shape + provenance, written first in every payload and
+/// validated by `Platform::restore` before any state is touched.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapshotInfo {
+    pub name: String,
+    pub freq_hz: u64,
+    pub num_banks: u32,
+    pub bank_size: u32,
+    pub cs_dram_size: u64,
+    pub flash_size: u64,
+    /// Emulated cycle count at snapshot time.
+    pub cycles: u64,
+}
+
+impl SnapshotInfo {
+    pub fn write(&self, w: &mut Writer) {
+        w.str(&self.name);
+        w.u64(self.freq_hz);
+        w.u32(self.num_banks);
+        w.u32(self.bank_size);
+        w.u64(self.cs_dram_size);
+        w.u64(self.flash_size);
+        w.u64(self.cycles);
+    }
+
+    pub fn read(r: &mut Reader) -> Result<SnapshotInfo> {
+        Ok(SnapshotInfo {
+            name: r.str()?,
+            freq_hz: r.u64()?,
+            num_banks: r.u32()?,
+            bank_size: r.u32()?,
+            cs_dram_size: r.u64()?,
+            flash_size: r.u64()?,
+            cycles: r.u64()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// PlatformSnapshot — the framed, checksummed container
+// ---------------------------------------------------------------------
+
+/// A serialized platform image: header-framed, checksummed payload.
+/// Construction through [`PlatformSnapshot::from_bytes`] (and the hex /
+/// file loaders on top of it) validates magic, version, length, and
+/// checksum, so corrupted or truncated images are rejected before any
+/// restore begins.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlatformSnapshot {
+    bytes: Vec<u8>,
+}
+
+impl PlatformSnapshot {
+    /// Frame a freshly-encoded payload (the `Platform::snapshot` path).
+    pub fn from_payload(payload: Vec<u8>) -> Self {
+        let mut bytes = Vec::with_capacity(HEADER_LEN + payload.len());
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        Self { bytes }
+    }
+
+    /// Validate and adopt a serialized snapshot.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        if bytes.len() < HEADER_LEN {
+            bail!("snapshot truncated: {} bytes, need at least {HEADER_LEN}", bytes.len());
+        }
+        if bytes[..8] != MAGIC {
+            bail!("not a FEMU snapshot (bad magic)");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("snapshot version {version} unsupported (this build reads version {VERSION})");
+        }
+        let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        if bytes.len() - HEADER_LEN != payload_len {
+            bail!(
+                "snapshot truncated or padded: header says {payload_len} payload bytes, have {}",
+                bytes.len() - HEADER_LEN
+            );
+        }
+        let checksum = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+        let actual = fnv1a64(&bytes[HEADER_LEN..]);
+        if checksum != actual {
+            bail!("snapshot corrupt: checksum {actual:#x} != recorded {checksum:#x}");
+        }
+        Ok(Self { bytes })
+    }
+
+    /// The validated state payload (after the frame header).
+    pub fn payload(&self) -> &[u8] {
+        &self.bytes[HEADER_LEN..]
+    }
+
+    /// The full serialized form (header + payload).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Parse the payload's [`SnapshotInfo`] header.
+    pub fn info(&self) -> Result<SnapshotInfo> {
+        SnapshotInfo::read(&mut Reader::new(self.payload()))
+    }
+
+    /// Hex encoding (the wire form of `snapshot.save`/`snapshot.restore`;
+    /// the JSON-line protocol cannot carry raw bytes).
+    pub fn to_hex(&self) -> String {
+        let mut s = String::with_capacity(self.bytes.len() * 2);
+        for &b in &self.bytes {
+            s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+            s.push(char::from_digit((b & 0xF) as u32, 16).unwrap());
+        }
+        s
+    }
+
+    pub fn from_hex(hex: &str) -> Result<Self> {
+        let hex = hex.trim();
+        if hex.len() % 2 != 0 {
+            bail!("snapshot hex has odd length {}", hex.len());
+        }
+        let mut bytes = Vec::with_capacity(hex.len() / 2);
+        for pair in hex.as_bytes().chunks_exact(2) {
+            let digit = |b: u8| {
+                (b as char)
+                    .to_digit(16)
+                    .ok_or_else(|| anyhow!("snapshot hex has non-hex byte {b:#x}"))
+            };
+            bytes.push(((digit(pair[0])? << 4) | digit(pair[1])?) as u8);
+        }
+        Self::from_bytes(bytes)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, &self.bytes)
+            .with_context(|| format!("writing snapshot {path:?}"))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading snapshot {path:?}"))?;
+        Self::from_bytes(bytes).with_context(|| format!("validating snapshot {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.bool(true);
+        w.u32(0xDEAD_BEEF);
+        w.i32(-5);
+        w.u64(1 << 40);
+        w.opt_u64(None);
+        w.opt_u64(Some(99));
+        w.str("héllo");
+        w.i32s(&[-1, 0, 1]);
+        let payload = w.into_payload();
+        let mut r = Reader::new(&payload);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.i32().unwrap(), -5);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.opt_u64().unwrap(), None);
+        assert_eq!(r.opt_u64().unwrap(), Some(99));
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.i32s().unwrap(), vec![-1, 0, 1]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = Writer::new();
+        w.u64(12345);
+        let payload = w.into_payload();
+        let mut r = Reader::new(&payload[..4]);
+        assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn sparse_memory_roundtrip() {
+        let mut data = vec![0u8; 3 * SPARSE_CHUNK + 100];
+        data[10] = 1;
+        data[SPARSE_CHUNK * 2 + 5] = 9;
+        *data.last_mut().unwrap() = 3;
+        let mut w = Writer::new();
+        w.filled_bytes(&data, 0);
+        let payload = w.into_payload();
+        // sparse: far smaller than the memory itself
+        assert!(payload.len() < data.len());
+        let mut out = vec![0xAAu8; data.len()];
+        Reader::new(&payload).filled_bytes_into(&mut out, 0, false).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn clean_memory_costs_almost_nothing() {
+        let mut w = Writer::new();
+        w.filled_bytes(&vec![0xFFu8; 1 << 20], 0xFF);
+        assert!(w.into_payload().len() <= 16);
+        let mut w = Writer::new();
+        w.filled_bytes_clean(1 << 20);
+        let payload = w.into_payload();
+        let mut out = vec![0xFFu8; 1 << 20];
+        Reader::new(&payload).filled_bytes_into(&mut out, 0xFF, true).unwrap();
+        assert!(out.iter().all(|&b| b == 0xFF));
+    }
+
+    #[test]
+    fn sparse_size_mismatch_rejected() {
+        let mut w = Writer::new();
+        w.filled_bytes(&[1, 2, 3], 0);
+        let payload = w.into_payload();
+        let mut out = vec![0u8; 4];
+        assert!(Reader::new(&payload).filled_bytes_into(&mut out, 0, false).is_err());
+    }
+
+    #[test]
+    fn frame_validation_catches_corruption() {
+        let snap = PlatformSnapshot::from_payload(vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        let good = snap.as_bytes().to_vec();
+        assert_eq!(PlatformSnapshot::from_bytes(good.clone()).unwrap(), snap);
+
+        // flipped payload byte -> checksum failure
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 0xFF;
+        let err = PlatformSnapshot::from_bytes(bad).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+        // truncated
+        let mut short = good.clone();
+        short.truncate(short.len() - 3);
+        assert!(PlatformSnapshot::from_bytes(short).is_err());
+
+        // bad magic
+        let mut magic = good.clone();
+        magic[0] = b'X';
+        let err = PlatformSnapshot::from_bytes(magic).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+
+        // future version
+        let mut vers = good;
+        vers[8] = 0xEE;
+        let err = PlatformSnapshot::from_bytes(vers).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejection() {
+        let snap = PlatformSnapshot::from_payload(vec![0xAB; 37]);
+        let hex = snap.to_hex();
+        assert_eq!(PlatformSnapshot::from_hex(&hex).unwrap(), snap);
+        assert!(PlatformSnapshot::from_hex(&hex[..hex.len() - 1]).is_err()); // odd length
+        let mut bad = hex;
+        bad.replace_range(0..1, "z");
+        assert!(PlatformSnapshot::from_hex(&bad).is_err());
+    }
+
+    #[test]
+    fn info_header_roundtrip() {
+        let info = SnapshotInfo {
+            name: "x-heep-femu".into(),
+            freq_hz: 20_000_000,
+            num_banks: 2,
+            bank_size: 0x2_0000,
+            cs_dram_size: 16 << 20,
+            flash_size: 4 << 20,
+            cycles: 123_456,
+        };
+        let mut w = Writer::new();
+        info.write(&mut w);
+        let payload = w.into_payload();
+        let got = SnapshotInfo::read(&mut Reader::new(&payload)).unwrap();
+        assert_eq!(got, info);
+    }
+}

@@ -398,6 +398,86 @@ impl Soc {
             other => panic!("guest did not halt: {other:?} at cycle {}", self.now),
         }
     }
+
+    /// Serialize the full SoC: clock, run stats, sleep bookkeeping, CPU,
+    /// interconnect + devices, CGRA core, and perf counters.
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.u64(self.now);
+        w.u64(self.freq_hz);
+        w.u64(self.stats.instructions);
+        w.u64(self.stats.cgra_launches);
+        w.u64(self.stats.cgra_run.compute_cycles);
+        w.u64(self.stats.cgra_run.config_cycles);
+        w.u64(self.stats.cgra_run.contexts);
+        w.u64(self.stats.cgra_run.mem_stalls);
+        w.u64(self.stats.mailbox_rings);
+        w.u64(self.stats.dma_errors);
+        match &self.saved_bank_states {
+            None => w.bool(false),
+            Some(states) => {
+                w.bool(true);
+                w.u32(states.len() as u32);
+                for s in states {
+                    w.u8(s.to_u8());
+                }
+            }
+        }
+        w.opt_u64(self.cgra_busy_until);
+        w.bool(self.was_sleeping);
+        match &self.cgra_fault {
+            None => w.bool(false),
+            Some(f) => {
+                w.bool(true);
+                w.u64(f.context_index);
+                w.u64(f.pe as u64);
+                w.u32(f.addr);
+            }
+        }
+        self.cpu.save_state(w);
+        self.bus.save_state(w);
+        self.cgra.save_state(w);
+        self.perf.save_state(w);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.now = r.u64()?;
+        self.freq_hz = r.u64()?;
+        self.stats.instructions = r.u64()?;
+        self.stats.cgra_launches = r.u64()?;
+        self.stats.cgra_run = CgraRun {
+            compute_cycles: r.u64()?,
+            config_cycles: r.u64()?,
+            contexts: r.u64()?,
+            mem_stalls: r.u64()?,
+        };
+        self.stats.mailbox_rings = r.u64()?;
+        self.stats.dma_errors = r.u64()?;
+        self.saved_bank_states = if r.bool()? {
+            let n = r.u32()? as usize;
+            let mut states = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                states.push(PowerState::from_u8(r.u8()?)?);
+            }
+            Some(states)
+        } else {
+            None
+        };
+        self.cgra_busy_until = r.opt_u64()?;
+        self.was_sleeping = r.bool()?;
+        self.cgra_fault = if r.bool()? {
+            let context_index = r.u64()?;
+            let pe = r.u64()? as usize;
+            let addr = r.u32()?;
+            Some(crate::cgra::CgraFault { context_index, pe, addr })
+        } else {
+            None
+        };
+        self.cpu.restore_state(r)?;
+        self.bus.restore_state(r)?;
+        self.cgra.restore_state(r)?;
+        self.perf.restore_state(r)?;
+        Ok(())
+    }
 }
 
 /// CGRA master view over the SRAM banks + bridge window.

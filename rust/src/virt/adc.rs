@@ -62,6 +62,24 @@ impl AdcService {
     pub fn samples_fed(&self) -> usize {
         self.pos
     }
+
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        w.i32s(&self.dataset);
+        w.u64(self.pos as u64);
+        w.u64(self.chunk as u64);
+    }
+
+    /// Rebuild a service from snapshot state (the device half lives in
+    /// the SoC image; this is only the CS software FIFO).
+    pub fn from_state(r: &mut crate::snapshot::Reader) -> anyhow::Result<AdcService> {
+        let dataset = r.i32s()?;
+        let pos = r.u64()? as usize;
+        let chunk = r.u64()? as usize;
+        if chunk == 0 || pos > dataset.len() {
+            anyhow::bail!("snapshot corrupt: ADC service pos {pos}/chunk {chunk}");
+        }
+        Ok(AdcService { dataset, pos, chunk })
+    }
 }
 
 #[cfg(test)]

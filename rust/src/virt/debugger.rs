@@ -162,6 +162,28 @@ impl DebugSession {
         self.uart_log.extend(self.soc.bus.uart.drain());
         self.uart_log.clone()
     }
+
+    /// Serialize the debug-session state: SoC, breakpoints, captured
+    /// UART log.
+    pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        self.soc.save_state(w);
+        w.u32(self.breakpoints.len() as u32);
+        for &bp in &self.breakpoints {
+            w.u32(bp);
+        }
+        w.bytes(&self.uart_log);
+    }
+
+    pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
+        self.soc.restore_state(r)?;
+        let n = r.u32()? as usize;
+        self.breakpoints.clear();
+        for _ in 0..n {
+            self.breakpoints.insert(r.u32()?);
+        }
+        self.uart_log = r.bytes()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -1,6 +1,8 @@
-//! Fleet contracts: (1) sharded sweeps are bit-identical to the serial
-//! reference path for the §V experiment drivers, and (2) the control
-//! server stays correct under simultaneous TCP clients.
+//! Fleet contracts: (1) the fork-based sweeps (golden snapshot, restore
+//! per point) are bit-identical to the serial boot-per-point reference
+//! path for the §V experiment drivers — one comparison that proves both
+//! worker-count invariance and snapshot-restore exactness — and (2) the
+//! control server stays correct under simultaneous TCP clients.
 
 use femu::config::PlatformConfig;
 use femu::coordinator::{experiments, Fleet, Platform};
@@ -14,12 +16,14 @@ fn assert_bits_eq(a: f64, b: f64, what: &str) {
 }
 
 #[test]
-fn fig4_sweep_fleet_bit_identical_to_serial() {
+fn fig4_forked_fleet_bit_identical_to_serial_reboot() {
     let cfg = PlatformConfig::default();
     // short window keeps the debug-build runtime sane; the determinism
-    // contract is window-independent
+    // contract is window-independent. The reference path boots a fresh
+    // platform per point on one thread; the fork path restores a golden
+    // snapshot per point across 4 workers.
     let window_s = 0.05;
-    let serial = experiments::fig4_sweep(&Fleet::serial(), &cfg, window_s, 0xF164).unwrap();
+    let serial = experiments::fig4_sweep_boot(&Fleet::serial(), &cfg, window_s, 0xF164).unwrap();
     let fleet = experiments::fig4_sweep(&Fleet::new(4), &cfg, window_s, 0xF164).unwrap();
     assert_eq!(serial.len(), fleet.len());
     assert_eq!(serial.len(), 2 * experiments::FIG4_FREQS_HZ.len());
@@ -37,9 +41,9 @@ fn fig4_sweep_fleet_bit_identical_to_serial() {
 }
 
 #[test]
-fn fig5_all_fleet_bit_identical_to_serial() {
+fn fig5_forked_fleet_bit_identical_to_serial_reboot() {
     let cfg = PlatformConfig::default();
-    let serial = experiments::fig5_all(&Fleet::serial(), &cfg, 0xF15).unwrap();
+    let serial = experiments::fig5_all_boot(&Fleet::serial(), &cfg, 0xF15).unwrap();
     let fleet = experiments::fig5_all(&Fleet::new(4), &cfg, 0xF15).unwrap();
     assert_eq!(serial.len(), fleet.len());
     assert_eq!(serial.len(), 12); // 3 kernels x 2 impls x 2 models
@@ -57,15 +61,28 @@ fn fig5_all_fleet_bit_identical_to_serial() {
 }
 
 #[test]
-fn case_c_fleet_bit_identical_to_serial() {
+fn case_c_forked_fleet_bit_identical_to_serial_reboot() {
     let cfg = PlatformConfig::default();
-    let serial = experiments::case_c(&Fleet::serial(), &cfg, 40).unwrap();
+    let serial = experiments::case_c_boot(&Fleet::serial(), &cfg, 40).unwrap();
     let fleet = experiments::case_c(&Fleet::new(2), &cfg, 40).unwrap();
     assert_eq!(serial.windows, fleet.windows);
     assert_eq!(serial.samples_per_window, fleet.samples_per_window);
     assert_bits_eq(serial.virt_total_s, fleet.virt_total_s, "virt_total_s");
     assert_bits_eq(serial.phys_total_s, fleet.phys_total_s, "phys_total_s");
     assert_bits_eq(serial.speedup, fleet.speedup, "speedup");
+}
+
+#[test]
+fn forked_sweep_worker_count_invariance() {
+    // restore-per-point with 1 worker == restore-per-point with 4
+    let cfg = PlatformConfig::default();
+    let one = experiments::fig4_sweep(&Fleet::serial(), &cfg, 0.02, 7).unwrap();
+    let four = experiments::fig4_sweep(&Fleet::new(4), &cfg, 0.02, 7).unwrap();
+    assert_eq!(one.len(), four.len());
+    for (a, b) in one.iter().zip(&four) {
+        assert_bits_eq(a.total_mj, b.total_mj, "total_mj");
+        assert_bits_eq(a.active_s, b.active_s, "active_s");
+    }
 }
 
 #[test]

@@ -233,7 +233,7 @@ fn energy_report_consistency_across_models() {
     p.dbg.write_i32_slice(prog.symbol("a_buf").unwrap(), &rng.vec_i32(32 * 8, -99, 99)).unwrap();
     p.dbg.write_i32_slice(prog.symbol("b_buf").unwrap(), &rng.vec_i32(8 * 4, -99, 99)).unwrap();
     p.run_app(1 << 30).unwrap();
-    let snap = p.snapshot();
+    let snap = p.perf_snapshot();
     let femu_e = EnergyModel::femu().estimate(&snap);
     let chip_e = EnergyModel::heepocrates().estimate(&snap);
     let dev = relative_deviation(femu_e.total_mj, chip_e.total_mj);

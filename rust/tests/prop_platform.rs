@@ -72,7 +72,7 @@ fn prop_perf_counter_conservation() {
         let mut p = Platform::new(PlatformConfig::default());
         p.dbg.load_source(&src).unwrap_or_else(|e| panic!("case {case}: {e:#}\n{src}"));
         p.run_app(1_000_000).unwrap();
-        let snap = p.snapshot();
+        let snap = p.perf_snapshot();
         for (d, counts) in snap.domains() {
             assert_eq!(
                 counts.total(),
@@ -93,7 +93,7 @@ fn prop_determinism() {
             let data = Rng::new(seed).vec_i32(200, -30_000, 30_000);
             p.start_adc(data, 5_000.0);
             p.run_app(1 << 32).unwrap();
-            let snap = p.snapshot();
+            let snap = p.perf_snapshot();
             let e = EnergyModel::femu().estimate(&snap);
             (snap.cycles, p.dbg.soc.stats.instructions, format!("{:.9}", e.total_mj))
         };
@@ -203,7 +203,7 @@ fn prop_manual_window_subset_of_total() {
         let mut p = Platform::new(PlatformConfig::default());
         p.dbg.load_source(&src).unwrap();
         p.run_app(1_000_000).unwrap();
-        let total = p.snapshot();
+        let total = p.perf_snapshot();
         let window = p.dbg.soc.perf.window_snapshot().unwrap();
         assert!(window.cycles < total.cycles);
         assert!(window.cpu.get(PowerState::Active) <= total.cpu.get(PowerState::Active));
@@ -222,7 +222,7 @@ fn config_variants_still_run() {
         p.dbg.load_source("_start:\nli a0, 9\nli a1, 3\ndiv a2, a0, a1\nebreak").unwrap();
         p.run_app(10_000).unwrap();
         assert_eq!(p.dbg.reg(12), 3);
-        let snap = p.snapshot();
+        let snap = p.perf_snapshot();
         assert_eq!(snap.banks.len(), banks);
     }
 }

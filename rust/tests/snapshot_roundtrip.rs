@@ -1,0 +1,272 @@
+//! Snapshot/restore contracts: (1) run N cycles, snapshot, run K more,
+//! restore, re-run K — every architectural observable (registers,
+//! memory, perf counters, UART) is bit-identical between the two K-legs;
+//! (2) a snapshot survives the bytes/hex codecs and restores into a
+//! fresh platform; (3) corrupted, truncated, and shape-mismatched
+//! images are rejected before any state is touched.
+
+use femu::config::PlatformConfig;
+use femu::coordinator::Platform;
+use femu::perfmon::PerfSnapshot;
+use femu::snapshot::PlatformSnapshot;
+use femu::workloads::programs;
+
+/// Every guest-visible observable we can cheaply collect.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    now: u64,
+    pc: u32,
+    regs: Vec<u32>,
+    instret: u64,
+    instructions: u64,
+    uart: Vec<u8>,
+    perf: PerfSnapshot,
+    sram: Vec<u8>,
+}
+
+fn fingerprint(p: &mut Platform) -> Fingerprint {
+    let uart = p.dbg.uart();
+    let soc = &p.dbg.soc;
+    let sram = soc
+        .bus
+        .banks
+        .iter()
+        .flat_map(|b| b.dump(0, b.size()).unwrap().to_vec())
+        .collect();
+    Fingerprint {
+        now: soc.now,
+        pc: soc.cpu.pc,
+        regs: soc.cpu.regs.to_vec(),
+        instret: soc.cpu.instret,
+        instructions: soc.stats.instructions,
+        uart,
+        perf: soc.perf.snapshot(soc.now),
+        sram,
+    }
+}
+
+/// A busy mixed workload: timer-paced WFI sleep (retention memories),
+/// UART logging, a DMA copy and a CGRA matmul launch per iteration —
+/// touches every stateful device the snapshot must capture.
+fn busy_guest(iterations: u32) -> String {
+    format!(
+        r#"
+        .equ UART,  0x20000000
+        .equ TIMER, 0x20000200
+        .equ DMA,   0x20000500
+        .equ POWER, 0x20000600
+        .equ CGRA,  0x20000700
+        _start:
+            la  t0, handler
+            csrw mtvec, t0
+            li  t0, POWER
+            li  t1, 2            # retention sleep for memories
+            sw  t1, 0(t0)
+            li  s0, {iterations}
+            li  s1, 0            # iteration counter
+        loop:
+            # log one byte
+            li  t0, UART
+            addi t1, s1, 65
+            sw  t1, 0(t0)
+            # DMA: copy src -> dst
+            la  t0, src
+            la  t1, dst
+            li  t2, DMA
+            sw  t0, 0(t2)
+            sw  t1, 4(t2)
+            li  t3, 12
+            sw  t3, 8(t2)
+            li  t3, 1
+            sw  t3, 12(t2)
+        dma_wait:
+            lw  t4, 16(t2)
+            andi t4, t4, 1
+            beqz t4, dma_wait
+            # CGRA: 4x4 matmul launch
+            li  t0, CGRA
+            sw  zero, 8(t0)
+            la  t1, a
+            sw  t1, 0x40(t0)
+            la  t1, b
+            sw  t1, 0x44(t0)
+            la  t1, c
+            sw  t1, 0x48(t0)
+            li  t1, 4
+            sw  t1, 0x4C(t0)
+            sw  t1, 0x50(t0)
+            sw  t1, 0x54(t0)
+            li  t1, 1
+            sw  t1, 4(t0)
+        cgra_wait:
+            lw  t2, 0(t0)
+            andi t2, t2, 1
+            beqz t2, cgra_wait
+            # sleep until the next timer tick
+            li  t0, TIMER
+            lw  t1, 0(t0)        # mtime_lo
+            addi t1, t1, 2000
+            sw  t1, 8(t0)        # mtimecmp_lo
+            sw  zero, 12(t0)
+            li  t1, 1
+            sw  t1, 16(t0)       # irq enable
+            li  t1, 0x80
+            csrw mie, t1
+            csrsi mstatus, 8
+            wfi
+            csrci mstatus, 8
+            addi s1, s1, 1
+            blt  s1, s0, loop
+            ebreak
+        handler:
+            li  t5, TIMER
+            li  t6, -1
+            sw  t6, 8(t5)        # push mtimecmp far out (clear MTIP)
+            sw  t6, 12(t5)
+            mret
+        .data
+        src: .word 11, 22, 33
+        dst: .word 0, 0, 0
+        a:  .word 1, 0, 0, 0
+            .word 0, 2, 0, 0
+            .word 0, 0, 3, 0
+            .word 0, 0, 0, 4
+        b:  .word 1, 1, 1, 1
+            .word 1, 1, 1, 1
+            .word 1, 1, 1, 1
+            .word 1, 1, 1, 1
+        c:  .space 64
+        "#
+    )
+}
+
+fn busy_platform() -> Platform {
+    let mut p = Platform::new(PlatformConfig::default());
+    p.dbg.load_source(&busy_guest(200)).unwrap();
+    p
+}
+
+#[test]
+fn mid_flight_roundtrip_is_bit_identical() {
+    // property grid: snapshot at N cycles, compare two K-cycle re-runs
+    for &n in &[5_000u64, 37_123, 250_000] {
+        for &k in &[20_000u64, 111_111] {
+            let mut p = busy_platform();
+            p.run_app(n).unwrap();
+            let snap = p.snapshot();
+            p.run_app(k).unwrap();
+            let first = fingerprint(&mut p);
+
+            p.restore(&snap).unwrap();
+            p.run_app(k).unwrap();
+            let second = fingerprint(&mut p);
+            assert_eq!(first, second, "divergence after restore (n={n}, k={k})");
+        }
+    }
+}
+
+#[test]
+fn acquisition_roundtrip_covers_adc_service_state() {
+    // mid-acquisition snapshot: the dual-FIFO pacing (device + CS
+    // software FIFO) must resume without underrun or drift
+    let build = || {
+        let mut p = Platform::new(PlatformConfig::default());
+        p.dbg.load_source(&programs::acquisition(2_000, 2)).unwrap();
+        p.start_adc((0..2_000).collect(), 100_000.0);
+        p
+    };
+    let mut p = build();
+    p.run_app(120_000).unwrap(); // mid-stream (full run is ~400k cycles)
+    let snap = p.snapshot();
+    p.run_app(10_000_000).unwrap(); // to halt
+    let first = fingerprint(&mut p);
+    assert!(!p.dbg.soc.bus.spi_adc.underrun());
+
+    p.restore(&snap).unwrap();
+    p.run_app(10_000_000).unwrap();
+    let second = fingerprint(&mut p);
+    assert_eq!(first, second);
+    assert!(!p.dbg.soc.bus.spi_adc.underrun());
+}
+
+#[test]
+fn restore_into_fresh_platform_through_bytes_and_hex() {
+    let mut p = busy_platform();
+    p.run_app(42_000).unwrap();
+    let snap = p.snapshot();
+
+    // bytes codec
+    let bytes = snap.as_bytes().to_vec();
+    let reloaded = PlatformSnapshot::from_bytes(bytes).unwrap();
+    // hex codec (the snapshot.save/restore wire form)
+    let rehexed = PlatformSnapshot::from_hex(&snap.to_hex()).unwrap();
+
+    p.run_app(60_000).unwrap();
+    let want = fingerprint(&mut p);
+
+    for image in [reloaded, rehexed] {
+        let mut fresh = Platform::new(PlatformConfig::default());
+        fresh.restore(&image).unwrap();
+        fresh.run_app(60_000).unwrap();
+        assert_eq!(fingerprint(&mut fresh), want);
+    }
+}
+
+#[test]
+fn fork_matches_source_and_diverges_independently() {
+    let mut p = busy_platform();
+    p.run_app(30_000).unwrap();
+    let mut fork = p.fork().unwrap();
+
+    // same start, same future
+    p.run_app(25_000).unwrap();
+    fork.run_app(25_000).unwrap();
+    assert_eq!(fingerprint(&mut p), fingerprint(&mut fork));
+
+    // divergence stays private to the fork
+    fork.dbg.write32(0x100, 0xDEAD_0001).unwrap();
+    assert_ne!(p.dbg.read32(0x100).unwrap(), 0xDEAD_0001);
+}
+
+#[test]
+fn corrupted_and_truncated_snapshots_are_rejected() {
+    let mut p = busy_platform();
+    p.run_app(10_000).unwrap();
+    let snap = p.snapshot();
+    let good = snap.as_bytes().to_vec();
+
+    // flip one byte anywhere in the payload: checksum must catch it
+    for at in [28usize, good.len() / 2, good.len() - 1] {
+        let mut bad = good.clone();
+        bad[at] ^= 0x40;
+        let err = PlatformSnapshot::from_bytes(bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("checksum") || msg.contains("version") || msg.contains("truncated"),
+            "byte {at}: {msg}"
+        );
+    }
+    // truncations at several depths
+    for keep in [0usize, 7, 20, good.len() - 1] {
+        let mut short = good.clone();
+        short.truncate(keep);
+        assert!(PlatformSnapshot::from_bytes(short).is_err(), "keep={keep}");
+    }
+    // the platform that produced it is still intact and restorable
+    p.restore(&snap).unwrap();
+}
+
+#[test]
+fn shape_mismatch_is_rejected_before_any_state_is_touched() {
+    let p = busy_platform();
+    let snap = p.snapshot();
+    let mut other_cfg = PlatformConfig::default();
+    other_cfg.soc.num_banks = 4;
+    let mut other = Platform::new(other_cfg);
+    other.dbg.load_source("_start: li a0, 9\nebreak").unwrap();
+    let err = other.restore(&snap).unwrap_err();
+    assert!(format!("{err:#}").contains("shape mismatch"), "{err:#}");
+    // untouched: still runs its own guest
+    other.run_app(10_000).unwrap();
+    assert_eq!(other.dbg.reg(10), 9);
+}
