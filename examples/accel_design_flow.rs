@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     p.run_app(1 << 32)?;
     let got = p.dbg.read_i32_slice(prog.symbol("c_buf")?, m * n)?;
     assert_eq!(got, want, "CPU baseline must match the oracle");
-    let window = p.dbg.soc.perf.window_snapshot().unwrap().clone();
+    let window = p.perf_window_snapshot().unwrap().clone();
     let cpu_cycles = window.cycles;
     let cpu_energy = cfg.energy.estimate(&window).total_mj;
     println!("  kernel window: {cpu_cycles} cycles, {:.3} uJ", cpu_energy * 1e3);
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     p.run_app(1 << 32)?;
     let got = p.dbg.read_i32_slice(prog.symbol("c_buf")?, m * n)?;
     assert_eq!(got, want, "CGRA result must match the oracle");
-    let window = p.dbg.soc.perf.window_snapshot().unwrap().clone();
+    let window = p.perf_window_snapshot().unwrap().clone();
     let cgra_cycles = window.cycles;
     let cgra_energy = cfg.energy.estimate(&window).total_mj;
     println!("  kernel window: {cgra_cycles} cycles, {:.3} uJ", cgra_energy * 1e3);

@@ -320,7 +320,7 @@ fn main() -> anyhow::Result<()> {
                 q.dbg.write_i32_slice(fprog.symbol("wr_tbl")?, &wr)?;
                 q.dbg.write_i32_slice(fprog.symbol("wi_tbl")?, &wi)?;
                 q.run_app(1 << 32)?;
-                Ok(vec![LegOut::FftCycles(q.dbg.soc.perf.window_snapshot().unwrap().cycles)])
+                Ok(vec![LegOut::FftCycles(q.perf_window_snapshot().unwrap().cycles)])
             }
         }
     })?;

@@ -86,7 +86,7 @@ fn ablation_b_energy_granularity() {
         p.dbg.write_i32_slice(prog.symbol("a_buf").unwrap(), &rng.vec_i32(121 * 16, -99, 99)).unwrap();
         p.dbg.write_i32_slice(prog.symbol("b_buf").unwrap(), &rng.vec_i32(16 * 4, -99, 99)).unwrap();
         p.run_app(1 << 32).unwrap();
-        let w = p.dbg.soc.perf.window_snapshot().unwrap().clone();
+        let w = p.perf_window_snapshot().unwrap().clone();
         let fine_mj = fine.estimate(&w).total_mj;
         let freq = cfg.soc.freq_hz as f64;
         let cpu_active_s = w.cpu.get(PowerState::Active) as f64 / freq;

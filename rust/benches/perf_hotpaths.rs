@@ -3,19 +3,27 @@
 //!
 //! * ISS throughput (emulated instructions / wall second) on a dense ALU
 //!   loop, a memory-heavy loop, and the Fig 5 MM kernel;
+//! * guest MIPS of the interpreter vs the block-compiled backend on the
+//!   same kernel — the headline number of the [`femu::exec`] fast path.
+//!   The wall ratio `blocks_over_interp` is tracked in
+//!   `rust/BENCH_baseline.json`, so CI fails if the block backend ever
+//!   drops below ~3x the interpreter;
 //! * event-driven sleep fast-forward rate (emulated cycles / wall s);
 //! * CGRA emulator throughput (contexts / wall s);
-//! * PJRT artifact execution latency.
+//! * PJRT artifact execution latency (skipped when `make artifacts` has
+//!   not run — CI has no PJRT runtime).
 //!
 //! `cargo bench --bench perf_hotpaths`
 
 #[path = "harness/mod.rs"]
 mod harness;
 
+use femu::exec::BackendKind;
 use femu::isa::assemble;
 use femu::soc::{Soc, SocConfig};
+use femu::util::Json;
 
-fn iss_throughput(name: &str, src: &str) {
+fn iss_throughput(name: &str, src: &str) -> f64 {
     let prog = assemble(src).unwrap();
     let (result, secs) = harness::time_best(3, || {
         let mut soc = Soc::new(SocConfig::default());
@@ -31,11 +39,69 @@ fn iss_throughput(name: &str, src: &str) {
         harness::eng(instr as f64 / secs),
         harness::eng(cycles as f64),
     );
+    secs
+}
+
+/// A dense straight-line kernel with long basic blocks: the case the
+/// block backend is built for. 16 ALU ops per iteration + the loop
+/// counter + the back-branch = one 18-instruction block.
+const GUEST_MIPS_SRC: &str = r#"
+    _start:
+        li t0, 300000
+    loop:
+        addi t1, t1, 3
+        xor  t2, t1, t0
+        slli t3, t2, 1
+        sub  t4, t3, t1
+        and  t5, t4, t2
+        or   t6, t5, t1
+        addi t1, t1, 1
+        xor  t2, t2, t3
+        slli t4, t1, 2
+        sub  t5, t4, t2
+        and  t6, t5, t3
+        or   t3, t6, t4
+        add  t2, t2, t5
+        srli t4, t3, 1
+        add  t1, t1, t4
+        addi t0, t0, -1
+        bnez t0, loop
+        ebreak
+"#;
+
+/// Run [`GUEST_MIPS_SRC`] on one backend; returns (instructions, final
+/// cycle clock, best wall seconds).
+fn guest_mips_on(backend: BackendKind) -> (u64, u64, f64) {
+    let prog = assemble(GUEST_MIPS_SRC).unwrap();
+    let ((instr, cycles), secs) = harness::time_best(harness::reps(5), || {
+        let mut cfg = SocConfig::default();
+        cfg.backend = backend;
+        let mut soc = Soc::new(cfg);
+        soc.load(&prog).unwrap();
+        soc.run_to_halt(1 << 34);
+        if backend == BackendKind::Blocks {
+            assert!(
+                soc.exec_stats().block_dispatches > 0,
+                "block backend never took its fast path"
+            );
+        }
+        (soc.stats.instructions, soc.now)
+    });
+    println!(
+        "{:<8} backend: {:>12} instr in {:>8}s -> {:>8.1} guest MIPS",
+        backend.name(),
+        instr,
+        harness::eng(secs),
+        instr as f64 / secs / 1e6,
+    );
+    (instr, cycles, secs)
 }
 
 fn main() {
+    let mut results: Vec<Json> = Vec::new();
+
     harness::header("L3 hot paths: instruction-set simulator");
-    iss_throughput(
+    let alu_s = iss_throughput(
         "alu_loop",
         r#"
         _start:
@@ -50,7 +116,7 @@ fn main() {
             ebreak
         "#,
     );
-    iss_throughput(
+    let mem_s = iss_throughput(
         "mem_loop",
         r#"
         _start:
@@ -66,7 +132,8 @@ fn main() {
             ebreak
         "#,
     );
-    iss_throughput("mul_div_loop",
+    let mul_s = iss_throughput(
+        "mul_div_loop",
         r#"
         _start:
             li t0, 200000
@@ -79,6 +146,28 @@ fn main() {
             ebreak
         "#,
     );
+    results.push(harness::json_result("alu_loop", alu_s));
+    results.push(harness::json_result("mem_loop", mem_s));
+    results.push(harness::json_result("mul_div_loop", mul_s));
+
+    harness::header("Guest MIPS: interpreter vs block-compiled backend");
+    {
+        let (ii, ic, interp_s) = guest_mips_on(BackendKind::Interp);
+        let (bi, bc, blocks_s) = guest_mips_on(BackendKind::Blocks);
+        // the backends' bit-identity contract, visible even in a bench:
+        // same retired count, same final clock
+        assert_eq!((ii, ic), (bi, bc), "backends disagree on architectural totals");
+        let ratio = blocks_s / interp_s;
+        println!(
+            "-> blocks wall / interp wall = {ratio:.3} ({:.2}x speedup)",
+            1.0 / ratio
+        );
+        results.push(harness::json_result("guest_mips_interp", interp_s));
+        results.push(harness::json_result("guest_mips_blocks", blocks_s));
+        // dimensionless, gated: the committed ceiling makes CI fail if
+        // the block backend regresses below ~3x the interpreter
+        results.push(harness::json_result("blocks_over_interp", ratio));
+    }
 
     harness::header("L3 hot paths: event-driven sleep fast-forward");
     {
@@ -117,6 +206,7 @@ fn main() {
             harness::eng(secs),
             harness::eng(cycles as f64 / secs),
         );
+        results.push(harness::json_result("sleep_fast_forward", secs));
     }
 
     harness::header("CGRA emulator throughput");
@@ -135,23 +225,33 @@ fn main() {
             harness::eng(secs),
             harness::eng(run.contexts as f64 / secs),
         );
+        results.push(harness::json_result("cgra_conv2d", secs));
     }
 
     harness::header("PJRT artifact execution latency (virtualized accelerator)");
     {
         use femu::runtime::{Runtime, TensorI32};
-        let rt = Runtime::load("artifacts").expect("make artifacts");
-        let mut rng = femu::util::Rng::new(1);
-        let a = TensorI32::new(vec![121, 16], rng.vec_i32(121 * 16, -99, 99)).unwrap();
-        let b = TensorI32::new(vec![16, 4], rng.vec_i32(16 * 4, -99, 99)).unwrap();
-        let (_, secs) = harness::time_best(20, || rt.execute("matmul", &[a.clone(), b.clone()]).unwrap());
-        println!("matmul artifact: {}s/exec", harness::eng(secs));
-        let re = TensorI32::new(vec![512], rng.vec_i32(512, -99, 99)).unwrap();
-        let im = TensorI32::new(vec![512], rng.vec_i32(512, -99, 99)).unwrap();
-        let mut args = vec![re, im];
-        args.extend(femu::virt::accel::fft_table_tensors(512));
-        let (_, secs) = harness::time_best(20, || rt.execute("fft512", &args).unwrap());
-        println!("fft512 artifact: {}s/exec", harness::eng(secs));
+        // CI runners have no PJRT runtime: skip instead of panicking, so
+        // the gated metrics above still get measured and written
+        match Runtime::load("artifacts") {
+            Err(e) => println!("skipped (run `make artifacts`): {e:#}"),
+            Ok(rt) => {
+                let mut rng = femu::util::Rng::new(1);
+                let a = TensorI32::new(vec![121, 16], rng.vec_i32(121 * 16, -99, 99)).unwrap();
+                let b = TensorI32::new(vec![16, 4], rng.vec_i32(16 * 4, -99, 99)).unwrap();
+                let (_, secs) =
+                    harness::time_best(20, || rt.execute("matmul", &[a.clone(), b.clone()]).unwrap());
+                println!("matmul artifact: {}s/exec", harness::eng(secs));
+                let re = TensorI32::new(vec![512], rng.vec_i32(512, -99, 99)).unwrap();
+                let im = TensorI32::new(vec![512], rng.vec_i32(512, -99, 99)).unwrap();
+                let mut args = vec![re, im];
+                args.extend(femu::virt::accel::fft_table_tensors(512));
+                let (_, secs) = harness::time_best(20, || rt.execute("fft512", &args).unwrap());
+                println!("fft512 artifact: {}s/exec", harness::eng(secs));
+            }
+        }
     }
+
+    harness::write_json("perf_hotpaths", vec![], results);
     println!("\nperf_hotpaths done");
 }

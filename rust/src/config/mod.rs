@@ -8,6 +8,7 @@
 //! name = "x-heep-femu"
 //! freq_hz = 20000000
 //! energy_model = "femu"        # or "heepocrates"
+//! backend = "interp"           # execution engine: interp | blocks
 //!
 //! [mem]
 //! num_banks = 2
@@ -39,6 +40,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cpu::Timing;
 use crate::energy::{DomainPower, EnergyModel};
+use crate::exec::BackendKind;
 use crate::periph::FlashTiming;
 use crate::soc::SocConfig;
 use crate::util::toml::Doc;
@@ -87,6 +89,7 @@ impl PlatformConfig {
             "physical" => FlashTiming::physical(),
             other => bail!("flash.mode `{other}` (want virtualized|physical)"),
         };
+        cfg.soc.backend = BackendKind::parse(&doc.str_or("backend", cfg.soc.backend.name())?)?;
 
         // timing overrides
         let t = &mut cfg.timing;
@@ -169,6 +172,7 @@ mod tests {
             name = "custom"
             freq_hz = 50_000_000
             energy_model = "heepocrates"
+            backend = "blocks"
             [mem]
             num_banks = 4
             bank_size = 0x10000
@@ -185,6 +189,7 @@ mod tests {
         assert_eq!(cfg.soc.freq_hz, 50_000_000);
         assert_eq!(cfg.soc.num_banks, 4);
         assert_eq!(cfg.soc.flash_timing, FlashTiming::physical());
+        assert_eq!(cfg.soc.backend, BackendKind::Blocks);
         assert_eq!(cfg.timing.div, 10);
         assert_eq!(cfg.timing.mul, Timing::default().mul); // untouched
         assert_eq!(cfg.energy.name, "heepocrates");
@@ -197,6 +202,7 @@ mod tests {
         assert!(PlatformConfig::parse("[mem]\nbank_size = 1000").is_err()); // not pow2
         assert!(PlatformConfig::parse("[flash]\nmode = \"warp\"").is_err());
         assert!(PlatformConfig::parse("energy_model = \"mystery\"").is_err());
+        assert!(PlatformConfig::parse("backend = \"jit\"").is_err());
     }
 
     #[test]

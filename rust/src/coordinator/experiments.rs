@@ -311,10 +311,7 @@ pub fn fig5_run_on(
 
     // perf window (manual mode) covers exactly the compute region
     let window = p
-        .dbg
-        .soc
-        .perf
-        .window_snapshot()
+        .perf_window_snapshot()
         .ok_or_else(|| anyhow!("kernel did not toggle the perf GPIO"))?
         .clone();
     let mut out = Vec::new();

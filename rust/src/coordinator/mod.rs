@@ -117,6 +117,14 @@ impl Platform {
         self.dbg.soc.perf.snapshot(self.dbg.soc.now)
     }
 
+    /// The manual perf window (GPIO-toggled by the guest), if one was
+    /// closed. Counterpart of [`Platform::perf_snapshot`] so callers
+    /// stop reaching through `dbg.soc.perf` for one mode and not the
+    /// other.
+    pub fn perf_window_snapshot(&self) -> Option<&PerfSnapshot> {
+        self.dbg.soc.perf.window_snapshot()
+    }
+
     /// Estimate energy for a snapshot under a named calibration.
     pub fn estimate(&self, snap: &PerfSnapshot, model: &EnergyModel) -> EnergyReport {
         model.estimate(snap)

@@ -104,6 +104,50 @@ pub mod cause {
 /// lives; 64K words = 256 KiB of text).
 const ICACHE_WORDS: usize = 1 << 16;
 
+/// Rolling digest of the retired-instruction stream, compared by the
+/// lockstep diff driver ([`crate::exec::diff`]): two backends executed
+/// the same program iff their digests match at every checkpoint. Keeps a
+/// short ring of recent pcs so a divergence report can say *where*.
+/// Never serialized into snapshots — enabling a trace must not change
+/// snapshot payloads (they are byte-compared across backends).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RetireTrace {
+    /// Instructions recorded.
+    pub count: u64,
+    /// FNV-1a over the little-endian pc stream.
+    pub hash: u64,
+    /// Ring of the most recent retired pcs (index `count % len`).
+    pub recent: [u32; 8],
+}
+
+impl Default for RetireTrace {
+    fn default() -> Self {
+        Self { count: 0, hash: 0xcbf2_9ce4_8422_2325, recent: [0; 8] }
+    }
+}
+
+impl RetireTrace {
+    #[inline]
+    fn note(&mut self, pc: u32) {
+        self.recent[(self.count % self.recent.len() as u64) as usize] = pc;
+        self.count += 1;
+        for b in pc.to_le_bytes() {
+            self.hash = (self.hash ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    /// Most recent retired pcs, oldest first (divergence diagnostics).
+    pub fn recent_pcs(&self) -> Vec<u32> {
+        let n = (self.count.min(self.recent.len() as u64)) as usize;
+        (0..n)
+            .map(|i| {
+                let idx = (self.count - n as u64 + i as u64) % self.recent.len() as u64;
+                self.recent[idx as usize]
+            })
+            .collect()
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Cpu {
     pub regs: [u32; 32],
@@ -113,6 +157,11 @@ pub struct Cpu {
     pub timing: Timing,
     /// Retired instruction counter (also visible as minstret).
     pub instret: u64,
+    /// When present, every retired instruction's pc is folded into this
+    /// digest (the diff driver's lockstep evidence). Off by default —
+    /// the hot path pays one `Option` check. Not serialized; survives
+    /// `reset` so a driver can arm it before loading a program.
+    pub trace: Option<Box<RetireTrace>>,
     /// Pre-decoded instruction cache, tagged by the raw fetched word:
     /// `icache[pc >> 2] = (word, decoded)`. Tagging by the word itself
     /// makes the cache self-invalidating under self-modifying code and
@@ -131,6 +180,7 @@ impl Cpu {
             state: CpuState::Running,
             timing: Timing::default(),
             instret: 0,
+            trace: None,
             // tag 0 never matches a real instruction word 0 because word
             // 0 does not decode; pre-fill with an unencodable pair
             icache: vec![(0, Instr::Fence); ICACHE_WORDS],
@@ -167,6 +217,16 @@ impl Cpu {
     #[inline]
     pub fn interrupt_pending(&self) -> bool {
         self.csrs.mie & self.csrs.mip != 0
+    }
+
+    /// True when the next step would vector into an interrupt handler
+    /// instead of executing an instruction (pending, enabled, and
+    /// globally unmasked). The block backend refuses to dispatch a
+    /// compiled block while this holds, so interrupt entry always goes
+    /// through the single-step path.
+    #[inline]
+    pub fn irq_ready(&self) -> bool {
+        self.csrs.mie_global() && self.interrupt_pending()
     }
 
     /// Take the highest-priority pending interrupt if globally enabled.
@@ -259,6 +319,25 @@ impl Cpu {
             instr
         };
 
+        self.exec_decoded(instr, word, fetch_wait, bus, now)
+    }
+
+    /// Execute one already-fetched, already-decoded instruction at the
+    /// current pc. Split out of [`Cpu::step`] so every execution backend
+    /// shares one set of semantics: the block backend replays pre-decoded
+    /// blocks through this exact function (with `fetch_wait` 0 — block
+    /// dispatch is restricted to SRAM, which fetches with zero wait
+    /// states), so an instruction behaves bit-identically no matter which
+    /// backend drives it.
+    pub(crate) fn exec_decoded<B: BusAccess>(
+        &mut self,
+        instr: Instr,
+        word: u32,
+        fetch_wait: u32,
+        bus: &mut B,
+        now: u64,
+    ) -> StepResult {
+        let retired_pc = self.pc;
         let mut cycles = fetch_wait;
         let mut next_pc = self.pc.wrapping_add(4);
 
@@ -368,12 +447,14 @@ impl Cpu {
             Instr::Ecall => trap_ret!(cause::ECALL_M, 0),
             Instr::Ebreak => {
                 self.state = CpuState::Halted(Halt::Ebreak);
+                self.note_retire(retired_pc);
                 return StepResult { cycles: cycles + self.timing.alu, retired: true };
             }
             Instr::Wfi => {
                 self.state = CpuState::Sleeping;
                 self.pc = next_pc;
                 self.instret += 1;
+                self.note_retire(retired_pc);
                 return StepResult { cycles: cycles + self.timing.alu, retired: true };
             }
             Instr::Mret => {
@@ -405,7 +486,15 @@ impl Cpu {
 
         self.pc = next_pc;
         self.instret += 1;
+        self.note_retire(retired_pc);
         StepResult { cycles, retired: true }
+    }
+
+    #[inline]
+    fn note_retire(&mut self, pc: u32) {
+        if let Some(t) = &mut self.trace {
+            t.note(pc);
+        }
     }
 }
 
@@ -816,6 +905,22 @@ mod tests {
         }
         let t = Timing::default();
         assert_eq!(total, (t.alu + t.mul + t.div + t.alu) as u64);
+    }
+
+    #[test]
+    fn retire_trace_counts_and_hashes() {
+        let prog = assemble("li a0, 1\nli a1, 2\nebreak").unwrap();
+        let mut bus = FlatBus::new(&prog);
+        let mut cpu = Cpu::new(prog.entry);
+        cpu.trace = Some(Box::default());
+        let mut now = 0u64;
+        while !matches!(cpu.state, CpuState::Halted(_)) {
+            now += cpu.step(&mut bus, now).cycles as u64;
+        }
+        let t = cpu.trace.as_ref().unwrap();
+        assert_eq!(t.count, 3); // two li + the retiring ebreak
+        assert_ne!(t.hash, RetireTrace::default().hash);
+        assert_eq!(t.recent_pcs(), vec![prog.entry, prog.entry + 4, prog.entry + 8]);
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Block-compiled backend: basic-block superinstructions.
+//!
+//! Extends the CPU's word-tagged decode cache one level up: instead of
+//! caching one decoded instruction per word, cache a straight-line run
+//! of decoded instructions per *entry pc* and replay it without
+//! per-instruction fetch, decode, event polling, or interrupt checks.
+//!
+//! ## Why this is exact, not approximate
+//!
+//! A block is only dispatched when (all checked at dispatch time):
+//!
+//! * the core is `Running` and no enabled interrupt is ready
+//!   ([`crate::cpu::Cpu::irq_ready`]) — interrupt entry always takes
+//!   the single-step reference path;
+//! * the block's worst-case cycle bound fits inside the slice budget —
+//!   budget exits happen at exactly the reference boundaries;
+//! * the bound also ends strictly before the SoC event horizon
+//!   ([`crate::soc::Soc::event_horizon`]) — no device event, timer
+//!   comparator, or CGRA completion can become due mid-block, which is
+//!   precisely the invariant that makes the skipped per-instruction
+//!   `post_step` calls no-ops (the same invariant the sleep
+//!   fast-forward has always relied on);
+//! * the SRAM page the block was decoded from is powered and its write
+//!   generation ([`crate::mem::GEN_PAGE_SHIFT`]) is unchanged — any
+//!   store, DMA/CGRA write, bulk load, power-gate poison, or snapshot
+//!   restore bumps the generation and forces a re-decode: the
+//!   self-modifying-code hook.
+//!
+//! During replay the block bails back to the reference path before any
+//! load/store that leaves SRAM (device reads are side-effecting and
+//! waits differ), after any trap / WFI / halt, and after any store into
+//! the block's own page (the remaining pre-decoded instructions could
+//! be stale). Every instruction executes through the shared
+//! `Cpu::exec_decoded` with the true running cycle count, and SRAM
+//! fetches are zero-wait, so cycles, registers, memory, and the retired
+//! stream come out bit-identical to the interpreter — `femu diff` and
+//! the `backend_differential` tests hold that line.
+
+use crate::cpu::{CpuState, Timing};
+use crate::isa::{self, AluOp, Instr};
+use crate::mem::GEN_PAGE_SHIFT;
+use crate::perfmon::PowerState;
+use crate::soc::{RunExit, Soc};
+
+use super::interp::{idle_step, service_exit, single_step, Idle};
+use super::{BackendKind, ExecBackend, ExecStats, SliceResult};
+
+/// Direct-mapped block-cache capacity (entry-pc slots).
+const BLOCK_SLOTS: usize = 1 << 14;
+
+/// Upper bound on instructions per block (blocks are also cut at
+/// write-generation page boundaries so each maps to exactly one page).
+const MAX_BLOCK_LEN: usize = 64;
+
+/// One compiled basic block: straight-line decoded instructions up to
+/// and including the first control transfer (or anything that can
+/// retarget the pc or unmask interrupts).
+struct Block {
+    /// Entry pc — the cache tag.
+    pc: u32,
+    /// SRAM location the block was decoded from.
+    bank: usize,
+    page: usize,
+    /// The page's write generation at decode time.
+    gen: u64,
+    /// Worst-case cycles the whole block can consume (sum of
+    /// per-instruction maxima, traps included).
+    max_cycles: u64,
+    /// Pre-decoded instructions with their raw words.
+    body: Vec<(Instr, u32)>,
+}
+
+/// The block-compiled execution backend.
+pub struct BlockBackend {
+    blocks: Vec<Option<Box<Block>>>,
+    stats: ExecStats,
+}
+
+impl Default for BlockBackend {
+    fn default() -> Self {
+        Self { blocks: (0..BLOCK_SLOTS).map(|_| None).collect(), stats: ExecStats::default() }
+    }
+}
+
+enum Dispatch {
+    /// A block ran (post-step included); exit the slice if `Some`.
+    Ran(Option<RunExit>),
+    /// No dispatchable block here: single-step this instruction.
+    Fallback,
+}
+
+impl ExecBackend for BlockBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Blocks
+    }
+
+    fn run_slice(&mut self, soc: &mut Soc, budget: u64) -> SliceResult {
+        let (start_now, start_instret) = (soc.now, soc.cpu.instret);
+        let deadline = soc.now.saturating_add(budget);
+        soc.refresh_irq_lines();
+        let exit = loop {
+            match idle_step(soc, deadline) {
+                Idle::Exit(e) => break e,
+                Idle::Continue => continue,
+                Idle::Run => {}
+            }
+            match self.try_block(soc, deadline) {
+                Dispatch::Ran(Some(e)) => break e,
+                Dispatch::Ran(None) => continue,
+                Dispatch::Fallback => {}
+            }
+            self.stats.slow_steps += 1;
+            if let Some(e) = single_step(soc) {
+                break e;
+            }
+        };
+        SliceResult {
+            exit,
+            cycles: soc.now - start_now,
+            instret: soc.cpu.instret - start_instret,
+        }
+    }
+
+    fn restore_hook(&mut self) {
+        for b in &mut self.blocks {
+            *b = None;
+        }
+    }
+
+    fn exec_stats(&self) -> ExecStats {
+        self.stats
+    }
+}
+
+impl BlockBackend {
+    #[inline]
+    fn slot(pc: u32) -> usize {
+        (pc as usize >> 2) & (BLOCK_SLOTS - 1)
+    }
+
+    /// Validate-or-build the block at the current pc, then run it if
+    /// its worst-case bound fits the budget and the event horizon.
+    fn try_block(&mut self, soc: &mut Soc, deadline: u64) -> Dispatch {
+        if soc.cpu.irq_ready() {
+            return Dispatch::Fallback;
+        }
+        let pc = soc.cpu.pc;
+        let Some(bank) = soc.bus.bank_index(pc) else {
+            return Dispatch::Fallback;
+        };
+        match soc.bus.banks[bank].state() {
+            PowerState::Active | PowerState::ClockGated => {}
+            // fetch would fault — let the reference path take the trap
+            _ => return Dispatch::Fallback,
+        }
+        let off = soc.bus.bank_offset(pc);
+        let page = off >> GEN_PAGE_SHIFT;
+        let gen = soc.bus.banks[bank].page_gen(off);
+
+        let slot = Self::slot(pc);
+        let cached = match &self.blocks[slot] {
+            Some(b) if b.pc == pc => {
+                if b.gen == gen {
+                    true
+                } else {
+                    // the page was written since decode: re-decode
+                    self.stats.block_invalidations += 1;
+                    false
+                }
+            }
+            _ => false,
+        };
+        if !cached {
+            match build_block(soc, pc, bank, page, gen) {
+                Some(b) => {
+                    self.blocks[slot] = Some(Box::new(b));
+                    self.stats.blocks_built += 1;
+                }
+                None => {
+                    self.blocks[slot] = None;
+                    return Dispatch::Fallback;
+                }
+            }
+        }
+        let block = self.blocks[slot].as_deref().expect("block just validated");
+        let bound = soc.now.saturating_add(block.max_cycles);
+        if bound > deadline || bound >= soc.event_horizon() {
+            return Dispatch::Fallback;
+        }
+        self.stats.block_dispatches += 1;
+        Dispatch::Ran(exec_block(soc, block))
+    }
+}
+
+/// Replay a validated block. Preconditions (checked by the caller):
+/// core `Running`, no ready interrupt, and `now + max_cycles` inside
+/// both the budget and the event horizon — under those, skipping the
+/// per-instruction post-step is exact, so the only divergence sources
+/// left are bus side effects, and the loop breaks back to the
+/// reference path before any of them.
+fn exec_block(soc: &mut Soc, block: &Block) -> Option<RunExit> {
+    for &(instr, word) in &block.body {
+        // bail before any access that could leave SRAM: device reads
+        // are side-effecting and bridge/periph waits differ — the
+        // single-step path handles them with full post-step coverage
+        match instr {
+            Instr::Load { rs1, imm, .. } | Instr::Store { rs1, imm, .. } => {
+                let addr = soc.cpu.regs[rs1 as usize].wrapping_add(imm as u32);
+                if soc.bus.bank_index(addr).is_none() {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        let r = soc.cpu.exec_decoded(instr, word, 0, &mut soc.bus, soc.now);
+        soc.now += r.cycles as u64;
+        if r.retired {
+            soc.stats.instructions += 1;
+        }
+        // trap / wfi / ebreak: state changed — the shared loop decides
+        if !r.retired || soc.cpu.state != CpuState::Running {
+            break;
+        }
+        // a store into the block's own page may have rewritten the
+        // instructions we pre-decoded: stop replaying them
+        if let Instr::Store { rs1, imm, .. } = instr {
+            let addr = soc.cpu.regs[rs1 as usize].wrapping_add(imm as u32);
+            if soc.bus.bank_index(addr) == Some(block.bank)
+                && soc.bus.bank_offset(addr) >> GEN_PAGE_SHIFT == block.page
+            {
+                break;
+            }
+        }
+    }
+    soc.post_step();
+    service_exit(soc)
+}
+
+/// Decode a basic block starting at `pc`: straight-line instructions up
+/// to and including the first terminator, bounded by [`MAX_BLOCK_LEN`]
+/// and the enclosing write-generation page. Returns `None` when not
+/// even the first word decodes (the reference path takes the illegal
+/// trap).
+fn build_block(soc: &Soc, pc: u32, bank: usize, page: usize, gen: u64) -> Option<Block> {
+    let bank_ref = &soc.bus.banks[bank];
+    let t = &soc.cpu.timing;
+    let mut body = Vec::new();
+    let mut max_cycles = 0u64;
+    let mut off = soc.bus.bank_offset(pc);
+    loop {
+        let Ok(word) = bank_ref.fetch32(off) else { break };
+        let Some(instr) = isa::decode(word) else { break };
+        body.push((instr, word));
+        max_cycles += worst_cycles(t, instr) as u64;
+        if is_terminator(instr) || body.len() >= MAX_BLOCK_LEN {
+            break;
+        }
+        off += 4;
+        if off >> GEN_PAGE_SHIFT != page {
+            break;
+        }
+    }
+    if body.is_empty() {
+        return None;
+    }
+    Some(Block { pc, bank, page, gen, max_cycles, body })
+}
+
+/// Instructions that end a block: control transfers, plus anything that
+/// can retarget the pc or change interrupt visibility (CSR writes and
+/// `mret` can unmask a pending interrupt; the next dispatch re-checks).
+fn is_terminator(i: Instr) -> bool {
+    matches!(
+        i,
+        Instr::Branch { .. }
+            | Instr::Jal { .. }
+            | Instr::Jalr { .. }
+            | Instr::Ecall
+            | Instr::Ebreak
+            | Instr::Wfi
+            | Instr::Mret
+            | Instr::Csr { .. }
+    )
+}
+
+/// Worst-case cycle cost of one in-block instruction. Blocks only run
+/// against SRAM (zero wait states), so the bound is the base class cost
+/// — or the trap-entry cost where the instruction can fault.
+fn worst_cycles(t: &Timing, instr: Instr) -> u32 {
+    match instr {
+        Instr::Lui { .. } | Instr::Auipc { .. } | Instr::OpImm { .. } | Instr::Fence => t.alu,
+        Instr::Jal { .. } | Instr::Jalr { .. } | Instr::Mret => t.jump,
+        Instr::Branch { .. } => t.branch + t.branch_taken_penalty,
+        Instr::Load { .. } => t.load.max(t.trap_entry),
+        Instr::Store { .. } => t.store.max(t.trap_entry),
+        Instr::Op { op, .. } => match op {
+            AluOp::Mul | AluOp::Mulh | AluOp::Mulhsu | AluOp::Mulhu => t.mul,
+            AluOp::Div | AluOp::Divu | AluOp::Rem | AluOp::Remu => t.div,
+            _ => t.alu,
+        },
+        Instr::Ecall => t.trap_entry,
+        Instr::Ebreak | Instr::Wfi => t.alu,
+        Instr::Csr { .. } => t.csr.max(t.trap_entry),
+    }
+}

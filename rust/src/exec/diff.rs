@@ -1,0 +1,512 @@
+//! Lockstep differential validation: run the same workload on two
+//! execution backends and prove — not assume — that they are
+//! bit-identical.
+//!
+//! [`lockstep`] advances two [`Platform`]s in `checkpoint_cycles`
+//! slices and, at every checkpoint, compares:
+//!
+//! * the exit reason and the cycle clock,
+//! * the retired-instruction counter and the rolling
+//!   [`RetireTrace`](crate::cpu::RetireTrace) digest of the retired pc
+//!   stream (armed on both CPUs for the duration of the diff),
+//! * the **full snapshot payload bytes** — which subsumes registers,
+//!   CSRs, every memory bank, every peripheral, the perf counters, and
+//!   the energy-relevant power-state residencies in one comparison.
+//!
+//! The first mismatch is reported as a [`Divergence`] with enough
+//! context (checkpoint, cycle, recent pcs) to bisect. On top of the
+//! single-workload driver, [`lockstep_workloads`] fans a standard
+//! suite across a [`Fleet`], and [`diff_experiments`] re-runs the
+//! paper's §V experiments (fig4 / fig5 / case C) once per backend —
+//! reusing the experiment drivers' own forked sweeps — and compares
+//! every published number bit-for-bit. `femu diff` is a thin CLI over
+//! these (DESIGN.md §11).
+
+use anyhow::{bail, Result};
+
+use crate::config::PlatformConfig;
+use crate::coordinator::experiments;
+use crate::coordinator::{AppExit, Fleet, Platform};
+use crate::workloads::programs;
+
+use super::BackendKind;
+
+/// Knobs for a [`lockstep`] run.
+#[derive(Clone, Copy, Debug)]
+pub struct LockstepOptions {
+    /// Compare state every this many guest cycles.
+    pub checkpoint_cycles: u64,
+    /// Give up (as an error, not a divergence) if the workload has not
+    /// halted after this many cycles.
+    pub max_cycles: u64,
+}
+
+impl Default for LockstepOptions {
+    fn default() -> Self {
+        Self { checkpoint_cycles: 100_000, max_cycles: 1 << 32 }
+    }
+}
+
+/// The first point where two backends disagreed.
+#[derive(Clone, Debug)]
+pub struct Divergence {
+    /// Checkpoint index (1-based) at which the mismatch surfaced.
+    pub checkpoint: u64,
+    /// Backend A's cycle clock at that checkpoint.
+    pub cycle: u64,
+    /// Human-readable description of what differed.
+    pub what: String,
+}
+
+/// Outcome of one lockstep diff.
+#[derive(Clone, Debug)]
+pub struct LockstepReport {
+    pub workload: String,
+    pub backend_a: BackendKind,
+    pub backend_b: BackendKind,
+    /// Checkpoints compared (including the final one).
+    pub checkpoints: u64,
+    /// Guest cycles covered.
+    pub cycles: u64,
+    /// Instructions retired (backend A's count).
+    pub instret: u64,
+    /// `None` means bit-identical at every checkpoint.
+    pub divergence: Option<Divergence>,
+}
+
+impl LockstepReport {
+    pub fn matched(&self) -> bool {
+        self.divergence.is_none()
+    }
+}
+
+impl std::fmt::Display for LockstepReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.divergence {
+            None => write!(
+                f,
+                "{}: {} == {} over {} cycles / {} instret ({} checkpoints)",
+                self.workload,
+                self.backend_a,
+                self.backend_b,
+                self.cycles,
+                self.instret,
+                self.checkpoints,
+            ),
+            Some(d) => write!(
+                f,
+                "{}: {} != {} at checkpoint {} (cycle {}): {}",
+                self.workload, self.backend_a, self.backend_b, d.checkpoint, d.cycle, d.what,
+            ),
+        }
+    }
+}
+
+/// Build two platforms from the same config, differing only in the
+/// configured execution backend.
+pub fn platform_pair(
+    cfg: &PlatformConfig,
+    a: BackendKind,
+    b: BackendKind,
+) -> (Platform, Platform) {
+    let mut cfg_a = cfg.clone();
+    cfg_a.soc.backend = a;
+    let mut cfg_b = cfg.clone();
+    cfg_b.soc.backend = b;
+    (Platform::new(cfg_a), Platform::new(cfg_b))
+}
+
+/// Advance `a` and `b` in lockstep slices and compare at every
+/// checkpoint. The platforms must be identically prepared (same guest,
+/// same datasets/services); the backends under test are whatever each
+/// platform was configured with.
+pub fn lockstep(
+    workload: &str,
+    a: &mut Platform,
+    b: &mut Platform,
+    opts: &LockstepOptions,
+) -> Result<LockstepReport> {
+    // arm the retired-pc digests for the duration of the diff
+    a.dbg.soc.cpu.trace = Some(Box::default());
+    b.dbg.soc.cpu.trace = Some(Box::default());
+
+    let start = a.dbg.soc.now;
+    let start_instret = a.dbg.soc.cpu.instret;
+    let mut checkpoints = 0u64;
+    let mut divergence = None;
+    loop {
+        let ra = a.run_app(opts.checkpoint_cycles);
+        let rb = b.run_app(opts.checkpoint_cycles);
+        checkpoints += 1;
+        let (xa, xb) = match (ra, rb) {
+            (Ok(xa), Ok(xb)) => (xa, xb),
+            (Err(ea), Err(eb)) => {
+                let (ea, eb) = (format!("{ea:#}"), format!("{eb:#}"));
+                if ea == eb {
+                    // identical failure on both sides: the workload is
+                    // broken, not the backends — inconclusive
+                    bail!("workload failed identically on both backends: {ea}");
+                }
+                divergence = Some(Divergence {
+                    checkpoint: checkpoints,
+                    cycle: a.dbg.soc.now,
+                    what: format!("errors differ: a: {ea}; b: {eb}"),
+                });
+                break;
+            }
+            (ra, rb) => {
+                let describe = |r: &Result<AppExit>| match r {
+                    Ok(x) => format!("{x:?}"),
+                    Err(e) => format!("error: {e:#}"),
+                };
+                divergence = Some(Divergence {
+                    checkpoint: checkpoints,
+                    cycle: a.dbg.soc.now,
+                    what: format!("a {} vs b {}", describe(&ra), describe(&rb)),
+                });
+                break;
+            }
+        };
+        if let Some(what) = compare_checkpoint(a, b, xa, xb) {
+            divergence =
+                Some(Divergence { checkpoint: checkpoints, cycle: a.dbg.soc.now, what });
+            break;
+        }
+        if matches!(xa, AppExit::Halted(_)) {
+            break;
+        }
+        if a.dbg.soc.now - start >= opts.max_cycles {
+            bail!(
+                "workload `{workload}` did not halt within {} cycles (no divergence found)",
+                opts.max_cycles
+            );
+        }
+    }
+
+    let report = LockstepReport {
+        workload: workload.to_string(),
+        backend_a: a.dbg.soc.backend_kind(),
+        backend_b: b.dbg.soc.backend_kind(),
+        checkpoints,
+        cycles: a.dbg.soc.now - start,
+        instret: a.dbg.soc.cpu.instret - start_instret,
+        divergence,
+    };
+    // disarm: leave the platforms as we found them
+    a.dbg.soc.cpu.trace = None;
+    b.dbg.soc.cpu.trace = None;
+    Ok(report)
+}
+
+/// Compare everything observable at a checkpoint; `None` == identical.
+fn compare_checkpoint(a: &Platform, b: &Platform, xa: AppExit, xb: AppExit) -> Option<String> {
+    if xa != xb {
+        return Some(format!("exit {xa:?} vs {xb:?}"));
+    }
+    let (sa, sb) = (&a.dbg.soc, &b.dbg.soc);
+    if sa.now != sb.now {
+        return Some(format!("cycle clock {} vs {}", sa.now, sb.now));
+    }
+    if sa.cpu.instret != sb.cpu.instret {
+        return Some(format!("instret {} vs {}", sa.cpu.instret, sb.cpu.instret));
+    }
+    if sa.cpu.trace != sb.cpu.trace {
+        let recent = |s: &crate::soc::Soc| {
+            s.cpu
+                .trace
+                .as_ref()
+                .map(|t| {
+                    t.recent_pcs().iter().map(|pc| format!("{pc:#x}")).collect::<Vec<_>>().join(",")
+                })
+                .unwrap_or_default()
+        };
+        return Some(format!(
+            "retired-pc stream diverged (recent a: [{}], b: [{}])",
+            recent(sa),
+            recent(sb)
+        ));
+    }
+    // the big hammer: full snapshot payloads, byte for byte — covers
+    // registers, CSRs, memories, peripherals, perf counters, energy
+    // residencies. Traces are not serialized, so arming them above did
+    // not perturb this comparison.
+    let (pa, pb) = (a.snapshot(), b.snapshot());
+    let (ba, bb) = (pa.payload(), pb.payload());
+    if ba != bb {
+        let at = ba.iter().zip(bb.iter()).position(|(x, y)| x != y);
+        return Some(match at {
+            Some(i) => format!(
+                "snapshot payloads differ at byte {i} of {}/{} ({:#04x} vs {:#04x})",
+                ba.len(),
+                bb.len(),
+                ba[i],
+                bb[i]
+            ),
+            None => format!("snapshot payload lengths differ ({} vs {})", ba.len(), bb.len()),
+        });
+    }
+    None
+}
+
+// =====================================================================
+// Workload suite
+// =====================================================================
+
+/// The standard lockstep suite: a dense compute kernel, a
+/// control/memory-heavy kernel, an interrupt-and-sleep acquisition
+/// loop, and a self-modifying patch loop — together they cross every
+/// fast-path boundary the block backend has (device access, WFI,
+/// interrupts, write-generation invalidation).
+pub const LOCKSTEP_WORKLOADS: [&str; 4] = ["mm_cpu", "fft_cpu", "acquisition", "smc_patch"];
+
+/// A guest that rewrites one of its own instructions between two passes
+/// over the same loop: pass 1 runs `addi s0, s0, 1`, then the patcher
+/// stores the pre-assembled encoding of `addi s0, s0, 8` over it and
+/// runs the loop again. Any stale decoded state (icache word tags,
+/// compiled blocks) yields the wrong s0.
+pub fn smc_patch_source() -> String {
+    format!(
+        r#"{prelude}
+_start:
+    li   s0, 0
+    li   s1, 2          # two passes
+pass:
+loop_head:
+    addi s0, s0, 1      # patched to `addi s0, s0, 8` after pass 1
+    addi s1, s1, -1
+    beqz s1, done
+    # patch: overwrite loop_head with the replacement encoding
+    la   t0, loop_head
+    la   t1, patch_word
+    lw   t2, 0(t1)
+    sw   t2, 0(t0)
+    j    pass
+done:
+    mv   a0, s0         # expect 1 + 8 = 9
+    ebreak
+.data
+patch_word:
+    .word 0x00840413    # addi s0, s0, 8
+"#,
+        prelude = programs::PRELUDE,
+    )
+}
+
+/// Load + service setup for one named suite workload.
+fn prepare(p: &mut Platform, workload: &str) -> Result<()> {
+    match workload {
+        "mm_cpu" => {
+            p.dbg.load_source(&programs::mm_cpu(16, 8, 4))?;
+        }
+        "fft_cpu" => {
+            p.dbg.load_source(&programs::fft_cpu(64))?;
+        }
+        "acquisition" => {
+            p.dbg.load_source(&programs::acquisition(400, 0))?;
+            p.start_adc((0..400).collect(), 100_000.0);
+        }
+        "smc_patch" => {
+            p.dbg.load_source(&smc_patch_source())?;
+        }
+        other => bail!("unknown lockstep workload `{other}`"),
+    }
+    Ok(())
+}
+
+/// [`lockstep`] an arbitrary assembly source on a fresh platform pair
+/// (the `femu diff <prog.s>` path).
+pub fn lockstep_source(
+    cfg: &PlatformConfig,
+    name: &str,
+    source: &str,
+    a: BackendKind,
+    b: BackendKind,
+    opts: &LockstepOptions,
+) -> Result<LockstepReport> {
+    let (mut pa, mut pb) = platform_pair(cfg, a, b);
+    pa.dbg.load_source(source)?;
+    pb.dbg.load_source(source)?;
+    lockstep(name, &mut pa, &mut pb, opts)
+}
+
+/// [`lockstep`] one named suite workload on a fresh platform pair.
+pub fn lockstep_workload(
+    cfg: &PlatformConfig,
+    workload: &str,
+    a: BackendKind,
+    b: BackendKind,
+    opts: &LockstepOptions,
+) -> Result<LockstepReport> {
+    let (mut pa, mut pb) = platform_pair(cfg, a, b);
+    prepare(&mut pa, workload)?;
+    prepare(&mut pb, workload)?;
+    lockstep(workload, &mut pa, &mut pb, opts)
+}
+
+/// The whole suite, one fleet point per workload (reports in suite
+/// order regardless of worker count).
+pub fn lockstep_workloads(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    a: BackendKind,
+    b: BackendKind,
+    opts: &LockstepOptions,
+) -> Result<Vec<LockstepReport>> {
+    let opts = *opts;
+    fleet.run_sweep(cfg, 0xD1FF, LOCKSTEP_WORKLOADS.to_vec(), |cfg, workload, _seed| {
+        Ok(vec![lockstep_workload(cfg, workload, a, b, &opts)?])
+    })
+}
+
+// =====================================================================
+// Experiment-level diff
+// =====================================================================
+
+/// Bitwise comparison of one §V experiment run per-backend.
+#[derive(Clone, Debug)]
+pub struct ExperimentDiff {
+    pub experiment: String,
+    /// Result points compared.
+    pub points: usize,
+    /// One line per differing field; empty == bit-identical.
+    pub mismatches: Vec<String>,
+}
+
+impl ExperimentDiff {
+    pub fn matched(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+}
+
+/// Push a mismatch line unless the two floats are bit-identical
+/// (`to_bits`: the experiments' determinism contract is exact, not
+/// approximate, so no epsilon).
+fn diff_f64(ms: &mut Vec<String>, ctx: &str, field: &str, x: f64, y: f64) {
+    if x.to_bits() != y.to_bits() {
+        ms.push(format!("{ctx}: {field} {x} != {y}"));
+    }
+}
+
+fn diff_eq<T: PartialEq + std::fmt::Debug>(
+    ms: &mut Vec<String>,
+    ctx: &str,
+    field: &str,
+    x: &T,
+    y: &T,
+) {
+    if x != y {
+        ms.push(format!("{ctx}: {field} {x:?} != {y:?}"));
+    }
+}
+
+/// Run fig4 / fig5 / case C once per backend — through the experiment
+/// drivers' own forked sweeps ([`Fleet::run_sweep_forked`] underneath)
+/// — and compare every published number bit-for-bit. `window_s` and
+/// `scale` shrink fig4 / case C exactly like the benches do.
+pub fn diff_experiments(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    a: BackendKind,
+    b: BackendKind,
+    window_s: f64,
+    scale: usize,
+) -> Result<Vec<ExperimentDiff>> {
+    let mut cfg_a = cfg.clone();
+    cfg_a.soc.backend = a;
+    let mut cfg_b = cfg.clone();
+    cfg_b.soc.backend = b;
+    let mut out = Vec::new();
+
+    let fa = experiments::fig4_sweep(fleet, &cfg_a, window_s, 0xF16_4)?;
+    let fb = experiments::fig4_sweep(fleet, &cfg_b, window_s, 0xF16_4)?;
+    let mut ms = Vec::new();
+    diff_eq(&mut ms, "fig4", "point count", &fa.len(), &fb.len());
+    for (i, (x, y)) in fa.iter().zip(&fb).enumerate() {
+        let ctx = format!("fig4[{i}]");
+        diff_eq(&mut ms, &ctx, "model", &x.model, &y.model);
+        diff_f64(&mut ms, &ctx, "sample_rate_hz", x.sample_rate_hz, y.sample_rate_hz);
+        diff_f64(&mut ms, &ctx, "total_s", x.total_s, y.total_s);
+        diff_f64(&mut ms, &ctx, "active_s", x.active_s, y.active_s);
+        diff_f64(&mut ms, &ctx, "sleep_s", x.sleep_s, y.sleep_s);
+        diff_f64(&mut ms, &ctx, "active_mj", x.active_mj, y.active_mj);
+        diff_f64(&mut ms, &ctx, "sleep_mj", x.sleep_mj, y.sleep_mj);
+        diff_f64(&mut ms, &ctx, "total_mj", x.total_mj, y.total_mj);
+    }
+    out.push(ExperimentDiff { experiment: "fig4".into(), points: fa.len(), mismatches: ms });
+
+    let fa = experiments::fig5_all(fleet, &cfg_a, 0xF15)?;
+    let fb = experiments::fig5_all(fleet, &cfg_b, 0xF15)?;
+    let mut ms = Vec::new();
+    diff_eq(&mut ms, "fig5", "point count", &fa.len(), &fb.len());
+    for (i, (x, y)) in fa.iter().zip(&fb).enumerate() {
+        let ctx = format!("fig5[{i}]");
+        diff_eq(&mut ms, &ctx, "kernel", &x.kernel, &y.kernel);
+        diff_eq(&mut ms, &ctx, "implementation", &x.implementation, &y.implementation);
+        diff_eq(&mut ms, &ctx, "model", &x.model, &y.model);
+        diff_eq(&mut ms, &ctx, "cycles", &x.cycles, &y.cycles);
+        diff_f64(&mut ms, &ctx, "time_s", x.time_s, y.time_s);
+        diff_f64(&mut ms, &ctx, "energy_mj", x.energy_mj, y.energy_mj);
+        diff_eq(&mut ms, &ctx, "validated", &x.validated, &y.validated);
+    }
+    out.push(ExperimentDiff { experiment: "fig5".into(), points: fa.len(), mismatches: ms });
+
+    let ca = experiments::case_c(fleet, &cfg_a, scale)?;
+    let cb = experiments::case_c(fleet, &cfg_b, scale)?;
+    let mut ms = Vec::new();
+    diff_eq(&mut ms, "case_c", "windows", &ca.windows, &cb.windows);
+    diff_eq(&mut ms, "case_c", "samples_per_window", &ca.samples_per_window, &cb.samples_per_window);
+    diff_f64(&mut ms, "case_c", "virt_window_s", ca.virt_window_s, cb.virt_window_s);
+    diff_f64(&mut ms, "case_c", "phys_window_s", ca.phys_window_s, cb.phys_window_s);
+    diff_f64(&mut ms, "case_c", "virt_total_s", ca.virt_total_s, cb.virt_total_s);
+    diff_f64(&mut ms, "case_c", "phys_total_s", ca.phys_total_s, cb.phys_total_s);
+    diff_f64(&mut ms, "case_c", "speedup", ca.speedup, cb.speedup);
+    out.push(ExperimentDiff { experiment: "case_c".into(), points: 2, mismatches: ms });
+
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lockstep_trivially_matches_itself() {
+        let cfg = PlatformConfig::default();
+        let r = lockstep_workload(
+            &cfg,
+            "mm_cpu",
+            BackendKind::Interp,
+            BackendKind::Interp,
+            &LockstepOptions::default(),
+        )
+        .unwrap();
+        assert!(r.matched(), "{r}");
+        assert!(r.instret > 0);
+    }
+
+    #[test]
+    fn lockstep_flags_different_programs() {
+        // different guests: the retired streams must diverge, and the
+        // driver must say so instead of erroring
+        let cfg = PlatformConfig::default();
+        let (mut a, mut b) = platform_pair(&cfg, BackendKind::Interp, BackendKind::Interp);
+        a.dbg.load_source("_start: li a0, 1\n li a1, 2\nebreak").unwrap();
+        b.dbg.load_source("_start: li a0, 1\n li a1, 3\nebreak").unwrap();
+        let r = lockstep("mismatch", &mut a, &mut b, &LockstepOptions::default()).unwrap();
+        assert!(!r.matched());
+    }
+
+    #[test]
+    fn unknown_workload_is_an_error() {
+        let cfg = PlatformConfig::default();
+        let err = lockstep_workload(
+            &cfg,
+            "nope",
+            BackendKind::Interp,
+            BackendKind::Blocks,
+            &LockstepOptions::default(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown lockstep workload"));
+    }
+}

@@ -1,0 +1,121 @@
+//! The reference backend: the event-driven fetch-decode-dispatch loop,
+//! ported verbatim from the pre-refactor `Soc::run`.
+//!
+//! This is the semantic oracle every other backend is diffed against.
+//! The pieces of the loop that any backend must share — the halted /
+//! sleep-fast-forward handling, the single-step path, and the CS
+//! hand-off checks — are factored out here so the block backend falls
+//! back onto *this exact code*, not a reimplementation.
+
+use crate::cpu::CpuState;
+use crate::soc::{RunExit, Soc};
+
+use super::{BackendKind, ExecBackend, SliceResult};
+
+/// The reference fetch-decode-dispatch interpreter. Stateless: all
+/// derived caching (the word-tagged decode cache) lives in the CPU.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InterpBackend;
+
+impl ExecBackend for InterpBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Interp
+    }
+
+    fn run_slice(&mut self, soc: &mut Soc, budget: u64) -> SliceResult {
+        let (start_now, start_instret) = (soc.now, soc.cpu.instret);
+        let deadline = soc.now.saturating_add(budget);
+        soc.refresh_irq_lines();
+        let exit = loop {
+            match idle_step(soc, deadline) {
+                Idle::Exit(e) => break e,
+                Idle::Continue => continue,
+                Idle::Run => {}
+            }
+            if let Some(e) = single_step(soc) {
+                break e;
+            }
+        };
+        SliceResult {
+            exit,
+            cycles: soc.now - start_now,
+            instret: soc.cpu.instret - start_instret,
+        }
+    }
+}
+
+/// Outcome of the shared non-running-state handling at the top of a
+/// backend loop iteration.
+pub(super) enum Idle {
+    /// Core is running and inside budget: execute instructions.
+    Run,
+    /// Loop again (a sleep fast-forward advanced time).
+    Continue,
+    /// The slice is over.
+    Exit(RunExit),
+}
+
+/// Halted / sleeping / budget handling shared by every backend: the
+/// sleep path fast-forwards the clock to the next device event instead
+/// of ticking idle cycles.
+pub(super) fn idle_step(soc: &mut Soc, deadline: u64) -> Idle {
+    match soc.cpu.state {
+        CpuState::Halted(h) => return Idle::Exit(RunExit::Halted(h)),
+        CpuState::Sleeping if !soc.cpu.interrupt_pending() => {
+            return match soc.next_event() {
+                None => Idle::Exit(RunExit::DeadSleep),
+                Some(t) if t > deadline => {
+                    soc.now = deadline;
+                    soc.post_step();
+                    Idle::Exit(RunExit::CycleBudget)
+                }
+                Some(t) => {
+                    let before = soc.now;
+                    soc.now = t.max(soc.now);
+                    soc.post_step();
+                    // forward-progress guard: a past-time event that
+                    // neither advances the clock nor wakes the core
+                    // would spin forever
+                    if soc.now == before
+                        && soc.cpu.state == CpuState::Sleeping
+                        && !soc.cpu.interrupt_pending()
+                    {
+                        // step the clock one cycle and re-evaluate
+                        soc.now += 1;
+                    }
+                    Idle::Continue
+                }
+            };
+        }
+        _ => {}
+    }
+    if soc.now >= deadline {
+        return Idle::Exit(RunExit::CycleBudget);
+    }
+    Idle::Run
+}
+
+/// One interpreted instruction plus its post-step — the single-step
+/// reference path both backends share.
+pub(super) fn single_step(soc: &mut Soc) -> Option<RunExit> {
+    let r = soc.cpu.step(&mut soc.bus, soc.now);
+    soc.now += r.cycles as u64;
+    if r.retired {
+        soc.stats.instructions += 1;
+    }
+    soc.post_step();
+    service_exit(soc)
+}
+
+/// CS hand-off checks (mailbox doorbell / ADC refill) after a
+/// post-step.
+pub(super) fn service_exit(soc: &mut Soc) -> Option<RunExit> {
+    if let Some(off) = soc.bus.mailbox.take_pending() {
+        soc.stats.mailbox_rings += 1;
+        return Some(RunExit::MailboxRing(off));
+    }
+    if soc.bus.spi_adc.wants_refill() {
+        return Some(RunExit::AdcRefill);
+    }
+    None
+}

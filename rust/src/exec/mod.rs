@@ -1,0 +1,138 @@
+//! Pluggable execution backends: the API that owns the run loop.
+//!
+//! The paper's premise is that emulation speed and trustworthy
+//! perf/energy numbers must coexist. This module is the seam that makes
+//! that safe: every way of advancing the guest lives behind
+//! [`ExecBackend`], the SoC delegates [`crate::soc::Soc::run`] to the
+//! configured backend, and the *semantics* stay centralized — all
+//! backends execute instructions through the one
+//! `Cpu::exec_decoded` path, so speed work can never fork the model.
+//!
+//! Two backends ship:
+//!
+//! * [`interp`] — the reference fetch-decode-dispatch interpreter, the
+//!   verbatim event loop the SoC always had.
+//! * [`blocks`] — basic-block superinstructions: decode once per block,
+//!   replay with fused accounting, invalidate on self-modifying writes
+//!   via the SRAM page write generations ([`crate::mem`]).
+//!
+//! The bit-identity contract (every backend produces the same retired
+//! instruction stream, cycle counts, perf counters, and snapshot bytes)
+//! is enforced, not assumed: [`diff`] runs workloads on two backends in
+//! lockstep and `femu diff` / the `backend_differential` tests gate it
+//! (DESIGN.md §11).
+
+pub mod blocks;
+pub mod diff;
+pub mod interp;
+
+pub use blocks::BlockBackend;
+pub use interp::InterpBackend;
+
+use anyhow::bail;
+
+use crate::soc::{RunExit, Soc};
+
+/// Which execution engine drives the core. Selectable per platform
+/// (config `backend`), per CLI invocation (`--backend`), and per server
+/// session (`session.open` `backend` field).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The reference interpreter ([`InterpBackend`]).
+    #[default]
+    Interp,
+    /// Block-compiled superinstructions ([`BlockBackend`]): same
+    /// numbers, more guest MIPS.
+    Blocks,
+}
+
+impl BackendKind {
+    /// Parse a user-facing backend name (CLI / config / protocol).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "interp" => Ok(Self::Interp),
+            "blocks" => Ok(Self::Blocks),
+            other => bail!("unknown backend `{other}` (want interp|blocks)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Interp => "interp",
+            Self::Blocks => "blocks",
+        }
+    }
+
+    /// Instantiate a fresh backend of this kind.
+    pub fn create(self) -> Box<dyn ExecBackend> {
+        match self {
+            Self::Interp => Box::new(InterpBackend),
+            Self::Blocks => Box::<BlockBackend>::default(),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Accounting for one [`ExecBackend::run_slice`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SliceResult {
+    /// Why the slice ended.
+    pub exit: RunExit,
+    /// Cycles consumed by the slice (including sleep fast-forwards).
+    pub cycles: u64,
+    /// Instructions retired by the slice.
+    pub instret: u64,
+}
+
+/// Backend-internal counters (all zero for the stateless interpreter).
+/// These are diagnostics, not architectural state: the self-modifying
+/// code tests use them to observe block re-decodes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Compiled blocks dispatched on the fast path.
+    pub block_dispatches: u64,
+    /// Blocks (re)compiled — a rebuild after a self-modifying write
+    /// shows up as a second build of the same entry pc.
+    pub blocks_built: u64,
+    /// Cached blocks dropped on a write-generation mismatch.
+    pub block_invalidations: u64,
+    /// Instructions executed through the single-step reference path.
+    pub slow_steps: u64,
+}
+
+/// The execution API. A backend owns the run loop: it advances the
+/// core, the clock, and the instruction count, and returns at exactly
+/// the same architectural points the reference interpreter would
+/// (halt, CS hand-off, budget).
+///
+/// Contract (enforced by `femu diff`): for any guest and any slice
+/// budgets, every backend must produce bit-identical architectural
+/// state, cycle counts, perf counters, and retired-instruction streams.
+/// Backends may hold *derived* state only (decode caches, compiled
+/// blocks) — nothing a snapshot needs to capture, which is why interp
+/// and block snapshots of the same execution are byte-comparable.
+pub trait ExecBackend: Send {
+    fn kind(&self) -> BackendKind;
+
+    /// Run until halt, a CS hand-off, or `budget` cycles elapse.
+    fn run_slice(&mut self, soc: &mut Soc, budget: u64) -> SliceResult;
+
+    /// Snapshot-save hook. Backends hold no architectural state, so the
+    /// default does nothing; it exists so an exotic backend could flush
+    /// lazily-materialized architectural effects before serialization.
+    fn save_hook(&self) {}
+
+    /// Snapshot-restore / reprogram hook: the memory image under the
+    /// backend may have changed arbitrarily — derived caches must go.
+    fn restore_hook(&mut self) {}
+
+    /// Internal counters for diagnostics and tests.
+    fn exec_stats(&self) -> ExecStats {
+        ExecStats::default()
+    }
+}

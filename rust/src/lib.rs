@@ -5,6 +5,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cpu;
 pub mod energy;
+pub mod exec;
 pub mod isa;
 pub mod mem;
 pub mod perfmon;
@@ -16,3 +17,22 @@ pub mod soc;
 pub mod util;
 pub mod virt;
 pub mod workloads;
+
+/// The types almost every embedder needs: build a [`Platform`] from a
+/// [`PlatformConfig`], run guests, pick an execution backend, sweep the
+/// paper's experiments across a [`Fleet`], snapshot/restore, and talk to
+/// a control server. `use femu::prelude::*;` — examples and benches use
+/// this instead of spelling out a dozen module paths.
+pub mod prelude {
+    pub use crate::config::PlatformConfig;
+    pub use crate::coordinator::{experiments, AppExit, Fleet, Platform};
+    pub use crate::energy::{EnergyModel, EnergyReport};
+    pub use crate::exec::{
+        diff::{self, LockstepOptions, LockstepReport},
+        BackendKind, ExecBackend, ExecStats, SliceResult,
+    };
+    pub use crate::perfmon::PerfSnapshot;
+    pub use crate::server::{Client, Server};
+    pub use crate::snapshot::PlatformSnapshot;
+    pub use crate::soc::{RunExit, Soc, SocConfig};
+}

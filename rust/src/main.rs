@@ -11,6 +11,8 @@
 //! femu sweep-acquisition [--window-s S] [--from-snapshot FILE]   (Fig 4)
 //! femu kernels [--validate] [--from-snapshot FILE]               (Fig 5)
 //! femu flash-study [--scale N] [--from-snapshot FILE]            (Case C)
+//! femu diff [prog.s] [--backends A,B] [--experiments]
+//!           [--checkpoint-cycles N] [--window-s S] [--scale N]
 //! femu table1                                                    (Table I)
 //! femu serve [--addr HOST:PORT] [--artifacts DIR] [--config ..]
 //!            [--max-sessions N] [--workers N] [--idle-timeout SECS]
@@ -21,6 +23,11 @@
 //! (one worker per core by default); `--workers N` sizes the pool and
 //! `--serial` forces the single-threaded reference path. Results are
 //! bit-identical either way.
+//!
+//! Every subcommand that builds a platform accepts `--backend
+//! interp|blocks` to pick the execution engine (config file key:
+//! `backend`); `femu diff` runs workloads on two backends in lockstep
+//! and proves them bit-identical (DESIGN.md §11).
 
 use std::collections::HashMap;
 
@@ -29,6 +36,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use femu::config::PlatformConfig;
 use femu::coordinator::{experiments, table1, AppExit, Fleet, Platform};
 use femu::energy::EnergyModel;
+use femu::exec::{diff, BackendKind};
 use femu::snapshot::PlatformSnapshot;
 use femu::util::eng;
 
@@ -69,10 +77,15 @@ fn parse_args(argv: &[String]) -> Args {
 }
 
 fn load_config(args: &Args) -> Result<PlatformConfig> {
-    match args.flags.get("config") {
-        Some(path) => PlatformConfig::load(path),
-        None => Ok(PlatformConfig::default()),
+    let mut cfg = match args.flags.get("config") {
+        Some(path) => PlatformConfig::load(path)?,
+        None => PlatformConfig::default(),
+    };
+    // --backend overrides the config file's execution engine
+    if let Some(b) = args.flags.get("backend") {
+        cfg.soc.backend = BackendKind::parse(b)?;
     }
+    Ok(cfg)
 }
 
 /// Experiment fleet sizing: `--serial` wins, then `--workers N`, then one
@@ -102,6 +115,7 @@ fn run() -> Result<()> {
         "sweep-acquisition" => cmd_sweep_acquisition(&args),
         "kernels" => cmd_kernels(&args),
         "flash-study" => cmd_flash_study(&args),
+        "diff" => cmd_diff(&args),
         "table1" => cmd_table1(),
         "disasm" => cmd_disasm(&args),
         "serve" => cmd_serve(&args),
@@ -127,6 +141,8 @@ fn print_usage() {
          femu sweep-acquisition [--window-s S]        reproduce Fig 4\n  \
          femu kernels [--validate]                    reproduce Fig 5\n  \
          femu flash-study [--scale N]                 reproduce Case C (\u{a7}V-C)\n  \
+         femu diff [prog.s] [--backends A,B] [--experiments] [--window-s S]\n  \
+         \x20         [--scale N] [--checkpoint-cycles N]  lockstep backend diff\n  \
          femu table1                                  reproduce Table I\n  \
          femu serve [--addr HOST:PORT] [--artifacts DIR] [--max-sessions N]\n  \
          \x20          [--workers N] [--idle-timeout SECS] [--configs DIR]\n\n\
@@ -134,7 +150,9 @@ fn print_usage() {
          one per core),\n  \
          --serial (single-threaded reference path), and --from-snapshot FILE \
          (use a saved\n  \
-         snapshot as the golden image the sweep forks from)."
+         snapshot as the golden image the sweep forks from).\n  \
+         Platform-building subcommands accept --backend interp|blocks \
+         (execution engine)."
     );
 }
 
@@ -232,7 +250,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
         eng(report.sleep_mj / 1e3),
         eng(report.avg_power_mw() / 1e3),
     );
-    if let Some(w) = platform.dbg.soc.perf.window_snapshot() {
+    if let Some(w) = platform.perf_window_snapshot() {
         let wr = model.estimate(w);
         println!("manual window: {} cycles, {}J", w.cycles, eng(wr.total_mj / 1e3));
     }
@@ -494,6 +512,75 @@ fn cmd_flash_study(args: &Args) -> Result<()> {
         eng(r.phys_total_s),
         r.speedup
     );
+    Ok(())
+}
+
+/// `femu diff`: lockstep differential validation of two execution
+/// backends (DESIGN.md §11). With a guest file, diffs that program;
+/// without, runs the standard lockstep suite; `--experiments` re-runs
+/// fig4/fig5/case C once per backend and compares every published
+/// number bit-for-bit. Exits nonzero on any divergence.
+fn cmd_diff(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let fleet = fleet_from_args(args)?;
+    let (a, b) = match args.flags.get("backends") {
+        Some(s) => {
+            let (x, y) = s
+                .split_once(',')
+                .ok_or_else(|| anyhow!("--backends wants `A,B` (e.g. interp,blocks)"))?;
+            (BackendKind::parse(x.trim())?, BackendKind::parse(y.trim())?)
+        }
+        None => (BackendKind::Interp, BackendKind::Blocks),
+    };
+    let mut opts = diff::LockstepOptions::default();
+    if let Some(v) = args.flags.get("checkpoint-cycles") {
+        opts.checkpoint_cycles = v.parse().with_context(|| format!("--checkpoint-cycles `{v}`"))?;
+    }
+    if let Some(v) = args.flags.get("diff-max-cycles") {
+        opts.max_cycles = v.parse().with_context(|| format!("--diff-max-cycles `{v}`"))?;
+    }
+    println!(
+        "== femu diff: {a} vs {b} in lockstep (checkpoint every {} cycles, {} worker(s)) ==",
+        opts.checkpoint_cycles,
+        fleet.workers()
+    );
+    let reports = match args.positional.first() {
+        Some(path) => {
+            let src =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            vec![diff::lockstep_source(&cfg, path, &src, a, b, &opts)?]
+        }
+        None => diff::lockstep_workloads(&fleet, &cfg, a, b, &opts)?,
+    };
+    let mut failed = false;
+    for r in &reports {
+        println!("  [{}] {r}", if r.matched() { "ok" } else { "DIVERGED" });
+        failed |= !r.matched();
+    }
+    if args.switches.iter().any(|s| s == "experiments") {
+        let window_s =
+            args.flags.get("window-s").map(|s| s.parse::<f64>()).transpose()?.unwrap_or(0.05);
+        let scale =
+            args.flags.get("scale").map(|s| s.parse::<usize>()).transpose()?.unwrap_or(40);
+        println!(
+            "== experiment-level diff (fig4 window {window_s} s, case C scale 1/{scale}) =="
+        );
+        for d in diff::diff_experiments(&fleet, &cfg, a, b, window_s, scale)? {
+            if d.matched() {
+                println!("  [ok] {}: {} point(s) bit-identical", d.experiment, d.points);
+            } else {
+                failed = true;
+                println!("  [DIVERGED] {}:", d.experiment);
+                for m in &d.mismatches {
+                    println!("    {m}");
+                }
+            }
+        }
+    }
+    if failed {
+        bail!("backends {a} and {b} diverged");
+    }
+    println!("backends {a} and {b} are bit-identical on everything tested");
     Ok(())
 }
 

@@ -13,6 +13,11 @@ use crate::perfmon::PowerState;
 /// use-after-power-gate bugs visible and deterministic.
 pub const POISON: u32 = 0xDEAD_BEEF;
 
+/// Write-generation granule: one generation counter per 2^9 = 512 bytes.
+/// Coarse enough to keep the per-store overhead to one counter bump,
+/// fine enough that unrelated data stores rarely evict compiled blocks.
+pub const GEN_PAGE_SHIFT: u32 = 9;
+
 /// One SRAM bank.
 #[derive(Clone, Debug)]
 pub struct SramBank {
@@ -22,6 +27,14 @@ pub struct SramBank {
     /// accounting in the energy model: a powered bank burns active power
     /// only while selected).
     access_cycles: u64,
+    /// Per-page write generations ([`GEN_PAGE_SHIFT`]), bumped on every
+    /// mutation path: stores, bulk loads, power-gate poisoning, snapshot
+    /// restore. The block execution backend tags each compiled block with
+    /// the generation it decoded against and re-decodes on mismatch —
+    /// the self-modifying-code invalidation hook (DESIGN.md §11). Not
+    /// serialized: generations are monotonic derived state, and keeping
+    /// them out of snapshots preserves the payload layout.
+    gens: Vec<u64>,
 }
 
 /// Error for accesses that the bank cannot serve in its power state.
@@ -37,7 +50,12 @@ pub enum MemError {
 impl SramBank {
     pub fn new(size: usize) -> Self {
         assert!(size % 4 == 0, "bank size must be word-aligned");
-        Self { data: vec![0; size], state: PowerState::Active, access_cycles: 0 }
+        Self {
+            data: vec![0; size],
+            state: PowerState::Active,
+            access_cycles: 0,
+            gens: vec![0; size.div_ceil(1 << GEN_PAGE_SHIFT)],
+        }
     }
 
     pub fn size(&self) -> usize {
@@ -59,8 +77,30 @@ impl SramBank {
             for chunk in self.data.chunks_exact_mut(4) {
                 chunk.copy_from_slice(&POISON.to_le_bytes());
             }
+            self.bump_all_gens();
         }
         self.state = new;
+    }
+
+    /// Current write generation of the page containing `offset`.
+    #[inline]
+    pub fn page_gen(&self, offset: usize) -> u64 {
+        self.gens[offset >> GEN_PAGE_SHIFT]
+    }
+
+    #[inline]
+    fn bump_gens(&mut self, offset: usize, len: usize) {
+        let first = offset >> GEN_PAGE_SHIFT;
+        let last = (offset + len - 1) >> GEN_PAGE_SHIFT;
+        for p in first..=last {
+            self.gens[p] += 1;
+        }
+    }
+
+    fn bump_all_gens(&mut self) {
+        for g in &mut self.gens {
+            *g += 1;
+        }
     }
 
     #[inline]
@@ -110,6 +150,7 @@ impl SramBank {
     pub fn write8(&mut self, offset: usize, v: u8) -> Result<(), MemError> {
         self.check(offset, 1)?;
         self.access_cycles += 1;
+        self.bump_gens(offset, 1);
         self.data[offset] = v;
         Ok(())
     }
@@ -118,6 +159,7 @@ impl SramBank {
     pub fn write16(&mut self, offset: usize, v: u16) -> Result<(), MemError> {
         self.check(offset, 2)?;
         self.access_cycles += 1;
+        self.bump_gens(offset, 2);
         self.data[offset..offset + 2].copy_from_slice(&v.to_le_bytes());
         Ok(())
     }
@@ -126,6 +168,7 @@ impl SramBank {
     pub fn write32(&mut self, offset: usize, v: u32) -> Result<(), MemError> {
         self.check(offset, 4)?;
         self.access_cycles += 1;
+        self.bump_gens(offset, 4);
         self.data[offset..offset + 4].copy_from_slice(&v.to_le_bytes());
         Ok(())
     }
@@ -136,6 +179,9 @@ impl SramBank {
     pub fn load(&mut self, offset: usize, bytes: &[u8]) -> Result<(), MemError> {
         if offset + bytes.len() > self.data.len() {
             return Err(MemError::OutOfRange);
+        }
+        if !bytes.is_empty() {
+            self.bump_gens(offset, bytes.len());
         }
         self.data[offset..offset + bytes.len()].copy_from_slice(bytes);
         Ok(())
@@ -159,7 +205,10 @@ impl SramBank {
         self.state = PowerState::from_u8(r.u8()?)?;
         self.access_cycles = r.u64()?;
         // banks are small (code + data live here): always fully restored
-        r.filled_bytes_into(&mut self.data, 0, false)
+        r.filled_bytes_into(&mut self.data, 0, false)?;
+        // the whole image may have changed: every compiled block is stale
+        self.bump_all_gens();
+        Ok(())
     }
 }
 
@@ -346,6 +395,29 @@ mod tests {
         b.load(0, &[1, 2, 3, 4]).unwrap();
         b.set_state(PowerState::Active);
         assert_eq!(b.read32(0).unwrap(), 0x0403_0201);
+    }
+
+    #[test]
+    fn write_generations_track_every_mutation_path() {
+        let mut b = SramBank::new(2048);
+        let g0 = b.page_gen(0);
+        b.write32(0, 1).unwrap();
+        assert!(b.page_gen(0) > g0, "store bumps its page");
+        let far = b.page_gen(1024);
+        b.write8(512, 7).unwrap();
+        assert_eq!(b.page_gen(1024), far, "store leaves other pages alone");
+        assert!(b.page_gen(512) > 0);
+        let before = b.page_gen(0);
+        b.load(0, &[1, 2, 3]).unwrap();
+        assert!(b.page_gen(0) > before, "bulk load bumps");
+        let before = b.page_gen(1536);
+        b.set_state(PowerState::PowerGated);
+        assert!(b.page_gen(1536) > before, "power-gate poison bumps every page");
+        // a write16 straddling a page boundary bumps both pages
+        b.set_state(PowerState::Active);
+        let (p0, p1) = (b.page_gen(0), b.page_gen(512));
+        b.write16(511, 0xBEEF).unwrap();
+        assert!(b.page_gen(0) > p0 && b.page_gen(512) > p1);
     }
 
     #[test]

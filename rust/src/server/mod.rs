@@ -47,14 +47,20 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::config::PlatformConfig;
 use crate::coordinator::fleet::WorkerPool;
 use crate::coordinator::{Fleet, Platform};
+use crate::exec::BackendKind;
 use crate::util::Json;
 
 pub use session::{ConfigRegistry, Session, SessionTable, DEFAULT_SESSION};
 
 /// Wire-protocol version, announced in the hello banner. Bumped to 2
 /// when sessions grew `session.fork` + `snapshot.save`/`snapshot.restore`
-/// and the banner itself was introduced.
-pub const PROTO_VERSION: u32 = 2;
+/// and the banner itself was introduced; bumped to 3 when `session.open`
+/// grew the optional `backend` field (execution engine per session,
+/// `"interp"` / `"blocks"`) and error responses grew the additive
+/// machine-readable `error_kind` field ([`protocol::ErrorKind`]). v3 is
+/// backward compatible: v2 requests and substring-matching error
+/// handling behave exactly as before.
+pub const PROTO_VERSION: u32 = 3;
 
 /// The one-line JSON banner every accepted connection receives before
 /// its first request: `{"hello":"femu-control-server","proto":...,
@@ -241,6 +247,19 @@ impl Drop for Server {
     }
 }
 
+/// Build an `{ok:false}` response object. Since proto v3 a failure
+/// classified by the protocol layer additionally carries its
+/// machine-readable kind (`error_kind`); the `error` text is unchanged,
+/// so substring-matching v2 clients keep working.
+fn error_response(e: &anyhow::Error) -> Json {
+    let mut fields =
+        vec![("ok", Json::Bool(false)), ("error", Json::Str(format!("{e:#}")))];
+    if let Some(pe) = e.downcast_ref::<protocol::ProtoError>() {
+        fields.push(("error_kind", Json::from(pe.kind.name())));
+    }
+    Json::obj(fields)
+}
+
 fn serve_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -259,10 +278,7 @@ fn serve_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                 let response = match std::str::from_utf8(&buf) {
                     Ok(line) => match dispatch(line, &shared) {
                         Ok(v) => Json::obj(vec![("ok", Json::Bool(true)), ("result", v)]),
-                        Err(e) => Json::obj(vec![
-                            ("ok", Json::Bool(false)),
-                            ("error", Json::Str(format!("{e:#}"))),
-                        ]),
+                        Err(e) => error_response(&e),
                     },
                     Err(_) => Json::obj(vec![
                         ("ok", Json::Bool(false)),
@@ -311,11 +327,20 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> Result<Json> {
             if shared.stop.load(Ordering::Relaxed) {
                 bail!("server is shutting down");
             }
-            let (cfg, label) = shared.registry.resolve(&req)?;
+            let (mut cfg, label) = shared.registry.resolve(&req)?;
+            // proto v3: the request may pick the execution engine,
+            // overriding whatever the resolved config says
+            if let Some(b) = req.opt("backend") {
+                cfg.soc.backend = BackendKind::parse(b.as_str()?).map_err(|e| {
+                    protocol::proto_err(protocol::ErrorKind::BadParam, format!("{e:#}"))
+                })?;
+            }
+            let backend = cfg.soc.backend;
             let session = shared.sessions.open(Platform::new(cfg), label)?;
             Ok(Json::obj(vec![
                 ("session", Json::from(session.id() as i64)),
                 ("config", Json::from(session.config_label())),
+                ("backend", Json::from(backend.name())),
             ]))
         }
         "session.close" => {
@@ -354,11 +379,14 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> Result<Json> {
             let session = shared.sessions.get(session_field(&req)?)?;
             let sub: Vec<Json> = req.get("requests")?.as_arr()?.to_vec();
             if sub.len() > protocol::MAX_BATCH_REQUESTS {
-                bail!(
-                    "batch of {} exceeds the {}-request cap",
-                    sub.len(),
-                    protocol::MAX_BATCH_REQUESTS
-                );
+                return Err(protocol::proto_err(
+                    protocol::ErrorKind::CapExceeded,
+                    format!(
+                        "batch of {} exceeds the {}-request cap",
+                        sub.len(),
+                        protocol::MAX_BATCH_REQUESTS
+                    ),
+                ));
             }
             let shared2 = shared.clone();
             shared.pool.submit_wait(move || run_batch(&shared2, &session, &sub))?
@@ -418,10 +446,7 @@ fn run_batch(shared: &Arc<Shared>, session: &Arc<Session>, sub: &[Json]) -> Resu
                     completed += 1;
                 }
                 Err(e) => {
-                    results.push(Json::obj(vec![
-                        ("ok", Json::Bool(false)),
-                        ("error", Json::Str(format!("{e:#}"))),
-                    ]));
+                    results.push(error_response(&e));
                     break;
                 }
             }
@@ -700,6 +725,68 @@ mod tests {
             .open_session(Json::obj(vec![("config_name", Json::from("warp-chip"))]))
             .unwrap_err();
         assert!(format!("{err:#}").contains("unknown config"), "{err:#}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn session_open_selects_the_execution_backend() {
+        let (server, mut client) = spawn();
+        let resp = client
+            .call(Json::obj(vec![
+                ("cmd", Json::from("session.open")),
+                ("backend", Json::from("blocks")),
+            ]))
+            .unwrap();
+        assert_eq!(resp.str_field("backend").unwrap(), "blocks");
+        let id = resp.get("session").unwrap().as_i64().unwrap() as u64;
+        // the blocks session runs guests like any other
+        client
+            .call_on(
+                id,
+                Json::obj(vec![
+                    ("cmd", Json::from("load_asm")),
+                    ("source", Json::from("_start: li a0, 5\nebreak")),
+                ]),
+            )
+            .unwrap();
+        let run = client.call_on(id, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        assert_eq!(run.str_field("exit").unwrap(), "halted");
+        // omitting the field keeps the config's backend (interp default)
+        let resp = client.call(Json::obj(vec![("cmd", Json::from("session.open"))])).unwrap();
+        assert_eq!(resp.str_field("backend").unwrap(), "interp");
+        // a bogus backend is a clean error
+        let err = client
+            .open_session(Json::obj(vec![("backend", Json::from("jit"))]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown backend"), "{err:#}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn error_responses_carry_a_machine_readable_kind() {
+        let (server, _client) = spawn();
+        // raw wire check: Client::call folds errors into anyhow, so read
+        // the response object directly off a fresh socket
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // hello banner
+        let mut ask = |req: &str| {
+            writeln!(writer, "{req}").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(line.trim()).unwrap()
+        };
+        let resp = ask("{\"cmd\":\"warp\"}");
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(resp.str_field("error_kind").unwrap(), "unknown_command");
+        let resp = ask("{\"cmd\":\"read_mem\",\"addr\":-1,\"n\":1}");
+        assert_eq!(resp.str_field("error_kind").unwrap(), "out_of_range");
+        // a non-protocol failure carries the error text but no kind
+        let resp = ask("{\"cmd\":\"load_asm\",\"source\":\"bogus$\"}");
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        assert!(resp.opt("error_kind").is_none());
         server.shutdown();
     }
 

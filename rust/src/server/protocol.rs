@@ -4,12 +4,18 @@
 //! One JSON object per line, request/response. Every numeric field is
 //! range-checked *before* it is cast — a negative `max_cycles` or an
 //! `addr` outside the 32-bit bus is a protocol error carried back to the
-//! client, never a silent wrap or a debug-build panic. Command execution
-//! here is pure of any transport or session concern: it takes `&mut
-//! Platform` plus the parsed request and returns the `result` payload
-//! (`server/mod.rs` owns dispatch, sessions, and the worker pool).
+//! client, never a silent wrap or a debug-build panic. Since proto v3
+//! the raw `(cmd, request)` pair is parsed into a typed command first
+//! ([`PlatformCmd`] / [`ExperimentCmd`]), so every field is validated
+//! before the platform is touched and the command set is an exhaustive
+//! `match` instead of a string fall-through; protocol failures carry a
+//! machine-readable [`ErrorKind`] alongside the unchanged v2 message
+//! text. Command execution here is pure of any transport or session
+//! concern: it takes `&mut Platform` plus the parsed request and returns
+//! the `result` payload (`server/mod.rs` owns dispatch, sessions, and
+//! the worker pool).
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::Result;
 
 use crate::config::PlatformConfig;
 use crate::coordinator::{experiments, AppExit, Fleet, Platform};
@@ -40,13 +46,81 @@ pub const RUN_SLICE_CYCLES: u64 = 2_000_000;
 pub const DEFAULT_RUN_BUDGET: u64 = 1 << 33;
 
 // ---------------------------------------------------------------------
+// typed protocol errors
+// ---------------------------------------------------------------------
+
+/// Machine-readable classification of a protocol-level failure, carried
+/// on the wire as the additive `error_kind` response field (proto v3).
+/// The human-readable `error` text is unchanged from v2, so clients
+/// that match on substrings keep working.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// A numeric field is outside its legal range: a negative count or
+    /// budget, an address past the 32-bit bus, a value that does not
+    /// fit a memory word, an experiment parameter off its grid.
+    OutOfRange,
+    /// The request exceeds a server resource cap (transfer words,
+    /// batch length, snapshot hex bytes).
+    CapExceeded,
+    /// `cmd` names no known command.
+    UnknownCommand,
+    /// A field is well-formed but names nothing (an unknown energy
+    /// model, an unknown execution backend).
+    BadParam,
+}
+
+impl ErrorKind {
+    /// Wire name, as carried in the `error_kind` response field.
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorKind::OutOfRange => "out_of_range",
+            ErrorKind::CapExceeded => "cap_exceeded",
+            ErrorKind::UnknownCommand => "unknown_command",
+            ErrorKind::BadParam => "bad_param",
+        }
+    }
+}
+
+/// A typed protocol error: an [`ErrorKind`] plus the exact message text
+/// proto v2 used. `Display` prints only the message, so error strings
+/// on the wire are byte-identical to before; the kind survives anyhow
+/// `context` layers and is recovered by downcast when the server builds
+/// the response object.
+#[derive(Debug)]
+pub struct ProtoError {
+    pub kind: ErrorKind,
+    msg: String,
+}
+
+impl ProtoError {
+    pub fn new(kind: ErrorKind, msg: impl Into<String>) -> Self {
+        Self { kind, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Build an `anyhow::Error` carrying a [`ProtoError`].
+pub fn proto_err(kind: ErrorKind, msg: String) -> anyhow::Error {
+    anyhow::Error::new(ProtoError::new(kind, msg))
+}
+
+// ---------------------------------------------------------------------
 // field validation
 // ---------------------------------------------------------------------
 
 /// A required 32-bit bus address / value field.
 pub fn u32_field(req: &Json, key: &str) -> Result<u32> {
     let v = req.get(key)?.as_i64()?;
-    u32::try_from(v).map_err(|_| anyhow!("`{key}` {v} out of range (want 0..=4294967295)"))
+    u32::try_from(v).map_err(|_| {
+        proto_err(ErrorKind::OutOfRange, format!("`{key}` {v} out of range (want 0..=4294967295)"))
+    })
 }
 
 /// An optional u32 field with a default.
@@ -55,8 +129,12 @@ pub fn opt_u32_field(req: &Json, key: &str, default: u32) -> Result<u32> {
         None => Ok(default),
         Some(v) => {
             let v = v.as_i64()?;
-            u32::try_from(v)
-                .map_err(|_| anyhow!("`{key}` {v} out of range (want 0..=4294967295)"))
+            u32::try_from(v).map_err(|_| {
+                proto_err(
+                    ErrorKind::OutOfRange,
+                    format!("`{key}` {v} out of range (want 0..=4294967295)"),
+                )
+            })
         }
     }
 }
@@ -65,11 +143,17 @@ pub fn opt_u32_field(req: &Json, key: &str, default: u32) -> Result<u32> {
 pub fn count_field(req: &Json, key: &str) -> Result<usize> {
     let v = req.get(key)?.as_i64()?;
     if v < 0 {
-        bail!("`{key}` must be non-negative, got {v}");
+        return Err(proto_err(
+            ErrorKind::OutOfRange,
+            format!("`{key}` must be non-negative, got {v}"),
+        ));
     }
     let n = v as usize;
     if n > MAX_TRANSFER_WORDS {
-        bail!("`{key}` {n} exceeds the {MAX_TRANSFER_WORDS}-word transfer cap");
+        return Err(proto_err(
+            ErrorKind::CapExceeded,
+            format!("`{key}` {n} exceeds the {MAX_TRANSFER_WORDS}-word transfer cap"),
+        ));
     }
     Ok(n)
 }
@@ -82,7 +166,10 @@ pub fn budget_field(req: &Json) -> Result<u64> {
         Some(v) => {
             let b = v.as_i64()?;
             if b < 0 {
-                bail!("`max_cycles` must be non-negative, got {b}");
+                return Err(proto_err(
+                    ErrorKind::OutOfRange,
+                    format!("`max_cycles` must be non-negative, got {b}"),
+                ));
             }
             Ok(b as u64)
         }
@@ -103,7 +190,10 @@ pub fn seed_field(req: &Json, default: u64) -> Result<u64> {
 pub fn word_value(v: &Json) -> Result<i32> {
     let v = v.as_i64()?;
     if !(i32::MIN as i64..=u32::MAX as i64).contains(&v) {
-        bail!("memory value {v} does not fit in 32 bits");
+        return Err(proto_err(
+            ErrorKind::OutOfRange,
+            format!("memory value {v} does not fit in 32 bits"),
+        ));
     }
     Ok(v as i32) // identical low-32 bit pattern for both accepted ranges
 }
@@ -113,158 +203,252 @@ pub fn word_value(v: &Json) -> Result<i32> {
 pub fn check_span(addr: u32, words: usize) -> Result<()> {
     let end = addr as u64 + words as u64 * 4;
     if end > 1 << 32 {
-        bail!("address range {addr:#x}+{words} words overflows the 32-bit bus");
+        return Err(proto_err(
+            ErrorKind::OutOfRange,
+            format!("address range {addr:#x}+{words} words overflows the 32-bit bus"),
+        ));
     }
     Ok(())
 }
 
 // ---------------------------------------------------------------------
-// per-platform command execution
+// typed per-platform commands
 // ---------------------------------------------------------------------
 
-/// Execute one platform-bound command against `p`. `cancelled` is polled
-/// between `run` slices so session close / server shutdown interrupt
-/// long runs at a bounded latency.
+/// One platform-bound command, parsed and range-checked. Every wire
+/// command maps to exactly one variant, so the command set is closed
+/// over by two exhaustive matches (parse + execute) instead of one long
+/// string fall-through, and every field violation surfaces in
+/// [`PlatformCmd::parse`] before the platform is touched.
+#[derive(Clone, Debug)]
+pub enum PlatformCmd {
+    Ping,
+    LoadAsm { source: String },
+    Run { budget: u64 },
+    Reset { entry: u32 },
+    Regs,
+    ReadMem { addr: u32, n: usize },
+    WriteMem { addr: u32, values: Vec<i32> },
+    Disasm { addr: u32, n: usize },
+    Step,
+    AddBreakpoint { addr: u32 },
+    RemoveBreakpoint { addr: u32 },
+    Uart,
+    SnapshotSave,
+    SnapshotRestore { snapshot: Box<PlatformSnapshot> },
+    Perf,
+    Energy { model: String },
+}
+
+impl PlatformCmd {
+    /// Parse and validate one request into a typed command. All field
+    /// range and cap violations are reported here, as [`ProtoError`]s.
+    pub fn parse(cmd: &str, req: &Json) -> Result<Self> {
+        Ok(match cmd {
+            "ping" => PlatformCmd::Ping,
+            "load_asm" => PlatformCmd::LoadAsm { source: req.str_field("source")?.to_string() },
+            "run" => PlatformCmd::Run { budget: budget_field(req)? },
+            "reset" => PlatformCmd::Reset { entry: opt_u32_field(req, "entry", 0)? },
+            "regs" => PlatformCmd::Regs,
+            "read_mem" => {
+                let addr = u32_field(req, "addr")?;
+                let n = count_field(req, "n")?;
+                check_span(addr, n)?;
+                PlatformCmd::ReadMem { addr, n }
+            }
+            "write_mem" => {
+                let addr = u32_field(req, "addr")?;
+                let values = req.get("values")?.as_arr()?;
+                if values.len() > MAX_TRANSFER_WORDS {
+                    return Err(proto_err(
+                        ErrorKind::CapExceeded,
+                        format!(
+                            "`values` length {} exceeds the {MAX_TRANSFER_WORDS}-word transfer cap",
+                            values.len()
+                        ),
+                    ));
+                }
+                check_span(addr, values.len())?;
+                let values: Vec<i32> = values.iter().map(word_value).collect::<Result<_>>()?;
+                PlatformCmd::WriteMem { addr, values }
+            }
+            "disasm" => {
+                let addr = u32_field(req, "addr")?;
+                let n = count_field(req, "n")?;
+                check_span(addr, n)?;
+                PlatformCmd::Disasm { addr, n }
+            }
+            "step" => PlatformCmd::Step,
+            "add_breakpoint" => PlatformCmd::AddBreakpoint { addr: u32_field(req, "addr")? },
+            "remove_breakpoint" => {
+                PlatformCmd::RemoveBreakpoint { addr: u32_field(req, "addr")? }
+            }
+            "uart" => PlatformCmd::Uart,
+            "snapshot.save" => PlatformCmd::SnapshotSave,
+            "snapshot.restore" => {
+                let hex = req.str_field("snapshot")?;
+                if hex.len() > MAX_SNAPSHOT_HEX {
+                    return Err(proto_err(
+                        ErrorKind::CapExceeded,
+                        format!(
+                            "`snapshot` hex of {} bytes exceeds the {MAX_SNAPSHOT_HEX}-byte cap",
+                            hex.len()
+                        ),
+                    ));
+                }
+                PlatformCmd::SnapshotRestore { snapshot: Box::new(PlatformSnapshot::from_hex(hex)?) }
+            }
+            "perf" => PlatformCmd::Perf,
+            "energy" => {
+                let model =
+                    req.opt("model").map(|v| v.as_str()).transpose()?.unwrap_or("femu").to_string();
+                if EnergyModel::by_name(&model).is_none() {
+                    return Err(proto_err(
+                        ErrorKind::BadParam,
+                        format!("unknown energy model `{model}`"),
+                    ));
+                }
+                PlatformCmd::Energy { model }
+            }
+            other => {
+                return Err(proto_err(
+                    ErrorKind::UnknownCommand,
+                    format!("unknown command `{other}`"),
+                ))
+            }
+        })
+    }
+
+    /// Execute against `p`. `cancelled` is polled between `run` slices
+    /// so session close / server shutdown interrupt long runs at a
+    /// bounded latency.
+    pub fn execute(self, p: &mut Platform, cancelled: &dyn Fn() -> bool) -> Result<Json> {
+        match self {
+            PlatformCmd::Ping => Ok(Json::from("pong")),
+            PlatformCmd::LoadAsm { source } => {
+                let prog = p.dbg.load_source(&source)?;
+                let symbols = Json::Obj(
+                    prog.symbols
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                        .collect(),
+                );
+                Ok(Json::obj(vec![
+                    ("entry", Json::from(prog.entry as i64)),
+                    ("text_words", Json::from(prog.text.len() as i64)),
+                    ("symbols", symbols),
+                ]))
+            }
+            PlatformCmd::Run { budget } => run_sliced(p, budget, cancelled),
+            PlatformCmd::Reset { entry } => {
+                p.dbg.reset(entry);
+                Ok(Json::Null)
+            }
+            PlatformCmd::Regs => Ok(Json::Arr(
+                p.dbg.soc.cpu.regs.iter().map(|&r| Json::Num(r as i32 as f64)).collect(),
+            )),
+            PlatformCmd::ReadMem { addr, n } => {
+                let vals = p.dbg.read_i32_slice(addr, n)?;
+                Ok(Json::arr_i32(&vals))
+            }
+            PlatformCmd::WriteMem { addr, values } => {
+                p.dbg.write_i32_slice(addr, &values)?;
+                Ok(Json::Null)
+            }
+            PlatformCmd::Disasm { addr, n } => {
+                let words: Vec<u32> = (0..n)
+                    .map(|i| {
+                        let a = addr.checked_add((i as u32) * 4).ok_or_else(|| {
+                            proto_err(
+                                ErrorKind::OutOfRange,
+                                format!("disasm address overflows at word {i}"),
+                            )
+                        })?;
+                        p.dbg.read32(a)
+                    })
+                    .collect::<Result<_>>()?;
+                Ok(Json::Str(femu::isa::listing(&words, addr)))
+            }
+            PlatformCmd::Step => {
+                let stop = p.dbg.step();
+                Ok(Json::obj(vec![
+                    ("stop", Json::Str(format!("{stop:?}"))),
+                    ("pc", Json::from(p.dbg.pc() as i64)),
+                ]))
+            }
+            PlatformCmd::AddBreakpoint { addr } => {
+                p.dbg.add_breakpoint(addr);
+                Ok(Json::Null)
+            }
+            PlatformCmd::RemoveBreakpoint { addr } => {
+                p.dbg.remove_breakpoint(addr);
+                Ok(Json::Null)
+            }
+            PlatformCmd::Uart => {
+                let bytes = p.dbg.uart();
+                Ok(Json::Str(String::from_utf8_lossy(&bytes).into_owned()))
+            }
+            PlatformCmd::SnapshotSave => {
+                let snap = p.snapshot();
+                Ok(Json::obj(vec![
+                    ("version", Json::from(crate::snapshot::VERSION as i64)),
+                    ("bytes", Json::from(snap.size_bytes() as i64)),
+                    ("cycles", Json::from(p.dbg.soc.now as i64)),
+                    ("snapshot", Json::Str(snap.to_hex())),
+                ]))
+            }
+            PlatformCmd::SnapshotRestore { snapshot } => {
+                // transactional: a client-supplied image that fails
+                // mid-decode must not leave the session half-restored
+                p.restore_transactional(&snapshot)?;
+                Ok(Json::obj(vec![("cycles", Json::from(p.dbg.soc.now as i64))]))
+            }
+            PlatformCmd::Perf => {
+                let snap = p.perf_snapshot();
+                let mut domains = std::collections::BTreeMap::new();
+                for (d, c) in snap.domains() {
+                    domains.insert(
+                        d.to_string(),
+                        Json::obj(vec![
+                            ("active", Json::from(c.counts[0] as i64)),
+                            ("clock_gated", Json::from(c.counts[1] as i64)),
+                            ("power_gated", Json::from(c.counts[2] as i64)),
+                            ("retention", Json::from(c.counts[3] as i64)),
+                        ]),
+                    );
+                }
+                Ok(Json::obj(vec![
+                    ("cycles", Json::from(snap.cycles as i64)),
+                    ("domains", Json::Obj(domains)),
+                ]))
+            }
+            PlatformCmd::Energy { model } => {
+                let m = EnergyModel::by_name(&model).ok_or_else(|| {
+                    proto_err(ErrorKind::BadParam, format!("unknown energy model `{model}`"))
+                })?;
+                let snap = p.perf_snapshot();
+                let r = m.estimate(&snap);
+                Ok(Json::obj(vec![
+                    ("model", Json::from(model.as_str())),
+                    ("total_mj", Json::Num(r.total_mj)),
+                    ("active_mj", Json::Num(r.active_mj)),
+                    ("sleep_mj", Json::Num(r.sleep_mj)),
+                    ("seconds", Json::Num(r.seconds())),
+                ]))
+            }
+        }
+    }
+}
+
+/// Parse + execute one platform-bound command against `p` (the proto v2
+/// entry point, kept for dispatch and the batch runner).
 pub fn execute_platform_cmd(
     p: &mut Platform,
     cmd: &str,
     req: &Json,
     cancelled: &dyn Fn() -> bool,
 ) -> Result<Json> {
-    match cmd {
-        "ping" => Ok(Json::from("pong")),
-        "load_asm" => {
-            let src = req.str_field("source")?;
-            let prog = p.dbg.load_source(src)?;
-            let symbols = Json::Obj(
-                prog.symbols
-                    .iter()
-                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
-                    .collect(),
-            );
-            Ok(Json::obj(vec![
-                ("entry", Json::from(prog.entry as i64)),
-                ("text_words", Json::from(prog.text.len() as i64)),
-                ("symbols", symbols),
-            ]))
-        }
-        "run" => run_sliced(p, budget_field(req)?, cancelled),
-        "reset" => {
-            p.dbg.reset(opt_u32_field(req, "entry", 0)?);
-            Ok(Json::Null)
-        }
-        "regs" => Ok(Json::Arr(
-            p.dbg.soc.cpu.regs.iter().map(|&r| Json::Num(r as i32 as f64)).collect(),
-        )),
-        "read_mem" => {
-            let addr = u32_field(req, "addr")?;
-            let n = count_field(req, "n")?;
-            check_span(addr, n)?;
-            let vals = p.dbg.read_i32_slice(addr, n)?;
-            Ok(Json::arr_i32(&vals))
-        }
-        "write_mem" => {
-            let addr = u32_field(req, "addr")?;
-            let values = req.get("values")?.as_arr()?;
-            if values.len() > MAX_TRANSFER_WORDS {
-                bail!(
-                    "`values` length {} exceeds the {MAX_TRANSFER_WORDS}-word transfer cap",
-                    values.len()
-                );
-            }
-            check_span(addr, values.len())?;
-            let vals: Vec<i32> = values.iter().map(word_value).collect::<Result<_>>()?;
-            p.dbg.write_i32_slice(addr, &vals)?;
-            Ok(Json::Null)
-        }
-        "disasm" => {
-            let addr = u32_field(req, "addr")?;
-            let n = count_field(req, "n")?;
-            check_span(addr, n)?;
-            let words: Vec<u32> = (0..n)
-                .map(|i| {
-                    let a = addr
-                        .checked_add((i as u32) * 4)
-                        .ok_or_else(|| anyhow!("disasm address overflows at word {i}"))?;
-                    p.dbg.read32(a)
-                })
-                .collect::<Result<_>>()?;
-            Ok(Json::Str(femu::isa::listing(&words, addr)))
-        }
-        "step" => {
-            let stop = p.dbg.step();
-            Ok(Json::obj(vec![
-                ("stop", Json::Str(format!("{stop:?}"))),
-                ("pc", Json::from(p.dbg.pc() as i64)),
-            ]))
-        }
-        "add_breakpoint" => {
-            p.dbg.add_breakpoint(u32_field(req, "addr")?);
-            Ok(Json::Null)
-        }
-        "remove_breakpoint" => {
-            p.dbg.remove_breakpoint(u32_field(req, "addr")?);
-            Ok(Json::Null)
-        }
-        "uart" => {
-            let bytes = p.dbg.uart();
-            Ok(Json::Str(String::from_utf8_lossy(&bytes).into_owned()))
-        }
-        "snapshot.save" => {
-            let snap = p.snapshot();
-            Ok(Json::obj(vec![
-                ("version", Json::from(crate::snapshot::VERSION as i64)),
-                ("bytes", Json::from(snap.size_bytes() as i64)),
-                ("cycles", Json::from(p.dbg.soc.now as i64)),
-                ("snapshot", Json::Str(snap.to_hex())),
-            ]))
-        }
-        "snapshot.restore" => {
-            let hex = req.str_field("snapshot")?;
-            if hex.len() > MAX_SNAPSHOT_HEX {
-                bail!("`snapshot` hex of {} bytes exceeds the {MAX_SNAPSHOT_HEX}-byte cap", hex.len());
-            }
-            let snap = PlatformSnapshot::from_hex(hex)?;
-            // transactional: a client-supplied image that fails mid-decode
-            // must not leave the session half-restored
-            p.restore_transactional(&snap)?;
-            Ok(Json::obj(vec![("cycles", Json::from(p.dbg.soc.now as i64))]))
-        }
-        "perf" => {
-            let snap = p.perf_snapshot();
-            let mut domains = std::collections::BTreeMap::new();
-            for (d, c) in snap.domains() {
-                domains.insert(
-                    d.to_string(),
-                    Json::obj(vec![
-                        ("active", Json::from(c.counts[0] as i64)),
-                        ("clock_gated", Json::from(c.counts[1] as i64)),
-                        ("power_gated", Json::from(c.counts[2] as i64)),
-                        ("retention", Json::from(c.counts[3] as i64)),
-                    ]),
-                );
-            }
-            Ok(Json::obj(vec![
-                ("cycles", Json::from(snap.cycles as i64)),
-                ("domains", Json::Obj(domains)),
-            ]))
-        }
-        "energy" => {
-            let model_name = req.opt("model").map(|v| v.as_str()).transpose()?.unwrap_or("femu");
-            let model = EnergyModel::by_name(model_name)
-                .ok_or_else(|| anyhow!("unknown energy model `{model_name}`"))?;
-            let snap = p.perf_snapshot();
-            let r = model.estimate(&snap);
-            Ok(Json::obj(vec![
-                ("model", Json::from(model_name)),
-                ("total_mj", Json::Num(r.total_mj)),
-                ("active_mj", Json::Num(r.active_mj)),
-                ("sleep_mj", Json::Num(r.sleep_mj)),
-                ("seconds", Json::Num(r.seconds())),
-            ]))
-        }
-        other => Err(anyhow!("unknown command `{other}`")),
-    }
+    PlatformCmd::parse(cmd, req)?.execute(p, cancelled)
 }
 
 /// Execute a guest run in [`RUN_SLICE_CYCLES`] slices, polling
@@ -295,7 +479,7 @@ fn run_sliced(p: &mut Platform, budget: u64, cancelled: &dyn Fn() -> bool) -> Re
 }
 
 // ---------------------------------------------------------------------
-// server-side experiment commands
+// typed server-side experiment commands
 // ---------------------------------------------------------------------
 
 /// Does `cmd` name a server-side experiment driver?
@@ -303,11 +487,133 @@ pub fn is_experiment_cmd(cmd: &str) -> bool {
     matches!(cmd, "sweep_acquisition" | "kernels" | "flash_study")
 }
 
-/// Run one §V experiment driver through the shared fleet, against a
-/// resolved platform config. Remote clients get the same parallel sweep
-/// machinery as the CLI subcommands. `cancelled` is polled before every
-/// sweep point, so server shutdown aborts an in-flight experiment with
-/// at most one point left to finish.
+/// One §V experiment request, parsed and range-checked.
+#[derive(Clone, Copy, Debug)]
+pub enum ExperimentCmd {
+    SweepAcquisition { window_s: f64, seed: u64 },
+    Kernels { seed: u64 },
+    FlashStudy { scale: usize },
+}
+
+impl ExperimentCmd {
+    /// Parse and validate one experiment request.
+    pub fn parse(cmd: &str, req: &Json) -> Result<Self> {
+        Ok(match cmd {
+            "sweep_acquisition" => {
+                let window_s = match req.opt("window_s") {
+                    None => 5.0,
+                    Some(v) => v.as_f64()?,
+                };
+                if !(window_s > 0.0 && window_s <= 60.0) {
+                    return Err(proto_err(
+                        ErrorKind::OutOfRange,
+                        format!("`window_s` must be in (0, 60], got {window_s}"),
+                    ));
+                }
+                ExperimentCmd::SweepAcquisition { window_s, seed: seed_field(req, 0xF164)? }
+            }
+            "kernels" => ExperimentCmd::Kernels { seed: seed_field(req, 0xF15)? },
+            "flash_study" => {
+                let scale = match req.opt("scale") {
+                    None => 1,
+                    Some(v) => {
+                        let s = v.as_i64()?;
+                        if !(1..=100_000).contains(&s) {
+                            return Err(proto_err(
+                                ErrorKind::OutOfRange,
+                                format!("`scale` must be in 1..=100000, got {s}"),
+                            ));
+                        }
+                        s as usize
+                    }
+                };
+                ExperimentCmd::FlashStudy { scale }
+            }
+            other => {
+                return Err(proto_err(
+                    ErrorKind::UnknownCommand,
+                    format!("unknown experiment command `{other}`"),
+                ))
+            }
+        })
+    }
+
+    /// Run through the shared fleet against a resolved platform config.
+    /// `cancelled` is polled before every sweep point, so server
+    /// shutdown aborts an in-flight experiment with at most one point
+    /// left to finish.
+    pub fn execute(
+        self,
+        fleet: &Fleet,
+        cfg: &PlatformConfig,
+        cancelled: &(dyn Fn() -> bool + Sync),
+    ) -> Result<Json> {
+        match self {
+            ExperimentCmd::SweepAcquisition { window_s, seed } => {
+                let points =
+                    experiments::fig4_sweep_with_abort(fleet, cfg, window_s, seed, cancelled)?;
+                Ok(Json::obj(vec![(
+                    "points",
+                    Json::Arr(
+                        points
+                            .iter()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("sample_rate_hz", Json::Num(p.sample_rate_hz)),
+                                    ("model", Json::from(p.model.as_str())),
+                                    ("total_s", Json::Num(p.total_s)),
+                                    ("active_s", Json::Num(p.active_s)),
+                                    ("sleep_s", Json::Num(p.sleep_s)),
+                                    ("active_mj", Json::Num(p.active_mj)),
+                                    ("sleep_mj", Json::Num(p.sleep_mj)),
+                                    ("total_mj", Json::Num(p.total_mj)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                )]))
+            }
+            ExperimentCmd::Kernels { seed } => {
+                let points = experiments::fig5_all_with_abort(fleet, cfg, seed, cancelled)?;
+                Ok(Json::obj(vec![(
+                    "points",
+                    Json::Arr(
+                        points
+                            .iter()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("kernel", Json::from(p.kernel)),
+                                    ("implementation", Json::from(p.implementation)),
+                                    ("model", Json::from(p.model.as_str())),
+                                    ("cycles", Json::from(p.cycles as i64)),
+                                    ("time_s", Json::Num(p.time_s)),
+                                    ("energy_mj", Json::Num(p.energy_mj)),
+                                    ("validated", Json::from(p.validated)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                )]))
+            }
+            ExperimentCmd::FlashStudy { scale } => {
+                let r = experiments::case_c_with_abort(fleet, cfg, scale, cancelled)?;
+                Ok(Json::obj(vec![
+                    ("windows", Json::from(r.windows as i64)),
+                    ("samples_per_window", Json::from(r.samples_per_window as i64)),
+                    ("virt_window_s", Json::Num(r.virt_window_s)),
+                    ("phys_window_s", Json::Num(r.phys_window_s)),
+                    ("virt_total_s", Json::Num(r.virt_total_s)),
+                    ("phys_total_s", Json::Num(r.phys_total_s)),
+                    ("speedup", Json::Num(r.speedup)),
+                ]))
+            }
+        }
+    }
+}
+
+/// Parse + run one §V experiment driver (the proto v2 entry point).
+/// Remote clients get the same parallel sweep machinery as the CLI
+/// subcommands.
 pub fn execute_experiment_cmd(
     fleet: &Fleet,
     cfg: &PlatformConfig,
@@ -315,85 +621,7 @@ pub fn execute_experiment_cmd(
     req: &Json,
     cancelled: &(dyn Fn() -> bool + Sync),
 ) -> Result<Json> {
-    match cmd {
-        "sweep_acquisition" => {
-            let window_s = match req.opt("window_s") {
-                None => 5.0,
-                Some(v) => v.as_f64()?,
-            };
-            if !(window_s > 0.0 && window_s <= 60.0) {
-                bail!("`window_s` must be in (0, 60], got {window_s}");
-            }
-            let seed = seed_field(req, 0xF164)?;
-            let points = experiments::fig4_sweep_with_abort(fleet, cfg, window_s, seed, cancelled)?;
-            Ok(Json::obj(vec![(
-                "points",
-                Json::Arr(
-                    points
-                        .iter()
-                        .map(|p| {
-                            Json::obj(vec![
-                                ("sample_rate_hz", Json::Num(p.sample_rate_hz)),
-                                ("model", Json::from(p.model.as_str())),
-                                ("total_s", Json::Num(p.total_s)),
-                                ("active_s", Json::Num(p.active_s)),
-                                ("sleep_s", Json::Num(p.sleep_s)),
-                                ("active_mj", Json::Num(p.active_mj)),
-                                ("sleep_mj", Json::Num(p.sleep_mj)),
-                                ("total_mj", Json::Num(p.total_mj)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            )]))
-        }
-        "kernels" => {
-            let seed = seed_field(req, 0xF15)?;
-            let points = experiments::fig5_all_with_abort(fleet, cfg, seed, cancelled)?;
-            Ok(Json::obj(vec![(
-                "points",
-                Json::Arr(
-                    points
-                        .iter()
-                        .map(|p| {
-                            Json::obj(vec![
-                                ("kernel", Json::from(p.kernel)),
-                                ("implementation", Json::from(p.implementation)),
-                                ("model", Json::from(p.model.as_str())),
-                                ("cycles", Json::from(p.cycles as i64)),
-                                ("time_s", Json::Num(p.time_s)),
-                                ("energy_mj", Json::Num(p.energy_mj)),
-                                ("validated", Json::from(p.validated)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            )]))
-        }
-        "flash_study" => {
-            let scale = match req.opt("scale") {
-                None => 1,
-                Some(v) => {
-                    let s = v.as_i64()?;
-                    if !(1..=100_000).contains(&s) {
-                        bail!("`scale` must be in 1..=100000, got {s}");
-                    }
-                    s as usize
-                }
-            };
-            let r = experiments::case_c_with_abort(fleet, cfg, scale, cancelled)?;
-            Ok(Json::obj(vec![
-                ("windows", Json::from(r.windows as i64)),
-                ("samples_per_window", Json::from(r.samples_per_window as i64)),
-                ("virt_window_s", Json::Num(r.virt_window_s)),
-                ("phys_window_s", Json::Num(r.phys_window_s)),
-                ("virt_total_s", Json::Num(r.virt_total_s)),
-                ("phys_total_s", Json::Num(r.phys_total_s)),
-                ("speedup", Json::Num(r.speedup)),
-            ]))
-        }
-        other => Err(anyhow!("unknown experiment command `{other}`")),
-    }
+    ExperimentCmd::parse(cmd, req)?.execute(fleet, cfg, cancelled)
 }
 
 #[cfg(test)]
@@ -476,6 +704,81 @@ mod tests {
                     || msg.contains("overflows"),
                 "{msg}"
             );
+            // every protocol violation also carries a typed kind
+            let kind = err.downcast_ref::<ProtoError>().expect("typed protocol error").kind;
+            assert!(
+                matches!(kind, ErrorKind::OutOfRange | ErrorKind::CapExceeded),
+                "{kind:?}: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn error_kinds_classify_protocol_failures() {
+        let mut p = platform();
+        let kind_of = |req: Json, p: &mut Platform| {
+            exec(p, req).unwrap_err().downcast_ref::<ProtoError>().map(|e| e.kind)
+        };
+        assert_eq!(
+            kind_of(Json::obj(vec![("cmd", Json::from("warp"))]), &mut p),
+            Some(ErrorKind::UnknownCommand)
+        );
+        assert_eq!(
+            kind_of(
+                Json::obj(vec![("cmd", Json::from("energy")), ("model", Json::from("coal"))]),
+                &mut p
+            ),
+            Some(ErrorKind::BadParam)
+        );
+        assert_eq!(
+            kind_of(
+                Json::obj(vec![
+                    ("cmd", Json::from("run")),
+                    ("max_cycles", Json::from(-1i64)),
+                ]),
+                &mut p
+            ),
+            Some(ErrorKind::OutOfRange)
+        );
+        // a *platform* failure (bad asm) is not a protocol error: no kind
+        let err = exec(
+            &mut p,
+            Json::obj(vec![("cmd", Json::from("load_asm")), ("source", Json::from("bogus$"))]),
+        )
+        .unwrap_err();
+        assert!(err.downcast_ref::<ProtoError>().is_none());
+        // Display of the typed error is the bare v2 message text
+        assert_eq!(
+            ProtoError::new(ErrorKind::UnknownCommand, "unknown command `x`").to_string(),
+            "unknown command `x`"
+        );
+        assert_eq!(ErrorKind::UnknownCommand.name(), "unknown_command");
+    }
+
+    #[test]
+    fn parse_validates_before_execution_touches_the_platform() {
+        // a request mixing one good field with one bad one must fail in
+        // parse and leave memory untouched
+        let p = platform();
+        let err = PlatformCmd::parse(
+            "write_mem",
+            &Json::obj(vec![
+                ("addr", Json::from(0i64)),
+                ("values", Json::Arr(vec![Json::from(1i64), Json::from(1i64 << 40)])),
+            ]),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("32 bits"), "{err:#}");
+        assert_eq!(p.dbg.read_i32_slice(0, 1).unwrap(), vec![0]);
+        // and a fully-valid request parses to the typed form
+        match PlatformCmd::parse(
+            "read_mem",
+            &Json::obj(vec![("addr", Json::from(64i64)), ("n", Json::from(2i64))]),
+        )
+        .unwrap()
+        {
+            PlatformCmd::ReadMem { addr: 64, n: 2 } => {}
+            other => panic!("bad parse: {other:?}"),
         }
     }
 
@@ -652,15 +955,16 @@ mod tests {
         .unwrap();
         let points = r.get("points").unwrap().as_arr().unwrap();
         assert_eq!(points.len(), 2 * experiments::FIG4_FREQS_HZ.len());
-        // bad params are protocol errors
-        assert!(execute_experiment_cmd(
+        // bad params are protocol errors, with a typed kind
+        let err = execute_experiment_cmd(
             &fleet,
             &cfg,
             "sweep_acquisition",
             &Json::obj(vec![("window_s", Json::Num(-1.0))]),
             &live,
         )
-        .is_err());
+        .unwrap_err();
+        assert_eq!(err.downcast_ref::<ProtoError>().map(|e| e.kind), Some(ErrorKind::OutOfRange));
         assert!(execute_experiment_cmd(
             &fleet,
             &cfg,

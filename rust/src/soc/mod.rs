@@ -23,6 +23,7 @@ use crate::bus::{Bus, BRIDGE_BASE, SRAM_BASE};
 use crate::cgra::device::{kernel_id, LaunchRequest};
 use crate::cgra::{kernels, CgraCore, CgraMem, CgraRun};
 use crate::cpu::{Cpu, CpuState, Halt};
+use crate::exec::{BackendKind, ExecBackend, ExecStats};
 use crate::isa::Program;
 use crate::mem::SramBank;
 use crate::periph::gpio::GpioEvent;
@@ -56,6 +57,10 @@ pub struct SocConfig {
     pub flash_timing: FlashTiming,
     /// Emulated core clock (HEEPocrates runs 20 MHz @ 0.8 V).
     pub freq_hz: u64,
+    /// Execution backend driving the core ([`crate::exec`]). Both
+    /// backends are bit-identical by contract; `Blocks` trades compile
+    /// time for guest throughput.
+    pub backend: BackendKind,
 }
 
 impl Default for SocConfig {
@@ -67,6 +72,7 @@ impl Default for SocConfig {
             flash_size: 4 << 20,
             flash_timing: FlashTiming::virtualized(),
             freq_hz: 20_000_000,
+            backend: BackendKind::Interp,
         }
     }
 }
@@ -96,6 +102,12 @@ pub struct Soc {
     was_sleeping: bool,
     /// Sticky CGRA mapping fault (emulation diagnostics).
     pub cgra_fault: Option<crate::cgra::CgraFault>,
+    /// The pluggable execution engine ([`crate::exec`]). `None` only
+    /// while a `run` slice is in flight (the backend is taken out so it
+    /// can borrow the SoC mutably) — always put back before returning.
+    /// Not serialized: backends hold derived caches, no architectural
+    /// state, so interp and block snapshots stay byte-comparable.
+    backend: Option<Box<dyn ExecBackend>>,
 }
 
 impl Soc {
@@ -113,7 +125,27 @@ impl Soc {
             cgra_busy_until: None,
             was_sleeping: false,
             cgra_fault: None,
+            backend: Some(cfg.backend.create()),
         }
+    }
+
+    /// Which execution backend drives this SoC.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.as_ref().map(|b| b.kind()).unwrap_or_default()
+    }
+
+    /// Swap the execution backend. Architectural state is untouched —
+    /// backends only hold derived caches, so switching mid-run is safe.
+    pub fn set_backend(&mut self, kind: BackendKind) {
+        if self.backend_kind() != kind {
+            self.backend = Some(kind.create());
+        }
+    }
+
+    /// Backend-internal counters (block dispatches, rebuilds, …) for
+    /// diagnostics and the self-modifying-code tests.
+    pub fn exec_stats(&self) -> ExecStats {
+        self.backend.as_ref().map(|b| b.exec_stats()).unwrap_or_default()
     }
 
     /// Load a guest program and point the CPU at its entry (the debugger
@@ -121,6 +153,10 @@ impl Soc {
     pub fn load(&mut self, prog: &Program) -> anyhow::Result<()> {
         load_program(&mut self.bus, prog)?;
         self.cpu.reset(prog.entry);
+        // memory changed wholesale under the backend: derived caches die
+        if let Some(b) = &mut self.backend {
+            b.restore_hook();
+        }
         Ok(())
     }
 
@@ -131,14 +167,14 @@ impl Soc {
 
     // ---- event-driven execution ----------------------------------------
 
-    fn refresh_irq_lines(&mut self) {
+    pub(crate) fn refresh_irq_lines(&mut self) {
         let mtip = self.bus.timer.irq_pending(self.now);
         let fast = self.bus.fast_irq_lines(self.now);
         self.cpu.set_irq_lines(mtip, fast);
     }
 
     /// Earliest future device event (wake source while sleeping).
-    fn next_event(&self) -> Option<u64> {
+    pub(crate) fn next_event(&self) -> Option<u64> {
         let mut next: Option<u64> = None;
         let mut consider = |e: Option<u64>| {
             if let Some(t) = e {
@@ -153,9 +189,18 @@ impl Soc {
         next
     }
 
+    /// First cycle at which a device event or CGRA completion becomes
+    /// due. While `now` stays strictly below this (and no peripheral is
+    /// touched), [`Soc::post_step`] is provably a no-op — the invariant
+    /// both the sleep fast-forward and block dispatch rely on.
+    pub(crate) fn event_horizon(&self) -> u64 {
+        let e = self.next_event().unwrap_or(u64::MAX);
+        e.min(self.cgra_busy_until.unwrap_or(u64::MAX))
+    }
+
     /// Handle everything that may have happened after a CPU step or a
     /// sleep fast-forward.
-    fn post_step(&mut self) {
+    pub(crate) fn post_step(&mut self) {
         // Write-triggered work: only when a peripheral register was
         // actually written this step (§Perf opt 2 — the flag check keeps
         // the per-instruction overhead flat on compute-only code).
@@ -333,61 +378,14 @@ impl Soc {
         }
     }
 
-    /// Run until a CS hand-off point or `max_cycles` elapse.
+    /// Run until a CS hand-off point or `max_cycles` elapse. Delegates
+    /// to the configured [`ExecBackend`] — the backend is taken out for
+    /// the slice so it can borrow the SoC mutably, and always put back.
     pub fn run(&mut self, max_cycles: u64) -> RunExit {
-        let deadline = self.now.saturating_add(max_cycles);
-        self.refresh_irq_lines();
-        loop {
-            match self.cpu.state {
-                CpuState::Halted(h) => {
-                    // ensure final domain states are flushed
-                    return RunExit::Halted(h);
-                }
-                CpuState::Sleeping if !self.cpu.interrupt_pending() => {
-                    match self.next_event() {
-                        None => return RunExit::DeadSleep,
-                        Some(t) if t > deadline => {
-                            self.now = deadline;
-                            self.post_step();
-                            return RunExit::CycleBudget;
-                        }
-                        Some(t) => {
-                            let before = self.now;
-                            self.now = t.max(self.now);
-                            self.post_step();
-                            // forward-progress guard: a past-time event
-                            // that neither advances the clock nor wakes
-                            // the core would spin forever
-                            if self.now == before
-                                && self.cpu.state == CpuState::Sleeping
-                                && !self.cpu.interrupt_pending()
-                            {
-                                // step the clock one cycle and re-evaluate
-                                self.now += 1;
-                            }
-                            continue;
-                        }
-                    }
-                }
-                _ => {}
-            }
-            if self.now >= deadline {
-                return RunExit::CycleBudget;
-            }
-            let r = self.cpu.step(&mut self.bus, self.now);
-            self.now += r.cycles as u64;
-            if r.retired {
-                self.stats.instructions += 1;
-            }
-            self.post_step();
-            if let Some(off) = self.bus.mailbox.take_pending() {
-                self.stats.mailbox_rings += 1;
-                return RunExit::MailboxRing(off);
-            }
-            if self.bus.spi_adc.wants_refill() {
-                return RunExit::AdcRefill;
-            }
-        }
+        let mut backend = self.backend.take().expect("execution backend in use");
+        let slice = backend.run_slice(self, max_cycles);
+        self.backend = Some(backend);
+        slice.exit
     }
 
     /// Convenience: run to halt, panicking on CS hand-offs (for guests
@@ -400,8 +398,13 @@ impl Soc {
     }
 
     /// Serialize the full SoC: clock, run stats, sleep bookkeeping, CPU,
-    /// interconnect + devices, CGRA core, and perf counters.
+    /// interconnect + devices, CGRA core, and perf counters. The
+    /// execution backend contributes nothing (no architectural state),
+    /// which is what keeps interp and block snapshots byte-comparable.
     pub fn save_state(&self, w: &mut crate::snapshot::Writer) {
+        if let Some(b) = &self.backend {
+            b.save_hook();
+        }
         w.u64(self.now);
         w.u64(self.freq_hz);
         w.u64(self.stats.instructions);
@@ -476,6 +479,10 @@ impl Soc {
         self.bus.restore_state(r)?;
         self.cgra.restore_state(r)?;
         self.perf.restore_state(r)?;
+        // the memory image was replaced: compiled blocks are stale
+        if let Some(b) = &mut self.backend {
+            b.restore_hook();
+        }
         Ok(())
     }
 }
