@@ -1,0 +1,620 @@
+//! CFG recovery over a guest image: recursive-descent disassembly with a
+//! sound register constant propagation, block-entry closure, and call
+//! graph / static WCET extraction.
+//!
+//! Two cooperating passes:
+//!
+//! 1. [`walk`] — an instruction-level abstract interpretation from the
+//!    image entry. The abstract domain is per-register `Top | Const`
+//!    ([`AbsVal`]), joined pointwise at control-flow merges. Constants
+//!    fold through the *interpreter's own* ALU (`cpu::alu`), so a
+//!    resolved address can never disagree with what execution computes.
+//!    The walk yields the reachable-instruction set, the joined in-state
+//!    per pc, resolved call edges, unresolved indirect jumps, and
+//!    control flow into unfetchable/undecodable words.
+//!
+//! 2. [`recover_blocks`] — the block-entry closure. Blocks are scanned
+//!    with the *same* [`scan_block`] the blocks backend compiles with,
+//!    so the statically recovered block map is shape-identical to what
+//!    the backend builds at dispatch time, including the device-access
+//!    split points where a dispatched block bails out and execution
+//!    re-enters one instruction later (see DESIGN.md §12).
+//!
+//! On top of those, [`call_graph`] computes per-function static WCET
+//! (longest acyclic block path; `None` when the function can loop) and
+//! the maximum static call depth.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::bus::{MemoryMap, Region};
+use crate::exec::blocks::{is_terminator, scan_block};
+use crate::exec::BlockInfo;
+use crate::isa::{self, Instr, LoadOp, StoreOp};
+
+use super::{AnalyzeConfig, Image};
+
+/// Abstract register value: statically known constant, or anything.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AbsVal {
+    Top,
+    Const(u32),
+}
+
+impl AbsVal {
+    pub fn join(self, other: AbsVal) -> AbsVal {
+        if self == other {
+            self
+        } else {
+            AbsVal::Top
+        }
+    }
+
+    pub fn constant(self) -> Option<u32> {
+        match self {
+            AbsVal::Const(c) => Some(c),
+            AbsVal::Top => None,
+        }
+    }
+}
+
+/// Abstract register file. `x0` is pinned to `Const(0)`.
+pub type RegState = [AbsVal; 32];
+
+fn initial_state() -> RegState {
+    let mut s = [AbsVal::Top; 32];
+    s[0] = AbsVal::Const(0);
+    s
+}
+
+fn join_states(a: &RegState, b: &RegState) -> RegState {
+    let mut out = *a;
+    for (o, r) in out.iter_mut().zip(b.iter()) {
+        *o = o.join(*r);
+    }
+    out
+}
+
+fn set_reg(state: &mut RegState, rd: u8, v: AbsVal) {
+    if rd != 0 {
+        state[rd as usize] = v;
+    }
+}
+
+/// Abstract transfer function for one instruction (registers only; memory
+/// is not tracked, so every load produces `Top`).
+fn transfer(instr: Instr, pc: u32, state: &RegState) -> RegState {
+    let mut out = *state;
+    match instr {
+        Instr::Lui { rd, imm } => set_reg(&mut out, rd, AbsVal::Const(imm as u32)),
+        Instr::Auipc { rd, imm } => {
+            set_reg(&mut out, rd, AbsVal::Const(pc.wrapping_add(imm as u32)))
+        }
+        Instr::OpImm { op, rd, rs1, imm } => {
+            let v = match state[rs1 as usize].constant() {
+                Some(a) => AbsVal::Const(crate::cpu::alu(op, a, imm as u32)),
+                None => AbsVal::Top,
+            };
+            set_reg(&mut out, rd, v);
+        }
+        Instr::Op { op, rd, rs1, rs2 } => {
+            let v = match (state[rs1 as usize].constant(), state[rs2 as usize].constant()) {
+                (Some(a), Some(b)) => AbsVal::Const(crate::cpu::alu(op, a, b)),
+                _ => AbsVal::Top,
+            };
+            set_reg(&mut out, rd, v);
+        }
+        Instr::Load { rd, .. } => set_reg(&mut out, rd, AbsVal::Top),
+        Instr::Jal { rd, .. } | Instr::Jalr { rd, .. } => {
+            set_reg(&mut out, rd, AbsVal::Const(pc.wrapping_add(4)))
+        }
+        Instr::Csr { rd, .. } => set_reg(&mut out, rd, AbsVal::Top),
+        _ => {}
+    }
+    out
+}
+
+/// The statically known effective address of a load/store, if any, plus
+/// its access size in bytes.
+pub fn access_addr(instr: Instr, state: &RegState) -> Option<(u32, u32, bool)> {
+    match instr {
+        Instr::Load { op, rs1, imm, .. } => {
+            let size = match op {
+                LoadOp::Lb | LoadOp::Lbu => 1,
+                LoadOp::Lh | LoadOp::Lhu => 2,
+                LoadOp::Lw => 4,
+            };
+            state[rs1 as usize].constant().map(|b| (b.wrapping_add(imm as u32), size, false))
+        }
+        Instr::Store { op, rs1, imm, .. } => {
+            let size = match op {
+                StoreOp::Sb => 1,
+                StoreOp::Sh => 2,
+                StoreOp::Sw => 4,
+            };
+            state[rs1 as usize].constant().map(|b| (b.wrapping_add(imm as u32), size, true))
+        }
+        _ => None,
+    }
+}
+
+/// Is this load/store a memory access at all (even with unknown target)?
+pub fn is_mem_access(instr: Instr) -> bool {
+    matches!(instr, Instr::Load { .. } | Instr::Store { .. })
+}
+
+/// Why a control-flow edge could not be followed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FlowKind {
+    /// Target lies outside the (only executable) SRAM window.
+    OutsideSram,
+    /// Target is not 4-byte aligned.
+    Misaligned,
+    /// Target is in SRAM but holds no decodable instruction.
+    Undecodable,
+}
+
+/// The result of the instruction-level abstract interpretation.
+pub struct Walk {
+    /// Joined register in-state per reachable pc.
+    pub states: BTreeMap<u32, RegState>,
+    /// Decoded instruction per reachable pc.
+    pub instrs: BTreeMap<u32, Instr>,
+    /// `jalr` sites whose base register joined to `Top`.
+    pub unresolved: BTreeSet<u32>,
+    /// `(site, target, kind)`: control-flow edges that leave the
+    /// executable world.
+    pub bad_flow: BTreeSet<(u32, u32, FlowKind)>,
+    /// Resolved call edges `(site, callee)` — `jal`/`jalr` with `rd != x0`.
+    pub calls: BTreeSet<(u32, u32)>,
+}
+
+/// Run the abstract interpretation from `image.entry`. Terminates because
+/// the per-pc state only moves up a two-level lattice.
+pub fn walk(image: &Image, map: &MemoryMap) -> Walk {
+    let mut w = Walk {
+        states: BTreeMap::new(),
+        instrs: BTreeMap::new(),
+        unresolved: BTreeSet::new(),
+        bad_flow: BTreeSet::new(),
+        calls: BTreeSet::new(),
+    };
+    let mut work: VecDeque<u32> = VecDeque::new();
+
+    let entry = image.entry;
+    if entry % 4 != 0 {
+        w.bad_flow.insert((entry, entry, FlowKind::Misaligned));
+        return w;
+    }
+    if map.region(entry) != Region::Sram {
+        w.bad_flow.insert((entry, entry, FlowKind::OutsideSram));
+        return w;
+    }
+    if image.fetch(entry).and_then(isa::decode).is_none() {
+        w.bad_flow.insert((entry, entry, FlowKind::Undecodable));
+        return w;
+    }
+    w.states.insert(entry, initial_state());
+    work.push_back(entry);
+
+    while let Some(pc) = work.pop_front() {
+        let state = w.states[&pc];
+        // enqueue sites are pre-validated, so both unwraps hold
+        let instr = isa::decode(image.fetch(pc).unwrap()).unwrap();
+        w.instrs.insert(pc, instr);
+        let out = transfer(instr, pc, &state);
+
+        let mut succs: Vec<u32> = Vec::new();
+        match instr {
+            Instr::Branch { imm, .. } => {
+                succs.push(pc.wrapping_add(imm as u32));
+                succs.push(pc.wrapping_add(4));
+            }
+            Instr::Jal { rd, imm } => {
+                let target = pc.wrapping_add(imm as u32);
+                succs.push(target);
+                if rd != 0 {
+                    w.calls.insert((pc, target));
+                    // the return site is reachable iff the callee
+                    // returns; assumed here so callers never lint as
+                    // unreachable (documented over-approximation)
+                    succs.push(pc.wrapping_add(4));
+                }
+            }
+            Instr::Jalr { rd, rs1, imm } => match state[rs1 as usize].constant() {
+                Some(base) => {
+                    let target = base.wrapping_add(imm as u32) & !1;
+                    succs.push(target);
+                    if rd != 0 {
+                        w.calls.insert((pc, target));
+                        succs.push(pc.wrapping_add(4));
+                    }
+                }
+                None => {
+                    w.unresolved.insert(pc);
+                    if rd != 0 {
+                        succs.push(pc.wrapping_add(4));
+                    }
+                }
+            },
+            // ecall: target depends on a runtime mtvec value; ebreak
+            // halts; mret: mepc is not tracked
+            Instr::Ecall | Instr::Ebreak | Instr::Mret => {}
+            _ => succs.push(pc.wrapping_add(4)),
+        }
+
+        for t in succs {
+            if t % 4 != 0 {
+                w.bad_flow.insert((pc, t, FlowKind::Misaligned));
+                continue;
+            }
+            if map.region(t) != Region::Sram {
+                w.bad_flow.insert((pc, t, FlowKind::OutsideSram));
+                continue;
+            }
+            if image.fetch(t).and_then(isa::decode).is_none() {
+                w.bad_flow.insert((pc, t, FlowKind::Undecodable));
+                continue;
+            }
+            match w.states.get(&t) {
+                Some(prev) => {
+                    let joined = join_states(prev, &out);
+                    if joined != *prev {
+                        w.states.insert(t, joined);
+                        work.push_back(t);
+                    }
+                }
+                None => {
+                    w.states.insert(t, out);
+                    work.push_back(t);
+                }
+            }
+        }
+    }
+    w
+}
+
+/// How a block hands off control, at the call/return level (used by the
+/// WCET path search; the block-entry closure uses finer successor sets).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BlockExit {
+    /// Plain intra-function successors (branch arms, jumps, fallthrough
+    /// after a cut or a CSR/WFI terminator).
+    Jump(Vec<u32>),
+    /// Ends in a call: control resumes at `ret` after `callee` finishes.
+    /// `callee` is `None` for an unresolved indirect call.
+    Call { callee: Option<u32>, ret: u32 },
+    /// Function return (`jalr x0, ...` or `mret`).
+    Return,
+    /// Execution stops here (`ebreak`, `ecall`, dead end).
+    Halt,
+}
+
+/// The statically recovered block map.
+pub struct BlockMap {
+    /// Block entry -> shape (identical to the backend's [`BlockInfo`]).
+    pub blocks: BTreeMap<u32, BlockInfo>,
+    /// Block entry -> call/return-level exit.
+    pub exits: BTreeMap<u32, BlockExit>,
+}
+
+impl BlockMap {
+    /// Sorted block-entry pcs — the precompile export consumed by
+    /// [`crate::soc::Soc::precompile`].
+    pub fn entries(&self) -> Vec<u32> {
+        self.blocks.keys().copied().collect()
+    }
+
+    /// Sorted [`BlockInfo`] list, directly comparable with
+    /// [`crate::soc::Soc::block_map`] after a run.
+    pub fn infos(&self) -> Vec<BlockInfo> {
+        self.blocks.values().copied().collect()
+    }
+}
+
+/// Closure over block entries from the image entry, mirroring how the
+/// blocks backend discovers entries at dispatch time:
+///
+/// * terminator targets and fallthroughs become entries;
+/// * a block cut by length or a 512-B generation-page boundary continues
+///   at the next pc;
+/// * the *first* statically certain non-SRAM access in a block splits it:
+///   the backend bails out there, single-steps the device access, and
+///   compiles a fresh block right after it.
+pub fn recover_blocks(image: &Image, w: &Walk, cfg: &AnalyzeConfig) -> BlockMap {
+    let mut map = BlockMap { blocks: BTreeMap::new(), exits: BTreeMap::new() };
+    let mut work: VecDeque<u32> = VecDeque::new();
+    work.push_back(image.entry);
+
+    while let Some(entry) = work.pop_front() {
+        if map.blocks.contains_key(&entry) {
+            continue;
+        }
+        if entry % 4 != 0 || cfg.map.region(entry) != Region::Sram {
+            continue;
+        }
+        let (body, max_cycles) = scan_block(&cfg.timing, entry, &mut |p| image.fetch(p));
+        if body.is_empty() {
+            // the backend's build fails here too: no block, the
+            // interpreter single-steps into the trap path
+            continue;
+        }
+        map.blocks.insert(
+            entry,
+            BlockInfo { pc: entry, len: body.len() as u32, max_cycles },
+        );
+
+        let mut succs: Vec<u32> = Vec::new();
+
+        // device-access split: the first body instruction with a
+        // statically certain non-SRAM target makes the backend bail
+        for (i, &(instr, _)) in body.iter().enumerate() {
+            let pc = entry + 4 * i as u32;
+            let Some(state) = w.states.get(&pc) else { continue };
+            let Some((addr, _, _)) = access_addr(instr, state) else { continue };
+            if cfg.map.region(addr) != Region::Sram {
+                // bail at pc: a block gets built there (guard declines
+                // it when the access is at index 0, and execution
+                // re-enters at pc+4 after the single step)
+                succs.push(if i == 0 { entry + 4 } else { pc });
+                break;
+            }
+        }
+
+        let (last_instr, _) = *body.last().unwrap();
+        let last_pc = entry + 4 * (body.len() as u32 - 1);
+        let next = entry + 4 * body.len() as u32;
+        let exit = if !is_terminator(last_instr) {
+            // cut by MAX_BLOCK_LEN or a page boundary (or a dead end —
+            // then the scan at `next` comes back empty and is dropped)
+            succs.push(next);
+            BlockExit::Jump(vec![next])
+        } else {
+            match last_instr {
+                Instr::Branch { imm, .. } => {
+                    let t = last_pc.wrapping_add(imm as u32);
+                    succs.push(t);
+                    succs.push(next);
+                    BlockExit::Jump(vec![t, next])
+                }
+                Instr::Jal { rd, imm } => {
+                    let t = last_pc.wrapping_add(imm as u32);
+                    succs.push(t);
+                    if rd != 0 {
+                        succs.push(next);
+                        BlockExit::Call { callee: Some(t), ret: next }
+                    } else {
+                        BlockExit::Jump(vec![t])
+                    }
+                }
+                Instr::Jalr { rd, rs1, .. } => {
+                    let resolved = w
+                        .states
+                        .get(&last_pc)
+                        .and_then(|s| s[rs1 as usize].constant())
+                        .map(|base| {
+                            let Instr::Jalr { imm, .. } = last_instr else { unreachable!() };
+                            base.wrapping_add(imm as u32) & !1
+                        });
+                    if let Some(t) = resolved {
+                        succs.push(t);
+                    }
+                    if rd != 0 {
+                        succs.push(next);
+                        BlockExit::Call { callee: resolved, ret: next }
+                    } else {
+                        // rd = x0: conventionally a return (or an
+                        // unresolvable indirect jump, linted separately)
+                        BlockExit::Return
+                    }
+                }
+                Instr::Csr { .. } | Instr::Wfi => {
+                    succs.push(next);
+                    BlockExit::Jump(vec![next])
+                }
+                Instr::Mret => BlockExit::Return,
+                _ => BlockExit::Halt, // ecall / ebreak
+            }
+        };
+        map.exits.insert(entry, exit);
+
+        for s in succs {
+            if !map.blocks.contains_key(&s) {
+                work.push_back(s);
+            }
+        }
+    }
+    map
+}
+
+/// Per-function summary out of the call-graph pass.
+#[derive(Clone, Debug)]
+pub struct FunctionInfo {
+    pub entry: u32,
+    /// Blocks reachable from the entry without crossing a call edge.
+    pub blocks: usize,
+    /// Longest acyclic block path in cycles, with callee WCETs inlined
+    /// at call sites; `None` when the function (or a callee) can loop.
+    pub wcet_cycles: Option<u64>,
+    /// Resolved callee entries.
+    pub calls: BTreeSet<u32>,
+}
+
+/// Call-graph analysis result.
+pub struct CallGraph {
+    /// Function entry -> summary; always contains the image entry.
+    pub functions: BTreeMap<u32, FunctionInfo>,
+    /// Longest call chain from the root (1 = no calls).
+    pub max_depth: u32,
+    /// A call cycle is statically reachable.
+    pub recursive: bool,
+}
+
+/// Discover functions (the image entry plus every resolved call target),
+/// then compute per-function WCET and the maximum static call depth.
+pub fn call_graph(root: u32, map: &BlockMap, w: &Walk) -> CallGraph {
+    // function entries: root + all resolved call targets
+    let mut entries: BTreeSet<u32> = BTreeSet::new();
+    entries.insert(root);
+    for &(_, callee) in &w.calls {
+        entries.insert(callee);
+    }
+
+    // intra-function block sets + call edges
+    let mut functions: BTreeMap<u32, FunctionInfo> = BTreeMap::new();
+    for &f in &entries {
+        let mut seen: BTreeSet<u32> = BTreeSet::new();
+        let mut calls: BTreeSet<u32> = BTreeSet::new();
+        let mut stack = vec![f];
+        while let Some(b) = stack.pop() {
+            if !seen.insert(b) {
+                continue;
+            }
+            match map.exits.get(&b) {
+                Some(BlockExit::Jump(ts)) => {
+                    for &t in ts {
+                        if map.blocks.contains_key(&t) {
+                            stack.push(t);
+                        }
+                    }
+                }
+                Some(BlockExit::Call { callee, ret }) => {
+                    if let Some(c) = callee {
+                        calls.insert(*c);
+                    }
+                    if map.blocks.contains_key(ret) {
+                        stack.push(*ret);
+                    }
+                }
+                Some(BlockExit::Return) | Some(BlockExit::Halt) | None => {}
+            }
+        }
+        let blocks = seen.iter().filter(|b| map.blocks.contains_key(b)).count();
+        functions.insert(f, FunctionInfo { entry: f, blocks, wcet_cycles: None, calls });
+    }
+
+    // call depth (DFS with cycle detection)
+    let mut recursive = false;
+    let mut depth_memo: BTreeMap<u32, u32> = BTreeMap::new();
+    let mut stack_set: BTreeSet<u32> = BTreeSet::new();
+    fn depth(
+        f: u32,
+        functions: &BTreeMap<u32, FunctionInfo>,
+        memo: &mut BTreeMap<u32, u32>,
+        on_stack: &mut BTreeSet<u32>,
+        recursive: &mut bool,
+    ) -> u32 {
+        if let Some(&d) = memo.get(&f) {
+            return d;
+        }
+        if !on_stack.insert(f) {
+            *recursive = true;
+            return 0;
+        }
+        let mut best = 0;
+        if let Some(info) = functions.get(&f) {
+            for &c in &info.calls {
+                best = best.max(depth(c, functions, memo, on_stack, recursive));
+            }
+        }
+        on_stack.remove(&f);
+        memo.insert(f, best + 1);
+        best + 1
+    }
+    let max_depth = depth(root, &functions, &mut depth_memo, &mut stack_set, &mut recursive);
+
+    // per-function WCET, callees inlined (lazy, memoized, cycle -> None)
+    #[allow(clippy::too_many_arguments)]
+    fn fn_wcet(
+        f: u32,
+        map: &BlockMap,
+        functions: &BTreeMap<u32, FunctionInfo>,
+        memo: &mut BTreeMap<u32, Option<u64>>,
+        on_stack: &mut BTreeSet<u32>,
+    ) -> Option<u64> {
+        if let Some(v) = memo.get(&f) {
+            return *v;
+        }
+        if !on_stack.insert(f) {
+            return None; // recursion: unbounded
+        }
+        let mut block_memo: BTreeMap<u32, Option<u64>> = BTreeMap::new();
+        let mut block_stack: BTreeSet<u32> = BTreeSet::new();
+        #[allow(clippy::too_many_arguments)]
+        fn longest(
+            b: u32,
+            map: &BlockMap,
+            functions: &BTreeMap<u32, FunctionInfo>,
+            fmemo: &mut BTreeMap<u32, Option<u64>>,
+            fstack: &mut BTreeSet<u32>,
+            bmemo: &mut BTreeMap<u32, Option<u64>>,
+            bstack: &mut BTreeSet<u32>,
+        ) -> Option<u64> {
+            let Some(info) = map.blocks.get(&b) else { return Some(0) };
+            if let Some(v) = bmemo.get(&b) {
+                return *v;
+            }
+            if !bstack.insert(b) {
+                return None; // loop in the block graph: unbounded
+            }
+            let tail = match map.exits.get(&b) {
+                Some(BlockExit::Jump(ts)) => {
+                    let mut best: Option<u64> = Some(0);
+                    for &t in ts {
+                        match (
+                            best,
+                            longest(t, map, functions, fmemo, fstack, bmemo, bstack),
+                        ) {
+                            (Some(a), Some(c)) => best = Some(a.max(c)),
+                            _ => {
+                                best = None;
+                                break;
+                            }
+                        }
+                    }
+                    best
+                }
+                Some(BlockExit::Call { callee, ret }) => {
+                    let callee_cost = match callee {
+                        Some(c) => fn_wcet(*c, map, functions, fmemo, fstack),
+                        None => None,
+                    };
+                    let ret_cost =
+                        longest(*ret, map, functions, fmemo, fstack, bmemo, bstack);
+                    match (callee_cost, ret_cost) {
+                        (Some(a), Some(b)) => Some(a + b),
+                        _ => None,
+                    }
+                }
+                Some(BlockExit::Return) | Some(BlockExit::Halt) | None => Some(0),
+            };
+            bstack.remove(&b);
+            let total = tail.map(|t| t + info.max_cycles);
+            bmemo.insert(b, total);
+            total
+        }
+        let result = longest(
+            f,
+            map,
+            functions,
+            memo,
+            on_stack,
+            &mut block_memo,
+            &mut block_stack,
+        );
+        on_stack.remove(&f);
+        memo.insert(f, result);
+        result
+    }
+
+    let mut wcet_memo: BTreeMap<u32, Option<u64>> = BTreeMap::new();
+    let fn_entries: Vec<u32> = functions.keys().copied().collect();
+    for f in fn_entries {
+        let mut on_stack = BTreeSet::new();
+        let wcet = fn_wcet(f, map, &functions, &mut wcet_memo, &mut on_stack);
+        if let Some(info) = functions.get_mut(&f) {
+            info.wcet_cycles = wcet;
+        }
+    }
+
+    CallGraph { functions, max_depth, recursive }
+}

@@ -1,0 +1,446 @@
+//! Lint diagnostics over the recovered CFG — stable `FEMU-Axxx` rules.
+//!
+//! Every rule keys off facts the walk proved, never heuristics over raw
+//! bytes: an address is only checked when constant propagation resolved
+//! it, a CSR is only flagged by the *core's own* implementation tables
+//! ([`crate::cpu::Csrs::is_known`] / [`Csrs::is_read_only`]), and the
+//! SMC rule uses the exact write-generation page granularity the blocks
+//! backend invalidates on ([`crate::mem::GEN_PAGE_SHIFT`]). `Top`
+//! addresses are never linted — the analyzer stays silent rather than
+//! guess (DESIGN.md §12 lists the resulting blind spots).
+
+use crate::bus::{Region, PERIPH_BASE};
+use crate::cpu::Csrs;
+use crate::isa::{CsrOp, Instr};
+use crate::mem::GEN_PAGE_SHIFT;
+use crate::periph::map;
+
+use super::cfg::{access_addr, FlowKind, Walk};
+use super::{AnalyzeConfig, CallGraph, Image};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding. `pc` is the offending instruction site, or `None` for
+/// program-level findings (call depth).
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub pc: Option<u32>,
+    pub message: String,
+}
+
+pub const A001: &str = "FEMU-A001"; // memory-map violation
+pub const A002: &str = "FEMU-A002"; // misaligned access or jump target
+pub const A003: &str = "FEMU-A003"; // self-modifying-code candidate
+pub const A004: &str = "FEMU-A004"; // unreachable text
+pub const A005: &str = "FEMU-A005"; // bad CSR access
+pub const A006: &str = "FEMU-A006"; // call depth / recursion
+pub const A007: &str = "FEMU-A007"; // unresolved indirect jump
+
+/// The rule catalog: `(id, severity, summary)`.
+pub const CATALOG: &[(&str, Severity, &str)] = &[
+    (A001, Severity::Error, "access or jump outside the platform memory map"),
+    (A002, Severity::Error, "misaligned access or jump target (traps at runtime)"),
+    (A003, Severity::Warning, "store into a text page (self-modifying-code candidate)"),
+    (A004, Severity::Warning, "text never reachable from the entry point"),
+    (A005, Severity::Error, "unimplemented CSR, or write to a read-only CSR"),
+    (A006, Severity::Warning, "recursion or call chain deeper than the configured limit"),
+    (A007, Severity::Warning, "indirect jump target not statically resolvable"),
+];
+
+fn push(
+    out: &mut Vec<Diagnostic>,
+    rule: &'static str,
+    pc: Option<u32>,
+    message: String,
+) {
+    let severity = CATALOG
+        .iter()
+        .find(|(id, _, _)| *id == rule)
+        .map(|&(_, s, _)| s)
+        .unwrap_or(Severity::Error);
+    out.push(Diagnostic { rule, severity, pc, message });
+}
+
+/// Known-device check: an address inside the peripheral region must fall
+/// in an implemented device window (anything past the mailbox faults).
+fn periph_device(addr: u32) -> Option<&'static str> {
+    let dev = (addr - PERIPH_BASE) & !(map::WINDOW - 1);
+    match dev {
+        map::UART => Some("uart"),
+        map::GPIO => Some("gpio"),
+        map::TIMER => Some("timer"),
+        map::SPI_ADC => Some("spi-adc"),
+        map::SPI_FLASH => Some("spi-flash"),
+        map::DMA => Some("dma"),
+        map::POWER => Some("power"),
+        map::CGRA => Some("cgra"),
+        map::MAILBOX => Some("mailbox"),
+        _ => None,
+    }
+}
+
+/// Run every rule over the walk results; diagnostics come back sorted by
+/// (site pc, rule id), program-level findings last.
+pub fn run(
+    image: &Image,
+    cfg: &AnalyzeConfig,
+    walk: &Walk,
+    graph: &CallGraph,
+) -> Vec<Diagnostic> {
+    let mut out: Vec<Diagnostic> = Vec::new();
+
+    // per-instruction rules over resolved accesses and CSR sites
+    for (&pc, &instr) in &walk.instrs {
+        let state = &walk.states[&pc];
+
+        if let Some((addr, size, is_store)) = access_addr(instr, state) {
+            let what = if is_store { "store" } else { "load" };
+            if addr % size != 0 {
+                push(
+                    &mut out,
+                    A002,
+                    Some(pc),
+                    format!("misaligned {size}-byte {what} at address {addr:#010x}"),
+                );
+            }
+            match cfg.map.region(addr) {
+                Region::Sram | Region::Bridge => {}
+                Region::Unmapped => push(
+                    &mut out,
+                    A001,
+                    Some(pc),
+                    format!("{what} targets unmapped address {addr:#010x}"),
+                ),
+                Region::Periph => {
+                    if periph_device(addr).is_none() {
+                        push(
+                            &mut out,
+                            A001,
+                            Some(pc),
+                            format!(
+                                "{what} targets unimplemented peripheral window {addr:#010x}"
+                            ),
+                        );
+                    } else if size != 4 {
+                        push(
+                            &mut out,
+                            A001,
+                            Some(pc),
+                            format!(
+                                "{size}-byte {what} at {addr:#010x}: peripheral registers \
+                                 are word-only"
+                            ),
+                        );
+                    }
+                }
+            }
+
+            // SMC candidate: the store's generation-page range overlaps a
+            // text page (pages are global: SRAM starts at address 0, so
+            // `addr >> GEN_PAGE_SHIFT` is the page id the backend tracks)
+            if is_store {
+                if let Some((t0, t1)) = image.text_extent {
+                    if t1 > t0 {
+                        let (s_lo, s_hi) =
+                            (addr >> GEN_PAGE_SHIFT, (addr + size - 1) >> GEN_PAGE_SHIFT);
+                        let (t_lo, t_hi) =
+                            (t0 >> GEN_PAGE_SHIFT, (t1 - 1) >> GEN_PAGE_SHIFT);
+                        if s_lo <= t_hi && s_hi >= t_lo {
+                            push(
+                                &mut out,
+                                A003,
+                                Some(pc),
+                                format!(
+                                    "store to {addr:#010x} hits a text page \
+                                     (text {t0:#010x}..{t1:#010x}); the blocks backend \
+                                     will invalidate and recompile"
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        if let Instr::Csr { op, rs1, csr, imm } = instr {
+            if !Csrs::is_known(csr) {
+                push(
+                    &mut out,
+                    A005,
+                    Some(pc),
+                    format!("access to unimplemented CSR {csr:#05x} (traps at runtime)"),
+                );
+            } else {
+                // a csrrs/csrrc with source x0 (or zimm 0) reads without
+                // writing; everything else writes
+                let writes = op == CsrOp::Rw || rs1 != 0;
+                let _ = imm; // zimm shares the rs1 field, same writes rule
+                if writes && Csrs::is_read_only(csr) {
+                    push(
+                        &mut out,
+                        A005,
+                        Some(pc),
+                        format!("write to read-only CSR {csr:#05x} (traps at runtime)"),
+                    );
+                }
+            }
+        }
+    }
+
+    // control flow that leaves the executable world
+    for &(site, target, kind) in &walk.bad_flow {
+        match kind {
+            FlowKind::OutsideSram => push(
+                &mut out,
+                A001,
+                Some(site),
+                format!(
+                    "control flow to {target:#010x} ({}); only SRAM is executable",
+                    cfg.map.region(target).name()
+                ),
+            ),
+            FlowKind::Misaligned => push(
+                &mut out,
+                A002,
+                Some(site),
+                format!("control flow to misaligned target {target:#010x}"),
+            ),
+            FlowKind::Undecodable => push(
+                &mut out,
+                A001,
+                Some(site),
+                format!("control flow to {target:#010x}, which holds no decodable \
+                         instruction"),
+            ),
+        }
+    }
+
+    // unresolved indirect jumps
+    for &pc in &walk.unresolved {
+        push(
+            &mut out,
+            A007,
+            Some(pc),
+            "indirect jump base is not statically resolvable; CFG and WCET are \
+             incomplete past this point"
+                .to_string(),
+        );
+    }
+
+    // unreachable text: contiguous runs of text words the walk never saw
+    if let Some((t0, t1)) = image.text_extent {
+        let mut run_start: Option<u32> = None;
+        let mut pc = t0;
+        while pc < t1 {
+            let reachable = walk.instrs.contains_key(&pc);
+            match (reachable, run_start) {
+                (false, None) => run_start = Some(pc),
+                (true, Some(start)) => {
+                    push(
+                        &mut out,
+                        A004,
+                        Some(start),
+                        format!(
+                            "{} text byte(s) at {start:#010x}..{pc:#010x} are unreachable \
+                             from the entry point",
+                            pc - start
+                        ),
+                    );
+                    run_start = None;
+                }
+                _ => {}
+            }
+            pc += 4;
+        }
+        if let Some(start) = run_start {
+            push(
+                &mut out,
+                A004,
+                Some(start),
+                format!(
+                    "{} text byte(s) at {start:#010x}..{t1:#010x} are unreachable from \
+                     the entry point",
+                    t1 - start
+                ),
+            );
+        }
+    }
+
+    // call depth / recursion (program-level)
+    if graph.recursive {
+        push(
+            &mut out,
+            A006,
+            None,
+            "recursive call cycle is statically reachable; stack depth is unbounded"
+                .to_string(),
+        );
+    } else if graph.max_depth > cfg.max_call_depth {
+        push(
+            &mut out,
+            A006,
+            None,
+            format!(
+                "static call depth {} exceeds the configured limit {}",
+                graph.max_depth, cfg.max_call_depth
+            ),
+        );
+    }
+
+    out.sort_by_key(|d| (d.pc.map_or(u32::MAX, |pc| pc), d.rule));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{analyze_program, AnalyzeConfig};
+    use super::*;
+    use crate::isa::assemble;
+
+    fn diags(src: &str) -> Vec<Diagnostic> {
+        let prog = assemble(src).unwrap();
+        analyze_program(&prog, "lint-test", &AnalyzeConfig::default()).diagnostics
+    }
+
+    fn has(ds: &[Diagnostic], rule: &str) -> bool {
+        ds.iter().any(|d| d.rule == rule)
+    }
+
+    #[test]
+    fn catalog_ids_unique_and_ordered() {
+        for w in CATALOG.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn a001_unmapped_and_unknown_periph() {
+        let ds = diags(
+            r#"
+            _start:
+                li t0, 0x30000000
+                lw t1, 0(t0)
+                ebreak
+            "#,
+        );
+        assert!(has(&ds, A001), "{ds:?}");
+
+        let ds = diags(
+            r#"
+            _start:
+                li t0, 0x20000900
+                sw zero, 0(t0)
+                ebreak
+            "#,
+        );
+        assert!(has(&ds, A001), "{ds:?}");
+
+        // sub-word peripheral access is also a map violation
+        let ds = diags(
+            r#"
+            _start:
+                li t0, 0x20000100
+                lb t1, 0(t0)
+                ebreak
+            "#,
+        );
+        assert!(has(&ds, A001), "{ds:?}");
+    }
+
+    #[test]
+    fn a002_misaligned_access() {
+        let ds = diags(
+            r#"
+            _start:
+                li t0, 0x102
+                lw t1, 0(t0)
+                ebreak
+            "#,
+        );
+        assert!(has(&ds, A002), "{ds:?}");
+    }
+
+    #[test]
+    fn a003_store_into_text_page() {
+        let ds = diags(
+            r#"
+            _start:
+                la t0, _start
+                sw zero, 0(t0)
+                ebreak
+            "#,
+        );
+        assert!(has(&ds, A003), "{ds:?}");
+    }
+
+    #[test]
+    fn a004_unreachable_text() {
+        let ds = diags(
+            r#"
+            _start:
+                ebreak
+            dead:
+                addi a0, a0, 1
+                ebreak
+            "#,
+        );
+        assert!(has(&ds, A004), "{ds:?}");
+    }
+
+    #[test]
+    fn a005_csr_rules() {
+        // unknown CSR
+        let ds = diags("_start: csrr t0, 0x7C0\nebreak");
+        assert!(has(&ds, A005), "{ds:?}");
+        // write to read-only mcycle
+        let ds = diags("_start: csrw mcycle, t0\nebreak");
+        assert!(has(&ds, A005), "{ds:?}");
+        // reading a read-only counter is fine
+        let ds = diags("_start: csrr t0, mcycle\nebreak");
+        assert!(!has(&ds, A005), "{ds:?}");
+        // mip is writable-but-ignored, not read-only
+        let ds = diags("_start: csrw mip, t0\nebreak");
+        assert!(!has(&ds, A005), "{ds:?}");
+    }
+
+    #[test]
+    fn a007_unresolved_indirect() {
+        let ds = diags(
+            r#"
+            _start:
+                lw t0, 0(zero)
+                jr t0
+            "#,
+        );
+        assert!(has(&ds, A007), "{ds:?}");
+    }
+
+    #[test]
+    fn clean_program_stays_clean() {
+        let ds = diags(
+            r#"
+            _start:
+                li t0, 0x20000100
+                li t1, 1
+                sw t1, 0(t0)
+                ebreak
+            "#,
+        );
+        assert!(ds.is_empty(), "{ds:?}");
+    }
+}

@@ -1,0 +1,540 @@
+//! Static analysis of guest firmware — without executing it.
+//!
+//! `femu analyze` (and the server's `analyze` command) runs this over
+//! any loadable image: a built-in workload, an assembled `.s` file, or
+//! the memory of a restored snapshot. Four products (DESIGN.md §12):
+//!
+//! * **CFG recovery** ([`cfg`]) — recursive-descent disassembly from the
+//!   entry with a sound register constant propagation; basic blocks are
+//!   scanned by the *same* [`crate::exec::blocks`] scanner the blocks
+//!   backend compiles with, so the static block map is shape-identical
+//!   to the backend's superinstruction cache.
+//! * **Lint diagnostics** ([`lint`]) — stable `FEMU-Axxx` rules over the
+//!   reachable code: memory-map violations, misalignment, SMC
+//!   candidates, unreachable text, bad CSR writes, call depth,
+//!   unresolved indirect jumps.
+//! * **Static WCET / energy bounds** — per-block worst-case cycles from
+//!   [`crate::cpu::Timing::worst_cycles`], per-function longest-path
+//!   WCET, a program-level cycles-per-instruction bound, and the
+//!   all-domains-active energy ceiling
+//!   ([`crate::energy::EnergyModel::bound_mj`]). All are *bounds*: the
+//!   analyzer tests assert them against measured `perf_snapshot()`
+//!   numbers after real runs.
+//! * **Block-map export** — [`Report::block_entries`] feeds
+//!   [`crate::soc::Soc::precompile`] so the blocks backend can warm its
+//!   cache at reset instead of on demand (`femu diff --precompile`
+//!   proves the warm-up changes nothing).
+
+pub mod cfg;
+pub mod lint;
+
+use std::collections::BTreeMap;
+
+use crate::bus::{MemoryMap, BRIDGE_WAIT, PERIPH_BASE, PERIPH_WAIT};
+use crate::config::PlatformConfig;
+use crate::cpu::Timing;
+use crate::exec::BlockInfo;
+use crate::isa::{Instr, Program};
+use crate::periph::map;
+use crate::soc::Soc;
+use crate::util::json::Json;
+
+pub use cfg::{AbsVal, BlockMap, CallGraph, Walk};
+pub use lint::{Diagnostic, Severity};
+
+/// Everything the analyzer needs to know about the platform shape —
+/// derivable from a [`PlatformConfig`] so `femu analyze --config` lints
+/// against the same map/timing/energy data the emulator runs with.
+#[derive(Clone, Debug)]
+pub struct AnalyzeConfig {
+    pub map: MemoryMap,
+    pub timing: Timing,
+    /// All-active power and the cycle->energy conversion.
+    pub energy: crate::energy::EnergyModel,
+    /// Worst-case SPI-flash word cost (config-dependent wait states).
+    pub flash_cycles_per_word: u32,
+    /// FEMU-A006 threshold: deepest allowed static call chain.
+    pub max_call_depth: u32,
+}
+
+impl AnalyzeConfig {
+    pub fn from_platform(cfg: &PlatformConfig) -> Self {
+        Self {
+            map: MemoryMap::new(cfg.soc.num_banks, cfg.soc.bank_size, cfg.soc.cs_dram_size),
+            timing: cfg.timing,
+            energy: cfg.energy.clone(),
+            flash_cycles_per_word: cfg.soc.flash_timing.cycles_per_word,
+            max_call_depth: 64,
+        }
+    }
+}
+
+impl Default for AnalyzeConfig {
+    fn default() -> Self {
+        Self::from_platform(&PlatformConfig::default())
+    }
+}
+
+/// A loadable guest image: word-addressed memory, an entry point, and —
+/// when known — the text extent (enables the unreachable-code and SMC
+/// lints) and symbols (function naming).
+pub struct Image {
+    words: BTreeMap<u32, u32>,
+    pub entry: u32,
+    /// `[start, end)` of the text section, when the image came from an
+    /// assembled [`Program`]. `None` for raw memory (snapshots).
+    pub text_extent: Option<(u32, u32)>,
+    pub symbols: BTreeMap<String, u32>,
+}
+
+impl Image {
+    /// Image of an assembled program, exactly as the loader would place
+    /// it (text and data words both land in SRAM and are fetchable).
+    pub fn from_program(prog: &Program) -> Self {
+        let mut words = BTreeMap::new();
+        for (i, &w) in prog.text.iter().enumerate() {
+            words.insert(prog.text_base + 4 * i as u32, w);
+        }
+        for (i, chunk) in prog.data.chunks(4).enumerate() {
+            let mut b = [0u8; 4];
+            b[..chunk.len()].copy_from_slice(chunk);
+            words.insert(prog.data_base + 4 * i as u32, u32::from_le_bytes(b));
+        }
+        let text_end = prog.text_base + 4 * prog.text.len() as u32;
+        Self {
+            words,
+            entry: prog.entry,
+            text_extent: Some((prog.text_base, text_end)),
+            symbols: prog.symbols.clone(),
+        }
+    }
+
+    /// Image of a live (e.g. snapshot-restored) SoC: all of SRAM, entry
+    /// at the current pc. No text extent — the unreachable-text and SMC
+    /// lints stay quiet rather than guess.
+    pub fn from_soc(soc: &Soc) -> Self {
+        let mut words = BTreeMap::new();
+        let end = soc.bus.memory_map().sram_end();
+        let mut addr = 0u32;
+        while addr < end {
+            if let Some(w) = soc.bus.debug_read32(addr) {
+                // zero words never decode; skipping them keeps the map
+                // sparse without changing any scan result
+                if w != 0 {
+                    words.insert(addr, w);
+                }
+            }
+            addr += 4;
+        }
+        Self { words, entry: soc.cpu.pc, text_extent: None, symbols: BTreeMap::new() }
+    }
+
+    /// Word at `pc`, if the image holds one (word-aligned addressing).
+    pub fn fetch(&self, pc: u32) -> Option<u32> {
+        self.words.get(&pc).copied()
+    }
+
+    /// Reverse symbol lookup for report naming.
+    fn name_of(&self, pc: u32) -> String {
+        self.symbols
+            .iter()
+            .find(|(_, &v)| v == pc)
+            .map(|(k, _)| k.clone())
+            .unwrap_or_else(|| format!("fn_{pc:08x}"))
+    }
+}
+
+/// Per-function line of the report.
+#[derive(Clone, Debug)]
+pub struct FunctionReport {
+    pub name: String,
+    pub entry: u32,
+    pub blocks: usize,
+    /// Longest acyclic path in cycles; `None` = the function can loop,
+    /// so no finite static bound exists.
+    pub wcet_cycles: Option<u64>,
+}
+
+/// The full analysis result.
+pub struct Report {
+    pub name: String,
+    pub entry: u32,
+    /// Reachable instructions.
+    pub instructions: usize,
+    /// Statically recovered block map (sorted by pc), shape-identical to
+    /// what the blocks backend builds ([`crate::soc::Soc::block_map`]).
+    pub blocks: Vec<BlockInfo>,
+    pub functions: Vec<FunctionReport>,
+    /// Longest static call chain (1 = no calls).
+    pub call_depth: u32,
+    /// Worst-case cycles any single reachable instruction can cost,
+    /// including bus wait states — so `instret * cpi_bound` bounds the
+    /// cycle count of any non-sleeping run.
+    pub cpi_bound: u64,
+    /// All-domains-active platform power (the energy-bound slope).
+    pub active_power_mw: f64,
+    pub freq_hz: u64,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Sorted block-entry pcs — feed to [`crate::soc::Soc::precompile`].
+    pub fn block_entries(&self) -> Vec<u32> {
+        self.blocks.iter().map(|b| b.pc).collect()
+    }
+
+    /// Static cycle bound for a run retiring `instret` instructions
+    /// (valid for runs with no WFI sleep residency).
+    pub fn cycle_bound(&self, instret: u64) -> u64 {
+        instret.saturating_mul(self.cpi_bound)
+    }
+
+    /// Static energy ceiling for a run of at most `cycles` cycles: all
+    /// domains active the whole time (mirrors
+    /// [`crate::energy::EnergyModel::bound_mj`]).
+    pub fn energy_bound_mj(&self, cycles: u64) -> f64 {
+        self.active_power_mw * cycles as f64 / self.freq_hz as f64
+    }
+
+    /// The machine-readable report (schema documented in README).
+    pub fn to_json(&self) -> Json {
+        let blocks: Vec<Json> = self
+            .blocks
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("pc", Json::Num(b.pc as f64)),
+                    ("len", Json::Num(b.len as f64)),
+                    ("max_cycles", Json::Num(b.max_cycles as f64)),
+                ])
+            })
+            .collect();
+        let functions: Vec<Json> = self
+            .functions
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("name", Json::Str(f.name.clone())),
+                    ("entry", Json::Num(f.entry as f64)),
+                    ("blocks", Json::Num(f.blocks as f64)),
+                    (
+                        "wcet_cycles",
+                        f.wcet_cycles.map(|c| Json::Num(c as f64)).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        let diagnostics: Vec<Json> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("rule", Json::Str(d.rule.to_string())),
+                    ("severity", Json::Str(d.severity.name().to_string())),
+                    ("pc", d.pc.map(|pc| Json::Num(pc as f64)).unwrap_or(Json::Null)),
+                    ("message", Json::Str(d.message.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("entry", Json::Num(self.entry as f64)),
+            ("instructions", Json::Num(self.instructions as f64)),
+            ("block_map", Json::Arr(blocks)),
+            ("functions", Json::Arr(functions)),
+            ("call_depth", Json::Num(self.call_depth as f64)),
+            ("cpi_bound", Json::Num(self.cpi_bound as f64)),
+            ("active_power_mw", Json::Num(self.active_power_mw)),
+            ("freq_hz", Json::Num(self.freq_hz as f64)),
+            ("diagnostics", Json::Arr(diagnostics)),
+            (
+                "summary",
+                Json::obj(vec![
+                    ("errors", Json::Num(self.errors() as f64)),
+                    ("warnings", Json::Num(self.warnings() as f64)),
+                    ("blocks", Json::Num(self.blocks.len() as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// The human-readable report.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "analyze {}: entry {:#010x}, {} reachable instructions, {} blocks, {} functions",
+            self.name,
+            self.entry,
+            self.instructions,
+            self.blocks.len(),
+            self.functions.len(),
+        );
+        let _ = writeln!(
+            s,
+            "  bounds: <= {} cycles/instr; all-active power {:.3} mW ({:.3} mJ per Mcycle)",
+            self.cpi_bound,
+            self.active_power_mw,
+            self.energy_bound_mj(1_000_000),
+        );
+        for f in &self.functions {
+            let wcet = match f.wcet_cycles {
+                Some(c) => format!("{c} cycles"),
+                None => "unbounded (loops)".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "  fn {} @ {:#010x}: {} blocks, static WCET {}",
+                f.name, f.entry, f.blocks, wcet
+            );
+        }
+        let _ = writeln!(s, "  call depth: {}", self.call_depth);
+        let _ = writeln!(s, "  block map ({} entries):", self.blocks.len());
+        for b in &self.blocks {
+            let _ = writeln!(
+                s,
+                "    {:#010x}  len {:>3}  max {:>4} cycles",
+                b.pc, b.len, b.max_cycles
+            );
+        }
+        if self.diagnostics.is_empty() {
+            let _ = writeln!(s, "  diagnostics: none");
+        } else {
+            let _ = writeln!(
+                s,
+                "  diagnostics: {} error(s), {} warning(s)",
+                self.errors(),
+                self.warnings()
+            );
+            for d in &self.diagnostics {
+                let at = d.pc.map(|pc| format!(" @ {pc:#010x}")).unwrap_or_default();
+                let _ =
+                    writeln!(s, "    {} {}{at}: {}", d.rule, d.severity.name(), d.message);
+            }
+        }
+        s
+    }
+}
+
+/// Worst-case extra bus wait states for one instruction: the proven
+/// window's cost where the address resolved, otherwise the maximum any
+/// window can charge (sound for `Top` addresses).
+fn wait_bound(cfg: &AnalyzeConfig, instr: Instr, state: &cfg::RegState) -> u32 {
+    if !cfg::is_mem_access(instr) {
+        return 0;
+    }
+    let spi_worst = crate::periph::spi_adc::WORD_CYCLES.max(cfg.flash_cycles_per_word);
+    match cfg::access_addr(instr, state) {
+        Some((addr, _, _)) => match cfg.map.region(addr) {
+            crate::bus::Region::Sram => 0,
+            crate::bus::Region::Periph => {
+                let dev = (addr - PERIPH_BASE) & !(map::WINDOW - 1);
+                let extra = match dev {
+                    map::SPI_ADC => crate::periph::spi_adc::WORD_CYCLES,
+                    map::SPI_FLASH => cfg.flash_cycles_per_word,
+                    _ => 0,
+                };
+                PERIPH_WAIT + extra
+            }
+            crate::bus::Region::Bridge => BRIDGE_WAIT,
+            // unmapped: traps (already counted via worst_cycles), and
+            // linted as FEMU-A001
+            crate::bus::Region::Unmapped => 0,
+        },
+        None => BRIDGE_WAIT.max(PERIPH_WAIT + spi_worst),
+    }
+}
+
+/// Program-level cycles-per-instruction bound: the most any single
+/// reachable instruction can cost, base class cost plus wait states.
+fn cpi_bound(cfg: &AnalyzeConfig, walk: &Walk) -> u64 {
+    let mut worst = 1u64;
+    for (pc, &instr) in &walk.instrs {
+        let state = &walk.states[pc];
+        let mut c = cfg.timing.worst_cycles(instr) as u64 + wait_bound(cfg, instr, state) as u64;
+        if matches!(instr, Instr::Wfi) {
+            // wake-up cost on top of the base class cost (sleep
+            // residency itself is unbounded and excluded by contract)
+            c += cfg.timing.wake as u64;
+        }
+        worst = worst.max(c);
+    }
+    worst
+}
+
+/// Analyze an image end to end.
+pub fn analyze(image: &Image, name: &str, cfg: &AnalyzeConfig) -> Report {
+    let walk = cfg::walk(image, &cfg.map);
+    let blocks = cfg::recover_blocks(image, &walk, cfg);
+    let graph = cfg::call_graph(image.entry, &blocks, &walk);
+    let diagnostics = lint::run(image, cfg, &walk, &graph);
+
+    let functions = graph
+        .functions
+        .values()
+        .map(|f| FunctionReport {
+            name: image.name_of(f.entry),
+            entry: f.entry,
+            blocks: f.blocks,
+            wcet_cycles: f.wcet_cycles,
+        })
+        .collect();
+
+    Report {
+        name: name.to_string(),
+        entry: image.entry,
+        instructions: walk.instrs.len(),
+        blocks: blocks.infos(),
+        functions,
+        call_depth: graph.max_depth,
+        cpi_bound: cpi_bound(cfg, &walk),
+        active_power_mw: cfg.energy.active_power_mw(cfg.map.num_banks),
+        freq_hz: cfg.energy.freq_hz,
+        diagnostics,
+    }
+}
+
+/// Analyze an assembled program.
+pub fn analyze_program(prog: &Program, name: &str, cfg: &AnalyzeConfig) -> Report {
+    analyze(&Image::from_program(prog), name, cfg)
+}
+
+/// Analyze a live SoC's memory from its current pc (the
+/// `--from-snapshot` and server paths).
+pub fn analyze_soc(soc: &Soc, name: &str, cfg: &AnalyzeConfig) -> Report {
+    analyze(&Image::from_soc(soc), name, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    fn report_for(src: &str) -> Report {
+        let prog = assemble(src).unwrap();
+        analyze_program(&prog, "test", &AnalyzeConfig::default())
+    }
+
+    #[test]
+    fn straight_line_program_is_clean_and_bounded() {
+        let r = report_for(
+            r#"
+            _start:
+                li a0, 5
+                li a1, 7
+                add a2, a0, a1
+                ebreak
+            "#,
+        );
+        assert!(r.clean(), "{:?}", r.diagnostics);
+        assert_eq!(r.blocks.len(), 1);
+        assert_eq!(r.instructions, 4);
+        assert_eq!(r.functions.len(), 1);
+        // loop-free: a finite WCET exists and covers the 4 instructions
+        let wcet = r.functions[0].wcet_cycles.unwrap();
+        assert!(wcet >= 4, "{wcet}");
+        assert!(r.cpi_bound >= 1);
+        assert!(r.energy_bound_mj(1000) > 0.0);
+    }
+
+    #[test]
+    fn loop_has_unbounded_function_wcet_but_finite_cpi() {
+        let r = report_for(
+            r#"
+            _start:
+                li t0, 10
+            loop:
+                addi t0, t0, -1
+                bnez t0, loop
+                ebreak
+            "#,
+        );
+        assert!(r.clean(), "{:?}", r.diagnostics);
+        assert_eq!(r.functions[0].wcet_cycles, None);
+        assert!(r.cpi_bound >= 1);
+    }
+
+    #[test]
+    fn call_and_return_resolve_statically() {
+        // single call site: ra stays Const through the callee, so the
+        // ret resolves and the whole thing is loop-free with a WCET
+        let r = report_for(
+            r#"
+            _start:
+                jal ra, leaf
+                ebreak
+            leaf:
+                addi a0, a0, 1
+                ret
+            "#,
+        );
+        assert!(r.clean(), "{:?}", r.diagnostics);
+        assert_eq!(r.call_depth, 2);
+        assert_eq!(r.functions.len(), 2);
+        for f in &r.functions {
+            assert!(f.wcet_cycles.is_some(), "{} unbounded", f.name);
+        }
+        let main = r.functions.iter().find(|f| f.name == "_start").unwrap();
+        let leaf = r.functions.iter().find(|f| f.name == "leaf").unwrap();
+        assert!(main.wcet_cycles.unwrap() > leaf.wcet_cycles.unwrap());
+    }
+
+    #[test]
+    fn block_map_matches_backend_shapes() {
+        // run the same guest on the blocks backend and compare shapes
+        let src = r#"
+            _start:
+                li t0, 3
+            loop:
+                addi t0, t0, -1
+                bnez t0, loop
+                ebreak
+        "#;
+        let prog = assemble(src).unwrap();
+        let r = analyze_program(&prog, "shapes", &AnalyzeConfig::default());
+
+        let mut soc_cfg = crate::soc::SocConfig::default();
+        soc_cfg.backend = crate::exec::BackendKind::Blocks;
+        let mut soc = Soc::new(soc_cfg);
+        soc.load(&prog).unwrap();
+        soc.run_to_halt(1 << 20);
+        assert_eq!(soc.block_map(), r.blocks);
+        assert_eq!(soc.exec_stats().blocks_built as usize, r.blocks.len());
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let r = report_for("_start: ebreak");
+        let text = r.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str().unwrap(), "test");
+        assert_eq!(
+            parsed.get("summary").unwrap().get("errors").unwrap().as_i64().unwrap(),
+            0
+        );
+        assert!(r.render_text().contains("diagnostics: none"));
+    }
+
+    #[test]
+    fn from_soc_image_analyzes_loaded_memory() {
+        let prog = assemble("_start: li a0, 1\nebreak").unwrap();
+        let mut soc = Soc::new(crate::soc::SocConfig::default());
+        soc.load(&prog).unwrap();
+        let r = analyze_soc(&soc, "mem", &AnalyzeConfig::default());
+        assert!(r.clean(), "{:?}", r.diagnostics);
+        assert_eq!(r.instructions, 2); // addi + ebreak
+    }
+}

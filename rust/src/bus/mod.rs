@@ -31,6 +31,85 @@ pub const PERIPH_WAIT: u32 = 1;
 /// Extra wait states for bridge-window access (OBI→AXI→DDR crossing).
 pub const BRIDGE_WAIT: u32 = 20;
 
+/// Which address-map window an address lands in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Region {
+    /// SRAM banks (the only executable window).
+    Sram,
+    /// Peripheral registers (word-access only).
+    Periph,
+    /// Bridge window into CS DRAM.
+    Bridge,
+    /// Nothing decodes here: any access faults.
+    Unmapped,
+}
+
+impl Region {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Sram => "SRAM",
+            Self::Periph => "periph",
+            Self::Bridge => "bridge",
+            Self::Unmapped => "unmapped",
+        }
+    }
+}
+
+/// The platform address-map *shape*, detached from any live [`Bus`] —
+/// the single memory-map validation helper shared by the program loader
+/// ([`crate::soc::loader`]) and the static analyzer
+/// ([`crate::analyze`]), so "would this access fault?" has exactly one
+/// answer in the codebase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoryMap {
+    pub num_banks: usize,
+    pub bank_size: u32,
+    pub cs_dram_size: usize,
+}
+
+impl MemoryMap {
+    pub fn new(num_banks: usize, bank_size: u32, cs_dram_size: usize) -> Self {
+        Self { num_banks, bank_size, cs_dram_size }
+    }
+
+    /// One past the last SRAM byte.
+    pub fn sram_end(&self) -> u32 {
+        SRAM_BASE + self.num_banks as u32 * self.bank_size
+    }
+
+    /// Classify an address (mirrors the [`Bus`] decode exactly,
+    /// including the CS-DRAM bound the bridge window checks internally).
+    pub fn region(&self, addr: u32) -> Region {
+        if (SRAM_BASE..self.sram_end()).contains(&addr) {
+            Region::Sram
+        } else if (PERIPH_BASE..PERIPH_BASE + map::REGION).contains(&addr) {
+            Region::Periph
+        } else if addr >= BRIDGE_BASE
+            && (addr as u64) < BRIDGE_BASE as u64 + self.cs_dram_size as u64
+        {
+            Region::Bridge
+        } else {
+            Region::Unmapped
+        }
+    }
+
+    /// Validate that `[addr, addr + len)` lies entirely inside SRAM,
+    /// reporting the offending range and the actual window on failure.
+    pub fn check_sram_span(&self, addr: u32, len: usize) -> anyhow::Result<()> {
+        let end = addr as u64 + len as u64;
+        if addr < SRAM_BASE || end > self.sram_end() as u64 {
+            anyhow::bail!(
+                "address range {addr:#010x}..{end:#010x} falls outside SRAM \
+                 {SRAM_BASE:#010x}..{:#010x} ({} banks x {:#x} B)",
+                self.sram_end(),
+                self.num_banks,
+                self.bank_size,
+            );
+        }
+        Ok(())
+    }
+}
+
 /// The interconnect and everything behind it.
 pub struct Bus {
     pub banks: Vec<SramBank>,
@@ -84,6 +163,11 @@ impl Bus {
 
     fn sram_end(&self) -> u32 {
         SRAM_BASE + self.banks.len() as u32 * self.bank_size
+    }
+
+    /// The address-map shape of this bus (see [`MemoryMap`]).
+    pub fn memory_map(&self) -> MemoryMap {
+        MemoryMap::new(self.banks.len(), self.bank_size, self.cs_dram.size())
     }
 
     /// Which bank serves `addr`, if any.
@@ -397,6 +481,24 @@ mod tests {
         b.debug_write32(0x14, 7).unwrap();
         b.banks[0].set_state(crate::perfmon::PowerState::Active);
         assert_eq!(b.read(0x14, Size::Word, 0).unwrap().0, 7);
+    }
+
+    #[test]
+    fn memory_map_matches_bus_decode() {
+        let b = bus();
+        let m = b.memory_map();
+        assert_eq!(m.region(0), Region::Sram);
+        assert_eq!(m.region(2 * 0x2_0000 - 1), Region::Sram);
+        assert_eq!(m.region(2 * 0x2_0000), Region::Unmapped);
+        assert_eq!(m.region(PERIPH_BASE), Region::Periph);
+        assert_eq!(m.region(PERIPH_BASE + map::REGION), Region::Unmapped);
+        assert_eq!(m.region(BRIDGE_BASE), Region::Bridge);
+        assert_eq!(m.region(BRIDGE_BASE + (1 << 20)), Region::Unmapped);
+        assert!(m.check_sram_span(0, 2 * 0x2_0000).is_ok());
+        let err = m.check_sram_span(0x3_0000, 0x2_0000).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("0x00030000..0x00050000"), "{msg}");
+        assert!(msg.contains("outside SRAM"), "{msg}");
     }
 
     #[test]

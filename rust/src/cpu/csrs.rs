@@ -97,6 +97,37 @@ impl Csrs {
         }
         true
     }
+
+    /// Does this core implement the CSR at all? Mirrors [`Self::read`]
+    /// — the static analyzer ([`crate::analyze`]) uses these two query
+    /// helpers so its CSR lint can never drift from the trap behavior.
+    pub fn is_known(addr: u16) -> bool {
+        matches!(
+            addr,
+            csr::MSTATUS
+                | csr::MIE
+                | csr::MIP
+                | csr::MTVEC
+                | csr::MSCRATCH
+                | csr::MEPC
+                | csr::MCAUSE
+                | csr::MTVAL
+                | csr::MCYCLE
+                | csr::MCYCLEH
+                | csr::MINSTRET
+                | csr::MINSTRETH
+                | csr::MHARTID
+        )
+    }
+
+    /// Is the CSR read-only (a write traps)? Mirrors [`Self::write`];
+    /// note `mip` is writable-but-ignored, i.e. *not* read-only.
+    pub fn is_read_only(addr: u16) -> bool {
+        matches!(
+            addr,
+            csr::MCYCLE | csr::MCYCLEH | csr::MINSTRET | csr::MINSTRETH | csr::MHARTID
+        )
+    }
 }
 
 impl Csrs {
@@ -161,6 +192,24 @@ mod tests {
         let mut c = Csrs::new();
         assert_eq!(c.read(0x7C0, 0, 0), None);
         assert!(!c.write(0x7C0, 1));
+    }
+
+    #[test]
+    fn query_helpers_mirror_read_write() {
+        let mut c = Csrs::new();
+        for addr in 0u16..0x1000 {
+            assert_eq!(
+                Csrs::is_known(addr),
+                c.read(addr, 0, 0).is_some(),
+                "is_known({addr:#x}) drifted from read()"
+            );
+            let writable = c.write(addr, 0);
+            assert_eq!(
+                writable,
+                Csrs::is_known(addr) && !Csrs::is_read_only(addr),
+                "is_read_only({addr:#x}) drifted from write()"
+            );
+        }
     }
 
     #[test]

@@ -570,8 +570,12 @@ impl Cpu {
     }
 }
 
+/// The one ALU evaluation function: the interpreter executes through it
+/// and the static analyzer's constant propagation folds through it
+/// ([`crate::analyze`]), so resolved addresses can never drift from what
+/// execution computes.
 #[inline]
-fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+pub(crate) fn alu(op: AluOp, a: u32, b: u32) -> u32 {
     match op {
         AluOp::Add => a.wrapping_add(b),
         AluOp::Sub => a.wrapping_sub(b),

@@ -6,6 +6,8 @@
 //! configurable from the platform TOML ([`crate::config`]) so a different
 //! host core can be modeled without recompiling.
 
+use crate::isa::{AluOp, Instr};
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Timing {
     /// ALU / LUI / AUIPC / FENCE base cost.
@@ -52,6 +54,38 @@ impl Default for Timing {
     }
 }
 
+impl Timing {
+    /// Worst-case cycle cost of one instruction executed from SRAM
+    /// (zero wait states): the base class cost, or the trap-entry cost
+    /// where the instruction can fault. This is the single bound shared
+    /// by the block backend's dispatch budget ([`crate::exec::blocks`])
+    /// and the static analyzer's WCET accounting
+    /// ([`crate::analyze`]) — one table, two consumers, no drift.
+    ///
+    /// Accesses that leave SRAM cost extra bus wait states on top; the
+    /// analyzer adds those separately where it can prove the target
+    /// window, and the block backend never replays them.
+    pub fn worst_cycles(&self, instr: Instr) -> u32 {
+        match instr {
+            Instr::Lui { .. } | Instr::Auipc { .. } | Instr::OpImm { .. } | Instr::Fence => {
+                self.alu
+            }
+            Instr::Jal { .. } | Instr::Jalr { .. } | Instr::Mret => self.jump,
+            Instr::Branch { .. } => self.branch + self.branch_taken_penalty,
+            Instr::Load { .. } => self.load.max(self.trap_entry),
+            Instr::Store { .. } => self.store.max(self.trap_entry),
+            Instr::Op { op, .. } => match op {
+                AluOp::Mul | AluOp::Mulh | AluOp::Mulhsu | AluOp::Mulhu => self.mul,
+                AluOp::Div | AluOp::Divu | AluOp::Rem | AluOp::Remu => self.div,
+                _ => self.alu,
+            },
+            Instr::Ecall => self.trap_entry,
+            Instr::Ebreak | Instr::Wfi => self.alu,
+            Instr::Csr { .. } => self.csr.max(self.trap_entry),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,5 +95,25 @@ mod tests {
         let t = Timing::default();
         assert!(t.div > t.mul);
         assert!(t.load >= 1 && t.trap_entry >= 1 && t.wake >= 1);
+    }
+
+    #[test]
+    fn worst_cycles_covers_every_class() {
+        let t = Timing::default();
+        assert_eq!(t.worst_cycles(Instr::Lui { rd: 1, imm: 0 }), t.alu);
+        assert_eq!(t.worst_cycles(Instr::Ecall), t.trap_entry);
+        assert_eq!(
+            t.worst_cycles(Instr::Branch {
+                op: crate::isa::BranchOp::Eq,
+                rs1: 0,
+                rs2: 0,
+                imm: 8
+            }),
+            t.branch + t.branch_taken_penalty
+        );
+        assert_eq!(
+            t.worst_cycles(Instr::Op { op: AluOp::Div, rd: 1, rs1: 2, rs2: 3 }),
+            t.div
+        );
     }
 }

@@ -146,6 +146,25 @@ impl EnergyModel {
             freq_hz: self.freq_hz,
         }
     }
+
+    /// Platform power with *every* domain Active, in mW — the ceiling no
+    /// residency split can exceed, since Active is the most expensive
+    /// state in both calibrations.
+    pub fn active_power_mw(&self, num_banks: usize) -> f64 {
+        self.cpu.get(PowerState::Active)
+            + self.bus.get(PowerState::Active)
+            + self.periph.get(PowerState::Active)
+            + num_banks as f64 * self.mem_bank.get(PowerState::Active)
+            + self.cgra.get(PowerState::Active)
+    }
+
+    /// Static worst-case energy for a run of at most `cycles` cycles:
+    /// all domains Active the whole time. For any real run of `c <=
+    /// cycles` cycles, `estimate()` ≤ this bound — the analyzer's
+    /// bounds-vs-reality tests assert it ([`crate::analyze`]).
+    pub fn bound_mj(&self, cycles: u64, num_banks: usize) -> f64 {
+        self.active_power_mw(num_banks) * cycles as f64 / self.freq_hz as f64
+    }
 }
 
 /// The output of an estimation pass.
@@ -250,6 +269,22 @@ mod tests {
         assert!(keys.contains(&"cgra".to_string()));
         let sum: f64 = r.per_domain_mj.values().sum();
         assert!((sum - r.total_mj).abs() < 1e-12);
+    }
+
+    #[test]
+    fn static_bound_dominates_any_estimate() {
+        // all-active is the worst case: any residency split at or under
+        // the cycle bound estimates at or under bound_mj
+        let m = EnergyModel::femu();
+        let snap = snapshot_active_for(1_000_000, 2);
+        let measured = m.estimate(&snap).total_mj;
+        let bound = m.bound_mj(1_000_000, 2);
+        assert!(bound >= measured, "{bound} < {measured}");
+
+        let mut pm = PerfMonitor::new(2);
+        pm.set_state(Domain::Cpu, PowerState::ClockGated, 500);
+        let sleepy = m.estimate(&pm.snapshot(1_000_000)).total_mj;
+        assert!(bound >= sleepy);
     }
 
     #[test]

@@ -37,20 +37,22 @@
 //! the `backend_differential` tests hold that line.
 
 use crate::cpu::{CpuState, Timing};
-use crate::isa::{self, AluOp, Instr};
+use crate::isa::{self, Instr};
 use crate::mem::GEN_PAGE_SHIFT;
 use crate::perfmon::PowerState;
 use crate::soc::{RunExit, Soc};
 
 use super::interp::{idle_step, service_exit, single_step, Idle};
-use super::{BackendKind, ExecBackend, ExecStats, SliceResult};
+use super::{BackendKind, BlockInfo, ExecBackend, ExecStats, SliceResult};
 
 /// Direct-mapped block-cache capacity (entry-pc slots).
 const BLOCK_SLOTS: usize = 1 << 14;
 
 /// Upper bound on instructions per block (blocks are also cut at
 /// write-generation page boundaries so each maps to exactly one page).
-const MAX_BLOCK_LEN: usize = 64;
+/// Shared with the static analyzer so its recovered CFG cuts blocks at
+/// exactly the pcs this backend does.
+pub(crate) const MAX_BLOCK_LEN: usize = 64;
 
 /// One compiled basic block: straight-line decoded instructions up to
 /// and including the first control transfer (or anything that can
@@ -130,6 +132,46 @@ impl ExecBackend for BlockBackend {
     fn exec_stats(&self) -> ExecStats {
         self.stats
     }
+
+    /// Warm the block cache from statically recovered entry pcs
+    /// ([`crate::analyze`] exports them). Entries that don't decode to
+    /// at least one instruction, live outside powered SRAM, or lose a
+    /// direct-mapped slot conflict are skipped — the on-demand path
+    /// still handles them, so this can only ever *reduce* warm-up work,
+    /// never change results.
+    fn precompile(&mut self, soc: &Soc, entries: &[u32]) {
+        for &pc in entries {
+            let Some(bank) = soc.bus.bank_index(pc) else { continue };
+            match soc.bus.banks[bank].state() {
+                PowerState::Active | PowerState::ClockGated => {}
+                _ => continue,
+            }
+            let slot = Self::slot(pc);
+            if self.blocks[slot].is_some() {
+                // already warmed, or a direct-mapped conflict: first
+                // entry wins, the loser warms on demand
+                continue;
+            }
+            let off = soc.bus.bank_offset(pc);
+            let page = off >> GEN_PAGE_SHIFT;
+            let gen = soc.bus.banks[bank].page_gen(off);
+            if let Some(b) = build_block(soc, pc, bank, page, gen) {
+                self.blocks[slot] = Some(Box::new(b));
+                self.stats.blocks_built += 1;
+            }
+        }
+    }
+
+    fn block_map(&self) -> Vec<BlockInfo> {
+        let mut map: Vec<BlockInfo> = self
+            .blocks
+            .iter()
+            .flatten()
+            .map(|b| BlockInfo { pc: b.pc, len: b.body.len() as u32, max_cycles: b.max_cycles })
+            .collect();
+        map.sort();
+        map
+    }
 }
 
 impl BlockBackend {
@@ -187,8 +229,22 @@ impl BlockBackend {
         if bound > deadline || bound >= soc.event_horizon() {
             return Dispatch::Fallback;
         }
+        // forward-progress guard: a block whose *first* instruction is
+        // a device (non-SRAM) access would bail out of the replay loop
+        // before executing anything — dispatching it makes zero
+        // progress, and `Ran(None)` would re-dispatch it forever. Let
+        // the reference path execute it instead.
+        if let Some(&(instr, _)) = block.body.first() {
+            if let Instr::Load { rs1, imm, .. } | Instr::Store { rs1, imm, .. } = instr {
+                let addr = soc.cpu.regs[rs1 as usize].wrapping_add(imm as u32);
+                if soc.bus.bank_index(addr).is_none() {
+                    return Dispatch::Fallback;
+                }
+            }
+        }
         self.stats.block_dispatches += 1;
-        Dispatch::Ran(exec_block(soc, block))
+        self.stats.bounded_cycles += block.max_cycles;
+        Dispatch::Ran(exec_block(soc, block, &mut self.stats))
     }
 }
 
@@ -198,7 +254,8 @@ impl BlockBackend {
 /// per-instruction post-step is exact, so the only divergence sources
 /// left are bus side effects, and the loop breaks back to the
 /// reference path before any of them.
-fn exec_block(soc: &mut Soc, block: &Block) -> Option<RunExit> {
+fn exec_block(soc: &mut Soc, block: &Block, stats: &mut ExecStats) -> Option<RunExit> {
+    let start = soc.now;
     for &(instr, word) in &block.body {
         // bail before any access that could leave SRAM: device reads
         // are side-effecting and bridge/periph waits differ — the
@@ -232,6 +289,9 @@ fn exec_block(soc: &mut Soc, block: &Block) -> Option<RunExit> {
             }
         }
     }
+    // cycles actually consumed vs the dispatch bound: the WCET contract
+    // (`block_cycles <= bounded_cycles`) the analyzer tests assert
+    stats.block_cycles += soc.now - start;
     soc.post_step();
     service_exit(soc)
 }
@@ -243,33 +303,55 @@ fn exec_block(soc: &mut Soc, block: &Block) -> Option<RunExit> {
 /// trap).
 fn build_block(soc: &Soc, pc: u32, bank: usize, page: usize, gen: u64) -> Option<Block> {
     let bank_ref = &soc.bus.banks[bank];
-    let t = &soc.cpu.timing;
-    let mut body = Vec::new();
-    let mut max_cycles = 0u64;
-    let mut off = soc.bus.bank_offset(pc);
-    loop {
-        let Ok(word) = bank_ref.fetch32(off) else { break };
-        let Some(instr) = isa::decode(word) else { break };
-        body.push((instr, word));
-        max_cycles += worst_cycles(t, instr) as u64;
-        if is_terminator(instr) || body.len() >= MAX_BLOCK_LEN {
-            break;
-        }
-        off += 4;
-        if off >> GEN_PAGE_SHIFT != page {
-            break;
-        }
-    }
+    let base_off = soc.bus.bank_offset(pc);
+    let (body, max_cycles) = scan_block(&soc.cpu.timing, pc, &mut |p| {
+        let off = base_off + (p.wrapping_sub(pc) as usize);
+        bank_ref.fetch32(off).ok()
+    });
     if body.is_empty() {
         return None;
     }
     Some(Block { pc, bank, page, gen, max_cycles, body })
 }
 
+/// The one block-shape scanner: decode straight-line instructions from
+/// `pc` up to and including the first terminator, bounded by
+/// [`MAX_BLOCK_LEN`] and the enclosing write-generation page
+/// ([`GEN_PAGE_SHIFT`] applied to the pc — SRAM starts at 0 and banks
+/// are page-multiples, so pc pages and bank-offset pages cut at the
+/// same addresses). Shared between [`build_block`] (dynamic warm-up)
+/// and the static analyzer's CFG recovery ([`crate::analyze`]), which
+/// is what makes "statically recovered block map == dynamically
+/// compiled block map" provable rather than coincidental.
+pub(crate) fn scan_block(
+    t: &Timing,
+    pc: u32,
+    fetch: &mut dyn FnMut(u32) -> Option<u32>,
+) -> (Vec<(Instr, u32)>, u64) {
+    let page = pc >> GEN_PAGE_SHIFT;
+    let mut body = Vec::new();
+    let mut max_cycles = 0u64;
+    let mut p = pc;
+    loop {
+        let Some(word) = fetch(p) else { break };
+        let Some(instr) = isa::decode(word) else { break };
+        body.push((instr, word));
+        max_cycles += t.worst_cycles(instr) as u64;
+        if is_terminator(instr) || body.len() >= MAX_BLOCK_LEN {
+            break;
+        }
+        p = p.wrapping_add(4);
+        if p >> GEN_PAGE_SHIFT != page {
+            break;
+        }
+    }
+    (body, max_cycles)
+}
+
 /// Instructions that end a block: control transfers, plus anything that
 /// can retarget the pc or change interrupt visibility (CSR writes and
 /// `mret` can unmask a pending interrupt; the next dispatch re-checks).
-fn is_terminator(i: Instr) -> bool {
+pub(crate) fn is_terminator(i: Instr) -> bool {
     matches!(
         i,
         Instr::Branch { .. }
@@ -281,25 +363,4 @@ fn is_terminator(i: Instr) -> bool {
             | Instr::Mret
             | Instr::Csr { .. }
     )
-}
-
-/// Worst-case cycle cost of one in-block instruction. Blocks only run
-/// against SRAM (zero wait states), so the bound is the base class cost
-/// — or the trap-entry cost where the instruction can fault.
-fn worst_cycles(t: &Timing, instr: Instr) -> u32 {
-    match instr {
-        Instr::Lui { .. } | Instr::Auipc { .. } | Instr::OpImm { .. } | Instr::Fence => t.alu,
-        Instr::Jal { .. } | Instr::Jalr { .. } | Instr::Mret => t.jump,
-        Instr::Branch { .. } => t.branch + t.branch_taken_penalty,
-        Instr::Load { .. } => t.load.max(t.trap_entry),
-        Instr::Store { .. } => t.store.max(t.trap_entry),
-        Instr::Op { op, .. } => match op {
-            AluOp::Mul | AluOp::Mulh | AluOp::Mulhsu | AluOp::Mulhu => t.mul,
-            AluOp::Div | AluOp::Divu | AluOp::Rem | AluOp::Remu => t.div,
-            _ => t.alu,
-        },
-        Instr::Ecall => t.trap_entry,
-        Instr::Ebreak | Instr::Wfi => t.alu,
-        Instr::Csr { .. } => t.csr.max(t.trap_entry),
-    }
 }

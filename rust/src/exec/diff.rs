@@ -343,6 +343,67 @@ pub fn lockstep_workload(
     lockstep(workload, &mut pa, &mut pb, opts)
 }
 
+/// Statically analyze `p`'s loaded memory and warm its block cache with
+/// the recovered block map ([`crate::analyze`] feeding
+/// [`crate::soc::Soc::precompile`]). Returns how many entries were
+/// offered to the backend.
+fn precompile_from_analysis(p: &mut Platform, cfg: &PlatformConfig, name: &str) -> usize {
+    let acfg = crate::analyze::AnalyzeConfig::from_platform(cfg);
+    let report = crate::analyze::analyze_soc(&p.dbg.soc, name, &acfg);
+    let entries = report.block_entries();
+    p.dbg.soc.precompile(&entries);
+    entries.len()
+}
+
+/// The `femu diff --precompile` proof: run a workload on two *blocks*
+/// platforms, one cold and one with its cache precompiled from the
+/// static analyzer's block map, and show the warm-up is architecturally
+/// invisible — precompiled blocks are derived state, so every
+/// checkpoint (exits, clocks, retired streams, full snapshot payloads)
+/// must stay bit-identical.
+pub fn lockstep_workload_precompiled(
+    cfg: &PlatformConfig,
+    workload: &str,
+    opts: &LockstepOptions,
+) -> Result<LockstepReport> {
+    let (mut pa, mut pb) = platform_pair(cfg, BackendKind::Blocks, BackendKind::Blocks);
+    prepare(&mut pa, workload)?;
+    prepare(&mut pb, workload)?;
+    precompile_from_analysis(&mut pb, cfg, workload);
+    let mut r = lockstep(workload, &mut pa, &mut pb, opts)?;
+    r.workload = format!("{workload}+precompile");
+    Ok(r)
+}
+
+/// Cold-vs-precompiled diff of an arbitrary assembly source (the
+/// `femu diff <prog.s> --precompile` path).
+pub fn lockstep_source_precompiled(
+    cfg: &PlatformConfig,
+    name: &str,
+    source: &str,
+    opts: &LockstepOptions,
+) -> Result<LockstepReport> {
+    let (mut pa, mut pb) = platform_pair(cfg, BackendKind::Blocks, BackendKind::Blocks);
+    pa.dbg.load_source(source)?;
+    pb.dbg.load_source(source)?;
+    precompile_from_analysis(&mut pb, cfg, name);
+    let mut r = lockstep(name, &mut pa, &mut pb, opts)?;
+    r.workload = format!("{name}+precompile");
+    Ok(r)
+}
+
+/// The whole suite cold-vs-precompiled, one fleet point per workload.
+pub fn lockstep_workloads_precompiled(
+    fleet: &Fleet,
+    cfg: &PlatformConfig,
+    opts: &LockstepOptions,
+) -> Result<Vec<LockstepReport>> {
+    let opts = *opts;
+    fleet.run_sweep(cfg, 0xD1FF, LOCKSTEP_WORKLOADS.to_vec(), |cfg, workload, _seed| {
+        Ok(vec![lockstep_workload_precompiled(cfg, workload, &opts)?])
+    })
+}
+
 /// The whole suite, one fleet point per workload (reports in suite
 /// order regardless of worker count).
 pub fn lockstep_workloads(

@@ -103,6 +103,25 @@ pub struct ExecStats {
     pub block_invalidations: u64,
     /// Instructions executed through the single-step reference path.
     pub slow_steps: u64,
+    /// Sum of the worst-case cycle bounds of every dispatched block.
+    pub bounded_cycles: u64,
+    /// Cycles actually consumed inside dispatched blocks. The static
+    /// WCET contract is `block_cycles <= bounded_cycles`, always — the
+    /// bounds-vs-reality tests assert it after real runs.
+    pub block_cycles: u64,
+}
+
+/// One compiled (or statically recovered) basic block, as exported by
+/// [`ExecBackend::block_map`] and by the analyzer's CFG — the common
+/// currency of the precompile handshake (DESIGN.md §12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct BlockInfo {
+    /// Entry pc.
+    pub pc: u32,
+    /// Instructions in the block.
+    pub len: u32,
+    /// Worst-case cycles the whole block can consume.
+    pub max_cycles: u64,
 }
 
 /// The execution API. A backend owns the run loop: it advances the
@@ -134,5 +153,23 @@ pub trait ExecBackend: Send {
     /// Internal counters for diagnostics and tests.
     fn exec_stats(&self) -> ExecStats {
         ExecStats::default()
+    }
+
+    /// Warm derived caches for the given block-entry pcs (produced by
+    /// the static analyzer, [`crate::analyze`]) before execution
+    /// starts. Purely an optimization hook: a backend that ignores it
+    /// is still correct, because precompiled state is *derived* state —
+    /// the bit-identity contract is unaffected (only `exec_stats`
+    /// change). The default does nothing (the interpreter has no
+    /// caches).
+    fn precompile(&mut self, soc: &Soc, entries: &[u32]) {
+        let _ = (soc, entries);
+    }
+
+    /// The backend's current derived block view, for comparison against
+    /// the analyzer's statically recovered CFG. Backends without block
+    /// caches return an empty map.
+    fn block_map(&self) -> Vec<BlockInfo> {
+        Vec::new()
     }
 }

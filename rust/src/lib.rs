@@ -1,3 +1,11 @@
+// The emulator is safe Rust throughout, with no exceptions: the one
+// historical `unsafe impl Send` (server sessions moving platforms between
+// pool threads) was audited away — `Platform` is `Send` in safe Rust
+// because [`exec::ExecBackend`] carries `Send` as a supertrait; a
+// compile-time assertion in `server::session` keeps it that way.
+#![deny(unsafe_code)]
+
+pub mod analyze;
 pub mod bridge;
 pub mod bus;
 pub mod cgra;
@@ -24,6 +32,7 @@ pub mod workloads;
 /// a control server. `use femu::prelude::*;` — examples and benches use
 /// this instead of spelling out a dozen module paths.
 pub mod prelude {
+    pub use crate::analyze::{self, AnalyzeConfig, Report};
     pub use crate::config::PlatformConfig;
     pub use crate::coordinator::{experiments, AppExit, Fleet, Platform};
     pub use crate::energy::{EnergyModel, EnergyReport};

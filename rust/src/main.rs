@@ -116,6 +116,7 @@ fn run() -> Result<()> {
         "kernels" => cmd_kernels(&args),
         "flash-study" => cmd_flash_study(&args),
         "diff" => cmd_diff(&args),
+        "analyze" => cmd_analyze(&args),
         "table1" => cmd_table1(),
         "disasm" => cmd_disasm(&args),
         "serve" => cmd_serve(&args),
@@ -142,7 +143,10 @@ fn print_usage() {
          femu kernels [--validate]                    reproduce Fig 5\n  \
          femu flash-study [--scale N]                 reproduce Case C (\u{a7}V-C)\n  \
          femu diff [prog.s] [--backends A,B] [--experiments] [--window-s S]\n  \
-         \x20         [--scale N] [--checkpoint-cycles N]  lockstep backend diff\n  \
+         \x20         [--scale N] [--checkpoint-cycles N] [--precompile]\n  \
+         \x20                                      lockstep backend diff\n  \
+         femu analyze [prog.s] [--builtin NAME|all] [--from-snapshot FILE]\n  \
+         \x20          [--config <platform.toml>] [--json]  static analysis\n  \
          femu table1                                  reproduce Table I\n  \
          femu serve [--addr HOST:PORT] [--artifacts DIR] [--max-sessions N]\n  \
          \x20          [--workers N] [--idle-timeout SECS] [--configs DIR]\n\n\
@@ -557,6 +561,23 @@ fn cmd_diff(args: &Args) -> Result<()> {
         println!("  [{}] {r}", if r.matched() { "ok" } else { "DIVERGED" });
         failed |= !r.matched();
     }
+    if args.switches.iter().any(|s| s == "precompile") {
+        // cold vs analyzer-precompiled block caches, both on the blocks
+        // backend: warming must be architecturally invisible
+        println!("== precompile diff: blocks cold vs analyzer-precompiled ==");
+        let pre = match args.positional.first() {
+            Some(path) => {
+                let src =
+                    std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+                vec![diff::lockstep_source_precompiled(&cfg, path, &src, &opts)?]
+            }
+            None => diff::lockstep_workloads_precompiled(&fleet, &cfg, &opts)?,
+        };
+        for r in &pre {
+            println!("  [{}] {r}", if r.matched() { "ok" } else { "DIVERGED" });
+            failed |= !r.matched();
+        }
+    }
     if args.switches.iter().any(|s| s == "experiments") {
         let window_s =
             args.flags.get("window-s").map(|s| s.parse::<f64>()).transpose()?.unwrap_or(0.05);
@@ -581,6 +602,72 @@ fn cmd_diff(args: &Args) -> Result<()> {
         bail!("backends {a} and {b} diverged");
     }
     println!("backends {a} and {b} are bit-identical on everything tested");
+    Ok(())
+}
+
+/// `femu analyze`: static analysis of guest firmware — CFG recovery,
+/// `FEMU-Axxx` lints, static WCET/energy bounds, and the block map the
+/// blocks backend can precompile from (DESIGN.md §12). Exits nonzero if
+/// any target produces diagnostics, so CI can gate on a clean report.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use femu::analyze::{self, AnalyzeConfig};
+    use femu::workloads::{builtin, BUILTIN_NAMES};
+
+    let cfg = load_config(args)?;
+    let acfg = AnalyzeConfig::from_platform(&cfg);
+    let json = args.switches.iter().any(|s| s == "json");
+
+    // collect (name, report) for every requested target
+    let mut reports: Vec<analyze::Report> = Vec::new();
+    if let Some(which) = args.flags.get("builtin") {
+        let names: Vec<&str> = if which == "all" {
+            BUILTIN_NAMES.to_vec()
+        } else {
+            vec![which.as_str()]
+        };
+        for name in names {
+            let src = builtin(name).ok_or_else(|| {
+                anyhow!("unknown builtin `{name}` (have: {})", BUILTIN_NAMES.join(", "))
+            })?;
+            let prog = femu::isa::assemble(&src).with_context(|| format!("assembling {name}"))?;
+            reports.push(analyze::analyze_program(&prog, name, &acfg));
+        }
+    }
+    if let Some(path) = args.flags.get("from-snapshot") {
+        let snap = PlatformSnapshot::load(path)?;
+        let mut platform = Platform::new(cfg.clone());
+        platform.restore(&snap)?;
+        reports.push(analyze::analyze_soc(&platform.dbg.soc, path, &acfg));
+    }
+    for path in &args.positional {
+        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let prog = femu::isa::assemble(&src).with_context(|| format!("assembling {path}"))?;
+        reports.push(analyze::analyze_program(&prog, path, &acfg));
+    }
+    if reports.is_empty() {
+        bail!("nothing to analyze: pass a .s file, --builtin NAME|all, or --from-snapshot FILE");
+    }
+
+    if json {
+        let arr = femu::util::Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+        println!("{arr}");
+    } else {
+        for r in &reports {
+            print!("{}", r.render_text());
+        }
+    }
+    let dirty: Vec<&analyze::Report> = reports.iter().filter(|r| !r.clean()).collect();
+    if !dirty.is_empty() {
+        bail!(
+            "{} of {} target(s) produced diagnostics: {}",
+            dirty.len(),
+            reports.len(),
+            dirty.iter().map(|r| r.name.as_str()).collect::<Vec<_>>().join(", ")
+        );
+    }
+    if !json {
+        println!("all {} target(s) clean", reports.len());
+    }
     Ok(())
 }
 

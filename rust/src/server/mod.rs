@@ -59,8 +59,11 @@ pub use session::{ConfigRegistry, Session, SessionTable, DEFAULT_SESSION};
 /// `"interp"` / `"blocks"`) and error responses grew the additive
 /// machine-readable `error_kind` field ([`protocol::ErrorKind`]). v3 is
 /// backward compatible: v2 requests and substring-matching error
-/// handling behave exactly as before.
-pub const PROTO_VERSION: u32 = 3;
+/// handling behave exactly as before. Bumped to 4 when the additive
+/// `analyze` command arrived (static analysis of the session's current
+/// memory: CFG, `FEMU-Axxx` lints, WCET/energy bounds, block map —
+/// [`crate::analyze`]); every v3 request is unchanged.
+pub const PROTO_VERSION: u32 = 4;
 
 /// The one-line JSON banner every accepted connection receives before
 /// its first request: `{"hello":"femu-control-server","proto":...,

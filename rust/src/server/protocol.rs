@@ -238,6 +238,9 @@ pub enum PlatformCmd {
     SnapshotRestore { snapshot: Box<PlatformSnapshot> },
     Perf,
     Energy { model: String },
+    /// Static analysis of the session's current memory from the current
+    /// pc (proto v4): CFG, lints, WCET/energy bounds, block map.
+    Analyze,
 }
 
 impl PlatformCmd {
@@ -310,6 +313,7 @@ impl PlatformCmd {
                 }
                 PlatformCmd::Energy { model }
             }
+            "analyze" => PlatformCmd::Analyze,
             other => {
                 return Err(proto_err(
                     ErrorKind::UnknownCommand,
@@ -435,6 +439,11 @@ impl PlatformCmd {
                     ("sleep_mj", Json::Num(r.sleep_mj)),
                     ("seconds", Json::Num(r.seconds())),
                 ]))
+            }
+            PlatformCmd::Analyze => {
+                let acfg = crate::analyze::AnalyzeConfig::from_platform(&p.cfg);
+                let report = crate::analyze::analyze_soc(&p.dbg.soc, "session", &acfg);
+                Ok(report.to_json())
             }
         }
     }
@@ -639,6 +648,21 @@ mod tests {
     fn exec(p: &mut Platform, req: Json) -> Result<Json> {
         let cmd = req.str_field("cmd")?.to_string();
         execute_platform_cmd(p, &cmd, &req, &never())
+    }
+
+    #[test]
+    fn analyze_reports_the_loaded_guest() {
+        let mut p = platform();
+        p.dbg.load_source("_start: li a0, 5\nli a1, 7\nadd a2, a0, a1\nebreak").unwrap();
+        let r = exec(&mut p, Json::obj(vec![("cmd", Json::from("analyze"))])).unwrap();
+        assert_eq!(r.get("entry").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(r.get("instructions").unwrap().as_i64().unwrap(), 4);
+        assert!(r.get("block_map").unwrap().as_arr().unwrap().len() >= 1);
+        // memory images carry no text extent, so no unreachable-text
+        // noise from the data section — a loaded straight-line guest is
+        // clean over the wire
+        assert_eq!(r.get("diagnostics").unwrap().as_arr().unwrap().len(), 0);
+        assert!(r.get("cpi_bound").unwrap().as_i64().unwrap() >= 1);
     }
 
     #[test]

@@ -23,20 +23,27 @@ use crate::util::Json;
 /// The id of the default session (the platform `Server::spawn` received).
 pub const DEFAULT_SESSION: u64 = 0;
 
-/// Platform wrapper moved between pool threads. The `xla` crate's PJRT
-/// handles are `Rc`-based and thus not `Send`; every access happens with
-/// the session `Mutex` held and the `Rc`s never escape the platform, so
-/// moving the whole platform between threads is sound.
-struct SendPlatform(Platform);
-// SAFETY: see above — Mutex-serialized access, no Rc clones escape.
-unsafe impl Send for SendPlatform {}
+// Sessions hand their platform between pool worker threads, which needs
+// `Platform: Send`. This used to be asserted with an
+// `unsafe impl Send` wrapper justified by a stale comment about a
+// non-`Send` dependency the crate does not have. The audit conclusion:
+// every type inside `Platform` is plain owned data, and the one dyn
+// boundary ([`crate::exec::ExecBackend`]) carries `Send` as a supertrait
+// — so the property holds in safe Rust, and the crate can (and does)
+// `#![deny(unsafe_code)]` with no exceptions. This assertion turns any
+// future regression (say, an `Rc` slipping into a peripheral) into a
+// compile error here instead of an unsound wrapper.
+const _: fn() = || {
+    fn assert_send<T: Send>() {}
+    assert_send::<Platform>();
+};
 
 /// One client-owned platform instance.
 pub struct Session {
     id: u64,
     /// Human-readable config provenance (named config or inline name).
     config_label: String,
-    platform: Mutex<SendPlatform>,
+    platform: Mutex<Platform>,
     /// Set when the session is closed or the server shuts down; a
     /// long `run` in flight observes it at its next slice boundary and
     /// returns with exit `"interrupted"`.
@@ -49,7 +56,7 @@ impl Session {
         Self {
             id,
             config_label,
-            platform: Mutex::new(SendPlatform(platform)),
+            platform: Mutex::new(platform),
             cancel: AtomicBool::new(false),
             last_used: Mutex::new(Instant::now()),
         }
@@ -79,7 +86,7 @@ impl Session {
             .platform
             .lock()
             .map_err(|_| anyhow!("session {} platform poisoned by an earlier panic", self.id))?;
-        let r = f(&mut guard.0);
+        let r = f(&mut guard);
         drop(guard);
         self.touch();
         Ok(r)

@@ -4,24 +4,21 @@
 //! reprogramming path (§III-A: "seamless reprogramming ... directly from
 //! a script").
 
-use anyhow::{bail, Result};
+use anyhow::{Context, Result};
 
 use crate::bus::{Bus, SRAM_BASE};
 use crate::isa::Program;
 
 /// Copy `bytes` into SRAM starting at `addr`, spanning banks as needed.
 /// Ignores bank power states (debugger path powers banks implicitly).
+/// Out-of-window loads are rejected with the offending address range
+/// (the same [`crate::bus::MemoryMap`] check `femu analyze` lints with).
 pub fn load_bytes(bus: &mut Bus, addr: u32, bytes: &[u8]) -> Result<()> {
     let bank_size = bus.bank_size as usize;
-    let sram_len = bus.banks.len() * bank_size;
+    bus.memory_map()
+        .check_sram_span(addr, bytes.len())
+        .with_context(|| format!("loading {} bytes", bytes.len()))?;
     let start = (addr - SRAM_BASE) as usize;
-    if start + bytes.len() > sram_len {
-        bail!(
-            "load of {} bytes at {addr:#x} exceeds SRAM ({} banks x {bank_size:#x})",
-            bytes.len(),
-            bus.banks.len()
-        );
-    }
     let mut off = start;
     let mut rest = bytes;
     while !rest.is_empty() {
@@ -70,10 +67,15 @@ mod tests {
     }
 
     #[test]
-    fn oversize_load_rejected() {
+    fn oversize_load_rejected_with_offending_range() {
         let mut b = bus();
         let bytes = vec![0u8; 0x300];
-        assert!(load_bytes(&mut b, 0, &bytes).is_err());
+        let err = load_bytes(&mut b, 0, &bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        // the error names the offending range and the actual window
+        assert!(msg.contains("0x00000000..0x00000300"), "{msg}");
+        assert!(msg.contains("outside SRAM"), "{msg}");
+        assert!(msg.contains("0x00000200"), "{msg}");
     }
 
     #[test]

@@ -148,6 +148,23 @@ impl Soc {
         self.backend.as_ref().map(|b| b.exec_stats()).unwrap_or_default()
     }
 
+    /// Warm the backend's derived caches for the given block-entry pcs
+    /// (the static analyzer's block-map export, [`crate::analyze`]).
+    /// A no-op on backends without caches; never changes results —
+    /// `femu diff --precompile` proves it.
+    pub fn precompile(&mut self, entries: &[u32]) {
+        let mut backend = self.backend.take().expect("execution backend in use");
+        backend.precompile(self, entries);
+        self.backend = Some(backend);
+    }
+
+    /// The backend's current derived block view (empty for backends
+    /// without block caches), for comparison against the statically
+    /// recovered CFG.
+    pub fn block_map(&self) -> Vec<crate::exec::BlockInfo> {
+        self.backend.as_ref().map(|b| b.block_map()).unwrap_or_default()
+    }
+
     /// Load a guest program and point the CPU at its entry (the debugger
     /// virtualization path does the same through [`crate::virt::debugger`]).
     pub fn load(&mut self, prog: &Program) -> anyhow::Result<()> {

@@ -7,3 +7,48 @@ pub mod reference;
 pub mod signals;
 
 pub use reference::{bit_reverse_permute, fft_q15, twiddles_q15};
+
+/// Names of the built-in guest programs, at their canonical parameters —
+/// the set `femu analyze --builtin all` lints and CI keeps at zero
+/// diagnostics.
+pub const BUILTIN_NAMES: &[&str] = &[
+    "acquisition",
+    "classifier_mailbox",
+    "conv_cgra",
+    "conv_cpu",
+    "fft_cgra",
+    "fft_cpu",
+    "mm_cgra",
+    "mm_cpu",
+];
+
+/// Source of the built-in workload `name` at its canonical parameters
+/// (the sizes the paper's case studies run), or `None` for an unknown
+/// name.
+pub fn builtin(name: &str) -> Option<String> {
+    Some(match name {
+        "acquisition" => programs::acquisition(100, 2),
+        "classifier_mailbox" => programs::classifier_mailbox(512, 4, 0x1000),
+        "conv_cgra" => programs::conv_cgra(16, 16, 3, 8, 3, 3),
+        "conv_cpu" => programs::conv_cpu(16, 16, 3, 8, 3, 3),
+        "fft_cgra" => programs::fft_cgra(512),
+        "fft_cpu" => programs::fft_cpu(512),
+        "mm_cgra" => programs::mm_cgra(121, 16, 4),
+        "mm_cpu" => programs::mm_cpu(121, 16, 4),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_name_and_assembles() {
+        for &name in BUILTIN_NAMES {
+            let src = builtin(name).unwrap_or_else(|| panic!("{name} missing"));
+            crate::isa::assemble(&src).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        }
+        assert!(builtin("nope").is_none());
+    }
+}

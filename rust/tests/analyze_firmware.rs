@@ -1,0 +1,212 @@
+//! End-to-end validation of the static analyzer (DESIGN.md §12) against
+//! real execution:
+//!
+//! * every built-in workload lints at **zero diagnostics** (the CI
+//!   analyzer-lint job runs the same check through the CLI),
+//! * for the pure-CPU kernels, the statically recovered block map is
+//!   *identical* to what the blocks backend builds dynamically, and
+//!   precompiling from it leaves nothing to build at run time,
+//! * the self-modifying-code workload trips FEMU-A003,
+//! * the static WCET/CPI and energy ceilings bound the measured
+//!   `perf_snapshot()` numbers of real runs.
+
+use femu::analyze::{analyze_program, AnalyzeConfig, Severity};
+use femu::config::PlatformConfig;
+use femu::coordinator::{AppExit, Platform};
+use femu::exec::BackendKind;
+use femu::isa::assemble;
+use femu::soc::{Soc, SocConfig};
+use femu::workloads::{builtin, BUILTIN_NAMES};
+
+/// Kernels with no peripheral waits, interrupts, or sleep: the cases
+/// where the static block map must match the dynamic one exactly.
+const CPU_KERNELS: [&str; 3] = ["mm_cpu", "conv_cpu", "fft_cpu"];
+
+const BUDGET: u64 = 1 << 26;
+
+fn blocks_soc() -> Soc {
+    let cfg = SocConfig { backend: BackendKind::Blocks, ..SocConfig::default() };
+    Soc::new(cfg)
+}
+
+#[test]
+fn every_builtin_lints_clean() {
+    let cfg = AnalyzeConfig::default();
+    for &name in BUILTIN_NAMES {
+        let prog = assemble(&builtin(name).unwrap()).unwrap();
+        let r = analyze_program(&prog, name, &cfg);
+        assert!(
+            r.clean(),
+            "{name}: expected zero diagnostics, got {:#?}",
+            r.diagnostics
+        );
+        assert!(r.instructions > 0, "{name}: nothing reachable");
+        assert!(!r.blocks.is_empty(), "{name}: empty block map");
+        assert!(r.cpi_bound >= 1, "{name}");
+    }
+}
+
+#[test]
+fn static_block_map_equals_dynamic_for_cpu_kernels() {
+    let cfg = AnalyzeConfig::default();
+    for name in CPU_KERNELS {
+        let prog = assemble(&builtin(name).unwrap()).unwrap();
+        let r = analyze_program(&prog, name, &cfg);
+
+        let mut soc = blocks_soc();
+        soc.load(&prog).unwrap();
+        soc.run_to_halt(BUDGET);
+
+        assert_eq!(
+            soc.block_map(),
+            r.blocks,
+            "{name}: static and dynamic block maps differ"
+        );
+        assert_eq!(
+            soc.exec_stats().blocks_built as usize,
+            r.blocks.len(),
+            "{name}: backend built blocks the analyzer missed (or vice versa)"
+        );
+    }
+}
+
+#[test]
+fn precompiled_cache_leaves_nothing_to_build() {
+    let cfg = AnalyzeConfig::default();
+    for name in CPU_KERNELS {
+        let prog = assemble(&builtin(name).unwrap()).unwrap();
+        let r = analyze_program(&prog, name, &cfg);
+        let entries = r.block_entries();
+
+        let mut soc = blocks_soc();
+        soc.load(&prog).unwrap();
+        soc.precompile(&entries);
+        assert_eq!(
+            soc.exec_stats().blocks_built as usize,
+            entries.len(),
+            "{name}: precompile did not build every offered entry"
+        );
+
+        soc.run_to_halt(BUDGET);
+        let stats = soc.exec_stats();
+        assert_eq!(
+            stats.blocks_built as usize,
+            entries.len(),
+            "{name}: run after precompile still had to build blocks"
+        );
+        assert_eq!(stats.block_invalidations, 0, "{name}");
+        assert_eq!(soc.block_map(), r.blocks, "{name}");
+    }
+}
+
+#[test]
+fn smc_workload_trips_a003() {
+    let src = femu::exec::diff::smc_patch_source();
+    let prog = assemble(&src).unwrap();
+    let r = analyze_program(&prog, "smc_patch", &AnalyzeConfig::default());
+    let hits: Vec<_> =
+        r.diagnostics.iter().filter(|d| d.rule == "FEMU-A003").collect();
+    assert!(
+        !hits.is_empty(),
+        "self-modifying store not flagged: {:#?}",
+        r.diagnostics
+    );
+    for d in hits {
+        assert_eq!(d.severity, Severity::Warning);
+        assert!(d.pc.is_some(), "A003 should point at the store");
+    }
+}
+
+#[test]
+fn static_bounds_cover_measured_runs() {
+    // run each CPU kernel for real and check every advertised bound:
+    // measured cycles <= instret * cpi_bound, measured energy <= the
+    // all-active ceiling, and the backend's own conservative cycle
+    // accounting brackets its fast-path cycles.
+    let pcfg = {
+        let mut c = PlatformConfig::default();
+        c.soc.backend = BackendKind::Blocks;
+        c
+    };
+    let acfg = AnalyzeConfig::from_platform(&pcfg);
+    for name in CPU_KERNELS {
+        let src = builtin(name).unwrap();
+        let prog = assemble(&src).unwrap();
+        let r = analyze_program(&prog, name, &acfg);
+        assert!(r.clean(), "{name}: {:#?}", r.diagnostics);
+
+        let mut p = Platform::new(pcfg.clone());
+        p.dbg.load_source(&src).unwrap();
+        match p.run_app(BUDGET).unwrap() {
+            AppExit::Halted(_) => {}
+            AppExit::Budget => panic!("{name} blew the cycle budget"),
+        }
+
+        let snap = p.perf_snapshot();
+        let instret = p.dbg.soc.cpu.instret;
+        assert!(instret > 0 && snap.cycles > 0, "{name}");
+        assert!(
+            snap.cycles <= r.cycle_bound(instret),
+            "{name}: measured {} cycles > static bound {} ({} instret x {} cpi)",
+            snap.cycles,
+            r.cycle_bound(instret),
+            instret,
+            r.cpi_bound,
+        );
+
+        let measured_mj = p.cfg.energy.estimate(&snap).total_mj;
+        let ceiling_mj = r.energy_bound_mj(snap.cycles);
+        assert!(
+            measured_mj <= ceiling_mj + 1e-12,
+            "{name}: measured {measured_mj} mJ > static ceiling {ceiling_mj} mJ"
+        );
+
+        let stats = p.dbg.soc.exec_stats();
+        assert!(
+            stats.block_cycles <= stats.bounded_cycles,
+            "{name}: fast-path accounting above its own bound"
+        );
+    }
+}
+
+#[test]
+fn call_program_gets_finite_wcet_and_depth() {
+    // the non-leaf saves ra in a callee-saved register (not the stack:
+    // the walk does not track memory, and a stack-reloaded ra would
+    // correctly lint as FEMU-A007)
+    let src = r#"
+        _start:
+            jal ra, outer
+            ebreak
+        outer:
+            mv s0, ra
+            jal ra, inner
+            mv ra, s0
+            ret
+        inner:
+            addi a0, a0, 1
+            ret
+    "#;
+    let prog = assemble(src).unwrap();
+    let r = analyze_program(&prog, "calls", &AnalyzeConfig::default());
+    assert!(r.clean(), "{:#?}", r.diagnostics);
+    assert_eq!(r.call_depth, 3);
+    for f in &r.functions {
+        assert!(
+            f.wcet_cycles.is_some(),
+            "loop-free fn {} reported unbounded",
+            f.name
+        );
+    }
+    // the static WCET of the whole program bounds an actual run
+    let main = r.functions.iter().find(|f| f.entry == r.entry).unwrap();
+    let mut soc = Soc::new(SocConfig::default());
+    soc.load(&prog).unwrap();
+    soc.run_to_halt(10_000);
+    assert!(
+        soc.now <= main.wcet_cycles.unwrap(),
+        "measured {} > WCET {}",
+        soc.now,
+        main.wcet_cycles.unwrap()
+    );
+}

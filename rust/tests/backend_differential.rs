@@ -82,6 +82,54 @@ fn self_modifying_code_invalidates_compiled_blocks() {
 }
 
 #[test]
+fn precompiled_block_cache_is_architecturally_invisible() {
+    // the `femu diff --precompile` contract as a test: for every suite
+    // workload, a blocks platform warmed from the static analyzer's
+    // block map stays bit-identical at every checkpoint to a cold one
+    let fleet = Fleet::new(2);
+    let cfg = PlatformConfig::default();
+    let reports = diff::lockstep_workloads_precompiled(&fleet, &cfg, &small_opts()).unwrap();
+    assert_eq!(reports.len(), diff::LOCKSTEP_WORKLOADS.len());
+    for r in &reports {
+        assert!(r.matched(), "{r}");
+        assert!(r.instret > 0, "{}: lockstep retired nothing", r.workload);
+    }
+}
+
+#[test]
+fn device_access_at_block_head_makes_progress() {
+    // regression guard for the zero-progress hazard: a block whose first
+    // instruction is a device access bails out of replay before
+    // executing anything, so dispatching it would spin forever — the
+    // backend must decline it and single-step instead
+    const SRC: &str = r#"
+        _start:
+            li t0, 0x20000100
+            li t1, 3
+        loop:
+            sw t1, 0(t0)
+            addi t1, t1, -1
+            bnez t1, loop
+            ebreak
+    "#;
+    let mut cfg = PlatformConfig::default();
+    cfg.soc.backend = BackendKind::Blocks;
+    let mut p = Platform::new(cfg.clone());
+    p.dbg.load_source(SRC).unwrap();
+    let exit = p.run_app(1 << 20).unwrap();
+    assert!(matches!(exit, AppExit::Halted(_)), "gpio loop did not halt: {exit:?}");
+    assert_eq!(p.dbg.reg(6), 0, "t1 should count down to zero");
+    let stats = p.dbg.soc.exec_stats();
+    assert!(stats.slow_steps > 0, "device accesses must single-step: {stats:?}");
+
+    // precompiling plants the device-head block in the cache before the
+    // first instruction ever runs — the exact setup the guard protects —
+    // and the run must still be bit-identical to a cold one
+    let r = diff::lockstep_source_precompiled(&cfg, "gpio_loop", SRC, &small_opts()).unwrap();
+    assert!(r.matched(), "{r}");
+}
+
+#[test]
 fn smc_result_matches_the_interpreter_exactly() {
     // the same guest through the reference interpreter: identical
     // architectural outcome, by definition of the backend contract

@@ -1,0 +1,208 @@
+//! Consistency sweeps across the ISA tooling: decoder, encoder, and the
+//! disassembler must agree on *which* words are instructions and on what
+//! they mean. `prop_isa.rs` checks round-trips from the instruction side;
+//! this file sweeps from the word side, systematically over the encoding
+//! space, including the rejected-encoding agreement the static analyzer
+//! relies on (a word is undecodable iff the disassembler renders it as raw
+//! `.word` data iff the CPU would raise an illegal-instruction trap).
+//!
+//! Invariants:
+//! * decode is total (never panics) over systematic and random words,
+//! * decode∘encode is idempotent: decode(encode(i)) == Some(i) for every
+//!   decoded i, even for non-canonical source words (fence variants),
+//! * disassemble_word(w) == disassemble(decode(w)) when w decodes, and
+//!   exactly `.word 0x........` when it does not,
+//! * re-assembling a disassembled word yields a word with the same decode.
+
+use femu::isa::{
+    assemble_with, decode, disassemble, disassemble_word, encode, Instr,
+};
+use femu::util::Rng;
+
+/// Mid-range pc anchor: pc-relative forms rendered at pc=0 can encode
+/// absolute targets beyond the ±1 MiB jal range (same anchor as
+/// `prop_isa.rs`).
+const PC: u32 = 0x10_0000;
+
+/// The single agreement check, applied to every word the sweeps produce.
+fn check_word(word: u32, ctx: &str) {
+    let rendered = disassemble_word(word, PC);
+    match decode(word) {
+        Some(instr) => {
+            // decode∘encode idempotence: the canonical re-encoding must
+            // mean the same thing (it need not be bit-identical — any
+            // opcode-0b0001111 word decodes to the one Fence).
+            assert_eq!(
+                decode(encode(instr)),
+                Some(instr),
+                "{ctx}: {word:#010x} -> {instr:?} not idempotent"
+            );
+            assert_eq!(
+                rendered,
+                disassemble(instr, PC),
+                "{ctx}: {word:#010x} disasm mismatch"
+            );
+        }
+        None => {
+            // Rejected-encoding agreement: the disassembler must surface
+            // undecodable words as raw data, never as an instruction.
+            assert_eq!(
+                rendered,
+                format!(".word {word:#010x}"),
+                "{ctx}: rejected {word:#010x} rendered as an instruction"
+            );
+        }
+    }
+}
+
+#[test]
+fn sweep_opcode_funct_space() {
+    // Systematic grid over the fields that select an encoding: every
+    // opcode × funct3 × the funct7 values the ISA distinguishes (plus an
+    // all-ones probe), with register/imm fields in a few fixed patterns.
+    // ~45k words covering every accept/reject arm in the decoder.
+    let regs: &[(u32, u32, u32)] = &[(0, 0, 0), (1, 2, 3), (31, 31, 31), (10, 0, 17)];
+    for opcode in 0..128u32 {
+        for funct3 in 0..8u32 {
+            for &funct7 in &[0u32, 0b0000001, 0b0100000, 0b1111111] {
+                for &(rd, rs1, rs2) in regs {
+                    let word = (funct7 << 25)
+                        | (rs2 << 20)
+                        | (rs1 << 15)
+                        | (funct3 << 12)
+                        | (rd << 7)
+                        | opcode;
+                    check_word(word, "grid");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_random_words() {
+    let mut rng = Rng::new(0xC0_515);
+    for case in 0..100_000 {
+        check_word(rng.next_u32(), &format!("random case {case}"));
+    }
+}
+
+#[test]
+fn system_words_exhaustive() {
+    // opcode 0b1110011 with funct3=0 admits exactly four words (ecall,
+    // ebreak, wfi, mret); sweep the entire 12-bit imm field and verify
+    // nothing else slips through, and that nonzero rd/rs1 reject even for
+    // the accepted imm values.
+    let mut accepted = Vec::new();
+    for imm in 0..4096u32 {
+        let word = (imm << 20) | 0b1110011;
+        if let Some(i) = decode(word) {
+            accepted.push((word, i));
+        }
+        check_word(word, "system imm sweep");
+    }
+    assert_eq!(
+        accepted,
+        vec![
+            (0x0000_0073, Instr::Ecall),
+            (0x0010_0073, Instr::Ebreak),
+            (0x1050_0073, Instr::Wfi),
+            (0x3020_0073, Instr::Mret),
+        ]
+    );
+    for (word, _) in accepted {
+        for (rd, rs1) in [(1u32, 0u32), (0, 1), (31, 31)] {
+            let bad = word | (rd << 7) | (rs1 << 15);
+            assert_eq!(decode(bad), None, "{bad:#010x} must reject");
+            check_word(bad, "system nonzero-reg");
+        }
+    }
+}
+
+#[test]
+fn csr_space_exhaustive() {
+    // Every CSR address × every Zicsr funct3 form decodes, round-trips,
+    // and disassembles consistently; funct3=0b100 (the hole in the Zicsr
+    // table) always rejects.
+    for csr in 0..4096u32 {
+        for funct3 in [1u32, 2, 3, 4, 5, 6, 7] {
+            let word = (csr << 20) | (5 << 15) | (funct3 << 12) | (6 << 7) | 0b1110011;
+            if funct3 == 0b100 {
+                assert_eq!(decode(word), None, "{word:#010x} funct3=100 must reject");
+            } else {
+                let i = decode(word).unwrap_or_else(|| panic!("{word:#010x} must decode"));
+                assert!(matches!(i, Instr::Csr { csr: c, .. } if c == csr as u16));
+            }
+            check_word(word, "csr sweep");
+        }
+    }
+}
+
+#[test]
+fn shift_immediate_funct7_exhaustive() {
+    // Shift-immediates are the one OpImm family gated on funct7: sweep all
+    // 128 funct7 values for funct3 ∈ {001, 101} and verify exactly the
+    // spec'd encodings decode (slli: funct7=0; srli: 0; srai: 0b0100000).
+    for funct3 in [0b001u32, 0b101] {
+        for funct7 in 0..128u32 {
+            for shamt in [0u32, 7, 31] {
+                let word =
+                    (funct7 << 25) | (shamt << 20) | (9 << 15) | (funct3 << 12) | (8 << 7) | 0b0010011;
+                let legal = funct7 == 0 || (funct3 == 0b101 && funct7 == 0b0100000);
+                assert_eq!(
+                    decode(word).is_some(),
+                    legal,
+                    "funct3={funct3:#05b} funct7={funct7:#09b} shamt={shamt}"
+                );
+                if let Some(Instr::OpImm { imm, .. }) = decode(word) {
+                    assert_eq!(imm, shamt as i32, "shamt must survive decode");
+                }
+                check_word(word, "shift sweep");
+            }
+        }
+    }
+}
+
+#[test]
+fn noncanonical_fence_words_normalize() {
+    // Any word with opcode 0b0001111 (fence, fence.i, arbitrary fm/pred/
+    // succ bits) decodes to the single Fence no-op; the canonical
+    // re-encoding differs bit-wise but must mean the same thing.
+    let mut rng = Rng::new(0xFE_CE);
+    for _ in 0..2_000 {
+        let word = (rng.next_u32() & !0x7F) | 0b0001111;
+        assert_eq!(decode(word), Some(Instr::Fence), "{word:#010x}");
+        assert_eq!(encode(Instr::Fence), 0x0000_000F);
+        check_word(word, "fence variant");
+    }
+}
+
+#[test]
+fn reassembled_disasm_preserves_decode() {
+    // For random *words* that decode, the disassembly must re-assemble to
+    // a word with the identical decode. Unlike prop_isa.rs (which starts
+    // from canonical encodings) this covers non-canonical sources: the
+    // reassembled word may differ from the original, but never in meaning.
+    let mut rng = Rng::new(0x0D15_A52);
+    let mut covered = 0;
+    for case in 0..20_000 {
+        let word = rng.next_u32();
+        let Some(instr) = decode(word) else { continue };
+        let text = disassemble_word(word, PC);
+        let prog = assemble_with(
+            &format!(".text\n{text}\n"),
+            femu::isa::asm::Options { text_base: PC, data_base: 0x2_0000 },
+        )
+        .unwrap_or_else(|e| panic!("case {case}: `{text}` from {word:#010x}: {e:#}"));
+        if prog.text.len() == 1 {
+            assert_eq!(
+                decode(prog.text[0]),
+                Some(instr),
+                "case {case}: `{text}` changed meaning ({word:#010x} -> {:#010x})",
+                prog.text[0]
+            );
+            covered += 1;
+        }
+    }
+    assert!(covered > 500, "too few decodable samples ({covered}) — generator broken?");
+}
