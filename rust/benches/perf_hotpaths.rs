@@ -169,6 +169,40 @@ fn main() {
         results.push(harness::json_result("blocks_over_interp", ratio));
     }
 
+    harness::header("Trace ring: disabled tracing must cost ~nothing");
+    {
+        // the zero-overhead guarantee (DESIGN.md §13): with the ring
+        // armed but every category masked off, each record site is one
+        // predictable branch. The committed `trace_off_overhead` ceiling
+        // in BENCH_baseline.json holds this wall ratio at <= ~3%.
+        let prog = assemble(GUEST_MIPS_SRC).unwrap();
+        let measure = |armed: bool| {
+            harness::time_best(harness::reps(5), || {
+                let mut soc = Soc::new(SocConfig::default());
+                if armed {
+                    // mask 0: ring present, all categories disabled
+                    soc.set_trace(femu::trace::TraceConfig::default());
+                }
+                soc.load(&prog).unwrap();
+                soc.run_to_halt(1 << 34);
+                let recorded = soc.trace_ring().map(|t| t.total()).unwrap_or(0);
+                (soc.stats.instructions, recorded)
+            })
+        };
+        let ((instr_off, _), no_trace_s) = measure(false);
+        let ((instr_on, recorded), trace_off_s) = measure(true);
+        assert_eq!(instr_off, instr_on, "armed-but-masked ring changed execution");
+        assert_eq!(recorded, 0, "a fully-masked ring must record nothing");
+        let ratio = trace_off_s / no_trace_s;
+        println!(
+            "trace-off {:>8}s vs no-trace {:>8}s -> ratio {ratio:.3} ({:+.2}% overhead)",
+            harness::eng(trace_off_s),
+            harness::eng(no_trace_s),
+            (ratio - 1.0) * 100.0,
+        );
+        results.push(harness::json_result("trace_off_overhead", ratio));
+    }
+
     harness::header("L3 hot paths: event-driven sleep fast-forward");
     {
         let prog = assemble(

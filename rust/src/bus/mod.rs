@@ -132,6 +132,11 @@ pub struct Bus {
     /// write-triggered half of its post-step work on the (overwhelmingly
     /// common) steps that never touch a device (§Perf opt 2).
     pub periph_touched: bool,
+    /// Optional trace ring (DESIGN.md §13). Lives on the bus so the CPU
+    /// step paths, the bus decode arms, and the SoC hooks all reach it
+    /// through one `Option` branch. Derived state: never serialized;
+    /// [`crate::soc::Soc`] clears and resyncs it on restore.
+    pub trace: Option<Box<crate::trace::TraceRing>>,
 }
 
 impl Bus {
@@ -158,6 +163,7 @@ impl Bus {
             mailbox: Mailbox::new(),
             cs_dram: CsDram::new(cs_dram_size),
             periph_touched: false,
+            trace: None,
         }
     }
 
@@ -364,7 +370,11 @@ impl BusAccess for Bus {
             if size != Size::Word {
                 return Err(BusFault::Access);
             }
-            return self.periph_read(addr - PERIPH_BASE, now);
+            let r = self.periph_read(addr - PERIPH_BASE, now);
+            if let (Some(t), Ok((v, wait))) = (self.trace.as_deref_mut(), &r) {
+                t.bus_read(now, crate::trace::bus_region::PERIPH, addr, *v, *wait);
+            }
+            return r;
         }
         if addr >= BRIDGE_BASE {
             let off = (addr - BRIDGE_BASE) as usize;
@@ -374,6 +384,9 @@ impl BusAccess for Bus {
                 Size::Word => self.cs_dram.read32(off),
             }
             .map_err(Self::mem_err)?;
+            if let Some(t) = self.trace.as_deref_mut() {
+                t.bus_read(now, crate::trace::bus_region::BRIDGE, addr, v, BRIDGE_WAIT);
+            }
             return Ok((v, BRIDGE_WAIT));
         }
         Err(BusFault::Access)
@@ -396,7 +409,11 @@ impl BusAccess for Bus {
             if size != Size::Word {
                 return Err(BusFault::Access);
             }
-            return self.periph_write(addr - PERIPH_BASE, value, now);
+            let r = self.periph_write(addr - PERIPH_BASE, value, now);
+            if let (Some(t), Ok(wait)) = (self.trace.as_deref_mut(), &r) {
+                t.bus_write(now, crate::trace::bus_region::PERIPH, addr, value, *wait);
+            }
+            return r;
         }
         if addr >= BRIDGE_BASE {
             let off = (addr - BRIDGE_BASE) as usize;
@@ -406,6 +423,9 @@ impl BusAccess for Bus {
                 Size::Word => self.cs_dram.write32(off, value),
             }
             .map_err(Self::mem_err)?;
+            if let Some(t) = self.trace.as_deref_mut() {
+                t.bus_write(now, crate::trace::bus_region::BRIDGE, addr, value, BRIDGE_WAIT);
+            }
             return Ok(BRIDGE_WAIT);
         }
         Err(BusFault::Access)

@@ -29,6 +29,10 @@
 //! clock_gated = 0.21
 //! power_gated = 0.012
 //! retention = 0.0
+//!
+//! [trace]                       # event tracing (DESIGN.md §13)
+//! categories = "retire,irq"     # or "all" / "none" (default)
+//! depth = 65536                 # ring capacity in events
 //! ```
 //!
 //! Missing keys fall back to the X-HEEP-FEMU defaults, so a config file
@@ -90,6 +94,12 @@ impl PlatformConfig {
             other => bail!("flash.mode `{other}` (want virtualized|physical)"),
         };
         cfg.soc.backend = BackendKind::parse(&doc.str_or("backend", cfg.soc.backend.name())?)?;
+
+        // event tracing (off unless a category mask is given)
+        cfg.soc.trace.mask =
+            crate::trace::parse_categories(&doc.str_or("trace.categories", "none")?)?;
+        cfg.soc.trace.depth =
+            doc.u64_or("trace.depth", cfg.soc.trace.depth as u64)? as usize;
 
         // timing overrides
         let t = &mut cfg.timing;
@@ -203,6 +213,26 @@ mod tests {
         assert!(PlatformConfig::parse("[flash]\nmode = \"warp\"").is_err());
         assert!(PlatformConfig::parse("energy_model = \"mystery\"").is_err());
         assert!(PlatformConfig::parse("backend = \"jit\"").is_err());
+        assert!(PlatformConfig::parse("[trace]\ncategories = \"vibes\"").is_err());
+    }
+
+    #[test]
+    fn parse_trace_table() {
+        let cfg = PlatformConfig::parse(
+            r#"
+            [trace]
+            categories = "retire,irq"
+            depth = 1024
+            "#,
+        )
+        .unwrap();
+        use crate::trace::category;
+        assert_eq!(cfg.soc.trace.mask, category::RETIRE | category::IRQ);
+        assert_eq!(cfg.soc.trace.depth, 1024);
+        // default: tracing off, default depth
+        let cfg = PlatformConfig::parse("").unwrap();
+        assert_eq!(cfg.soc.trace.mask, 0);
+        assert_eq!(cfg.soc.trace.depth, crate::trace::DEFAULT_DEPTH);
     }
 
     #[test]

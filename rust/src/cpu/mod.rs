@@ -157,6 +157,11 @@ pub struct Cpu {
     pub timing: Timing,
     /// Retired instruction counter (also visible as minstret).
     pub instret: u64,
+    /// Interrupts vectored into a handler, cumulative. Architectural in
+    /// the sense that both backends take interrupts at identical cycles
+    /// (DESIGN.md §11), so it snapshots byte-identically; trace
+    /// validation cross-checks IRQ events against it.
+    pub irqs_taken: u64,
     /// When present, every retired instruction's pc is folded into this
     /// digest (the diff driver's lockstep evidence). Off by default —
     /// the hot path pays one `Option` check. Not serialized; survives
@@ -180,6 +185,7 @@ impl Cpu {
             state: CpuState::Running,
             timing: Timing::default(),
             instret: 0,
+            irqs_taken: 0,
             trace: None,
             // tag 0 never matches a real instruction word 0 because word
             // 0 does not decode; pre-fill with an unencodable pair
@@ -193,6 +199,7 @@ impl Cpu {
         self.csrs = Csrs::new();
         self.state = CpuState::Running;
         self.instret = 0;
+        self.irqs_taken = 0;
     }
 
     #[inline]
@@ -242,6 +249,10 @@ impl Cpu {
         // priority: fast lines (high bit first), then timer
         let bit = 31 - pending.leading_zeros();
         self.trap(cause::interrupt(bit), 0);
+        // only count interrupts that actually vectored (mtvec==0 halts)
+        if !matches!(self.state, CpuState::Halted(_)) {
+            self.irqs_taken += 1;
+        }
         Some(self.timing.trap_entry)
     }
 
@@ -535,6 +546,7 @@ impl Cpu {
             w.u32(t);
         }
         w.u64(self.instret);
+        w.u64(self.irqs_taken); // snapshot v2
     }
 
     pub fn restore_state(&mut self, r: &mut crate::snapshot::Reader) -> anyhow::Result<()> {
@@ -566,6 +578,7 @@ impl Cpu {
         self.timing.trap_entry = r.u32()?;
         self.timing.wake = r.u32()?;
         self.instret = r.u64()?;
+        self.irqs_taken = r.u64()?;
         Ok(())
     }
 }

@@ -269,10 +269,15 @@ fn exec_block(soc: &mut Soc, block: &Block, stats: &mut ExecStats) -> Option<Run
             }
             _ => {}
         }
+        let pc = soc.cpu.pc;
         let r = soc.cpu.exec_decoded(instr, word, 0, &mut soc.bus, soc.now);
         soc.now += r.cycles as u64;
         if r.retired {
             soc.stats.instructions += 1;
+            // same post-increment timestamp as the single-step path
+            if let Some(t) = soc.bus.trace.as_deref_mut() {
+                t.retire(soc.now, pc);
+            }
         }
         // trap / wfi / ebreak: state changed — the shared loop decides
         if !r.retired || soc.cpu.state != CpuState::Running {

@@ -39,11 +39,16 @@ pub struct LockstepOptions {
     /// Give up (as an error, not a divergence) if the workload has not
     /// halted after this many cycles.
     pub max_cycles: u64,
+    /// When non-zero (`femu diff --trace`), arm a full event ring
+    /// ([`crate::trace`]) with these categories on both platforms: the
+    /// checkpoints additionally compare ring digests, and a divergence
+    /// report carries both sides' serialized captures.
+    pub trace_mask: u8,
 }
 
 impl Default for LockstepOptions {
     fn default() -> Self {
-        Self { checkpoint_cycles: 100_000, max_cycles: 1 << 32 }
+        Self { checkpoint_cycles: 100_000, max_cycles: 1 << 32, trace_mask: 0 }
     }
 }
 
@@ -56,6 +61,12 @@ pub struct Divergence {
     pub cycle: u64,
     /// Human-readable description of what differed.
     pub what: String,
+    /// Serialized `FEMUTRAC` captures from each side at the divergence
+    /// point, present when the diff ran with tracing enabled
+    /// ([`LockstepOptions::trace_mask`]) — the CLI writes them next to
+    /// the report so CI can upload them as failure artifacts.
+    pub trace_a: Option<Vec<u8>>,
+    pub trace_b: Option<Vec<u8>>,
 }
 
 /// Outcome of one lockstep diff.
@@ -129,6 +140,14 @@ pub fn lockstep(
     // arm the retired-pc digests for the duration of the diff
     a.dbg.soc.cpu.trace = Some(Box::default());
     b.dbg.soc.cpu.trace = Some(Box::default());
+    // optionally arm full event rings (femu diff --trace): checkpoints
+    // then also compare ring digests, and a divergence carries captures
+    if opts.trace_mask != 0 {
+        let tcfg =
+            crate::trace::TraceConfig { mask: opts.trace_mask, ..crate::trace::TraceConfig::default() };
+        a.dbg.soc.set_trace(tcfg);
+        b.dbg.soc.set_trace(tcfg);
+    }
 
     let start = a.dbg.soc.now;
     let start_instret = a.dbg.soc.cpu.instret;
@@ -151,6 +170,8 @@ pub fn lockstep(
                     checkpoint: checkpoints,
                     cycle: a.dbg.soc.now,
                     what: format!("errors differ: a: {ea}; b: {eb}"),
+                    trace_a: None,
+                    trace_b: None,
                 });
                 break;
             }
@@ -163,13 +184,20 @@ pub fn lockstep(
                     checkpoint: checkpoints,
                     cycle: a.dbg.soc.now,
                     what: format!("a {} vs b {}", describe(&ra), describe(&rb)),
+                    trace_a: None,
+                    trace_b: None,
                 });
                 break;
             }
         };
         if let Some(what) = compare_checkpoint(a, b, xa, xb) {
-            divergence =
-                Some(Divergence { checkpoint: checkpoints, cycle: a.dbg.soc.now, what });
+            divergence = Some(Divergence {
+                checkpoint: checkpoints,
+                cycle: a.dbg.soc.now,
+                what,
+                trace_a: None,
+                trace_b: None,
+            });
             break;
         }
         if matches!(xa, AppExit::Halted(_)) {
@@ -181,6 +209,17 @@ pub fn lockstep(
                 opts.max_cycles
             );
         }
+    }
+
+    if let Some(d) = &mut divergence {
+        let capture = |p: &Platform| {
+            p.dbg.soc.trace_ring().map(|t| {
+                let banks = p.dbg.soc.bus.banks.len() as u32;
+                crate::trace::format::TraceDump::from_ring(t, p.dbg.soc.freq_hz, banks).to_bytes()
+            })
+        };
+        d.trace_a = capture(a);
+        d.trace_b = capture(b);
     }
 
     let report = LockstepReport {
@@ -195,6 +234,8 @@ pub fn lockstep(
     // disarm: leave the platforms as we found them
     a.dbg.soc.cpu.trace = None;
     b.dbg.soc.cpu.trace = None;
+    a.dbg.soc.take_trace();
+    b.dbg.soc.take_trace();
     Ok(report)
 }
 
@@ -225,6 +266,20 @@ fn compare_checkpoint(a: &Platform, b: &Platform, xa: AppExit, xb: AppExit) -> O
             recent(sa),
             recent(sb)
         ));
+    }
+    // full event rings, when armed: the digest covers every event ever
+    // pushed (wraparound included), so equal digests + totals mean the
+    // two backends emitted the exact same event stream
+    if let (Some(ta), Some(tb)) = (sa.trace_ring(), sb.trace_ring()) {
+        if ta.digest() != tb.digest() || ta.total() != tb.total() {
+            return Some(format!(
+                "trace streams diverged (a: {} events, digest {:#018x}; b: {} events, digest {:#018x})",
+                ta.total(),
+                ta.digest(),
+                tb.total(),
+                tb.digest()
+            ));
+        }
     }
     // the big hammer: full snapshot payloads, byte for byte — covers
     // registers, CSRs, memories, peripherals, perf counters, energy

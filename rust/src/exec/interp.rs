@@ -98,10 +98,17 @@ pub(super) fn idle_step(soc: &mut Soc, deadline: u64) -> Idle {
 /// One interpreted instruction plus its post-step — the single-step
 /// reference path both backends share.
 pub(super) fn single_step(soc: &mut Soc) -> Option<RunExit> {
+    let pc = soc.cpu.pc;
     let r = soc.cpu.step(&mut soc.bus, soc.now);
     soc.now += r.cycles as u64;
     if r.retired {
         soc.stats.instructions += 1;
+        // retire timestamps are post-increment (the cycle the
+        // instruction completes) — the block backend records the same
+        // instant, which is what keeps the streams bit-identical
+        if let Some(t) = soc.bus.trace.as_deref_mut() {
+            t.retire(soc.now, pc);
+        }
     }
     soc.post_step();
     service_exit(soc)

@@ -22,6 +22,7 @@ pub mod runtime;
 pub mod server;
 pub mod snapshot;
 pub mod soc;
+pub mod trace;
 pub mod util;
 pub mod virt;
 pub mod workloads;
@@ -44,4 +45,5 @@ pub mod prelude {
     pub use crate::server::{Client, Server};
     pub use crate::snapshot::PlatformSnapshot;
     pub use crate::soc::{RunExit, Soc, SocConfig};
+    pub use crate::trace::{format::TraceDump, TraceConfig, TraceRing};
 }

@@ -3,16 +3,20 @@
 //! Subcommands (hand-rolled parsing; clap is unavailable offline):
 //!
 //! ```text
-//! femu run [prog.s] [--config <platform.toml>] [--max-cycles N]
-//!          [--from-snapshot FILE]
+//! femu run [prog.s | --builtin NAME] [--config <platform.toml>]
+//!          [--max-cycles N] [--from-snapshot FILE]
+//!          [--trace CATS] [--trace-out FILE] [--trace-depth N]
 //! femu profile <prog.s> [--config ..] [--model femu|heepocrates]
 //! femu snapshot save <prog.s> --out FILE [--cycles N] [--config ..]
 //! femu snapshot info <FILE>
 //! femu sweep-acquisition [--window-s S] [--from-snapshot FILE]   (Fig 4)
 //! femu kernels [--validate] [--from-snapshot FILE]               (Fig 5)
 //! femu flash-study [--scale N] [--from-snapshot FILE]            (Case C)
-//! femu diff [prog.s] [--backends A,B] [--experiments]
+//! femu diff [prog.s] [--backends A,B] [--experiments] [--trace CATS]
 //!           [--checkpoint-cycles N] [--window-s S] [--scale N]
+//! femu trace dump <FILE> [--vcd OUT] [--jsonl OUT]
+//! femu trace info <FILE>
+//! femu trace validate [--builtin NAME|all]
 //! femu table1                                                    (Table I)
 //! femu serve [--addr HOST:PORT] [--artifacts DIR] [--config ..]
 //!            [--max-sessions N] [--workers N] [--idle-timeout SECS]
@@ -116,6 +120,7 @@ fn run() -> Result<()> {
         "kernels" => cmd_kernels(&args),
         "flash-study" => cmd_flash_study(&args),
         "diff" => cmd_diff(&args),
+        "trace" => cmd_trace(&args),
         "analyze" => cmd_analyze(&args),
         "table1" => cmd_table1(),
         "disasm" => cmd_disasm(&args),
@@ -133,8 +138,9 @@ fn print_usage() {
         "femu — FPGA EMUlation framework for TinyAI heterogeneous systems \
          (software reproduction)\n\n\
          USAGE:\n  \
-         femu run [prog.s] [--config <platform.toml>] [--max-cycles N]\n  \
-         \x20        [--from-snapshot FILE]\n  \
+         femu run [prog.s | --builtin NAME] [--config <platform.toml>]\n  \
+         \x20        [--max-cycles N] [--from-snapshot FILE]\n  \
+         \x20        [--trace CATS] [--trace-out FILE] [--trace-depth N]\n  \
          femu profile <prog.s> [--config ..] [--model ..] [--vcd out.vcd]\n  \
          femu snapshot save <prog.s> --out FILE [--cycles N] [--config ..]\n  \
          femu snapshot info <FILE>                    inspect a snapshot\n  \
@@ -144,7 +150,10 @@ fn print_usage() {
          femu flash-study [--scale N]                 reproduce Case C (\u{a7}V-C)\n  \
          femu diff [prog.s] [--backends A,B] [--experiments] [--window-s S]\n  \
          \x20         [--scale N] [--checkpoint-cycles N] [--precompile]\n  \
-         \x20                                      lockstep backend diff\n  \
+         \x20         [--trace CATS]               lockstep backend diff\n  \
+         femu trace dump <FILE> [--vcd OUT] [--jsonl OUT]   export a capture\n  \
+         femu trace info <FILE>                       inspect a capture\n  \
+         femu trace validate [--builtin NAME|all]     stream self-check\n  \
          femu analyze [prog.s] [--builtin NAME|all] [--from-snapshot FILE]\n  \
          \x20          [--config <platform.toml>] [--json]  static analysis\n  \
          femu table1                                  reproduce Table I\n  \
@@ -156,7 +165,9 @@ fn print_usage() {
          (use a saved\n  \
          snapshot as the golden image the sweep forks from).\n  \
          Platform-building subcommands accept --backend interp|blocks \
-         (execution engine)."
+         (execution engine).\n  \
+         --trace CATS arms the event ring: a comma list of \
+         retire,bus,irq,power, or all."
     );
 }
 
@@ -192,9 +203,28 @@ fn cmd_run(args: &Args) -> Result<()> {
             platform.dbg.load_source(&src)?;
         }
         platform
+    } else if args.flags.contains_key("builtin") {
+        let mut platform = Platform::new(load_config(args)?);
+        if let Some(dir) = args.flags.get("artifacts") {
+            platform.attach_artifacts(dir)?;
+        } else if std::path::Path::new("artifacts/manifest.json").exists() {
+            platform.attach_artifacts("artifacts")?;
+        }
+        load_builtin(&mut platform, args.flags.get("builtin").unwrap())?;
+        platform
     } else {
         load_guest(args)?.0
     };
+    let trace_mask = trace_mask_from_args(args)?;
+    if trace_mask != 0 {
+        let depth = args
+            .flags
+            .get("trace-depth")
+            .map(|s| s.parse::<u64>())
+            .transpose()?
+            .unwrap_or(femu::trace::DEFAULT_DEPTH as u64) as usize;
+        platform.dbg.soc.set_trace(femu::trace::TraceConfig { mask: trace_mask, depth });
+    }
     let budget = args
         .flags
         .get("max-cycles")
@@ -210,6 +240,57 @@ fn cmd_run(args: &Args) -> Result<()> {
         "exit: {exit:?} after {} cycles ({}s emulated)",
         platform.dbg.soc.now,
         eng(platform.dbg.soc.now as f64 / platform.cfg.soc.freq_hz as f64)
+    );
+    if trace_mask != 0 {
+        let out = args.flags.get("trace-out").map(String::as_str).unwrap_or("femu.trace");
+        save_trace(&platform, out)?;
+    }
+    Ok(())
+}
+
+/// Load a named builtin guest into a platform, wiring up any CS-side
+/// service it expects (the acquisition kernel drains the virtualized
+/// ADC, so it gets the same synthetic dataset the lockstep suite uses).
+fn load_builtin(platform: &mut Platform, name: &str) -> Result<()> {
+    use femu::workloads::{builtin, BUILTIN_NAMES};
+    let src = builtin(name).ok_or_else(|| {
+        anyhow!("unknown builtin `{name}` (have: {})", BUILTIN_NAMES.join(", "))
+    })?;
+    platform.dbg.load_source(&src)?;
+    if name == "acquisition" {
+        platform.start_adc((0..100).collect(), 100_000.0);
+    }
+    Ok(())
+}
+
+/// `--trace CATS[,CATS..]` (or bare `--trace` for everything): the
+/// category mask for the event ring, 0 when tracing is off.
+fn trace_mask_from_args(args: &Args) -> Result<u8> {
+    if let Some(v) = args.flags.get("trace") {
+        femu::trace::parse_categories(v)
+    } else if args.switches.iter().any(|s| s == "trace") {
+        Ok(femu::trace::category::ALL)
+    } else {
+        Ok(0)
+    }
+}
+
+/// Dump the armed event ring to a `FEMUTRAC` capture file and print a
+/// one-line summary.
+fn save_trace(platform: &Platform, out: &str) -> Result<()> {
+    let soc = &platform.dbg.soc;
+    let ring = soc.trace_ring().ok_or_else(|| anyhow!("tracing was not enabled"))?;
+    let dump =
+        femu::trace::format::TraceDump::from_ring(ring, soc.freq_hz, soc.bus.banks.len() as u32);
+    dump.save(out)?;
+    println!(
+        "trace: {} event(s) recorded, {} retained ({} dropped), categories {}, \
+         digest {:#018x} -> {out}",
+        dump.total,
+        dump.events.len(),
+        dump.dropped(),
+        dump.categories(),
+        dump.digest
     );
     Ok(())
 }
@@ -543,6 +624,9 @@ fn cmd_diff(args: &Args) -> Result<()> {
     if let Some(v) = args.flags.get("diff-max-cycles") {
         opts.max_cycles = v.parse().with_context(|| format!("--diff-max-cycles `{v}`"))?;
     }
+    // --trace: arm the event ring on both sides; checkpoints then also
+    // compare trace digests, and a divergence carries both captures
+    opts.trace_mask = trace_mask_from_args(args)?;
     println!(
         "== femu diff: {a} vs {b} in lockstep (checkpoint every {} cycles, {} worker(s)) ==",
         opts.checkpoint_cycles,
@@ -560,6 +644,7 @@ fn cmd_diff(args: &Args) -> Result<()> {
     for r in &reports {
         println!("  [{}] {r}", if r.matched() { "ok" } else { "DIVERGED" });
         failed |= !r.matched();
+        write_divergence_traces(r)?;
     }
     if args.switches.iter().any(|s| s == "precompile") {
         // cold vs analyzer-precompiled block caches, both on the blocks
@@ -576,6 +661,7 @@ fn cmd_diff(args: &Args) -> Result<()> {
         for r in &pre {
             println!("  [{}] {r}", if r.matched() { "ok" } else { "DIVERGED" });
             failed |= !r.matched();
+            write_divergence_traces(r)?;
         }
     }
     if args.switches.iter().any(|s| s == "experiments") {
@@ -602,6 +688,168 @@ fn cmd_diff(args: &Args) -> Result<()> {
         bail!("backends {a} and {b} diverged");
     }
     println!("backends {a} and {b} are bit-identical on everything tested");
+    Ok(())
+}
+
+/// On a traced divergence, drop both sides' capture files into the CWD
+/// so CI can upload them as failure artifacts.
+fn write_divergence_traces(r: &diff::LockstepReport) -> Result<()> {
+    let Some(d) = &r.divergence else { return Ok(()) };
+    let stem: String = r
+        .workload
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    for (side, bytes) in [("a", &d.trace_a), ("b", &d.trace_b)] {
+        if let Some(bytes) = bytes {
+            let path = format!("{stem}.{side}.trace");
+            std::fs::write(&path, bytes).with_context(|| format!("writing {path}"))?;
+            println!("    trace capture ({side}) -> {path}");
+        }
+    }
+    Ok(())
+}
+
+/// `femu trace`: work with binary trace captures (DESIGN.md §13).
+/// `dump` exports a `.trace` file to VCD / JSON-lines (no output flag:
+/// JSON-lines to stdout), `info` prints the header, `validate` is the
+/// CI trace-validate job's engine.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use femu::trace::format::TraceDump;
+    match args.positional.first().map(String::as_str) {
+        Some("dump") => {
+            let path = args.positional.get(1).ok_or_else(|| {
+                anyhow!("usage: femu trace dump <FILE> [--vcd OUT] [--jsonl OUT]")
+            })?;
+            let dump = TraceDump::load(path)?;
+            let mut exported = false;
+            if let Some(out) = args.flags.get("vcd") {
+                std::fs::write(out, femu::trace::export::to_vcd(&dump))
+                    .with_context(|| format!("writing {out}"))?;
+                println!("vcd: {} event(s) -> {out}", dump.events.len());
+                exported = true;
+            }
+            if let Some(out) = args.flags.get("jsonl") {
+                std::fs::write(out, femu::trace::export::to_jsonl(&dump))
+                    .with_context(|| format!("writing {out}"))?;
+                println!("jsonl: {} event(s) -> {out}", dump.events.len());
+                exported = true;
+            }
+            if !exported {
+                print!("{}", femu::trace::export::to_jsonl(&dump));
+            }
+            Ok(())
+        }
+        Some("info") => {
+            let path = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: femu trace info <FILE>"))?;
+            let dump = TraceDump::load(path)?;
+            println!(
+                "trace:      {path} (format v{}, {} bytes/event)",
+                femu::trace::format::VERSION,
+                femu::trace::EVENT_BYTES
+            );
+            println!("platform:   {} Hz, {} SRAM bank(s)", dump.freq_hz, dump.num_banks);
+            println!("categories: {}", dump.categories());
+            println!(
+                "events:     {} recorded, {} retained, {} dropped",
+                dump.total,
+                dump.events.len(),
+                dump.dropped()
+            );
+            for (i, name) in ["retire", "bus", "irq", "power"].iter().enumerate() {
+                println!("  {name:<8} {}", dump.counts[i]);
+            }
+            if let (Some(first), Some(last)) = (dump.events.first(), dump.events.last()) {
+                println!(
+                    "window:     cycle {} .. {} ({}s at {} Hz)",
+                    first.cycle,
+                    last.cycle,
+                    eng((last.cycle - first.cycle) as f64 / dump.freq_hz.max(1) as f64),
+                    dump.freq_hz
+                );
+            }
+            println!("digest:     {:#018x}", dump.digest);
+            Ok(())
+        }
+        Some("validate") => cmd_trace_validate(args),
+        _ => bail!(
+            "usage: femu trace dump <FILE> [--vcd OUT] [--jsonl OUT] | \
+             femu trace info <FILE> | femu trace validate [--builtin NAME|all]"
+        ),
+    }
+}
+
+/// The CI `trace-validate` job: for every requested builtin, run it
+/// with every category armed — twice on the interpreter (repeatability)
+/// and once on the block backend (cross-backend identity) — then check
+/// that the capture bytes are bit-identical across all three runs and
+/// that the ring's retire count equals the CPU's architectural instret.
+fn cmd_trace_validate(args: &Args) -> Result<()> {
+    use femu::trace::{category, TraceConfig};
+    use femu::workloads::BUILTIN_NAMES;
+
+    let cfg = load_config(args)?;
+    let which = args.flags.get("builtin").map(String::as_str).unwrap_or("all");
+    let names: Vec<&str> =
+        if which == "all" { BUILTIN_NAMES.to_vec() } else { vec![which] };
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+
+    let run_one = |name: &str, backend: BackendKind| -> Result<(Vec<u8>, u64, u64, u64)> {
+        let mut cfg = cfg.clone();
+        cfg.soc.backend = backend;
+        cfg.soc.trace = TraceConfig { mask: category::ALL, ..TraceConfig::default() };
+        let mut p = Platform::new(cfg);
+        if have_artifacts {
+            p.attach_artifacts("artifacts")?;
+        }
+        load_builtin(&mut p, name)?;
+        let exit = p.run_app(1 << 28)?;
+        if !matches!(exit, AppExit::Halted(_)) {
+            bail!("{name} on {backend}: unexpected exit {exit:?}");
+        }
+        let soc = &p.dbg.soc;
+        let ring = soc.trace_ring().expect("armed via config");
+        let dump =
+            femu::trace::format::TraceDump::from_ring(ring, soc.freq_hz, soc.bus.banks.len() as u32);
+        Ok((dump.to_bytes(), ring.retires(), soc.cpu.instret, soc.cpu.irqs_taken))
+    };
+
+    let mut failed = false;
+    for name in names {
+        if name == "classifier_mailbox" && !have_artifacts {
+            println!("  [skip] {name}: needs PJRT artifacts (run `make artifacts` first)");
+            continue;
+        }
+        let (d1, retires, instret, irqs) = run_one(name, BackendKind::Interp)?;
+        let (d2, ..) = run_one(name, BackendKind::Interp)?;
+        let (d3, ..) = run_one(name, BackendKind::Blocks)?;
+        let mut problems = Vec::new();
+        if retires != instret {
+            problems.push(format!("ring retires {retires} != cpu instret {instret}"));
+        }
+        if d1 != d2 {
+            problems.push("repeat interp runs not bit-identical".to_string());
+        }
+        if d1 != d3 {
+            problems.push("interp and blocks captures differ".to_string());
+        }
+        if problems.is_empty() {
+            println!(
+                "  [ok] {name}: {instret} retire(s), {irqs} interrupt(s) taken; capture \
+                 bit-identical across repeats and backends"
+            );
+        } else {
+            failed = true;
+            println!("  [FAIL] {name}: {}", problems.join("; "));
+        }
+    }
+    if failed {
+        bail!("trace validation failed");
+    }
+    println!("trace validation passed");
     Ok(())
 }
 

@@ -269,8 +269,10 @@ impl PerfMonitor {
         }
     }
 
-    /// Record a domain state transition at cycle `now`.
-    pub fn set_state(&mut self, d: Domain, s: PowerState, now: u64) {
+    /// Record a domain state transition at cycle `now`. Returns whether
+    /// the state actually changed, so callers (the SoC's trace hook) can
+    /// record real transitions without re-deriving the edge.
+    pub fn set_state(&mut self, d: Domain, s: PowerState, now: u64) -> bool {
         let changed = {
             let t = self.tracker(d);
             let changed = t.state != s;
@@ -284,6 +286,7 @@ impl PerfMonitor {
                 trace.record(now, idx, s);
             }
         }
+        changed
     }
 
     /// Current state of a domain.

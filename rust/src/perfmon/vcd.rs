@@ -31,30 +31,46 @@ pub struct TransitionLog {
     events: Vec<Transition>,
 }
 
+/// Display names of the standard domain set, index-aligned with
+/// [`TransitionLog::index_of`]: cpu, bus, periph, bank 0..n, cgra.
+/// Shared with the general trace exporter ([`crate::trace::export`]),
+/// which labels `POWER` events by the same indices.
+pub(crate) fn domain_names(num_banks: usize) -> Vec<String> {
+    let mut names =
+        vec![Domain::Cpu.to_string(), Domain::Bus.to_string(), Domain::Periph.to_string()];
+    for i in 0..num_banks {
+        names.push(Domain::MemBank(i).to_string());
+    }
+    names.push(Domain::Cgra.to_string());
+    names
+}
+
+/// Stable index of a domain in the standard set, aligned with
+/// [`domain_names`]. The trace ring stamps `POWER` events with these
+/// indices, so both VCD pipelines label identically.
+pub(crate) fn domain_index(d: Domain, num_banks: usize) -> usize {
+    match d {
+        Domain::Cpu => 0,
+        Domain::Bus => 1,
+        Domain::Periph => 2,
+        Domain::MemBank(i) => 3 + i,
+        Domain::Cgra => 3 + num_banks,
+    }
+}
+
 impl TransitionLog {
     /// Build for the standard domain set (cpu, bus, periph, banks, cgra).
     pub fn for_domains(num_banks: usize) -> Self {
-        let mut names =
-            vec![Domain::Cpu.to_string(), Domain::Bus.to_string(), Domain::Periph.to_string()];
-        let mut initial = vec![PowerState::Active; 3];
-        for i in 0..num_banks {
-            names.push(Domain::MemBank(i).to_string());
-            initial.push(PowerState::Active);
-        }
-        names.push(Domain::Cgra.to_string());
+        let names = domain_names(num_banks);
+        let mut initial = vec![PowerState::Active; 3 + num_banks];
+        // the CGRA powers up gated
         initial.push(PowerState::PowerGated);
         Self { names, initial, events: Vec::new() }
     }
 
     /// Stable index of a domain within this log.
     pub fn index_of(&self, d: Domain, num_banks: usize) -> usize {
-        match d {
-            Domain::Cpu => 0,
-            Domain::Bus => 1,
-            Domain::Periph => 2,
-            Domain::MemBank(i) => 3 + i,
-            Domain::Cgra => 3 + num_banks,
-        }
+        domain_index(d, num_banks)
     }
 
     pub fn record(&mut self, cycle: u64, domain_index: usize, state: PowerState) {
@@ -118,7 +134,9 @@ impl TransitionLog {
     }
 }
 
-fn bits(s: PowerState) -> &'static str {
+/// 2-bit VCD encoding of a power state (shared with the general trace
+/// exporter so both pipelines render identical waveform values).
+pub(crate) fn bits(s: PowerState) -> &'static str {
     match s {
         PowerState::Active => "00",
         PowerState::ClockGated => "01",
@@ -127,8 +145,9 @@ fn bits(s: PowerState) -> &'static str {
     }
 }
 
-/// Printable VCD identifier for variable `i`.
-fn ident(i: usize) -> String {
+/// Printable VCD identifier for variable `i` (shared with the general
+/// trace exporter).
+pub(crate) fn ident(i: usize) -> String {
     // printable ASCII 33..=126, base-94
     let mut i = i;
     let mut s = String::new();

@@ -62,8 +62,12 @@ pub use session::{ConfigRegistry, Session, SessionTable, DEFAULT_SESSION};
 /// handling behave exactly as before. Bumped to 4 when the additive
 /// `analyze` command arrived (static analysis of the session's current
 /// memory: CFG, `FEMU-Axxx` lints, WCET/energy bounds, block map —
-/// [`crate::analyze`]); every v3 request is unchanged.
-pub const PROTO_VERSION: u32 = 4;
+/// [`crate::analyze`]); every v3 request is unchanged. Bumped to 5 when
+/// the additive `trace.subscribe` / `trace.read` / `trace.stop` command
+/// family arrived (per-session event tracing with cursor-paged
+/// streaming — [`crate::trace`], DESIGN.md §13); every v4 request is
+/// unchanged.
+pub const PROTO_VERSION: u32 = 5;
 
 /// The one-line JSON banner every accepted connection receives before
 /// its first request: `{"hello":"femu-control-server","proto":...,
@@ -603,6 +607,32 @@ impl Client {
             ("requests", Json::Arr(requests)),
         ]))
     }
+
+    /// Arm event tracing on a session (proto v5). `categories` is a
+    /// comma list (`"retire,irq"`) or `"all"`; returns the subscribe
+    /// payload (`categories`, `capacity`, starting `cursor`).
+    pub fn trace_subscribe(&mut self, session: u64, categories: &str) -> Result<Json> {
+        self.call_on(
+            session,
+            Json::obj(vec![
+                ("cmd", Json::from("trace.subscribe")),
+                ("categories", Json::from(categories)),
+            ]),
+        )
+    }
+
+    /// Drain trace events recorded since `cursor` (proto v5); returns
+    /// the raw `{events, next, skipped, dropped, total, digest}`
+    /// payload. Stream by looping with the returned `next`.
+    pub fn trace_read(&mut self, session: u64, cursor: u64) -> Result<Json> {
+        self.call_on(
+            session,
+            Json::obj(vec![
+                ("cmd", Json::from("trace.read")),
+                ("cursor", Json::from(cursor as i64)),
+            ]),
+        )
+    }
 }
 
 fn with_field(v: Json, key: &str, val: Json) -> Result<Json> {
@@ -865,6 +895,44 @@ mod tests {
             .unwrap();
         assert_eq!(read(&mut client, fork_id), -1);
         assert_eq!(read(&mut client, src), 1234);
+        server.shutdown();
+    }
+
+    #[test]
+    fn trace_streaming_over_the_wire() {
+        let (server, mut client) = spawn();
+        let id = client.open_session(Json::Null).unwrap();
+        let sub = client.trace_subscribe(id, "retire").unwrap();
+        assert_eq!(sub.str_field("categories").unwrap(), "retire");
+        client
+            .call_on(
+                id,
+                Json::obj(vec![
+                    ("cmd", Json::from("load_asm")),
+                    ("source", Json::from("_start: li a0, 1\nli a1, 2\nebreak")),
+                ]),
+            )
+            .unwrap();
+        client.call_on(id, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        // stream with the cursor protocol until drained
+        let mut cursor = 0u64;
+        let mut seen = 0usize;
+        loop {
+            let page = client.trace_read(id, cursor).unwrap();
+            let events = page.get("events").unwrap().as_arr().unwrap().len();
+            seen += events;
+            cursor = page.get("next").unwrap().as_i64().unwrap() as u64;
+            if events == 0 {
+                break;
+            }
+        }
+        assert_eq!(seen, 3, "three retires expected");
+        let stop =
+            client.call_on(id, Json::obj(vec![("cmd", Json::from("trace.stop"))])).unwrap();
+        assert_eq!(stop.get("total").unwrap().as_i64().unwrap(), 3);
+        // tracing on one session never arms another: the default session
+        // rejects reads
+        assert!(client.call(Json::obj(vec![("cmd", Json::from("trace.read"))])).is_err());
         server.shutdown();
     }
 

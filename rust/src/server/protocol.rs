@@ -45,6 +45,14 @@ pub const RUN_SLICE_CYCLES: u64 = 2_000_000;
 /// Default `run` budget when the request does not carry `max_cycles`.
 pub const DEFAULT_RUN_BUDGET: u64 = 1 << 33;
 
+/// Cap on events per `trace.read` response (proto v5): one drain is at
+/// most ~5 MiB of JSON; clients page with the returned `next` cursor.
+pub const MAX_TRACE_READ: usize = 1 << 16;
+
+/// Cap on the `trace.subscribe` ring depth (proto v5): 2^22 events is
+/// an ~80 MiB ring, the most one session may pin.
+pub const MAX_TRACE_DEPTH: u64 = 1 << 22;
+
 // ---------------------------------------------------------------------
 // typed protocol errors
 // ---------------------------------------------------------------------
@@ -241,6 +249,13 @@ pub enum PlatformCmd {
     /// Static analysis of the session's current memory from the current
     /// pc (proto v4): CFG, lints, WCET/energy bounds, block map.
     Analyze,
+    /// Arm the event trace ring on the session platform (proto v5).
+    TraceSubscribe { mask: u8, depth: usize },
+    /// Drain events recorded since `cursor` from the armed ring (proto
+    /// v5). Paged: the response carries the next cursor.
+    TraceRead { cursor: u64, max: usize },
+    /// Disarm the ring and report its final totals (proto v5).
+    TraceStop,
 }
 
 impl PlatformCmd {
@@ -314,6 +329,77 @@ impl PlatformCmd {
                 PlatformCmd::Energy { model }
             }
             "analyze" => PlatformCmd::Analyze,
+            "trace.subscribe" => {
+                let cats = req
+                    .opt("categories")
+                    .map(|v| v.as_str())
+                    .transpose()?
+                    .unwrap_or("all");
+                let mask = crate::trace::parse_categories(cats)
+                    .map_err(|e| proto_err(ErrorKind::BadParam, format!("{e:#}")))?;
+                if mask == 0 {
+                    return Err(proto_err(
+                        ErrorKind::BadParam,
+                        "`categories` must enable at least one category".to_string(),
+                    ));
+                }
+                let depth = match req.opt("depth") {
+                    None => crate::trace::DEFAULT_DEPTH as u64,
+                    Some(v) => {
+                        let d = v.as_i64()?;
+                        if d < 1 {
+                            return Err(proto_err(
+                                ErrorKind::OutOfRange,
+                                format!("`depth` must be positive, got {d}"),
+                            ));
+                        }
+                        if d as u64 > MAX_TRACE_DEPTH {
+                            return Err(proto_err(
+                                ErrorKind::CapExceeded,
+                                format!("`depth` {d} exceeds the {MAX_TRACE_DEPTH}-event cap"),
+                            ));
+                        }
+                        d as u64
+                    }
+                };
+                PlatformCmd::TraceSubscribe { mask, depth: depth as usize }
+            }
+            "trace.read" => {
+                let cursor = match req.opt("cursor") {
+                    None => 0,
+                    Some(v) => {
+                        let c = v.as_i64()?;
+                        if c < 0 {
+                            return Err(proto_err(
+                                ErrorKind::OutOfRange,
+                                format!("`cursor` must be non-negative, got {c}"),
+                            ));
+                        }
+                        c as u64
+                    }
+                };
+                let max = match req.opt("max") {
+                    None => MAX_TRACE_READ,
+                    Some(v) => {
+                        let m = v.as_i64()?;
+                        if m < 1 {
+                            return Err(proto_err(
+                                ErrorKind::OutOfRange,
+                                format!("`max` must be positive, got {m}"),
+                            ));
+                        }
+                        if m as u64 > MAX_TRACE_READ as u64 {
+                            return Err(proto_err(
+                                ErrorKind::CapExceeded,
+                                format!("`max` {m} exceeds the {MAX_TRACE_READ}-event cap"),
+                            ));
+                        }
+                        m as usize
+                    }
+                };
+                PlatformCmd::TraceRead { cursor, max }
+            }
+            "trace.stop" => PlatformCmd::TraceStop,
             other => {
                 return Err(proto_err(
                     ErrorKind::UnknownCommand,
@@ -444,6 +530,48 @@ impl PlatformCmd {
                 let acfg = crate::analyze::AnalyzeConfig::from_platform(&p.cfg);
                 let report = crate::analyze::analyze_soc(&p.dbg.soc, "session", &acfg);
                 Ok(report.to_json())
+            }
+            PlatformCmd::TraceSubscribe { mask, depth } => {
+                p.dbg.soc.set_trace(crate::trace::TraceConfig { mask, depth });
+                let ring = p.dbg.soc.trace_ring().expect("armed above");
+                Ok(Json::obj(vec![
+                    ("categories", Json::Str(crate::trace::category_list(mask))),
+                    ("capacity", Json::from(ring.capacity() as i64)),
+                    ("cursor", Json::from(ring.total() as i64)),
+                ]))
+            }
+            PlatformCmd::TraceRead { cursor, max } => {
+                let num_banks = p.dbg.soc.bus.banks.len();
+                let ring = p.dbg.soc.trace_ring().ok_or_else(|| {
+                    proto_err(ErrorKind::BadParam, "tracing not enabled (trace.subscribe first)".into())
+                })?;
+                let (events, next, skipped) = ring.events_from(cursor, max);
+                Ok(Json::obj(vec![
+                    (
+                        "events",
+                        Json::Arr(
+                            events
+                                .iter()
+                                .map(|ev| crate::trace::export::event_json(ev, num_banks))
+                                .collect(),
+                        ),
+                    ),
+                    ("next", Json::from(next as i64)),
+                    ("skipped", Json::from(skipped as i64)),
+                    ("dropped", Json::from(ring.dropped() as i64)),
+                    ("total", Json::from(ring.total() as i64)),
+                    ("digest", Json::Str(format!("{:#018x}", ring.digest()))),
+                ]))
+            }
+            PlatformCmd::TraceStop => {
+                let ring = p.dbg.soc.take_trace().ok_or_else(|| {
+                    proto_err(ErrorKind::BadParam, "tracing not enabled (trace.subscribe first)".into())
+                })?;
+                Ok(Json::obj(vec![
+                    ("total", Json::from(ring.total() as i64)),
+                    ("dropped", Json::from(ring.dropped() as i64)),
+                    ("digest", Json::Str(format!("{:#018x}", ring.digest()))),
+                ]))
             }
         }
     }
@@ -962,6 +1090,58 @@ mod tests {
         .unwrap_err();
         assert!(format!("{err:#}").contains("checksum"), "{err:#}");
         assert_eq!(p.dbg.reg(10), 42); // untouched
+    }
+
+    #[test]
+    fn trace_subscribe_read_stop_over_protocol() {
+        let mut p = platform();
+        // read/stop before subscribe: a typed protocol failure
+        let err =
+            exec(&mut p, Json::obj(vec![("cmd", Json::from("trace.read"))])).unwrap_err();
+        assert!(format!("{err:#}").contains("not enabled"), "{err:#}");
+
+        let sub = exec(
+            &mut p,
+            Json::obj(vec![
+                ("cmd", Json::from("trace.subscribe")),
+                ("categories", Json::from("retire,irq")),
+                ("depth", Json::from(1024i64)),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(sub.str_field("categories").unwrap(), "retire,irq");
+        assert_eq!(sub.get("capacity").unwrap().as_i64().unwrap(), 1024);
+
+        p.dbg.load_source("_start: li a0, 5\nli a1, 7\nadd a2, a0, a1\nebreak").unwrap();
+        exec(&mut p, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        let read = exec(&mut p, Json::obj(vec![("cmd", Json::from("trace.read"))])).unwrap();
+        let events = read.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4, "four retires expected");
+        assert_eq!(events[0].str_field("event").unwrap(), "retire");
+        assert_eq!(read.get("next").unwrap().as_i64().unwrap(), 4);
+
+        // paging: a cursor mid-stream resumes without re-reading
+        let page = exec(
+            &mut p,
+            Json::obj(vec![("cmd", Json::from("trace.read")), ("cursor", Json::from(2i64))]),
+        )
+        .unwrap();
+        assert_eq!(page.get("events").unwrap().as_arr().unwrap().len(), 2);
+
+        let stop = exec(&mut p, Json::obj(vec![("cmd", Json::from("trace.stop"))])).unwrap();
+        assert_eq!(stop.get("total").unwrap().as_i64().unwrap(), 4);
+        assert!(p.dbg.soc.trace_ring().is_none(), "stop must disarm the ring");
+
+        // bad category names are protocol errors with a typed kind
+        let err = exec(
+            &mut p,
+            Json::obj(vec![
+                ("cmd", Json::from("trace.subscribe")),
+                ("categories", Json::from("vibes")),
+            ]),
+        )
+        .unwrap_err();
+        assert_eq!(err.downcast_ref::<ProtoError>().map(|e| e.kind), Some(ErrorKind::BadParam));
     }
 
     #[test]

@@ -43,7 +43,8 @@ pub const MAGIC: [u8; 8] = *b"FEMUSNAP";
 
 /// Snapshot format version. Bump on any layout change; restore rejects
 /// mismatches outright (no cross-version migration).
-pub const VERSION: u32 = 1;
+/// History: 1 = initial layout; 2 = cpu gains `irqs_taken`.
+pub const VERSION: u32 = 2;
 
 /// Header size in bytes: magic + version + payload_len + checksum.
 const HEADER_LEN: usize = 8 + 4 + 8 + 8;

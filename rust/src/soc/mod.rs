@@ -22,7 +22,7 @@ pub use loader::load_program;
 use crate::bus::{Bus, BRIDGE_BASE, SRAM_BASE};
 use crate::cgra::device::{kernel_id, LaunchRequest};
 use crate::cgra::{kernels, CgraCore, CgraMem, CgraRun};
-use crate::cpu::{Cpu, CpuState, Halt};
+use crate::cpu::{int, Cpu, CpuState, Halt};
 use crate::exec::{BackendKind, ExecBackend, ExecStats};
 use crate::isa::Program;
 use crate::mem::SramBank;
@@ -61,6 +61,9 @@ pub struct SocConfig {
     /// backends are bit-identical by contract; `Blocks` trades compile
     /// time for guest throughput.
     pub backend: BackendKind,
+    /// Event tracing ([`crate::trace`]). The default mask is 0: no ring
+    /// is even allocated, so untraced runs pay nothing.
+    pub trace: crate::trace::TraceConfig,
 }
 
 impl Default for SocConfig {
@@ -73,6 +76,7 @@ impl Default for SocConfig {
             flash_timing: FlashTiming::virtualized(),
             freq_hz: 20_000_000,
             backend: BackendKind::Interp,
+            trace: crate::trace::TraceConfig::default(),
         }
     }
 }
@@ -113,7 +117,7 @@ pub struct Soc {
 impl Soc {
     pub fn new(cfg: SocConfig) -> Self {
         let flash = SpiFlash::new(cfg.flash_size, cfg.flash_timing);
-        Self {
+        let mut soc = Self {
             cpu: Cpu::new(SRAM_BASE),
             bus: Bus::new(cfg.num_banks, cfg.bank_size, cfg.cs_dram_size, flash),
             cgra: CgraCore::new(),
@@ -126,7 +130,11 @@ impl Soc {
             was_sleeping: false,
             cgra_fault: None,
             backend: Some(cfg.backend.create()),
+        };
+        if cfg.trace.mask != 0 {
+            soc.set_trace(cfg.trace);
         }
+        soc
     }
 
     /// Which execution backend drives this SoC.
@@ -174,7 +182,22 @@ impl Soc {
         if let Some(b) = &mut self.backend {
             b.restore_hook();
         }
+        self.reset_trace();
         Ok(())
+    }
+
+    /// Drop recorded trace history and resync the IRQ baseline — used
+    /// after any operation that rewrites the world underneath the ring
+    /// (program load, snapshot restore), so replayed line levels are
+    /// never double-reported as fresh edges (no phantom events).
+    fn reset_trace(&mut self) {
+        if self.bus.trace.is_some() {
+            let lines = self.irq_lines_word();
+            if let Some(t) = self.bus.trace.as_deref_mut() {
+                t.clear();
+                t.resync(lines);
+            }
+        }
     }
 
     /// Seconds represented by `cycles` at the emulated clock.
@@ -182,11 +205,62 @@ impl Soc {
         cycles as f64 / self.freq_hz as f64
     }
 
+    // ---- event tracing --------------------------------------------------
+
+    /// Install (or replace) the trace ring (DESIGN.md §13). Works with
+    /// `mask == 0` too — the bench harness arms a silent ring to measure
+    /// the trace-off overhead. The IRQ baseline is resynced to the
+    /// current line state so installing mid-run fabricates no edges.
+    pub fn set_trace(&mut self, cfg: crate::trace::TraceConfig) {
+        let mut ring = Box::new(crate::trace::TraceRing::new(cfg));
+        ring.resync(self.irq_lines_word());
+        self.bus.trace = Some(ring);
+    }
+
+    /// The installed trace ring, if any.
+    pub fn trace_ring(&self) -> Option<&crate::trace::TraceRing> {
+        self.bus.trace.as_deref()
+    }
+
+    pub fn trace_ring_mut(&mut self) -> Option<&mut crate::trace::TraceRing> {
+        self.bus.trace.as_deref_mut()
+    }
+
+    /// Remove the trace ring and return it (server `trace.stop` takes
+    /// the final totals this way).
+    pub fn take_trace(&mut self) -> Option<Box<crate::trace::TraceRing>> {
+        self.bus.trace.take()
+    }
+
+    /// Combined IRQ-line word in `mip` bit layout (bit 7 = machine
+    /// timer, bits 16.. = fast lines) — the value the trace ring diffs
+    /// on every refresh, so event `arg`s name real `mip` bits.
+    fn irq_lines_word(&self) -> u32 {
+        let mtip = self.bus.timer.irq_pending(self.now);
+        let fast = self.bus.fast_irq_lines(self.now);
+        ((mtip as u32) << 7) | (fast << int::FAST_BASE)
+    }
+
+    /// Power transition through the perf monitor, mirrored into the
+    /// trace ring — but only on actual state *changes*, so the ring
+    /// never records the no-op re-assertions the sleep paths emit.
+    fn set_power(&mut self, d: Domain, s: PowerState, at: u64) {
+        if self.perf.set_state(d, s, at) {
+            if let Some(t) = self.bus.trace.as_deref_mut() {
+                let idx = crate::perfmon::vcd::domain_index(d, self.bus.banks.len());
+                t.power(at, idx as u16, s.to_u8());
+            }
+        }
+    }
+
     // ---- event-driven execution ----------------------------------------
 
     pub(crate) fn refresh_irq_lines(&mut self) {
         let mtip = self.bus.timer.irq_pending(self.now);
         let fast = self.bus.fast_irq_lines(self.now);
+        if let Some(t) = self.bus.trace.as_deref_mut() {
+            t.irq_edges(self.now, ((mtip as u32) << 7) | (fast << int::FAST_BASE));
+        }
         self.cpu.set_irq_lines(mtip, fast);
     }
 
@@ -235,12 +309,12 @@ impl Soc {
                 match req {
                     PowerRequest::Bank(i, s) => {
                         self.bus.banks[i].set_state(s);
-                        self.perf.set_state(Domain::MemBank(i), s, self.now);
+                        self.set_power(Domain::MemBank(i), s, self.now);
                     }
                     PowerRequest::Cgra(s) => {
                         // explicit CGRA state applies when not mid-run
                         if self.cgra_busy_until.is_none() {
-                            self.perf.set_state(Domain::Cgra, s, self.now);
+                            self.set_power(Domain::Cgra, s, self.now);
                         }
                     }
                 }
@@ -260,7 +334,8 @@ impl Soc {
         if let Some(t) = self.cgra_busy_until {
             if self.now >= t {
                 self.cgra_busy_until = None;
-                self.perf.set_state(Domain::Cgra, self.bus.power.cgra_state(), t);
+                let s = self.bus.power.cgra_state();
+                self.set_power(Domain::Cgra, s, t);
             }
         }
         self.bus.cgra_dev.tick(self.now);
@@ -280,16 +355,16 @@ impl Soc {
     }
 
     fn enter_sleep(&mut self) {
-        self.perf.set_state(Domain::Cpu, PowerState::ClockGated, self.now);
-        self.perf.set_state(Domain::Bus, PowerState::ClockGated, self.now);
-        self.perf.set_state(Domain::Periph, PowerState::ClockGated, self.now);
+        self.set_power(Domain::Cpu, PowerState::ClockGated, self.now);
+        self.set_power(Domain::Bus, PowerState::ClockGated, self.now);
+        self.set_power(Domain::Periph, PowerState::ClockGated, self.now);
         let mode = self.bus.power.sleep_mem_mode().as_power_state();
         if mode != PowerState::Active {
             let saved: Vec<PowerState> = self.bus.banks.iter().map(|b| b.state()).collect();
-            for (i, bank) in self.bus.banks.iter_mut().enumerate() {
-                if bank.state() == PowerState::Active {
-                    bank.set_state(mode);
-                    self.perf.set_state(Domain::MemBank(i), mode, self.now);
+            for i in 0..self.bus.banks.len() {
+                if self.bus.banks[i].state() == PowerState::Active {
+                    self.bus.banks[i].set_state(mode);
+                    self.set_power(Domain::MemBank(i), mode, self.now);
                 }
             }
             self.saved_bank_states = Some(saved);
@@ -297,14 +372,14 @@ impl Soc {
     }
 
     fn exit_sleep(&mut self) {
-        self.perf.set_state(Domain::Cpu, PowerState::Active, self.now);
-        self.perf.set_state(Domain::Bus, PowerState::Active, self.now);
-        self.perf.set_state(Domain::Periph, PowerState::Active, self.now);
+        self.set_power(Domain::Cpu, PowerState::Active, self.now);
+        self.set_power(Domain::Bus, PowerState::Active, self.now);
+        self.set_power(Domain::Periph, PowerState::Active, self.now);
         if let Some(saved) = self.saved_bank_states.take() {
             for (i, s) in saved.into_iter().enumerate() {
                 if s == PowerState::Active {
                     self.bus.banks[i].set_state(PowerState::Active);
-                    self.perf.set_state(Domain::MemBank(i), PowerState::Active, self.now);
+                    self.set_power(Domain::MemBank(i), PowerState::Active, self.now);
                 }
             }
         }
@@ -384,7 +459,7 @@ impl Soc {
                 self.stats.cgra_launches += 1;
                 self.stats.cgra_run.merge(run);
                 // CGRA domain active for the duration of the run
-                self.perf.set_state(Domain::Cgra, PowerState::Active, self.now);
+                self.set_power(Domain::Cgra, PowerState::Active, self.now);
                 self.cgra_busy_until = Some(self.now + run.total_cycles());
                 self.bus.cgra_dev.complete(run, self.now);
             }
@@ -500,6 +575,9 @@ impl Soc {
         if let Some(b) = &mut self.backend {
             b.restore_hook();
         }
+        // the ring is derived state: never part of the payload, always
+        // reset so a restored platform starts with a clean capture
+        self.reset_trace();
         Ok(())
     }
 }

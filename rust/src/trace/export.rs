@@ -1,0 +1,262 @@
+//! Trace exporters: VCD (waveform viewers — the general-pipeline
+//! successor of [`crate::perfmon::vcd`]'s power-only export, sharing its
+//! identifier/encoding helpers so both render identically) and
+//! JSON-lines (one object per event, streamable/greppable). Both consume
+//! a [`TraceDump`], so they work identically on a live ring capture and
+//! a `FEMUTRAC` file read back from disk; `femu trace dump` is the CLI
+//! over both.
+
+use std::fmt::Write as _;
+
+use crate::perfmon::vcd::{bits, domain_names, ident};
+use crate::perfmon::PowerState;
+use crate::util::Json;
+
+use super::format::TraceDump;
+use super::{bus_region, category, kind, TraceEvent};
+
+/// One event as a JSON object (shared by the JSONL exporter and the
+/// server's `trace.read` frames, so wire and file forms agree).
+pub fn event_json(ev: &TraceEvent, num_banks: usize) -> Json {
+    let cycle = ("cycle", Json::Num(ev.cycle as f64));
+    let event = ("event", Json::Str(ev.kind_name().into()));
+    match ev.kind {
+        kind::RETIRE => Json::obj(vec![cycle, event, ("pc", hex(ev.a))]),
+        kind::BUS_READ | kind::BUS_WRITE => Json::obj(vec![
+            cycle,
+            event,
+            ("region", Json::Str(bus_region::name(ev.arg).into())),
+            ("addr", hex(ev.a)),
+            ("value", hex(ev.b)),
+            ("wait", Json::Num(ev.aux as f64)),
+        ]),
+        kind::IRQ_RAISE | kind::IRQ_DROP => Json::obj(vec![
+            cycle,
+            event,
+            ("line", Json::Num(ev.arg as f64)),
+            ("lines", hex(ev.a)),
+        ]),
+        _ => Json::obj(vec![
+            cycle,
+            event,
+            ("domain", Json::Str(domain_label(ev.aux as usize, num_banks))),
+            ("state", Json::Str(state_label(ev.arg))),
+        ]),
+    }
+}
+
+/// JSON-lines export: a metadata line followed by one line per retained
+/// event. Deterministic (sorted keys), so repeat runs diff cleanly.
+pub fn to_jsonl(dump: &TraceDump) -> String {
+    let mut out = String::new();
+    let meta = Json::obj(vec![(
+        "trace",
+        Json::obj(vec![
+            ("categories", Json::Str(dump.categories())),
+            ("digest", Json::Str(format!("{:#018x}", dump.digest))),
+            ("dropped", Json::Num(dump.dropped() as f64)),
+            ("freq_hz", Json::Num(dump.freq_hz as f64)),
+            ("retained", Json::Num(dump.events.len() as f64)),
+            ("total", Json::Num(dump.total as f64)),
+        ]),
+    )]);
+    let _ = writeln!(out, "{meta}");
+    let num_banks = dump.num_banks as usize;
+    for ev in &dump.events {
+        let _ = writeln!(out, "{}", event_json(ev, num_banks));
+    }
+    out
+}
+
+/// VCD export. Declares one signal group per *enabled* category:
+/// `retire_pc[31:0]`, `bus_addr/bus_data[31:0]` + `bus_we` + `bus_wait`,
+/// `irq_lines[31:0]`, and a 2-bit state vector per power domain (same
+/// encoding as the perfmon VCD: 00 active, 01 clock-gated,
+/// 10 power-gated, 11 retention). Values start as `x` until the first
+/// event — a dump taken after snapshot restore has no fabricated
+/// history.
+pub fn to_vcd(dump: &TraceDump) -> String {
+    let freq = dump.freq_hz.max(1);
+    let ns_per_cycle = 1e9 / freq as f64;
+    let num_banks = dump.num_banks as usize;
+    let mut out = String::new();
+    let _ = writeln!(out, "$comment femu trace (categories: {}) $end", dump.categories());
+    let _ = writeln!(
+        out,
+        "$comment one tick = one cycle = {ns_per_cycle:.1} ns at {freq} Hz $end"
+    );
+    let _ = writeln!(out, "$timescale 1 ns $end");
+    let _ = writeln!(out, "$scope module femu_trace $end");
+
+    let mut next = 0usize;
+    let mut declare = |out: &mut String, width: usize, name: &str| -> String {
+        let id = ident(next);
+        next += 1;
+        let _ = writeln!(out, "$var wire {width} {id} {name} $end");
+        id
+    };
+    let mut retire_pc = None;
+    let mut bus_vars = None;
+    let mut irq_lines = None;
+    let mut power_vars: Vec<String> = Vec::new();
+    if dump.mask & category::RETIRE != 0 {
+        retire_pc = Some(declare(&mut out, 32, "retire_pc"));
+    }
+    if dump.mask & category::BUS != 0 {
+        bus_vars = Some((
+            declare(&mut out, 32, "bus_addr"),
+            declare(&mut out, 32, "bus_data"),
+            declare(&mut out, 1, "bus_we"),
+            declare(&mut out, 16, "bus_wait"),
+        ));
+    }
+    if dump.mask & category::IRQ != 0 {
+        irq_lines = Some(declare(&mut out, 32, "irq_lines"));
+    }
+    if dump.mask & category::POWER != 0 {
+        for name in domain_names(num_banks) {
+            let id = declare(&mut out, 2, &format!("power_{name}"));
+            power_vars.push(id);
+        }
+    }
+    let _ = writeln!(out, "$upscope $end");
+    let _ = writeln!(out, "$enddefinitions $end");
+
+    // all signals unknown until their first event
+    let _ = writeln!(out, "#0");
+    if let Some(id) = &retire_pc {
+        let _ = writeln!(out, "bx {id}");
+    }
+    if let Some((addr, data, we, wait)) = &bus_vars {
+        let _ = writeln!(out, "bx {addr}");
+        let _ = writeln!(out, "bx {data}");
+        let _ = writeln!(out, "x{we}");
+        let _ = writeln!(out, "bx {wait}");
+    }
+    if let Some(id) = &irq_lines {
+        let _ = writeln!(out, "bx {id}");
+    }
+    for id in &power_vars {
+        let _ = writeln!(out, "bx {id}");
+    }
+
+    let mut last_time = 0u64;
+    for ev in &dump.events {
+        let t = (ev.cycle as f64 * ns_per_cycle) as u64;
+        if t != last_time {
+            let _ = writeln!(out, "#{t}");
+            last_time = t;
+        }
+        match ev.kind {
+            kind::RETIRE => {
+                if let Some(id) = &retire_pc {
+                    let _ = writeln!(out, "b{:b} {id}", ev.a);
+                }
+            }
+            kind::BUS_READ | kind::BUS_WRITE => {
+                if let Some((addr, data, we, wait)) = &bus_vars {
+                    let _ = writeln!(out, "b{:b} {addr}", ev.a);
+                    let _ = writeln!(out, "b{:b} {data}", ev.b);
+                    let w = (ev.kind == kind::BUS_WRITE) as u8;
+                    let _ = writeln!(out, "{w}{we}");
+                    let _ = writeln!(out, "b{:b} {wait}", ev.aux);
+                }
+            }
+            kind::IRQ_RAISE | kind::IRQ_DROP => {
+                if let Some(id) = &irq_lines {
+                    let _ = writeln!(out, "b{:b} {id}", ev.a);
+                }
+            }
+            _ => {
+                if let Some(id) = power_vars.get(ev.aux as usize) {
+                    let b = match PowerState::from_u8(ev.arg) {
+                        Ok(s) => bits(s),
+                        Err(_) => "xx",
+                    };
+                    let _ = writeln!(out, "b{b} {id}");
+                }
+            }
+        }
+    }
+    out
+}
+
+fn hex(v: u32) -> Json {
+    Json::Str(format!("{v:#010x}"))
+}
+
+fn domain_label(index: usize, num_banks: usize) -> String {
+    domain_names(num_banks)
+        .into_iter()
+        .nth(index)
+        .unwrap_or_else(|| format!("domain{index}"))
+}
+
+fn state_label(tag: u8) -> String {
+    match PowerState::from_u8(tag) {
+        Ok(s) => s.name().into(),
+        Err(_) => format!("state{tag}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{TraceConfig, TraceRing};
+    use super::*;
+
+    fn sample_dump() -> TraceDump {
+        let mut ring = TraceRing::new(TraceConfig { mask: category::ALL, depth: 64 });
+        ring.retire(10, 0x180);
+        ring.bus_write(14, bus_region::PERIPH, 0x2000_0000, 0x55, 3);
+        ring.bus_read(18, bus_region::BRIDGE, 0x3000_0010, 0xAB, 40);
+        ring.irq_edges(20, 0x80);
+        ring.power(25, 4, PowerState::ClockGated.to_u8());
+        ring.retire(31, 0x184);
+        TraceDump::from_ring(&ring, 20_000_000, 2)
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_label() {
+        let dump = sample_dump();
+        let text = to_jsonl(&dump);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + dump.events.len());
+        for line in &lines {
+            Json::parse(line).unwrap();
+        }
+        assert!(lines[0].contains("\"categories\""));
+        assert!(lines[1].contains("\"retire\"") && lines[1].contains("0x00000180"));
+        assert!(lines[2].contains("\"bus_write\"") && lines[2].contains("periph"));
+        assert!(lines[3].contains("\"bus_read\"") && lines[3].contains("bridge"));
+        assert!(lines[4].contains("\"irq_raise\""));
+        assert!(lines[5].contains("\"power\"") && lines[5].contains("cgra"));
+        assert!(lines[5].contains("clock_gated"));
+    }
+
+    #[test]
+    fn vcd_structure_and_times() {
+        let dump = sample_dump();
+        let vcd = to_vcd(&dump);
+        assert!(vcd.contains("$timescale 1 ns $end"));
+        assert!(vcd.contains("retire_pc"));
+        assert!(vcd.contains("bus_addr"));
+        assert!(vcd.contains("irq_lines"));
+        assert!(vcd.contains("power_cgra"));
+        assert!(vcd.contains("power_mem_bank1"));
+        // 10 cycles at 20 MHz = 500 ns; 31 cycles = 1550 ns
+        assert!(vcd.contains("#500"), "{vcd}");
+        assert!(vcd.contains("#1550"), "{vcd}");
+        // retire pc value in binary (0x184 = 110000100)
+        assert!(vcd.contains("b110000100 "), "{vcd}");
+    }
+
+    #[test]
+    fn vcd_declares_only_enabled_categories() {
+        let mut ring = TraceRing::new(TraceConfig { mask: category::RETIRE, depth: 64 });
+        ring.retire(1, 4);
+        let vcd = to_vcd(&TraceDump::from_ring(&ring, 20_000_000, 2));
+        assert!(vcd.contains("retire_pc"));
+        assert!(!vcd.contains("bus_addr"));
+        assert!(!vcd.contains("power_cpu"));
+    }
+}

@@ -1,0 +1,269 @@
+//! `FEMUTRAC`: the on-disk trace container, framed and versioned exactly
+//! like `FEMUSNAP` (DESIGN.md §13):
+//!
+//! ```text
+//! magic "FEMUTRAC" | version u32 | payload_len u64 | fnv1a64(payload) | payload
+//! ```
+//!
+//! The payload is a small header (mask, platform clock, bank count —
+//! enough for the exporters to label signals), the ring's lifetime
+//! totals (per-category counts + stream digest, which cover events lost
+//! to wraparound), and the retained event window as fixed-width
+//! [`TraceEvent`] records. Reads validate magic, version, length,
+//! checksum, record alignment, kind bytes, count/total consistency, and
+//! cycle monotonicity — a truncated or corrupted file is an error,
+//! never a panic.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::snapshot::{Reader, Writer};
+
+use super::{category, fnv1a64, TraceEvent, TraceRing, EVENT_BYTES};
+
+/// File/stream magic.
+pub const MAGIC: [u8; 8] = *b"FEMUTRAC";
+
+/// Trace format version. Bump on any layout change; readers reject
+/// mismatches outright (no cross-version migration).
+pub const VERSION: u32 = 1;
+
+/// Header size in bytes: magic + version + payload_len + checksum.
+const HEADER_LEN: usize = 8 + 4 + 8 + 8;
+
+/// A decoded (or about-to-be-encoded) trace file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceDump {
+    /// Category mask the ring recorded with.
+    pub mask: u8,
+    /// Platform clock, for time labeling in exporters.
+    pub freq_hz: u64,
+    /// Memory bank count, for power-domain naming in exporters.
+    pub num_banks: u32,
+    /// Total events ever recorded (≥ `events.len()`).
+    pub total: u64,
+    /// Per-category lifetime totals `[retire, bus, irq, power]`.
+    pub counts: [u64; category::COUNT],
+    /// Rolling FNV-1a64 over every encoded record ever pushed.
+    pub digest: u64,
+    /// The retained window, oldest to newest.
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceDump {
+    /// Capture a ring's current contents.
+    pub fn from_ring(ring: &TraceRing, freq_hz: u64, num_banks: u32) -> Self {
+        Self {
+            mask: ring.mask(),
+            freq_hz,
+            num_banks,
+            total: ring.total(),
+            counts: ring.counts(),
+            digest: ring.digest(),
+            events: ring.events(),
+        }
+    }
+
+    /// Events lost to ring wraparound before this dump was taken.
+    pub fn dropped(&self) -> u64 {
+        self.total - self.events.len() as u64
+    }
+
+    /// Canonical category list of the recording mask.
+    pub fn categories(&self) -> String {
+        super::category_list(self.mask)
+    }
+
+    /// Serialize to the framed `FEMUTRAC` form.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u8(self.mask);
+        w.u64(self.freq_hz);
+        w.u32(self.num_banks);
+        w.u64(self.total);
+        for c in self.counts {
+            w.u64(c);
+        }
+        w.u64(self.digest);
+        let mut flat = Vec::with_capacity(self.events.len() * EVENT_BYTES);
+        for ev in &self.events {
+            flat.extend_from_slice(&ev.encode());
+        }
+        w.bytes(&flat);
+        let payload = w.into_payload();
+        let mut bytes = Vec::with_capacity(HEADER_LEN + payload.len());
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes
+    }
+
+    /// Validate and decode a framed trace.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < HEADER_LEN {
+            bail!("trace truncated: {} bytes, need at least {HEADER_LEN}", bytes.len());
+        }
+        if bytes[..8] != MAGIC {
+            bail!("not a FEMU trace (bad magic)");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("trace version {version} unsupported (this build reads version {VERSION})");
+        }
+        let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        if bytes.len() - HEADER_LEN != payload_len {
+            bail!(
+                "trace truncated or padded: header says {payload_len} payload bytes, have {}",
+                bytes.len() - HEADER_LEN
+            );
+        }
+        let checksum = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+        let payload = &bytes[HEADER_LEN..];
+        let actual = fnv1a64(payload);
+        if checksum != actual {
+            bail!("trace corrupt: checksum {actual:#x} != recorded {checksum:#x}");
+        }
+
+        let mut r = Reader::new(payload);
+        let mask = r.u8()?;
+        let freq_hz = r.u64()?;
+        let num_banks = r.u32()?;
+        let total = r.u64()?;
+        let mut counts = [0u64; category::COUNT];
+        for c in &mut counts {
+            *c = r.u64()?;
+        }
+        let digest = r.u64()?;
+        let flat = r.bytes()?;
+        if let Err(e) = r.finish() {
+            bail!("trace corrupt: trailing payload bytes ({e})");
+        }
+        if flat.len() % EVENT_BYTES != 0 {
+            bail!(
+                "trace corrupt: event blob of {} bytes is not a multiple of {EVENT_BYTES}",
+                flat.len()
+            );
+        }
+        let mut events = Vec::with_capacity(flat.len() / EVENT_BYTES);
+        let mut last_cycle = 0u64;
+        for chunk in flat.chunks_exact(EVENT_BYTES) {
+            let ev = TraceEvent::decode(chunk.try_into().unwrap())?;
+            if ev.cycle < last_cycle {
+                bail!(
+                    "trace corrupt: cycle goes backwards ({} after {last_cycle})",
+                    ev.cycle
+                );
+            }
+            last_cycle = ev.cycle;
+            events.push(ev);
+        }
+        if (events.len() as u64) > total {
+            bail!(
+                "trace corrupt: {} retained events exceed recorded total {total}",
+                events.len()
+            );
+        }
+        if counts.iter().sum::<u64>() != total {
+            bail!(
+                "trace corrupt: per-category counts sum to {} but total is {total}",
+                counts.iter().sum::<u64>()
+            );
+        }
+        Ok(Self { mask, freq_hz, num_banks, total, counts, digest, events })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bytes()).with_context(|| format!("writing trace {path:?}"))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path).with_context(|| format!("reading trace {path:?}"))?;
+        Self::from_bytes(&bytes).with_context(|| format!("validating trace {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{bus_region, kind, TraceConfig};
+    use super::*;
+
+    fn sample_ring() -> TraceRing {
+        let mut ring = TraceRing::new(TraceConfig { mask: category::ALL, depth: 64 });
+        ring.retire(10, 0x180);
+        ring.bus_write(14, bus_region::PERIPH, 0x2000_0000, 0x55, 3);
+        ring.irq_edges(20, 0x80);
+        ring.power(25, 4, 1);
+        ring.retire(31, 0x184);
+        ring
+    }
+
+    #[test]
+    fn dump_roundtrip() {
+        let dump = TraceDump::from_ring(&sample_ring(), 20_000_000, 2);
+        let bytes = dump.to_bytes();
+        let back = TraceDump::from_bytes(&bytes).unwrap();
+        assert_eq!(back, dump);
+        assert_eq!(back.total, 5);
+        assert_eq!(back.dropped(), 0);
+        assert_eq!(back.counts, [2, 1, 1, 1]);
+    }
+
+    #[test]
+    fn frame_validation_catches_corruption() {
+        let good = TraceDump::from_ring(&sample_ring(), 20_000_000, 2).to_bytes();
+        assert!(TraceDump::from_bytes(&good).is_ok());
+
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 0xFF;
+        let err = TraceDump::from_bytes(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+        let mut short = good.clone();
+        short.truncate(short.len() - 3);
+        assert!(TraceDump::from_bytes(&short).is_err());
+        assert!(TraceDump::from_bytes(&good[..10]).is_err());
+
+        let mut magic = good.clone();
+        magic[0] = b'X';
+        let err = TraceDump::from_bytes(&magic).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+
+        let mut vers = good;
+        vers[8] = 0xEE;
+        let err = TraceDump::from_bytes(&vers).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn payload_consistency_checks() {
+        // a frame-valid payload with a bad kind byte must still be rejected
+        let mut dump = TraceDump::from_ring(&sample_ring(), 20_000_000, 2);
+        dump.events[0].kind = kind::POWER + 9;
+        let err = TraceDump::from_bytes(&dump.to_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("kind"), "{err:#}");
+
+        // cycles running backwards
+        let mut dump = TraceDump::from_ring(&sample_ring(), 20_000_000, 2);
+        dump.events[1].cycle = 1;
+        let err = TraceDump::from_bytes(&dump.to_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("backwards"), "{err:#}");
+
+        // counts out of sync with the total
+        let mut dump = TraceDump::from_ring(&sample_ring(), 20_000_000, 2);
+        dump.counts[0] += 1;
+        let err = TraceDump::from_bytes(&dump.to_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("counts"), "{err:#}");
+
+        // more retained events than the lifetime total
+        let mut dump = TraceDump::from_ring(&sample_ring(), 20_000_000, 2);
+        dump.total = 1;
+        dump.counts = [1, 0, 0, 0];
+        let err = TraceDump::from_bytes(&dump.to_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("exceed"), "{err:#}");
+    }
+}

@@ -1,0 +1,610 @@
+//! High-throughput binary trace ring: the observability layer that turns
+//! the emulator from a numbers-reproducer into a debuggable platform
+//! (ROADMAP item 5; BEE's motivation is "full waveforms at high
+//! throughput, no waiting on long runs").
+//!
+//! Four event categories, each with its own enable bit in a [`TraceRing`]
+//! mask ([`category`]):
+//!
+//! * **retire** — one event per retired instruction (cycle, pc), recorded
+//!   by both execution backends at identical timestamps: the interpreter
+//!   hooks `single_step`, the block backend hooks its replay loop, and
+//!   both derive the timestamp from the same per-instruction cycle
+//!   accounting, so the streams are bit-identical by construction
+//!   (`femu trace validate` and the CI `trace-validate` job prove it).
+//! * **bus** — CPU-initiated non-SRAM transactions (peripheral and
+//!   CS-bridge reads/writes, with address, value, and wait states). The
+//!   SRAM fast path is deliberately unhooked: tracing must never tax the
+//!   hot loop, and DMA/CGRA master traffic is visible through their own
+//!   completion events.
+//! * **irq** — edges on the combined interrupt lines (machine timer +
+//!   fast lines), recorded where the lines are refreshed so both
+//!   backends observe the same edge at the same cycle.
+//! * **power** — power-state transitions per clock/power domain,
+//!   recorded only on real state changes.
+//!
+//! The ring is fixed-capacity (power-of-two, [`TraceConfig::depth`])
+//! and overwrites oldest events on wrap, so a long run keeps the newest
+//! window; per-category counts and a rolling FNV-1a64 stream digest
+//! cover **every** event ever recorded, including overwritten ones —
+//! two runs are event-identical iff their digests and totals match.
+//!
+//! Cost contract: with no ring attached the hot paths pay one
+//! `Option` branch; with a ring attached but a category disabled they
+//! pay one more mask test. The `perf_hotpaths` bench measures
+//! trace-off vs no-trace guest MIPS and the CI bench gate holds the
+//! ratio (`trace_off_overhead`) at ≤3%.
+//!
+//! Snapshot semantics: the ring is **derived state** like backend block
+//! caches — never serialized. Restore clears it and resyncs the IRQ-edge
+//! baseline, so a restored platform produces no phantom events
+//! (DESIGN.md §13).
+//!
+//! On-disk form: [`format::TraceDump`] (`FEMUTRAC`, versioned and
+//! checksummed like `FEMUSNAP`); exporters to VCD and JSON-lines live in
+//! [`export`]. `femu trace dump` is the CLI over both.
+
+pub mod export;
+pub mod format;
+
+use anyhow::{bail, Result};
+
+/// Per-category enable bits for the ring mask.
+pub mod category {
+    pub const RETIRE: u8 = 1 << 0;
+    pub const BUS: u8 = 1 << 1;
+    pub const IRQ: u8 = 1 << 2;
+    pub const POWER: u8 = 1 << 3;
+    pub const ALL: u8 = RETIRE | BUS | IRQ | POWER;
+    /// Number of categories (indexes the per-category count array).
+    pub const COUNT: usize = 4;
+}
+
+/// Event kind discriminants (byte 8 of the encoded record).
+pub mod kind {
+    pub const RETIRE: u8 = 1;
+    pub const BUS_READ: u8 = 2;
+    pub const BUS_WRITE: u8 = 3;
+    pub const IRQ_RAISE: u8 = 4;
+    pub const IRQ_DROP: u8 = 5;
+    pub const POWER: u8 = 6;
+}
+
+/// Region codes for bus events (the `arg` byte of `BUS_*` records).
+pub mod bus_region {
+    pub const PERIPH: u8 = 0;
+    pub const BRIDGE: u8 = 1;
+
+    pub fn name(code: u8) -> &'static str {
+        match code {
+            PERIPH => "periph",
+            BRIDGE => "bridge",
+            _ => "unknown",
+        }
+    }
+}
+
+/// Encoded size of one event record (fixed-width, little-endian).
+pub const EVENT_BYTES: usize = 20;
+
+/// Default ring capacity in events.
+pub const DEFAULT_DEPTH: usize = 1 << 16;
+
+/// FNV-1a 64-bit offset basis (same family as the snapshot checksum).
+pub(crate) const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Fold `bytes` into a rolling FNV-1a64 state.
+pub(crate) fn fnv1a64_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// One-shot FNV-1a64 of a buffer.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_fold(FNV_OFFSET, bytes)
+}
+
+/// Parse a category list: `all`, `none`, or a comma-separated subset of
+/// `retire,bus,irq,power`.
+pub fn parse_categories(s: &str) -> Result<u8> {
+    match s.trim() {
+        "all" => return Ok(category::ALL),
+        "none" | "" => return Ok(0),
+        _ => {}
+    }
+    let mut mask = 0u8;
+    for part in s.split(',') {
+        mask |= match part.trim() {
+            "retire" => category::RETIRE,
+            "bus" => category::BUS,
+            "irq" => category::IRQ,
+            "power" => category::POWER,
+            other => bail!("unknown trace category `{other}` (want retire|bus|irq|power|all|none)"),
+        };
+    }
+    Ok(mask)
+}
+
+/// Render a mask back to its canonical category list.
+pub fn category_list(mask: u8) -> String {
+    if mask == 0 {
+        return "none".into();
+    }
+    let mut parts = Vec::new();
+    for (bit, name) in [
+        (category::RETIRE, "retire"),
+        (category::BUS, "bus"),
+        (category::IRQ, "irq"),
+        (category::POWER, "power"),
+    ] {
+        if mask & bit != 0 {
+            parts.push(name);
+        }
+    }
+    parts.join(",")
+}
+
+/// Ring configuration (the `[trace]` TOML table / `--trace` CLI flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Category enable mask; 0 means tracing is off (no ring attached
+    /// when configured through [`crate::soc::SocConfig`]).
+    pub mask: u8,
+    /// Ring capacity in events (rounded up to a power of two, min 16).
+    pub depth: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { mask: 0, depth: DEFAULT_DEPTH }
+    }
+}
+
+/// One trace record. Fixed-width so the on-disk form, the digest input,
+/// and the in-memory form are the same 20 bytes:
+///
+/// ```text
+/// cycle u64 | kind u8 | arg u8 | aux u16 | a u32 | b u32
+/// ```
+///
+/// Field meaning per kind:
+///
+/// | kind        | arg          | aux        | a            | b     |
+/// |-------------|--------------|------------|--------------|-------|
+/// | `RETIRE`    | 0            | 0          | pc           | 0     |
+/// | `BUS_READ`  | region code  | wait cycles| address      | value |
+/// | `BUS_WRITE` | region code  | wait cycles| address      | value |
+/// | `IRQ_RAISE` | line bit     | 0          | lines after  | 0     |
+/// | `IRQ_DROP`  | line bit     | 0          | lines after  | 0     |
+/// | `POWER`     | power state  | domain idx | 0            | 0     |
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub cycle: u64,
+    pub kind: u8,
+    pub arg: u8,
+    pub aux: u16,
+    pub a: u32,
+    pub b: u32,
+}
+
+impl TraceEvent {
+    pub fn encode(&self) -> [u8; EVENT_BYTES] {
+        let mut out = [0u8; EVENT_BYTES];
+        out[0..8].copy_from_slice(&self.cycle.to_le_bytes());
+        out[8] = self.kind;
+        out[9] = self.arg;
+        out[10..12].copy_from_slice(&self.aux.to_le_bytes());
+        out[12..16].copy_from_slice(&self.a.to_le_bytes());
+        out[16..20].copy_from_slice(&self.b.to_le_bytes());
+        out
+    }
+
+    /// Decode one record, rejecting unknown kinds (corruption guard).
+    pub fn decode(b: &[u8; EVENT_BYTES]) -> Result<TraceEvent> {
+        let ev = TraceEvent {
+            cycle: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+            kind: b[8],
+            arg: b[9],
+            aux: u16::from_le_bytes(b[10..12].try_into().unwrap()),
+            a: u32::from_le_bytes(b[12..16].try_into().unwrap()),
+            b: u32::from_le_bytes(b[16..20].try_into().unwrap()),
+        };
+        if !(kind::RETIRE..=kind::POWER).contains(&ev.kind) {
+            bail!("trace corrupt: unknown event kind {}", ev.kind);
+        }
+        Ok(ev)
+    }
+
+    /// The category bit this event belongs to.
+    pub fn category(&self) -> u8 {
+        match self.kind {
+            kind::RETIRE => category::RETIRE,
+            kind::BUS_READ | kind::BUS_WRITE => category::BUS,
+            kind::IRQ_RAISE | kind::IRQ_DROP => category::IRQ,
+            _ => category::POWER,
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self.kind {
+            kind::RETIRE => "retire",
+            kind::BUS_READ => "bus_read",
+            kind::BUS_WRITE => "bus_write",
+            kind::IRQ_RAISE => "irq_raise",
+            kind::IRQ_DROP => "irq_drop",
+            kind::POWER => "power",
+            _ => "unknown",
+        }
+    }
+}
+
+/// Per-category count index: retire=0, bus=1, irq=2, power=3.
+fn count_index(kind: u8) -> usize {
+    match kind {
+        kind::RETIRE => 0,
+        kind::BUS_READ | kind::BUS_WRITE => 1,
+        kind::IRQ_RAISE | kind::IRQ_DROP => 2,
+        _ => 3,
+    }
+}
+
+/// The live ring. Owned by the bus (`soc.bus.trace`) so the CPU step
+/// paths, the bus itself, and the SoC event hooks can all reach it with
+/// one `Option` branch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceRing {
+    mask: u8,
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    /// Total events ever recorded (monotone; `head % cap` is the write
+    /// slot, so wraparound keeps the newest `cap` events).
+    head: u64,
+    counts: [u64; category::COUNT],
+    digest: u64,
+    /// Last observed combined IRQ lines (edge-detection baseline). Kept
+    /// current even when the `irq` category is disabled, so enabling it
+    /// mid-run never manufactures stale edges.
+    last_irq_lines: u32,
+}
+
+impl TraceRing {
+    pub fn new(cfg: TraceConfig) -> Self {
+        let cap = cfg.depth.max(16).next_power_of_two();
+        Self {
+            mask: cfg.mask,
+            cap,
+            buf: Vec::new(),
+            head: 0,
+            counts: [0; category::COUNT],
+            digest: FNV_OFFSET,
+            last_irq_lines: 0,
+        }
+    }
+
+    pub fn mask(&self) -> u8 {
+        self.mask
+    }
+
+    pub fn set_mask(&mut self, mask: u8) {
+        self.mask = mask;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total events ever recorded (including those overwritten on wrap).
+    pub fn total(&self) -> u64 {
+        self.head
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.head.min(self.cap as u64) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head == 0
+    }
+
+    /// Events lost to wraparound.
+    pub fn dropped(&self) -> u64 {
+        self.head - self.len() as u64
+    }
+
+    /// Rolling FNV-1a64 over every encoded record ever pushed.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Per-category totals: `[retire, bus, irq, power]`.
+    pub fn counts(&self) -> [u64; category::COUNT] {
+        self.counts
+    }
+
+    pub fn retires(&self) -> u64 {
+        self.counts[0]
+    }
+
+    pub fn irq_events(&self) -> u64 {
+        self.counts[2]
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        self.digest = fnv1a64_fold(self.digest, &ev.encode());
+        self.counts[count_index(ev.kind)] += 1;
+        let slot = (self.head % self.cap as u64) as usize;
+        if slot < self.buf.len() {
+            self.buf[slot] = ev;
+        } else {
+            self.buf.push(ev);
+        }
+        self.head += 1;
+    }
+
+    /// Record an instruction retire. One mask test when the category is
+    /// disabled — the hot-path cost the bench gate enforces.
+    #[inline]
+    pub fn retire(&mut self, cycle: u64, pc: u32) {
+        if self.mask & category::RETIRE == 0 {
+            return;
+        }
+        self.push(TraceEvent { cycle, kind: kind::RETIRE, arg: 0, aux: 0, a: pc, b: 0 });
+    }
+
+    /// Record a CPU-initiated non-SRAM read.
+    #[inline]
+    pub fn bus_read(&mut self, cycle: u64, region: u8, addr: u32, value: u32, wait: u32) {
+        if self.mask & category::BUS == 0 {
+            return;
+        }
+        self.push(TraceEvent {
+            cycle,
+            kind: kind::BUS_READ,
+            arg: region,
+            aux: wait.min(u16::MAX as u32) as u16,
+            a: addr,
+            b: value,
+        });
+    }
+
+    /// Record a CPU-initiated non-SRAM write.
+    #[inline]
+    pub fn bus_write(&mut self, cycle: u64, region: u8, addr: u32, value: u32, wait: u32) {
+        if self.mask & category::BUS == 0 {
+            return;
+        }
+        self.push(TraceEvent {
+            cycle,
+            kind: kind::BUS_WRITE,
+            arg: region,
+            aux: wait.min(u16::MAX as u32) as u16,
+            a: addr,
+            b: value,
+        });
+    }
+
+    /// Observe the combined IRQ lines; records one `IRQ_RAISE`/`IRQ_DROP`
+    /// per changed bit (raises first, ascending bit order). The baseline
+    /// updates even when the category is disabled.
+    #[inline]
+    pub fn irq_edges(&mut self, cycle: u64, lines: u32) {
+        let prev = self.last_irq_lines;
+        if lines == prev {
+            return;
+        }
+        self.last_irq_lines = lines;
+        if self.mask & category::IRQ == 0 {
+            return;
+        }
+        let mut raised = lines & !prev;
+        while raised != 0 {
+            let bit = raised.trailing_zeros();
+            raised &= raised - 1;
+            self.push(TraceEvent {
+                cycle,
+                kind: kind::IRQ_RAISE,
+                arg: bit as u8,
+                aux: 0,
+                a: lines,
+                b: 0,
+            });
+        }
+        let mut dropped = prev & !lines;
+        while dropped != 0 {
+            let bit = dropped.trailing_zeros();
+            dropped &= dropped - 1;
+            self.push(TraceEvent {
+                cycle,
+                kind: kind::IRQ_DROP,
+                arg: bit as u8,
+                aux: 0,
+                a: lines,
+                b: 0,
+            });
+        }
+    }
+
+    /// Record a power-state transition (callers gate on real changes).
+    #[inline]
+    pub fn power(&mut self, cycle: u64, domain: u16, state: u8) {
+        if self.mask & category::POWER == 0 {
+            return;
+        }
+        self.push(TraceEvent { cycle, kind: kind::POWER, arg: state, aux: domain, a: 0, b: 0 });
+    }
+
+    /// Reset the IRQ-edge baseline without recording events (used after
+    /// snapshot restore, so the restored line state never reads as an
+    /// edge).
+    pub fn resync(&mut self, lines: u32) {
+        self.last_irq_lines = lines;
+    }
+
+    /// Drop all recorded events and counts; keeps mask and capacity.
+    /// (Snapshot restore calls this — the ring is derived state.)
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.counts = [0; category::COUNT];
+        self.digest = FNV_OFFSET;
+    }
+
+    /// Retained events, oldest to newest.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let len = self.len() as u64;
+        (self.head - len..self.head)
+            .map(|i| self.buf[(i % self.cap as u64) as usize])
+            .collect()
+    }
+
+    /// Cursor-based drain for streaming (`trace.read`): returns up to
+    /// `max` events starting at absolute event index `cursor`, the next
+    /// cursor value, and how many events between `cursor` and the first
+    /// returned one were already lost to wraparound.
+    pub fn events_from(&self, cursor: u64, max: usize) -> (Vec<TraceEvent>, u64, u64) {
+        let oldest = self.head - self.len() as u64;
+        let start = cursor.clamp(oldest, self.head);
+        let skipped = start.saturating_sub(cursor);
+        let end = self.head.min(start + max as u64);
+        let evs =
+            (start..end).map(|i| self.buf[(i % self.cap as u64) as usize]).collect();
+        (evs, end, skipped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn category_parse_roundtrip() {
+        assert_eq!(parse_categories("all").unwrap(), category::ALL);
+        assert_eq!(parse_categories("none").unwrap(), 0);
+        assert_eq!(parse_categories("retire,irq").unwrap(), category::RETIRE | category::IRQ);
+        assert_eq!(parse_categories(" power , bus ").unwrap(), category::POWER | category::BUS);
+        assert!(parse_categories("waveform").is_err());
+        assert_eq!(category_list(category::ALL), "retire,bus,irq,power");
+        assert_eq!(category_list(0), "none");
+        for mask in 0..=category::ALL {
+            assert_eq!(parse_categories(&category_list(mask)).unwrap(), mask);
+        }
+    }
+
+    #[test]
+    fn event_codec_roundtrip() {
+        let ev = TraceEvent {
+            cycle: 0x0123_4567_89AB_CDEF,
+            kind: kind::BUS_WRITE,
+            arg: bus_region::BRIDGE,
+            aux: 0xBEEF,
+            a: 0xDEAD_0000,
+            b: 0x1234_5678,
+        };
+        assert_eq!(TraceEvent::decode(&ev.encode()).unwrap(), ev);
+        let mut bad = ev.encode();
+        bad[8] = 0xEE;
+        assert!(TraceEvent::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn masked_categories_record_nothing() {
+        let mut ring = TraceRing::new(TraceConfig { mask: category::RETIRE, depth: 64 });
+        ring.retire(10, 0x180);
+        ring.bus_read(11, bus_region::PERIPH, 0x2000_0000, 7, 2);
+        ring.power(12, 3, 1);
+        ring.irq_edges(13, 0x80);
+        assert_eq!(ring.total(), 1);
+        assert_eq!(ring.counts(), [1, 0, 0, 0]);
+        // baseline still tracked: enabling irq later sees no stale edge
+        ring.set_mask(category::ALL);
+        ring.irq_edges(14, 0x80);
+        assert_eq!(ring.irq_events(), 0);
+        ring.irq_edges(15, 0);
+        assert_eq!(ring.irq_events(), 1);
+    }
+
+    #[test]
+    fn wraparound_keeps_newest() {
+        let mut ring = TraceRing::new(TraceConfig { mask: category::ALL, depth: 16 });
+        assert_eq!(ring.capacity(), 16);
+        for i in 0..100u64 {
+            ring.retire(i, i as u32);
+        }
+        assert_eq!(ring.total(), 100);
+        assert_eq!(ring.len(), 16);
+        assert_eq!(ring.dropped(), 84);
+        let evs = ring.events();
+        assert_eq!(evs.len(), 16);
+        assert_eq!(evs.first().unwrap().cycle, 84);
+        assert_eq!(evs.last().unwrap().cycle, 99);
+        // digest covers all 100 events: identical replay, identical digest
+        let mut replay = TraceRing::new(TraceConfig { mask: category::ALL, depth: 1024 });
+        for i in 0..100u64 {
+            replay.retire(i, i as u32);
+        }
+        assert_eq!(ring.digest(), replay.digest());
+    }
+
+    #[test]
+    fn irq_edges_decompose_per_bit() {
+        let mut ring = TraceRing::new(TraceConfig { mask: category::ALL, depth: 64 });
+        ring.irq_edges(5, 0b101);
+        ring.irq_edges(9, 0b010);
+        let evs = ring.events();
+        assert_eq!(evs.len(), 5);
+        assert_eq!((evs[0].kind, evs[0].arg), (kind::IRQ_RAISE, 0));
+        assert_eq!((evs[1].kind, evs[1].arg), (kind::IRQ_RAISE, 2));
+        assert_eq!((evs[2].kind, evs[2].arg), (kind::IRQ_RAISE, 1));
+        assert_eq!((evs[3].kind, evs[3].arg), (kind::IRQ_DROP, 0));
+        assert_eq!((evs[4].kind, evs[4].arg), (kind::IRQ_DROP, 2));
+        assert_eq!(evs[0].cycle, 5);
+        assert_eq!(evs[1].cycle, 5);
+        assert_eq!(evs[2].cycle, 9);
+        assert_eq!(evs[4].a, 0b010); // lines-after snapshot on every edge
+    }
+
+    #[test]
+    fn cursor_stream_drains_and_reports_loss() {
+        let mut ring = TraceRing::new(TraceConfig { mask: category::ALL, depth: 16 });
+        for i in 0..10u64 {
+            ring.retire(i, 0);
+        }
+        let (evs, next, skipped) = ring.events_from(0, 4);
+        assert_eq!((evs.len(), next, skipped), (4, 4, 0));
+        let (evs, next, skipped) = ring.events_from(next, 100);
+        assert_eq!((evs.len(), next, skipped), (6, 10, 0));
+        // overflow the ring past the reader's cursor
+        for i in 10..40u64 {
+            ring.retire(i, 0);
+        }
+        let (evs, next, skipped) = ring.events_from(10, 1000);
+        assert_eq!(evs.len(), 16);
+        assert_eq!(next, 40);
+        assert_eq!(skipped, 14); // events 10..24 were overwritten
+        // cursor beyond head clamps to empty
+        let (evs, next, _) = ring.events_from(1000, 10);
+        assert!(evs.is_empty());
+        assert_eq!(next, 40);
+    }
+
+    #[test]
+    fn clear_resets_everything_but_identity() {
+        let mut ring = TraceRing::new(TraceConfig { mask: category::ALL, depth: 32 });
+        ring.retire(1, 2);
+        ring.irq_edges(2, 1);
+        ring.clear();
+        assert_eq!(ring.total(), 0);
+        assert_eq!(ring.counts(), [0; category::COUNT]);
+        assert_eq!(ring.digest(), FNV_OFFSET);
+        assert_eq!(ring.mask(), category::ALL);
+        // resync: restoring into asserted lines is not an edge
+        ring.resync(1);
+        ring.irq_edges(3, 1);
+        assert_eq!(ring.irq_events(), 0);
+    }
+}

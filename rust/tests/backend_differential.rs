@@ -7,7 +7,29 @@
 use femu::prelude::*;
 
 fn small_opts() -> LockstepOptions {
-    LockstepOptions { checkpoint_cycles: 50_000, max_cycles: 1 << 30 }
+    LockstepOptions { checkpoint_cycles: 50_000, max_cycles: 1 << 30, ..LockstepOptions::default() }
+}
+
+#[test]
+fn lockstep_with_tracing_compares_event_streams() {
+    // arm the full event ring on both sides: the checkpoints then also
+    // compare trace digests, and they must agree across backends
+    let cfg = PlatformConfig::default();
+    let opts = LockstepOptions { trace_mask: femu::trace::category::ALL, ..small_opts() };
+    let r = diff::lockstep_workload(&cfg, "mm_cpu", BackendKind::Interp, BackendKind::Blocks, &opts)
+        .unwrap();
+    assert!(r.matched(), "{r}");
+
+    // and a genuine divergence carries both sides' trace captures
+    let (mut a, mut b) = diff::platform_pair(&cfg, BackendKind::Interp, BackendKind::Interp);
+    a.dbg.load_source("_start: li a0, 1\nebreak").unwrap();
+    b.dbg.load_source("_start: li a0, 2\nebreak").unwrap();
+    let r = diff::lockstep("mismatch", &mut a, &mut b, &opts).unwrap();
+    let d = r.divergence.expect("must diverge");
+    let ta = d.trace_a.expect("divergence must carry trace a");
+    let tb = d.trace_b.expect("divergence must carry trace b");
+    assert_ne!(ta, tb, "different guests must produce different captures");
+    assert!(femu::trace::format::TraceDump::from_bytes(&ta).is_ok());
 }
 
 #[test]

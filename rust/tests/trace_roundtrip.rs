@@ -1,0 +1,171 @@
+//! Trace subsystem integration tests (DESIGN.md §13): the on-disk
+//! `FEMUTRAC` round trip, corruption rejection, ring wraparound
+//! semantics, derived-state behavior across snapshot restore, and the
+//! cross-backend bit-identity of captures.
+
+use femu::config::PlatformConfig;
+use femu::coordinator::{AppExit, Platform};
+use femu::exec::BackendKind;
+use femu::trace::{category, format::TraceDump, kind, TraceConfig};
+
+/// Run `src` with every category armed on `backend`; returns the halted
+/// platform and its capture.
+fn run_traced(backend: BackendKind, src: &str, depth: usize) -> (Platform, TraceDump) {
+    let mut cfg = PlatformConfig::default();
+    cfg.soc.backend = backend;
+    cfg.soc.trace = TraceConfig { mask: category::ALL, depth };
+    let mut p = Platform::new(cfg);
+    p.dbg.load_source(src).unwrap();
+    let exit = p.run_app(1 << 30).unwrap();
+    assert!(matches!(exit, AppExit::Halted(_)), "guest did not halt: {exit:?}");
+    let dump = {
+        let soc = &p.dbg.soc;
+        TraceDump::from_ring(soc.trace_ring().unwrap(), soc.freq_hz, soc.bus.banks.len() as u32)
+    };
+    (p, dump)
+}
+
+#[test]
+fn capture_roundtrips_through_the_file_format() {
+    let (p, dump) = run_traced(
+        BackendKind::Interp,
+        "_start: li t0, 40\nloop: addi t0, t0, -1\nbnez t0, loop\nebreak",
+        1 << 12,
+    );
+    assert!(dump.total > 0);
+    // encode/decode identity in memory...
+    let back = TraceDump::from_bytes(&dump.to_bytes()).unwrap();
+    assert_eq!(back, dump);
+    // ...and through a real file
+    let path = std::env::temp_dir().join(format!("femu_trace_rt_{}.trace", std::process::id()));
+    dump.save(&path).unwrap();
+    let loaded = TraceDump::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, dump);
+    // the ring's retire accounting matches the architectural counters
+    let soc = &p.dbg.soc;
+    assert_eq!(dump.counts[0], soc.stats.instructions);
+    assert_eq!(soc.trace_ring().unwrap().retires(), soc.cpu.instret);
+}
+
+#[test]
+fn truncated_and_corrupt_captures_are_rejected() {
+    let (_p, dump) =
+        run_traced(BackendKind::Interp, "_start: li a0, 1\nli a1, 2\nebreak", 1 << 8);
+    let good = dump.to_bytes();
+    assert!(TraceDump::from_bytes(&good).is_ok());
+
+    // flipped payload byte: checksum failure
+    let mut bad = good.clone();
+    *bad.last_mut().unwrap() ^= 0xFF;
+    let err = TraceDump::from_bytes(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+    // truncation anywhere: header-only, mid-header, mid-payload
+    for cut in [0, 7, 27, good.len() - 1] {
+        assert!(TraceDump::from_bytes(&good[..cut]).is_err(), "cut at {cut} accepted");
+    }
+
+    // bad magic and unsupported version
+    let mut magic = good.clone();
+    magic[0] = b'Z';
+    assert!(TraceDump::from_bytes(&magic).is_err());
+    let mut vers = good;
+    vers[8] = 0x7F;
+    let err = TraceDump::from_bytes(&vers).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+}
+
+#[test]
+fn ring_wraparound_keeps_the_newest_events() {
+    // a 32-slot ring against hundreds of retires: the capture must hold
+    // exactly the newest window and account for the rest as dropped
+    let (p, dump) = run_traced(
+        BackendKind::Interp,
+        "_start: li t0, 300\nloop: addi t0, t0, -1\nbnez t0, loop\nebreak",
+        32,
+    );
+    assert!(dump.total > 32, "guest too short to wrap: {} events", dump.total);
+    assert_eq!(dump.events.len(), 32);
+    assert_eq!(dump.dropped(), dump.total - 32);
+    // newest-wins: the final event is the halting ebreak's retire, at
+    // the platform's final clock
+    let last = dump.events.last().unwrap();
+    assert_eq!(last.kind, kind::RETIRE);
+    assert_eq!(last.cycle, p.dbg.soc.now);
+    // a wrapped capture still frames and validates cleanly
+    assert_eq!(TraceDump::from_bytes(&dump.to_bytes()).unwrap(), dump);
+}
+
+#[test]
+fn restore_resets_the_ring_without_phantom_edges() {
+    // arm the machine timer to fire at cycle 2000, snapshot mid-spin
+    // before the interrupt, restore into a second traced platform, and
+    // resume: the ring is derived state, so it must come back empty,
+    // and the IRQ baseline must be resynced so the timer line's rise is
+    // recorded as exactly one real edge — never a phantom drop first
+    const SRC: &str = r#"
+        .equ TIMER, 0x20000200
+        _start:
+            la t0, handler
+            csrw mtvec, t0
+            li t0, TIMER
+            li t1, 2000
+            sw t1, 8(t0)
+            sw zero, 12(t0)
+            li t1, 1
+            sw t1, 16(t0)
+            li t1, 0x80
+            csrw mie, t1
+            csrsi mstatus, 8
+        wait:
+            j wait
+        handler:
+            ebreak
+    "#;
+    let mut cfg = PlatformConfig::default();
+    cfg.soc.trace = TraceConfig { mask: category::ALL, depth: 1 << 12 };
+    let mut p = Platform::new(cfg.clone());
+    p.dbg.load_source(SRC).unwrap();
+    let exit = p.run_app(1000).unwrap();
+    assert!(matches!(exit, AppExit::Budget), "{exit:?}");
+    assert!(p.dbg.soc.trace_ring().unwrap().total() > 0, "no events before snapshot");
+    let snap = p.snapshot();
+
+    let mut q = Platform::new(cfg);
+    q.restore(&snap).unwrap();
+    let ring = q.dbg.soc.trace_ring().expect("tracing stays armed across restore");
+    assert_eq!(ring.total(), 0, "restored ring must start empty (derived state)");
+
+    let exit = q.run_app(1 << 24).unwrap();
+    assert!(matches!(exit, AppExit::Halted(_)), "{exit:?}");
+    let dump = {
+        let soc = &q.dbg.soc;
+        TraceDump::from_ring(soc.trace_ring().unwrap(), soc.freq_hz, soc.bus.banks.len() as u32)
+    };
+    let irqs: Vec<_> = dump
+        .events
+        .iter()
+        .filter(|e| e.kind == kind::IRQ_RAISE || e.kind == kind::IRQ_DROP)
+        .collect();
+    assert!(!irqs.is_empty(), "timer interrupt left no IRQ events");
+    assert_eq!(
+        irqs[0].kind,
+        kind::IRQ_RAISE,
+        "first IRQ event after restore must be a real raise, not a phantom drop"
+    );
+    assert_eq!(q.dbg.soc.cpu.irqs_taken, 1, "the guest takes exactly one interrupt");
+}
+
+#[test]
+fn interp_and_blocks_captures_are_bit_identical() {
+    // the backend bit-identity contract (DESIGN.md §11) extended to the
+    // event stream: same guest, same categories, byte-identical capture
+    let src = femu::workloads::builtin("mm_cpu").unwrap();
+    let (_pa, da) = run_traced(BackendKind::Interp, &src, 1 << 16);
+    let (_pb, db) = run_traced(BackendKind::Blocks, &src, 1 << 16);
+    assert_eq!(da.to_bytes(), db.to_bytes(), "backends produced different captures");
+    // and a repeat run is bit-identical too (determinism)
+    let (_pc, dc) = run_traced(BackendKind::Interp, &src, 1 << 16);
+    assert_eq!(da.to_bytes(), dc.to_bytes(), "repeat run produced a different capture");
+}
