@@ -203,6 +203,40 @@ fn main() {
         results.push(harness::json_result("trace_off_overhead", ratio));
     }
 
+    harness::header("Guest profiler: paused profiling must cost ~nothing");
+    {
+        // the same guarantee for the profiler (DESIGN.md §14): armed but
+        // paused, each retire pays one predictable branch in the record
+        // hook. The committed `profile_off_overhead` ceiling in
+        // BENCH_baseline.json holds this wall ratio at <= ~3%.
+        let prog = assemble(GUEST_MIPS_SRC).unwrap();
+        let measure = |armed: bool| {
+            harness::time_best(harness::reps(5), || {
+                let mut soc = Soc::new(SocConfig::default());
+                if armed {
+                    soc.set_profile();
+                    soc.profiler_mut().unwrap().set_active(false);
+                }
+                soc.load(&prog).unwrap();
+                soc.run_to_halt(1 << 34);
+                let recorded = soc.profiler().map(|p| p.records()).unwrap_or(0);
+                (soc.stats.instructions, recorded)
+            })
+        };
+        let ((instr_off, _), no_prof_s) = measure(false);
+        let ((instr_on, recorded), prof_off_s) = measure(true);
+        assert_eq!(instr_off, instr_on, "paused profiler changed execution");
+        assert_eq!(recorded, 0, "a paused profiler must record nothing");
+        let ratio = prof_off_s / no_prof_s;
+        println!(
+            "profile-off {:>8}s vs no-profile {:>8}s -> ratio {ratio:.3} ({:+.2}% overhead)",
+            harness::eng(prof_off_s),
+            harness::eng(no_prof_s),
+            (ratio - 1.0) * 100.0,
+        );
+        results.push(harness::json_result("profile_off_overhead", ratio));
+    }
+
     harness::header("L3 hot paths: event-driven sleep fast-forward");
     {
         let prog = assemble(

@@ -136,12 +136,22 @@ impl Image {
 
     /// Reverse symbol lookup for report naming.
     fn name_of(&self, pc: u32) -> String {
-        self.symbols
-            .iter()
-            .find(|(_, &v)| v == pc)
-            .map(|(k, _)| k.clone())
-            .unwrap_or_else(|| format!("fn_{pc:08x}"))
+        symbol_name(&self.symbols, pc)
     }
+}
+
+/// The one symbol-naming scheme for function start pcs: the symbol
+/// whose value is exactly `pc`, else the stable fallback
+/// `fn_<pc:08x>`. Both `femu analyze --json` and the profiler's JSON
+/// ([`crate::profile`]) name functions through this helper, so
+/// downstream tooling can join static bounds against measured profiles
+/// without address fixups.
+pub fn symbol_name(symbols: &BTreeMap<String, u32>, pc: u32) -> String {
+    symbols
+        .iter()
+        .find(|(_, &v)| v == pc)
+        .map(|(k, _)| k.clone())
+        .unwrap_or_else(|| format!("fn_{pc:08x}"))
 }
 
 /// Per-function line of the report.
@@ -153,6 +163,10 @@ pub struct FunctionReport {
     /// Longest acyclic path in cycles; `None` = the function can loop,
     /// so no finite static bound exists.
     pub wcet_cycles: Option<u64>,
+    /// Entry pcs of statically-resolved callees (sorted, deduped) —
+    /// the call edges the profiler's inclusive view and folded stacks
+    /// roll up over.
+    pub calls: Vec<u32>,
 }
 
 /// The full analysis result.
@@ -195,6 +209,16 @@ impl Report {
         self.blocks.iter().map(|b| b.pc).collect()
     }
 
+    /// The symbol view the profiler folds captures with
+    /// ([`crate::profile::FunctionTable`]): function entries under the
+    /// shared [`symbol_name`] scheme, plus the static call edges, with
+    /// the analysis entry as the folded-stack root.
+    pub fn function_table(&self) -> crate::profile::FunctionTable {
+        let entries = self.functions.iter().map(|f| (f.entry, f.name.clone())).collect();
+        let calls = self.functions.iter().map(|f| (f.entry, f.calls.clone())).collect();
+        crate::profile::FunctionTable::new(entries, calls, self.entry)
+    }
+
     /// Static cycle bound for a run retiring `instret` instructions
     /// (valid for runs with no WFI sleep residency).
     pub fn cycle_bound(&self, instret: u64) -> u64 {
@@ -232,6 +256,10 @@ impl Report {
                     (
                         "wcet_cycles",
                         f.wcet_cycles.map(|c| Json::Num(c as f64)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "calls",
+                        Json::Arr(f.calls.iter().map(|&c| Json::Num(c as f64)).collect()),
                     ),
                 ])
             })
@@ -390,6 +418,7 @@ pub fn analyze(image: &Image, name: &str, cfg: &AnalyzeConfig) -> Report {
             entry: f.entry,
             blocks: f.blocks,
             wcet_cycles: f.wcet_cycles,
+            calls: f.calls.iter().copied().collect(),
         })
         .collect();
 

@@ -137,6 +137,11 @@ pub struct Bus {
     /// through one `Option` branch. Derived state: never serialized;
     /// [`crate::soc::Soc`] clears and resyncs it on restore.
     pub trace: Option<Box<crate::trace::TraceRing>>,
+    /// Optional guest profiler (DESIGN.md §14). Same placement contract
+    /// as the trace ring: both backends' retire paths feed it through
+    /// one `Option` branch, and it is derived state — never serialized,
+    /// reset with a fresh perf baseline on load/restore.
+    pub profile: Option<Box<crate::profile::Profiler>>,
 }
 
 impl Bus {
@@ -164,6 +169,7 @@ impl Bus {
             cs_dram: CsDram::new(cs_dram_size),
             periph_touched: false,
             trace: None,
+            profile: None,
         }
     }
 

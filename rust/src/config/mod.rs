@@ -33,6 +33,9 @@
 //! [trace]                       # event tracing (DESIGN.md §13)
 //! categories = "retire,irq"     # or "all" / "none" (default)
 //! depth = 65536                 # ring capacity in events
+//!
+//! [profile]                     # guest profiler (DESIGN.md §14)
+//! enabled = true                # default false: no buckets allocated
 //! ```
 //!
 //! Missing keys fall back to the X-HEEP-FEMU defaults, so a config file
@@ -100,6 +103,9 @@ impl PlatformConfig {
             crate::trace::parse_categories(&doc.str_or("trace.categories", "none")?)?;
         cfg.soc.trace.depth =
             doc.u64_or("trace.depth", cfg.soc.trace.depth as u64)? as usize;
+
+        // guest profiler (off by default: buckets only allocate on demand)
+        cfg.soc.profile = doc.bool_or("profile.enabled", cfg.soc.profile)?;
 
         // timing overrides
         let t = &mut cfg.timing;
@@ -214,6 +220,16 @@ mod tests {
         assert!(PlatformConfig::parse("energy_model = \"mystery\"").is_err());
         assert!(PlatformConfig::parse("backend = \"jit\"").is_err());
         assert!(PlatformConfig::parse("[trace]\ncategories = \"vibes\"").is_err());
+        assert!(PlatformConfig::parse("[profile]\nenabled = \"sure\"").is_err());
+    }
+
+    #[test]
+    fn parse_profile_table() {
+        let cfg = PlatformConfig::parse("[profile]\nenabled = true").unwrap();
+        assert!(cfg.soc.profile);
+        // default: profiler off
+        let cfg = PlatformConfig::parse("").unwrap();
+        assert!(!cfg.soc.profile);
     }
 
     #[test]

@@ -28,10 +28,12 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::PlatformConfig;
+use crate::metrics::{Counter, Gauge, Histogram, LATENCY_BOUNDS_US};
 use crate::snapshot::PlatformSnapshot;
 
 use super::Platform;
@@ -268,6 +270,39 @@ pub fn point_seed(base: u64, index: usize) -> u64 {
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Queue accounting for a [`WorkerPool`], shared between submitters and
+/// workers. All counters are monotonic except `queue_depth`, which tracks
+/// jobs accepted but not yet started — the live backlog the control
+/// server's `metrics` command reports (DESIGN.md §14).
+#[derive(Debug)]
+pub struct PoolStats {
+    /// Jobs accepted into the queue.
+    pub submitted: Counter,
+    /// Jobs a worker finished running (including panicked ones — the
+    /// panic is contained per job, so from the queue's point of view the
+    /// job completed).
+    pub completed: Counter,
+    /// Jobs refused because the pool was already shut down.
+    pub rejected: Counter,
+    /// Jobs accepted but not yet picked up by a worker.
+    pub queue_depth: Gauge,
+    /// Time each job spent waiting in the queue before a worker picked
+    /// it up, in microseconds.
+    pub wait_us: Histogram,
+}
+
+impl PoolStats {
+    fn new() -> Self {
+        Self {
+            submitted: Counter::new(),
+            completed: Counter::new(),
+            rejected: Counter::new(),
+            queue_depth: Gauge::new(),
+            wait_us: Histogram::new(LATENCY_BOUNDS_US),
+        }
+    }
+}
+
 /// A bounded pool of long-lived worker threads executing `'static` jobs
 /// from a shared FIFO queue.
 ///
@@ -278,20 +313,23 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// joining the workers. A panicking job is contained (caught per job) and
 /// surfaces to its submitter as an error instead of killing the worker.
 pub struct WorkerPool {
-    sender: Mutex<Option<mpsc::Sender<Job>>>,
+    sender: Mutex<Option<mpsc::Sender<(Instant, Job)>>>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     workers: usize,
+    stats: Arc<PoolStats>,
 }
 
 impl WorkerPool {
     /// Spawn a pool of `workers` threads (clamped to at least 1).
     pub fn new(workers: usize) -> Self {
         let workers = workers.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = mpsc::channel::<(Instant, Job)>();
         let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(PoolStats::new());
         let handles = (0..workers)
             .map(|i| {
                 let rx = rx.clone();
+                let stats = stats.clone();
                 std::thread::Builder::new()
                     .name(format!("femu-pool-{i}"))
                     .spawn(move || loop {
@@ -299,8 +337,11 @@ impl WorkerPool {
                         // never poison the queue lock.
                         let job = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
                         match job {
-                            Ok(job) => {
+                            Ok((enqueued, job)) => {
+                                stats.queue_depth.add(-1);
+                                stats.wait_us.observe(enqueued.elapsed().as_micros() as u64);
                                 let _ = catch_unwind(AssertUnwindSafe(job));
+                                stats.completed.inc();
                             }
                             Err(_) => break, // sender dropped: pool shut down
                         }
@@ -308,18 +349,37 @@ impl WorkerPool {
                     .expect("spawning pool worker thread")
             })
             .collect();
-        Self { sender: Mutex::new(Some(tx)), handles: Mutex::new(handles), workers }
+        Self { sender: Mutex::new(Some(tx)), handles: Mutex::new(handles), workers, stats }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
 
+    /// Queue accounting: submissions, completions, rejections, live
+    /// backlog, and queue-wait latency.
+    pub fn stats(&self) -> &PoolStats {
+        &self.stats
+    }
+
     /// Enqueue a fire-and-forget job. Errors if the pool is shut down.
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
         let guard = self.sender.lock().unwrap_or_else(|p| p.into_inner());
-        let tx = guard.as_ref().ok_or_else(|| anyhow!("worker pool is shut down"))?;
-        tx.send(Box::new(job)).map_err(|_| anyhow!("worker pool is shut down"))
+        let Some(tx) = guard.as_ref() else {
+            self.stats.rejected.inc();
+            return Err(anyhow!("worker pool is shut down"));
+        };
+        match tx.send((Instant::now(), Box::new(job))) {
+            Ok(()) => {
+                self.stats.submitted.inc();
+                self.stats.queue_depth.add(1);
+                Ok(())
+            }
+            Err(_) => {
+                self.stats.rejected.inc();
+                Err(anyhow!("worker pool is shut down"))
+            }
+        }
     }
 
     /// Enqueue `f` and block until a worker has run it, returning its
@@ -447,5 +507,23 @@ mod tests {
         assert!(format!("{err:#}").contains("abandoned"), "{err:#}");
         // the worker survives and keeps serving
         assert_eq!(pool.submit_wait(|| 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn pool_stats_count_the_queue() {
+        let pool = WorkerPool::new(2);
+        for i in 0..6 {
+            assert_eq!(pool.submit_wait(move || i).unwrap(), i);
+        }
+        // shutdown joins the workers, so completed counts are settled
+        pool.shutdown();
+        let s = pool.stats();
+        assert_eq!(s.submitted.get(), 6);
+        assert_eq!(s.completed.get(), 6);
+        assert_eq!(s.queue_depth.get(), 0, "drained queue has no backlog");
+        assert_eq!(s.wait_us.count(), 6, "every job's queue wait is observed");
+        // post-shutdown submissions are counted as rejections
+        assert!(pool.submit(|| ()).is_err());
+        assert_eq!(s.rejected.get(), 1);
     }
 }

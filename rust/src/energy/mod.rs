@@ -147,6 +147,14 @@ impl EnergyModel {
         }
     }
 
+    /// Estimate over the window between two snapshots of the same
+    /// monitor (`before` taken earlier): prices the counter delta like
+    /// [`EnergyModel::estimate`]. The profiler reads its windows
+    /// through this.
+    pub fn estimate_window(&self, before: &PerfSnapshot, after: &PerfSnapshot) -> EnergyReport {
+        self.estimate(&after.delta(before))
+    }
+
     /// Platform power with *every* domain Active, in mW — the ceiling no
     /// residency split can exceed, since Active is the most expensive
     /// state in both calibrations.

@@ -272,6 +272,12 @@ fn exec_block(soc: &mut Soc, block: &Block, stats: &mut ExecStats) -> Option<Run
         let pc = soc.cpu.pc;
         let r = soc.cpu.exec_decoded(instr, word, 0, &mut soc.bus, soc.now);
         soc.now += r.cycles as u64;
+        // identical record stream to the single-step path (same pc,
+        // same true cycle cost) — profiles stay bit-identical across
+        // backends by construction
+        if let Some(p) = soc.bus.profile.as_deref_mut() {
+            p.record(pc, r.cycles, r.retired);
+        }
         if r.retired {
             soc.stats.instructions += 1;
             // same post-increment timestamp as the single-step path

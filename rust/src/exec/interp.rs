@@ -101,6 +101,12 @@ pub(super) fn single_step(soc: &mut Soc) -> Option<RunExit> {
     let pc = soc.cpu.pc;
     let r = soc.cpu.step(&mut soc.bus, soc.now);
     soc.now += r.cycles as u64;
+    // profile capture attributes *every* cycle (trap/IRQ entry too) to
+    // the pc that paid it, so per-function totals conserve exactly; the
+    // blocks backend records the identical stream from its replay loop
+    if let Some(p) = soc.bus.profile.as_deref_mut() {
+        p.record(pc, r.cycles, r.retired);
+    }
     if r.retired {
         soc.stats.instructions += 1;
         // retire timestamps are post-increment (the cycle the

@@ -16,8 +16,10 @@ pub mod energy;
 pub mod exec;
 pub mod isa;
 pub mod mem;
+pub mod metrics;
 pub mod perfmon;
 pub mod periph;
+pub mod profile;
 pub mod runtime;
 pub mod server;
 pub mod snapshot;

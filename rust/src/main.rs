@@ -4,9 +4,11 @@
 //!
 //! ```text
 //! femu run [prog.s | --builtin NAME] [--config <platform.toml>]
-//!          [--max-cycles N] [--from-snapshot FILE]
+//!          [--max-cycles N] [--from-snapshot FILE] [--profile]
 //!          [--trace CATS] [--trace-out FILE] [--trace-depth N]
-//! femu profile <prog.s> [--config ..] [--model femu|heepocrates]
+//! femu profile [prog.s | --builtin NAME] [--config ..] [--model ..]
+//!              [--json | --folded [FILE]] [--annotate] [--vcd out.vcd]
+//! femu profile --validate [--builtin NAME|all] [--folded FILE]
 //! femu snapshot save <prog.s> --out FILE [--cycles N] [--config ..]
 //! femu snapshot info <FILE>
 //! femu sweep-acquisition [--window-s S] [--from-snapshot FILE]   (Fig 4)
@@ -20,7 +22,8 @@
 //! femu table1                                                    (Table I)
 //! femu serve [--addr HOST:PORT] [--artifacts DIR] [--config ..]
 //!            [--max-sessions N] [--workers N] [--idle-timeout SECS]
-//!            [--configs DIR]
+//!            [--configs DIR] [--metrics-interval SECS]
+//! femu metrics [--addr HOST:PORT] [--prometheus]
 //! ```
 //!
 //! Experiment subcommands shard their sweep across an experiment fleet
@@ -125,6 +128,7 @@ fn run() -> Result<()> {
         "table1" => cmd_table1(),
         "disasm" => cmd_disasm(&args),
         "serve" => cmd_serve(&args),
+        "metrics" => cmd_metrics(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -139,9 +143,11 @@ fn print_usage() {
          (software reproduction)\n\n\
          USAGE:\n  \
          femu run [prog.s | --builtin NAME] [--config <platform.toml>]\n  \
-         \x20        [--max-cycles N] [--from-snapshot FILE]\n  \
+         \x20        [--max-cycles N] [--from-snapshot FILE] [--profile]\n  \
          \x20        [--trace CATS] [--trace-out FILE] [--trace-depth N]\n  \
-         femu profile <prog.s> [--config ..] [--model ..] [--vcd out.vcd]\n  \
+         femu profile [prog.s | --builtin NAME] [--config ..] [--model ..]\n  \
+         \x20          [--json | --folded [FILE]] [--annotate] [--vcd out.vcd]\n  \
+         femu profile --validate [--builtin NAME|all] [--folded FILE]\n  \
          femu snapshot save <prog.s> --out FILE [--cycles N] [--config ..]\n  \
          femu snapshot info <FILE>                    inspect a snapshot\n  \
          femu disasm <prog.s>                         assemble + list\n  \
@@ -158,7 +164,9 @@ fn print_usage() {
          \x20          [--config <platform.toml>] [--json]  static analysis\n  \
          femu table1                                  reproduce Table I\n  \
          femu serve [--addr HOST:PORT] [--artifacts DIR] [--max-sessions N]\n  \
-         \x20          [--workers N] [--idle-timeout SECS] [--configs DIR]\n\n\
+         \x20          [--workers N] [--idle-timeout SECS] [--configs DIR]\n  \
+         \x20          [--metrics-interval SECS]\n  \
+         femu metrics [--addr HOST:PORT] [--prometheus]   server counters\n\n\
          Experiment subcommands accept --workers N (fleet size; default: \
          one per core),\n  \
          --serial (single-threaded reference path), and --from-snapshot FILE \
@@ -231,6 +239,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         .map(|s| s.parse::<u64>())
         .transpose()?
         .unwrap_or(1 << 33);
+    let profile = args.switches.iter().any(|s| s == "profile");
+    if profile {
+        platform.dbg.soc.set_profile();
+    }
     let exit = platform.run_app(budget)?;
     let uart = platform.dbg.uart();
     if !uart.is_empty() {
@@ -245,22 +257,48 @@ fn cmd_run(args: &Args) -> Result<()> {
         let out = args.flags.get("trace-out").map(String::as_str).unwrap_or("femu.trace");
         save_trace(&platform, out)?;
     }
+    if profile {
+        print!("{}", profile_report_from_soc(&platform)?.render_text());
+    }
     Ok(())
+}
+
+/// Fold the live Soc's profiler capture through the analyzer's symbol
+/// recovery — the same path the server's `profile.read` takes, for
+/// guests loaded from snapshots or builtins where no assembled
+/// [`femu::isa::Program`] is at hand.
+fn profile_report_from_soc(platform: &Platform) -> Result<femu::profile::ProfileReport> {
+    use femu::analyze::{self, AnalyzeConfig};
+    let soc = &platform.dbg.soc;
+    let prof = soc.profiler().ok_or_else(|| anyhow!("profiling was not enabled"))?;
+    let acfg = AnalyzeConfig::from_platform(&platform.cfg);
+    let mut img = analyze::Image::from_soc(soc);
+    img.entry = prof.entry_pc();
+    let table = analyze::analyze(&img, "run", &acfg).function_table();
+    let perf_now = soc.perf.snapshot(soc.now);
+    Ok(femu::profile::build_report(
+        prof,
+        soc.now,
+        &perf_now,
+        &table,
+        &platform.cfg.energy,
+        soc.backend_kind().name(),
+    ))
 }
 
 /// Load a named builtin guest into a platform, wiring up any CS-side
 /// service it expects (the acquisition kernel drains the virtualized
 /// ADC, so it gets the same synthetic dataset the lockstep suite uses).
-fn load_builtin(platform: &mut Platform, name: &str) -> Result<()> {
+fn load_builtin(platform: &mut Platform, name: &str) -> Result<femu::isa::Program> {
     use femu::workloads::{builtin, BUILTIN_NAMES};
     let src = builtin(name).ok_or_else(|| {
         anyhow!("unknown builtin `{name}` (have: {})", BUILTIN_NAMES.join(", "))
     })?;
-    platform.dbg.load_source(&src)?;
+    let prog = platform.dbg.load_source(&src)?;
     if name == "acquisition" {
         platform.start_adc((0..100).collect(), 100_000.0);
     }
-    Ok(())
+    Ok(prog)
 }
 
 /// `--trace CATS[,CATS..]` (or bare `--trace` for everything): the
@@ -295,8 +333,31 @@ fn save_trace(platform: &Platform, out: &str) -> Result<()> {
     Ok(())
 }
 
+/// `femu profile`: run a guest under the cycle-exact profiler and fold
+/// the capture to function granularity (DESIGN.md §14). The default
+/// text output keeps the original whole-run energy table, followed by
+/// the per-function flat/inclusive view; `--json` and `--folded [FILE]`
+/// select machine exports, `--annotate` appends a per-pc disassembly,
+/// and `--validate` is the CI profile-validate job's engine.
 fn cmd_profile(args: &Args) -> Result<()> {
-    let (mut platform, _) = load_guest(args)?;
+    if args.switches.iter().any(|s| s == "validate") {
+        return cmd_profile_validate(args);
+    }
+    let (mut platform, prog, label) = if let Some(name) = args.flags.get("builtin") {
+        let mut platform = Platform::new(load_config(args)?);
+        if let Some(dir) = args.flags.get("artifacts") {
+            platform.attach_artifacts(dir)?;
+        } else if std::path::Path::new("artifacts/manifest.json").exists() {
+            platform.attach_artifacts("artifacts")?;
+        }
+        let prog = load_builtin(&mut platform, name)?;
+        (platform, prog, name.clone())
+    } else {
+        let (platform, prog) = load_guest(args)?;
+        let label = args.positional.first().cloned().unwrap_or_default();
+        (platform, prog, label)
+    };
+    platform.dbg.soc.set_profile();
     if args.flags.contains_key("vcd") {
         platform.dbg.soc.perf.enable_trace();
     }
@@ -307,43 +368,193 @@ fn cmd_profile(args: &Args) -> Result<()> {
     let model_name = args.flags.get("model").map(String::as_str).unwrap_or("femu");
     let model = EnergyModel::by_name(model_name)
         .ok_or_else(|| anyhow!("unknown model `{model_name}`"))?;
-    let snap = platform.perf_snapshot();
-    let report = model.estimate(&snap);
-    println!("== femu profile ({model_name} calibration) ==");
-    println!(
-        "cycles: {}  time: {}s  instructions: {}",
-        snap.cycles,
-        eng(report.seconds()),
-        platform.dbg.soc.stats.instructions
+
+    // fold the capture to function granularity; symbols come from the
+    // analyzer, so names match `femu analyze --json` exactly
+    let acfg = femu::analyze::AnalyzeConfig::from_platform(&platform.cfg);
+    let table = femu::analyze::analyze_program(&prog, &label, &acfg).function_table();
+    let soc = &platform.dbg.soc;
+    let prof = soc.profiler().expect("armed before the run");
+    let perf_now = soc.perf.snapshot(soc.now);
+    let prep = femu::profile::build_report(
+        prof,
+        soc.now,
+        &perf_now,
+        &table,
+        &model,
+        soc.backend_kind().name(),
     );
-    println!("domain        active       clk-gated    pwr-gated    retention    energy");
-    for (d, c) in snap.domains() {
+
+    let json = args.switches.iter().any(|s| s == "json");
+    let folded_stdout = args.switches.iter().any(|s| s == "folded");
+    if json {
+        println!("{}", prep.to_json());
+    } else if let Some(out) = args.flags.get("folded") {
+        std::fs::write(out, prep.to_folded()).with_context(|| format!("writing {out}"))?;
+        println!("folded stacks -> {out}");
+    } else if folded_stdout {
+        print!("{}", prep.to_folded());
+    } else {
+        let snap = platform.perf_snapshot();
+        let report = model.estimate(&snap);
+        println!("== femu profile ({model_name} calibration) ==");
         println!(
-            "{:<12} {:>12} {:>12} {:>12} {:>12}    {}J",
-            d.to_string(),
-            c.counts[0],
-            c.counts[1],
-            c.counts[2],
-            c.counts[3],
-            eng(model.domain_energy_mj(d, &c) / 1e3),
+            "cycles: {}  time: {}s  instructions: {}",
+            snap.cycles,
+            eng(report.seconds()),
+            platform.dbg.soc.stats.instructions
         );
+        println!("domain        active       clk-gated    pwr-gated    retention    energy");
+        for (d, c) in snap.domains() {
+            println!(
+                "{:<12} {:>12} {:>12} {:>12} {:>12}    {}J",
+                d.to_string(),
+                c.counts[0],
+                c.counts[1],
+                c.counts[2],
+                c.counts[3],
+                eng(model.domain_energy_mj(d, &c) / 1e3),
+            );
+        }
+        println!(
+            "total: {}J (active {}J, sleep {}J), avg power {}W",
+            eng(report.total_mj / 1e3),
+            eng(report.active_mj / 1e3),
+            eng(report.sleep_mj / 1e3),
+            eng(report.avg_power_mw() / 1e3),
+        );
+        if let Some(w) = platform.perf_window_snapshot() {
+            let wr = model.estimate(w);
+            println!("manual window: {} cycles, {}J", w.cycles, eng(wr.total_mj / 1e3));
+        }
+        print!("{}", prep.render_text());
     }
-    println!(
-        "total: {}J (active {}J, sleep {}J), avg power {}W",
-        eng(report.total_mj / 1e3),
-        eng(report.active_mj / 1e3),
-        eng(report.sleep_mj / 1e3),
-        eng(report.avg_power_mw() / 1e3),
-    );
-    if let Some(w) = platform.perf_window_snapshot() {
-        let wr = model.estimate(w);
-        println!("manual window: {} cycles, {}J", w.cycles, eng(wr.total_mj / 1e3));
+    if args.switches.iter().any(|s| s == "annotate") {
+        print!(
+            "{}",
+            femu::profile::render_annotated(prof, &table, |a| platform.dbg.read32(a).ok())
+        );
     }
     if let Some(path) = args.flags.get("vcd") {
         let trace = platform.dbg.soc.perf.trace().expect("trace enabled above");
         std::fs::write(path, trace.to_vcd(platform.cfg.soc.freq_hz, platform.dbg.soc.now))?;
         println!("power-domain VCD ({} transitions) -> {path}", trace.len());
     }
+    Ok(())
+}
+
+/// The CI `profile-validate` job: every builtin runs under the profiler
+/// twice on the interpreter (repeatability) and once on the block
+/// backend (cross-backend identity). The capture digests must be
+/// bit-identical across all three runs, and every folded report must
+/// conserve cycles, instructions, and energy against the perf monitor.
+/// `--folded FILE` additionally writes the first builtin's folded
+/// stacks as a CI artifact.
+fn cmd_profile_validate(args: &Args) -> Result<()> {
+    use femu::analyze::{self, AnalyzeConfig};
+    use femu::workloads::BUILTIN_NAMES;
+
+    let cfg = load_config(args)?;
+    let which = args.flags.get("builtin").map(String::as_str).unwrap_or("all");
+    let names: Vec<&str> =
+        if which == "all" { BUILTIN_NAMES.to_vec() } else { vec![which] };
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let acfg = AnalyzeConfig::from_platform(&cfg);
+
+    // (digest, attributed, retired, folded export, conservation problems)
+    let run_one = |name: &str,
+                   backend: BackendKind|
+     -> Result<(u64, u64, u64, String, Vec<String>)> {
+        let mut cfg = cfg.clone();
+        cfg.soc.backend = backend;
+        cfg.soc.profile = true;
+        let mut p = Platform::new(cfg);
+        if have_artifacts {
+            p.attach_artifacts("artifacts")?;
+        }
+        let prog = load_builtin(&mut p, name)?;
+        let exit = p.run_app(1 << 28)?;
+        if !matches!(exit, AppExit::Halted(_)) {
+            bail!("{name} on {backend}: unexpected exit {exit:?}");
+        }
+        let soc = &p.dbg.soc;
+        let prof = soc.profiler().expect("armed via config");
+        let table = analyze::analyze_program(&prog, name, &acfg).function_table();
+        let perf_now = soc.perf.snapshot(soc.now);
+        let rep = femu::profile::build_report(
+            prof,
+            soc.now,
+            &perf_now,
+            &table,
+            &p.cfg.energy,
+            backend.name(),
+        );
+        let mut problems = Vec::new();
+        let flat: u64 = rep.functions.iter().map(|f| f.flat_cycles).sum();
+        if flat != rep.attributed_cycles {
+            problems
+                .push(format!("sum of flat cycles {flat} != attributed {}", rep.attributed_cycles));
+        }
+        if rep.attributed_cycles + rep.idle_cycles != rep.window_cycles {
+            problems.push(format!(
+                "attributed {} + idle {} != window {}",
+                rep.attributed_cycles, rep.idle_cycles, rep.window_cycles
+            ));
+        }
+        let instret: u64 = rep.functions.iter().map(|f| f.flat_instret).sum();
+        if instret != rep.retired {
+            problems.push(format!("sum of flat instret {instret} != retired {}", rep.retired));
+        }
+        let mj: f64 = rep.functions.iter().map(|f| f.flat_mj).sum::<f64>() + rep.idle_mj;
+        if (mj - rep.total_mj).abs() > 1e-9 * rep.total_mj.max(1.0) {
+            problems.push(format!("sum of energy {mj} mJ != model total {} mJ", rep.total_mj));
+        }
+        Ok((prof.digest(), prof.attributed_cycles(), prof.retired(), rep.to_folded(), problems))
+    };
+
+    let mut failed = false;
+    let mut folded_artifact: Option<(String, String)> = None;
+    for name in names {
+        if name == "classifier_mailbox" && !have_artifacts {
+            println!("  [skip] {name}: needs PJRT artifacts (run `make artifacts` first)");
+            continue;
+        }
+        let (d1, a1, r1, folded, mut problems) = run_one(name, BackendKind::Interp)?;
+        let (d2, _, _, _, p2) = run_one(name, BackendKind::Interp)?;
+        let (d3, a3, r3, _, p3) = run_one(name, BackendKind::Blocks)?;
+        problems.extend(p2);
+        problems.extend(p3);
+        if d1 != d2 {
+            problems.push("repeat interp captures not bit-identical".to_string());
+        }
+        if d1 != d3 || a1 != a3 || r1 != r3 {
+            problems.push(format!(
+                "interp and blocks captures differ (digest {d1:#018x} vs {d3:#018x})"
+            ));
+        }
+        if problems.is_empty() {
+            println!(
+                "  [ok] {name}: {r1} retire(s), {a1} cycle(s) attributed; capture \
+                 bit-identical across repeats and backends"
+            );
+        } else {
+            failed = true;
+            println!("  [FAIL] {name}: {}", problems.join("; "));
+        }
+        if folded_artifact.is_none() {
+            folded_artifact = Some((name.to_string(), folded));
+        }
+    }
+    if let Some(out) = args.flags.get("folded") {
+        if let Some((name, text)) = &folded_artifact {
+            std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
+            println!("folded stacks ({name}) -> {out}");
+        }
+    }
+    if failed {
+        bail!("profile validation failed");
+    }
+    println!("profile validation passed");
     Ok(())
 }
 
@@ -978,7 +1189,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "protocol: one JSON object per line; try {{\"cmd\":\"ping\"}} or \
          {{\"cmd\":\"session.open\"}}"
     );
+    // --metrics-interval N: print a one-line control-plane metrics
+    // summary every N seconds (same counters as the `metrics` command)
+    let interval = args
+        .flags
+        .get("metrics-interval")
+        .map(|v| v.parse::<u64>().with_context(|| format!("--metrics-interval `{v}`")))
+        .transpose()?
+        .unwrap_or(0);
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        std::thread::sleep(std::time::Duration::from_secs(if interval > 0 {
+            interval
+        } else {
+            3600
+        }));
+        if interval > 0 {
+            println!("{}", server.metrics_line());
+        }
     }
+}
+
+/// `femu metrics`: fetch a running server's control-plane counters over
+/// the wire (protocol command `metrics`, proto v6) — JSON by default,
+/// Prometheus text exposition with `--prometheus`.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    use femu::util::Json;
+    let addr = args.flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:9178");
+    let addr: std::net::SocketAddr =
+        addr.parse().with_context(|| format!("--addr `{addr}`"))?;
+    let mut client = femu::server::Client::connect(addr)?;
+    if args.switches.iter().any(|s| s == "prometheus") {
+        let resp = client.call(Json::obj(vec![
+            ("cmd", Json::from("metrics")),
+            ("format", Json::from("prometheus")),
+        ]))?;
+        print!("{}", resp.str_field("text")?);
+    } else {
+        println!("{}", client.metrics()?);
+    }
+    Ok(())
 }

@@ -1,0 +1,379 @@
+//! Lock-cheap control-plane metrics (DESIGN.md §14).
+//!
+//! Primitives for instrumenting the server's hot paths without
+//! contending on them: [`Counter`]/[`Gauge`] are single relaxed
+//! atomics, and [`Histogram`] is a fixed-bucket array of atomics (no
+//! allocation, no lock) with percentile estimates read from the bucket
+//! upper bounds. Cross-thread reads are monitoring-grade: each cell is
+//! individually consistent, snapshots across cells are not serialized
+//! — exactly the Prometheus contract.
+//!
+//! [`ServerMetrics`] aggregates what the control server records:
+//! per-command call/error/latency stats, batch sizes, trace-stream
+//! backpressure, and byte/connection totals. Session and worker-pool
+//! counters live with their owners ([`crate::server::session`],
+//! [`crate::coordinator::fleet`]) and are joined into the `metrics`
+//! protocol response (proto v6) by the server.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down instantaneous value (queue depths, open connections).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self(AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency bucket upper bounds in microseconds: 50 µs to 30 s.
+pub const LATENCY_BOUNDS_US: &[u64] = &[
+    50,
+    100,
+    250,
+    500,
+    1_000,
+    2_500,
+    5_000,
+    10_000,
+    25_000,
+    50_000,
+    100_000,
+    250_000,
+    500_000,
+    1_000_000,
+    5_000_000,
+    30_000_000,
+];
+
+/// Size bucket upper bounds (batch lengths, queue depths): powers of 2.
+pub const SIZE_BOUNDS: &[u64] = &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
+
+/// Fixed-bucket histogram: one atomic per bucket plus an overflow
+/// bucket, a sum, and a count. Percentiles report the upper bound of
+/// the bucket holding the requested rank (the classic fixed-bucket
+/// estimate: exact rank selection, value rounded up to a bound).
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: &'static [u64],
+    /// `bounds.len() + 1` cells; the last is the overflow bucket.
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &'static [u64]) -> Self {
+        Self {
+            bounds,
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Value at quantile `p` in `[0, 1]`: the upper bound of the bucket
+    /// containing the ceil(p·count)-th sample (overflow samples report
+    /// the last finite bound). 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= rank {
+                return self.bounds.get(i).copied().unwrap_or_else(|| {
+                    self.bounds.last().copied().unwrap_or(0)
+                });
+            }
+        }
+        self.bounds.last().copied().unwrap_or(0)
+    }
+
+    /// `{count, sum, mean, p50, p90, p99}` — the JSON shape every
+    /// latency/size field in the `metrics` response uses.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("sum", Json::Num(self.sum() as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(self.percentile(0.50) as f64)),
+            ("p90", Json::Num(self.percentile(0.90) as f64)),
+            ("p99", Json::Num(self.percentile(0.99) as f64)),
+        ])
+    }
+}
+
+/// Per-command slice of the server metrics.
+#[derive(Debug)]
+pub struct CommandStats {
+    pub calls: Counter,
+    pub errors: Counter,
+    pub latency_us: Histogram,
+}
+
+impl CommandStats {
+    fn new() -> Self {
+        Self {
+            calls: Counter::new(),
+            errors: Counter::new(),
+            latency_us: Histogram::new(LATENCY_BOUNDS_US),
+        }
+    }
+}
+
+/// Everything the control server records directly. One instance per
+/// server, shared across connection threads; every record path is a
+/// handful of relaxed atomic ops (the per-command map takes a short
+/// lock only to clone out an `Arc`).
+#[derive(Debug)]
+pub struct ServerMetrics {
+    pub connections_opened: Counter,
+    pub connections_closed: Counter,
+    pub bytes_in: Counter,
+    pub bytes_out: Counter,
+    pub commands: Counter,
+    pub errors: Counter,
+    /// All-command latency.
+    pub latency_us: Histogram,
+    /// `batch` request sizes.
+    pub batch_len: Histogram,
+    /// Trace-stream backpressure: events delivered vs overwritten
+    /// before the subscriber drained them.
+    pub trace_events_read: Counter,
+    pub trace_events_skipped: Counter,
+    per_command: Mutex<BTreeMap<String, Arc<CommandStats>>>,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self {
+            connections_opened: Counter::new(),
+            connections_closed: Counter::new(),
+            bytes_in: Counter::new(),
+            bytes_out: Counter::new(),
+            commands: Counter::new(),
+            errors: Counter::new(),
+            latency_us: Histogram::new(LATENCY_BOUNDS_US),
+            batch_len: Histogram::new(SIZE_BOUNDS),
+            trace_events_read: Counter::new(),
+            trace_events_skipped: Counter::new(),
+            per_command: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The stats cell for one command name (created on first use).
+    pub fn command_stats(&self, cmd: &str) -> Arc<CommandStats> {
+        let mut map = self.per_command.lock().unwrap_or_else(|p| p.into_inner());
+        map.entry(cmd.to_string()).or_insert_with(|| Arc::new(CommandStats::new())).clone()
+    }
+
+    /// Record one dispatched command: global and per-command counters
+    /// plus latency.
+    pub fn observe_command(&self, cmd: &str, ok: bool, micros: u64) {
+        self.commands.inc();
+        self.latency_us.observe(micros);
+        let stats = self.command_stats(cmd);
+        stats.calls.inc();
+        stats.latency_us.observe(micros);
+        if !ok {
+            self.errors.inc();
+            stats.errors.inc();
+        }
+    }
+
+    /// Stable-ordered view of the per-command cells.
+    pub fn per_command(&self) -> Vec<(String, Arc<CommandStats>)> {
+        let map = self.per_command.lock().unwrap_or_else(|p| p.into_inner());
+        map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+
+        let g = Gauge::new();
+        g.add(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+        g.set(-7);
+        assert_eq!(g.get(), -7);
+    }
+
+    #[test]
+    fn histogram_uniform_distribution_percentiles() {
+        let h = Histogram::new(LATENCY_BOUNDS_US);
+        for v in 1..=1000u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum(), 500_500);
+        // uniform 1..=1000 µs against bounds ..,250,500,1000,..: the
+        // 500th sample sits in the 500 bucket, the 900th/990th in 1000
+        assert_eq!(h.percentile(0.50), 500);
+        assert_eq!(h.percentile(0.90), 1_000);
+        assert_eq!(h.percentile(0.99), 1_000);
+        // rank clamps: p=0 is the first sample's bucket
+        assert_eq!(h.percentile(0.0), 50);
+    }
+
+    #[test]
+    fn histogram_point_mass_and_overflow() {
+        let h = Histogram::new(LATENCY_BOUNDS_US);
+        for _ in 0..100 {
+            h.observe(10);
+        }
+        // every sample in the first bucket: all percentiles = 50
+        assert_eq!(h.percentile(0.5), 50);
+        assert_eq!(h.percentile(0.99), 50);
+
+        let o = Histogram::new(LATENCY_BOUNDS_US);
+        o.observe(u64::MAX / 2); // way past the last bound
+        assert_eq!(o.percentile(0.99), 30_000_000); // clamps to last bound
+        assert_eq!(o.count(), 1);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = Histogram::new(SIZE_BOUNDS);
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        let j = h.to_json().to_string();
+        assert!(j.contains("\"count\":0"), "{j}");
+    }
+
+    #[test]
+    fn bimodal_distribution_p50_vs_p99() {
+        let h = Histogram::new(LATENCY_BOUNDS_US);
+        for _ in 0..95 {
+            h.observe(80); // fast mode: bucket 100
+        }
+        for _ in 0..5 {
+            h.observe(40_000); // slow tail: bucket 50_000
+        }
+        assert_eq!(h.percentile(0.50), 100);
+        assert_eq!(h.percentile(0.90), 100);
+        assert_eq!(h.percentile(0.99), 50_000);
+    }
+
+    #[test]
+    fn server_metrics_per_command_accumulates() {
+        let m = ServerMetrics::new();
+        m.observe_command("ping", true, 120);
+        m.observe_command("ping", true, 130);
+        m.observe_command("run", false, 9_000);
+        assert_eq!(m.commands.get(), 3);
+        assert_eq!(m.errors.get(), 1);
+        let per = m.per_command();
+        assert_eq!(per.len(), 2);
+        let ping = &per.iter().find(|(k, _)| k == "ping").unwrap().1;
+        assert_eq!(ping.calls.get(), 2);
+        assert_eq!(ping.errors.get(), 0);
+        assert_eq!(ping.latency_us.count(), 2);
+        let run = &per.iter().find(|(k, _)| k == "run").unwrap().1;
+        assert_eq!(run.errors.get(), 1);
+    }
+
+    #[test]
+    fn histogram_is_shareable_across_threads() {
+        let h = std::sync::Arc::new(Histogram::new(SIZE_BOUNDS));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for v in 0..250u64 {
+                        h.observe(v % 32);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 1000);
+    }
+}

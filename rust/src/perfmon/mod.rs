@@ -193,6 +193,15 @@ impl PerfSnapshot {
         v
     }
 
+    /// Counter-wise difference `self - base`: the window between two
+    /// snapshots of the same monitor, `base` taken earlier. This is the
+    /// public face of [`PerfSnapshot::sub`] for window-style consumers
+    /// (the guest profiler's per-power-state splits and energy
+    /// attribution, [`crate::profile`]).
+    pub fn delta(&self, base: &PerfSnapshot) -> PerfSnapshot {
+        self.sub(base)
+    }
+
     fn sub(&self, base: &PerfSnapshot) -> PerfSnapshot {
         fn d(a: StateCycles, b: StateCycles) -> StateCycles {
             let mut out = StateCycles::default();

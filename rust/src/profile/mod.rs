@@ -1,0 +1,778 @@
+//! Cycle-exact guest profiler with energy attribution (DESIGN.md §14).
+//!
+//! The profiler hangs off the bus like the trace ring
+//! ([`crate::trace`]): an `Option<Box<Profiler>>` the shared retire
+//! path of *both* exec backends feeds with `(pc, cycles, retired)`
+//! records. Because the interp backend and the blocks backend replay
+//! the identical architectural instruction stream (the `femu diff`
+//! contract), the per-pc histograms they produce are bit-identical by
+//! construction — `femu profile --validate` and CI prove it on every
+//! builtin.
+//!
+//! Capture is a dense per-word bucket array over the SRAM span (pc
+//! buckets; ~1 MiB for the default 256 KiB SRAM), so the hot path is
+//! two adds and no branches beyond the `active` gate. Folding up to
+//! function granularity happens *off* the hot path, at read time,
+//! using the [`crate::analyze`] CFG/call-graph symbols — which also
+//! guarantees `femu analyze --json` and profile JSON share one
+//! symbol-naming scheme ([`crate::analyze::symbol_name`]).
+//!
+//! Accounting contract (tested in `tests/profile_metrics.rs`):
+//!
+//! * **cycles conserve exactly**: every cycle the run loop advances
+//!   while the profiler is active lands in exactly one pc bucket
+//!   (including trap/IRQ-entry cycles, charged to the interrupted pc);
+//!   cycles the profiler never saw (WFI sleep fast-forward, cycles
+//!   before arming) are the `[idle]` residual, so
+//!   `Σ per-function + idle == window == perf_snapshot() delta`.
+//! * **energy conserves exactly**: the measured window energy
+//!   ([`EnergyModel::estimate`] over the perf-counter delta) is split
+//!   proportionally to attributed cycles across functions, and
+//!   `[idle]` absorbs the exact remainder (`total_mj` minus the
+//!   function shares) — sleep-state energy is never invented.
+//!
+//! Like the trace ring, the profiler is **derived state**: never
+//! snapshotted, reset (with a fresh perf baseline) on program load and
+//! snapshot restore. When unarmed the backends pay one branch per
+//! instruction; `perf_hotpaths/profile_off_overhead` gates that in CI.
+
+use std::collections::BTreeMap;
+
+use crate::energy::EnergyModel;
+use crate::perfmon::{PerfSnapshot, PowerState};
+use crate::util::json::Json;
+
+/// Pseudo-function absorbing cycles outside the profiled window's
+/// attributed stream (WFI sleep fast-forward).
+pub const IDLE_NAME: &str = "[idle]";
+/// Pseudo-function for pcs no known function contains.
+pub const UNKNOWN_NAME: &str = "[unknown]";
+
+/// The capture side: a dense per-word histogram over the SRAM span.
+///
+/// Owned by the bus (`bus.profile`) so both exec backends reach it from
+/// their retire hooks; all folding/reporting lives in free functions so
+/// none of it is anywhere near the hot path.
+pub struct Profiler {
+    /// Hot-path gate: `record` is two adds when true, one branch when
+    /// false. Arming allocates; pausing does not free.
+    active: bool,
+    /// Cycles per pc bucket (index `pc >> 2`).
+    bucket_cycles: Vec<u64>,
+    /// Retired instructions per pc bucket.
+    bucket_instret: Vec<u64>,
+    /// Out-of-span fallback (executing pcs above the SRAM span).
+    other_cycles: u64,
+    other_instret: u64,
+    /// Σ recorded cycles == non-idle window cycles.
+    attributed: u64,
+    /// Σ recorded retires.
+    retired: u64,
+    /// Total records seen (retired or not) — phantom-sample checks.
+    records: u64,
+    /// Cycle counter when the window opened (arm or reset).
+    start_cycle: u64,
+    /// pc when the window opened: the call-graph root for server-side
+    /// reads, where no assembled program (with symbols) is at hand.
+    entry_pc: u32,
+    /// Perf counters when the window opened; per-power-state splits and
+    /// energy attribution price the delta against this.
+    baseline: PerfSnapshot,
+}
+
+impl Profiler {
+    /// `span_bytes` is the executable span covered by dense buckets
+    /// (the SRAM span: banks × bank size); `now`/`pc`/`baseline` open
+    /// the first window.
+    pub fn new(span_bytes: u32, now: u64, pc: u32, baseline: PerfSnapshot) -> Self {
+        let buckets = (span_bytes / 4) as usize;
+        Self {
+            active: true,
+            bucket_cycles: vec![0; buckets],
+            bucket_instret: vec![0; buckets],
+            other_cycles: 0,
+            other_instret: 0,
+            attributed: 0,
+            retired: 0,
+            records: 0,
+            start_cycle: now,
+            entry_pc: pc,
+            baseline,
+        }
+    }
+
+    /// Hot-path record: attribute `cycles` to `pc`'s bucket. Called by
+    /// both backends after every `cpu.step`/`exec_decoded`, retired or
+    /// not, so trap and IRQ-entry cycles conserve too.
+    #[inline]
+    pub fn record(&mut self, pc: u32, cycles: u32, retired: bool) {
+        if !self.active {
+            return;
+        }
+        self.records += 1;
+        self.attributed += cycles as u64;
+        let idx = (pc >> 2) as usize;
+        if idx < self.bucket_cycles.len() {
+            self.bucket_cycles[idx] += cycles as u64;
+            if retired {
+                self.bucket_instret[idx] += 1;
+            }
+        } else {
+            self.other_cycles += cycles as u64;
+            if retired {
+                self.other_instret += 1;
+            }
+        }
+        if retired {
+            self.retired += 1;
+        }
+    }
+
+    /// Pause/resume capture without dropping history (the bench gate's
+    /// armed-but-paused configuration measures exactly this state).
+    pub fn set_active(&mut self, on: bool) {
+        self.active = on;
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Drop all recorded history and open a fresh window at `now` —
+    /// the load/restore path (derived state: profiles never survive a
+    /// snapshot boundary). Keeps the bucket allocation and the
+    /// active/paused setting.
+    pub fn reset(&mut self, now: u64, pc: u32, baseline: PerfSnapshot) {
+        self.bucket_cycles.iter_mut().for_each(|c| *c = 0);
+        self.bucket_instret.iter_mut().for_each(|c| *c = 0);
+        self.other_cycles = 0;
+        self.other_instret = 0;
+        self.attributed = 0;
+        self.retired = 0;
+        self.records = 0;
+        self.start_cycle = now;
+        self.entry_pc = pc;
+        self.baseline = baseline;
+    }
+
+    pub fn attributed_cycles(&self) -> u64 {
+        self.attributed
+    }
+
+    pub fn retired(&self) -> u64 {
+        self.retired
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn start_cycle(&self) -> u64 {
+        self.start_cycle
+    }
+
+    /// pc at window open — the analysis root for server-side reads.
+    pub fn entry_pc(&self) -> u32 {
+        self.entry_pc
+    }
+
+    pub fn baseline(&self) -> &PerfSnapshot {
+        &self.baseline
+    }
+
+    /// Non-zero buckets as `(pc, cycles, instret)`, pc-ascending (the
+    /// annotated-disassembly export walks this).
+    pub fn nonzero(&self) -> impl Iterator<Item = (u32, u64, u64)> + '_ {
+        self.bucket_cycles
+            .iter()
+            .zip(&self.bucket_instret)
+            .enumerate()
+            .filter(|(_, (&c, &i))| c != 0 || i != 0)
+            .map(|(idx, (&c, &i))| ((idx as u32) << 2, c, i))
+    }
+
+    /// Order-independent FNV-1a digest of the full capture — the
+    /// backend bit-identity checks compare these.
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut put = |h: &mut u64, v: u64| {
+            for b in v.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        for (pc, c, i) in self.nonzero() {
+            put(&mut h, pc as u64);
+            put(&mut h, c);
+            put(&mut h, i);
+        }
+        put(&mut h, self.other_cycles);
+        put(&mut h, self.other_instret);
+        put(&mut h, self.attributed);
+        put(&mut h, self.retired);
+        put(&mut h, self.records);
+        h
+    }
+}
+
+/// The symbol view reports fold buckets with: function entries and
+/// names (the [`crate::analyze::symbol_name`] scheme) plus the static
+/// call edges. Built by [`crate::analyze::Report::function_table`].
+pub struct FunctionTable {
+    /// `(entry pc, name)` sorted by entry; a pc belongs to the function
+    /// with the largest entry at or below it.
+    entries: Vec<(u32, String)>,
+    /// Static call edges: caller entry → callee entries.
+    calls: BTreeMap<u32, Vec<u32>>,
+    /// The analysis entry point — the folded-stack root.
+    root: u32,
+}
+
+impl FunctionTable {
+    pub fn new(mut entries: Vec<(u32, String)>, calls: BTreeMap<u32, Vec<u32>>, root: u32) -> Self {
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        entries.dedup_by(|a, b| a.0 == b.0);
+        Self { entries, calls, root }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Index of the function containing `pc`: largest entry ≤ pc.
+    fn index_of(&self, pc: u32) -> Option<usize> {
+        match self.entries.binary_search_by(|e| e.0.cmp(&pc)) {
+            Ok(i) => Some(i),
+            Err(0) => None,
+            Err(i) => Some(i - 1),
+        }
+    }
+
+    fn exact(&self, entry: u32) -> Option<usize> {
+        self.entries.binary_search_by(|e| e.0.cmp(&entry)).ok()
+    }
+
+    /// Name of the function containing `pc`, if any.
+    pub fn name_at(&self, pc: u32) -> Option<&str> {
+        self.index_of(pc).map(|i| self.entries[i].1.as_str())
+    }
+}
+
+/// One function's line in a profile report.
+#[derive(Clone, Debug)]
+pub struct FnProfile {
+    pub name: String,
+    pub entry: u32,
+    /// Cycles spent at pcs inside this function (self time).
+    pub flat_cycles: u64,
+    /// Instructions retired at pcs inside this function.
+    pub flat_instret: u64,
+    /// This function's proportional share of the window's active
+    /// energy, in millijoules.
+    pub flat_mj: f64,
+    /// Self time plus all statically-reachable callees' inclusive time
+    /// (recursion cycles counted once, at the first-visited function).
+    pub incl_cycles: u64,
+    /// Canonical call path root→…→self for the folded-stack export.
+    pub stack: Vec<String>,
+}
+
+/// A folded, attributed profile window — everything the JSON, folded
+/// stack, text, and annotated exports render from.
+pub struct ProfileReport {
+    pub backend: String,
+    pub model: String,
+    pub freq_hz: u64,
+    /// Total window length: `now - start_cycle`.
+    pub window_cycles: u64,
+    /// Cycles the retire hooks recorded (== Σ per-function flat).
+    pub attributed_cycles: u64,
+    /// Window cycles the hooks never saw (WFI sleep fast-forward).
+    pub idle_cycles: u64,
+    pub retired: u64,
+    /// Real functions plus `[unknown]` when non-empty; flat-cycle
+    /// descending. `Σ flat_cycles == attributed_cycles` exactly.
+    pub functions: Vec<FnProfile>,
+    /// `total_mj - Σ functions.flat_mj` — exact by construction.
+    pub idle_mj: f64,
+    pub total_mj: f64,
+    pub active_mj: f64,
+    pub sleep_mj: f64,
+    /// Per-domain power-state cycle deltas over the window, in
+    /// [`PerfSnapshot::domains`] order: `(domain, [cycles; 4])`.
+    pub states: Vec<(String, [u64; 4])>,
+}
+
+/// Fold a capture into a report. `perf_now` must come from the same
+/// monitor the profiler's baseline was snapped from (the owning Soc).
+pub fn build_report(
+    prof: &Profiler,
+    now: u64,
+    perf_now: &PerfSnapshot,
+    table: &FunctionTable,
+    model: &EnergyModel,
+    backend: &str,
+) -> ProfileReport {
+    let delta = perf_now.delta(prof.baseline());
+    let energy = model.estimate(&delta);
+
+    let window = now.saturating_sub(prof.start_cycle);
+    let attributed = prof.attributed;
+    let idle_cycles = window.saturating_sub(attributed);
+
+    // fold buckets to function granularity; slot `n` is [unknown]
+    let n = table.entries.len();
+    let mut flat_cycles = vec![0u64; n + 1];
+    let mut flat_instret = vec![0u64; n + 1];
+    for (pc, c, i) in prof.nonzero() {
+        let slot = table.index_of(pc).unwrap_or(n);
+        flat_cycles[slot] += c;
+        flat_instret[slot] += i;
+    }
+    flat_cycles[n] += prof.other_cycles;
+    flat_instret[n] += prof.other_instret;
+
+    // proportional energy attribution over the measured active energy;
+    // [idle] absorbs the exact residual of total_mj
+    let share = |cycles: u64| {
+        if attributed == 0 {
+            0.0
+        } else {
+            energy.active_mj * cycles as f64 / attributed as f64
+        }
+    };
+
+    let incl = inclusive(table, &flat_cycles[..n]);
+    let stacks = stacks(table);
+
+    let mut functions = Vec::new();
+    for (i, (entry, name)) in table.entries.iter().enumerate() {
+        if flat_cycles[i] == 0 && incl[i] == 0 {
+            continue;
+        }
+        functions.push(FnProfile {
+            name: name.clone(),
+            entry: *entry,
+            flat_cycles: flat_cycles[i],
+            flat_instret: flat_instret[i],
+            flat_mj: share(flat_cycles[i]),
+            incl_cycles: incl[i],
+            stack: stacks[i].clone(),
+        });
+    }
+    if flat_cycles[n] != 0 || flat_instret[n] != 0 {
+        functions.push(FnProfile {
+            name: UNKNOWN_NAME.to_string(),
+            entry: 0,
+            flat_cycles: flat_cycles[n],
+            flat_instret: flat_instret[n],
+            flat_mj: share(flat_cycles[n]),
+            incl_cycles: flat_cycles[n],
+            stack: vec![UNKNOWN_NAME.to_string()],
+        });
+    }
+    functions.sort_by(|a, b| b.flat_cycles.cmp(&a.flat_cycles).then(a.entry.cmp(&b.entry)));
+
+    let fn_mj: f64 = functions.iter().map(|f| f.flat_mj).sum();
+    let idle_mj = energy.total_mj - fn_mj;
+
+    let states = delta
+        .domains()
+        .iter()
+        .map(|(d, c)| (d.to_string(), c.counts))
+        .collect();
+
+    ProfileReport {
+        backend: backend.to_string(),
+        model: model.name.clone(),
+        freq_hz: model.freq_hz,
+        window_cycles: window,
+        attributed_cycles: attributed,
+        idle_cycles,
+        retired: prof.retired,
+        functions,
+        idle_mj,
+        total_mj: energy.total_mj,
+        active_mj: energy.active_mj,
+        sleep_mj: energy.sleep_mj,
+        states,
+    }
+}
+
+/// Inclusive cycles per function: flat plus all statically-reachable
+/// callees, memoized; recursion cycles are counted once at the
+/// first-visited function (deterministic: visit order is entry order).
+fn inclusive(table: &FunctionTable, flat: &[u64]) -> Vec<u64> {
+    let n = table.entries.len();
+    let mut memo: Vec<Option<u64>> = vec![None; n];
+    let mut on_stack = vec![false; n];
+    for i in 0..n {
+        incl_visit(table, flat, &mut memo, &mut on_stack, i);
+    }
+    memo.into_iter().map(|v| v.unwrap_or(0)).collect()
+}
+
+fn incl_visit(
+    table: &FunctionTable,
+    flat: &[u64],
+    memo: &mut Vec<Option<u64>>,
+    on_stack: &mut Vec<bool>,
+    i: usize,
+) -> u64 {
+    if let Some(v) = memo[i] {
+        return v;
+    }
+    if on_stack[i] {
+        return 0; // recursion cycle: already being counted upstream
+    }
+    on_stack[i] = true;
+    let mut total = flat[i];
+    let entry = table.entries[i].0;
+    if let Some(callees) = table.calls.get(&entry) {
+        for callee in callees {
+            if let Some(j) = table.exact(*callee) {
+                total = total.saturating_add(incl_visit(table, flat, memo, on_stack, j));
+            }
+        }
+    }
+    on_stack[i] = false;
+    memo[i] = Some(total);
+    total
+}
+
+/// Canonical call path root→F per function: BFS over the static call
+/// edges from the table root. Functions the root can't reach get a
+/// single-frame stack.
+fn stacks(table: &FunctionTable) -> Vec<Vec<String>> {
+    let n = table.entries.len();
+    let mut parent: Vec<Option<usize>> = vec![None; n];
+    let mut seen = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    if let Some(root) = table.exact(table.root) {
+        seen[root] = true;
+        queue.push_back(root);
+    }
+    while let Some(i) = queue.pop_front() {
+        let entry = table.entries[i].0;
+        if let Some(callees) = table.calls.get(&entry) {
+            for callee in callees {
+                if let Some(j) = table.exact(*callee) {
+                    if !seen[j] {
+                        seen[j] = true;
+                        parent[j] = Some(i);
+                        queue.push_back(j);
+                    }
+                }
+            }
+        }
+    }
+    (0..n)
+        .map(|i| {
+            let mut path = vec![table.entries[i].1.clone()];
+            if seen[i] {
+                let mut at = i;
+                while let Some(p) = parent[at] {
+                    path.push(table.entries[p].1.clone());
+                    at = p;
+                }
+            }
+            path.reverse();
+            path
+        })
+        .collect()
+}
+
+impl ProfileReport {
+    /// Machine-readable report; function names use the same scheme as
+    /// `femu analyze --json` (see [`crate::analyze::symbol_name`]).
+    pub fn to_json(&self) -> Json {
+        let functions: Vec<Json> = self
+            .functions
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("name", Json::Str(f.name.clone())),
+                    ("entry", Json::Num(f.entry as f64)),
+                    ("flat_cycles", Json::Num(f.flat_cycles as f64)),
+                    ("flat_instret", Json::Num(f.flat_instret as f64)),
+                    ("flat_mj", Json::Num(f.flat_mj)),
+                    ("incl_cycles", Json::Num(f.incl_cycles as f64)),
+                    (
+                        "stack",
+                        Json::Arr(f.stack.iter().map(|s| Json::Str(s.clone())).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let states: Vec<Json> = self
+            .states
+            .iter()
+            .map(|(d, c)| {
+                let mut fields = vec![("domain", Json::Str(d.clone()))];
+                for s in PowerState::ALL {
+                    fields.push((s.name(), Json::Num(c[s as usize] as f64)));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("backend", Json::Str(self.backend.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("freq_hz", Json::Num(self.freq_hz as f64)),
+            ("window_cycles", Json::Num(self.window_cycles as f64)),
+            ("attributed_cycles", Json::Num(self.attributed_cycles as f64)),
+            ("idle_cycles", Json::Num(self.idle_cycles as f64)),
+            ("retired", Json::Num(self.retired as f64)),
+            ("total_mj", Json::Num(self.total_mj)),
+            ("active_mj", Json::Num(self.active_mj)),
+            ("sleep_mj", Json::Num(self.sleep_mj)),
+            ("idle_mj", Json::Num(self.idle_mj)),
+            ("functions", Json::Arr(functions)),
+            ("states", Json::Arr(states)),
+        ])
+    }
+
+    /// Folded-stack export, one `a;b;c count` line per function —
+    /// pipe straight into flamegraph.pl.
+    pub fn to_folded(&self) -> String {
+        let mut out = String::new();
+        for f in &self.functions {
+            if f.flat_cycles == 0 {
+                continue;
+            }
+            out.push_str(&f.stack.join(";"));
+            out.push(' ');
+            out.push_str(&f.flat_cycles.to_string());
+            out.push('\n');
+        }
+        if self.idle_cycles > 0 {
+            out.push_str(IDLE_NAME);
+            out.push(' ');
+            out.push_str(&self.idle_cycles.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Human-readable flat/inclusive table plus the power-state splits.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "profile [{}]: {} window cycles ({} attributed, {} idle), {} retired",
+            self.backend, self.window_cycles, self.attributed_cycles, self.idle_cycles, self.retired
+        );
+        let _ = writeln!(
+            s,
+            "  energy [{}]: {:.6} mJ total ({:.6} active, {:.6} sleep)",
+            self.model, self.total_mj, self.active_mj, self.sleep_mj
+        );
+        let _ = writeln!(
+            s,
+            "  {:<24} {:>12} {:>10} {:>12} {:>12}",
+            "function", "flat cycles", "instret", "incl cycles", "energy mJ"
+        );
+        for f in &self.functions {
+            let _ = writeln!(
+                s,
+                "  {:<24} {:>12} {:>10} {:>12} {:>12.6}",
+                f.name, f.flat_cycles, f.flat_instret, f.incl_cycles, f.flat_mj
+            );
+        }
+        let _ = writeln!(
+            s,
+            "  {:<24} {:>12} {:>10} {:>12} {:>12.6}",
+            IDLE_NAME, self.idle_cycles, 0, self.idle_cycles, self.idle_mj
+        );
+        let _ = writeln!(s, "  power-state residency over the window (cycles):");
+        for (d, c) in &self.states {
+            let _ = writeln!(
+                s,
+                "    {:<10} active {:>12}  clock_gated {:>12}  power_gated {:>12}  retention {:>12}",
+                d,
+                c[PowerState::Active as usize],
+                c[PowerState::ClockGated as usize],
+                c[PowerState::PowerGated as usize],
+                c[PowerState::Retention as usize],
+            );
+        }
+        s
+    }
+}
+
+/// Annotated disassembly of every pc the capture touched, grouped by
+/// function; `fetch` supplies instruction words (image or live bus).
+pub fn render_annotated(
+    prof: &Profiler,
+    table: &FunctionTable,
+    fetch: impl Fn(u32) -> Option<u32>,
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let mut current: Option<String> = None;
+    for (pc, cycles, instret) in prof.nonzero() {
+        let name = table.name_at(pc).unwrap_or(UNKNOWN_NAME).to_string();
+        if current.as_deref() != Some(&name) {
+            let _ = writeln!(s, "{name}:");
+            current = Some(name);
+        }
+        let text = match fetch(pc) {
+            Some(word) => crate::isa::disassemble_word(word, pc),
+            None => "<no image>".to_string(),
+        };
+        let _ = writeln!(s, "  {pc:#010x}  {cycles:>10} cycles  {instret:>8} ret  {text}");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> FunctionTable {
+        // main @0 calls leaf @0x40; helper @0x80 is unreachable
+        let entries = vec![
+            (0x00, "main".to_string()),
+            (0x40, "leaf".to_string()),
+            (0x80, "helper".to_string()),
+        ];
+        let mut calls = BTreeMap::new();
+        calls.insert(0x00u32, vec![0x40u32]);
+        FunctionTable::new(entries, calls, 0x00)
+    }
+
+    fn profiler() -> Profiler {
+        Profiler::new(0x100, 0, 0, PerfSnapshot::default())
+    }
+
+    #[test]
+    fn buckets_attribute_by_largest_entry_at_or_below() {
+        let t = table();
+        assert_eq!(t.name_at(0x00), Some("main"));
+        assert_eq!(t.name_at(0x3c), Some("main"));
+        assert_eq!(t.name_at(0x40), Some("leaf"));
+        assert_eq!(t.name_at(0x7c), Some("leaf"));
+        assert_eq!(t.name_at(0x9c), Some("helper"));
+    }
+
+    #[test]
+    fn record_conserves_and_digest_is_stable() {
+        let mut p = profiler();
+        p.record(0x00, 2, true);
+        p.record(0x04, 3, true);
+        p.record(0x04, 1, false); // trap entry: cycles, no retire
+        assert_eq!(p.attributed_cycles(), 6);
+        assert_eq!(p.retired(), 2);
+        assert_eq!(p.records(), 3);
+        let d1 = p.digest();
+
+        let mut q = profiler();
+        q.record(0x00, 2, true);
+        q.record(0x04, 3, true);
+        q.record(0x04, 1, false);
+        assert_eq!(q.digest(), d1);
+
+        q.record(0x08, 1, true);
+        assert_ne!(q.digest(), d1);
+    }
+
+    #[test]
+    fn paused_profiler_records_nothing() {
+        let mut p = profiler();
+        p.set_active(false);
+        p.record(0x00, 5, true);
+        assert_eq!(p.records(), 0);
+        assert_eq!(p.attributed_cycles(), 0);
+        p.set_active(true);
+        p.record(0x00, 5, true);
+        assert_eq!(p.records(), 1);
+    }
+
+    #[test]
+    fn reset_drops_history_and_reopens_window() {
+        let mut p = profiler();
+        p.record(0x00, 5, true);
+        p.reset(1000, 0x40, PerfSnapshot::default());
+        assert_eq!(p.records(), 0);
+        assert_eq!(p.attributed_cycles(), 0);
+        assert_eq!(p.start_cycle(), 1000);
+        assert_eq!(p.entry_pc(), 0x40);
+        assert_eq!(p.nonzero().count(), 0);
+    }
+
+    #[test]
+    fn out_of_span_pcs_fold_to_unknown() {
+        let mut p = profiler();
+        p.record(0x4000_0000, 7, true); // bridge space: beyond buckets
+        let m = EnergyModel::femu();
+        let r = build_report(&p, 7, &PerfSnapshot::default(), &table(), &m, "interp");
+        let unknown = r.functions.iter().find(|f| f.name == UNKNOWN_NAME).unwrap();
+        assert_eq!(unknown.flat_cycles, 7);
+        assert_eq!(unknown.flat_instret, 1);
+    }
+
+    #[test]
+    fn report_folds_flat_inclusive_and_stacks() {
+        let mut p = profiler();
+        p.record(0x00, 10, true); // main
+        p.record(0x44, 30, true); // leaf
+        let m = EnergyModel::femu();
+        let r = build_report(&p, 50, &PerfSnapshot::default(), &table(), &m, "interp");
+
+        assert_eq!(r.window_cycles, 50);
+        assert_eq!(r.attributed_cycles, 40);
+        assert_eq!(r.idle_cycles, 10);
+        let total: u64 = r.functions.iter().map(|f| f.flat_cycles).sum();
+        assert_eq!(total, r.attributed_cycles);
+
+        let main = r.functions.iter().find(|f| f.name == "main").unwrap();
+        let leaf = r.functions.iter().find(|f| f.name == "leaf").unwrap();
+        assert_eq!(main.flat_cycles, 10);
+        assert_eq!(main.incl_cycles, 40); // flat + leaf
+        assert_eq!(leaf.incl_cycles, 30);
+        assert_eq!(leaf.stack, vec!["main".to_string(), "leaf".to_string()]);
+        // helper never ran and is reachable by nobody: not in the report
+        assert!(r.functions.iter().all(|f| f.name != "helper"));
+
+        let folded = r.to_folded();
+        assert!(folded.contains("main;leaf 30"), "{folded}");
+        assert!(folded.contains("[idle] 10"), "{folded}");
+
+        let text = r.render_text();
+        assert!(text.contains("main"), "{text}");
+        assert!(text.contains("[idle]"), "{text}");
+    }
+
+    #[test]
+    fn recursion_counts_once_in_inclusive_view() {
+        let entries = vec![(0x00, "a".to_string()), (0x40, "b".to_string())];
+        let mut calls = BTreeMap::new();
+        calls.insert(0x00u32, vec![0x40u32]);
+        calls.insert(0x40u32, vec![0x00u32]); // b calls a: a<->b cycle
+        let t = FunctionTable::new(entries, calls, 0x00);
+        let incl = inclusive(&t, &[10, 20]);
+        assert_eq!(incl[0], 30); // a: flat 10 + b 20, cycle edge ignored
+        assert_eq!(incl[1], 20); // b memoized while a was on stack
+    }
+
+    #[test]
+    fn json_export_round_trips_and_conserves() {
+        let mut p = profiler();
+        p.record(0x00, 4, true);
+        let m = EnergyModel::femu();
+        let r = build_report(&p, 4, &PerfSnapshot::default(), &table(), &m, "blocks");
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("backend").unwrap().as_str().unwrap(), "blocks");
+        assert_eq!(parsed.get("attributed_cycles").unwrap().as_i64().unwrap(), 4);
+    }
+
+    #[test]
+    fn annotated_output_names_functions() {
+        let mut p = profiler();
+        p.record(0x00, 2, true);
+        let out = render_annotated(&p, &table(), |_pc| Some(0x0000_0013)); // nop
+        assert!(out.starts_with("main:"), "{out}");
+        assert!(out.contains("0x00000000"), "{out}");
+    }
+}

@@ -48,6 +48,7 @@ use crate::config::PlatformConfig;
 use crate::coordinator::fleet::WorkerPool;
 use crate::coordinator::{Fleet, Platform};
 use crate::exec::BackendKind;
+use crate::metrics::ServerMetrics;
 use crate::util::Json;
 
 pub use session::{ConfigRegistry, Session, SessionTable, DEFAULT_SESSION};
@@ -66,8 +67,14 @@ pub use session::{ConfigRegistry, Session, SessionTable, DEFAULT_SESSION};
 /// the additive `trace.subscribe` / `trace.read` / `trace.stop` command
 /// family arrived (per-session event tracing with cursor-paged
 /// streaming — [`crate::trace`], DESIGN.md §13); every v4 request is
-/// unchanged.
-pub const PROTO_VERSION: u32 = 5;
+/// unchanged. Bumped to 6 when the additive `metrics` command (server
+/// observability — [`crate::metrics`], DESIGN.md §14) and the
+/// `profile.start` / `profile.read` / `profile.stop` family (per-session
+/// cycle-exact guest profiling — [`crate::profile`]) arrived, and
+/// `session.list` entries grew additive `uptime_s` / `idle_s` /
+/// `last_command_unix_ms` / `backend` / `instret` / `cycles` fields;
+/// every v5 request is unchanged.
+pub const PROTO_VERSION: u32 = 6;
 
 /// The one-line JSON banner every accepted connection receives before
 /// its first request: `{"hello":"femu-control-server","proto":...,
@@ -136,6 +143,11 @@ struct Shared {
     /// concurrent experiment is refused outright rather than parking on
     /// a pool worker (which would starve session commands).
     experiment_lock: Mutex<()>,
+    /// Control-plane observability (proto v6): per-command latency,
+    /// byte/connection totals, batch sizes, trace backpressure. Session
+    /// and pool counters live with their owners and are joined into the
+    /// `metrics` response.
+    metrics: ServerMetrics,
 }
 
 /// A running control server.
@@ -170,6 +182,7 @@ impl Server {
             pool: WorkerPool::new(opts.workers),
             fleet: Fleet::new(opts.workers),
             experiment_lock: Mutex::new(()),
+            metrics: ServerMetrics::new(),
         });
         let conns: ConnRegistry = Arc::new(Mutex::new(Vec::new()));
 
@@ -214,6 +227,27 @@ impl Server {
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// One-line operational summary (`femu serve --metrics-interval`
+    /// prints this periodically).
+    pub fn metrics_line(&self) -> String {
+        let m = &self.shared.metrics;
+        let ps = self.shared.pool.stats();
+        format!(
+            "metrics: conns={}open/{}closed cmds={} errs={} p50_us={} p99_us={} \
+             sessions={} queue={} in={}B out={}B",
+            m.connections_opened.get(),
+            m.connections_closed.get(),
+            m.commands.get(),
+            m.errors.get(),
+            m.latency_us.percentile(0.5),
+            m.latency_us.percentile(0.99),
+            self.shared.sessions.len(),
+            ps.queue_depth.get(),
+            m.bytes_in.get(),
+            m.bytes_out.get(),
+        )
     }
 
     /// Graceful shutdown: returns only after the accept loop and **all**
@@ -268,6 +302,13 @@ fn error_response(e: &anyhow::Error) -> Json {
 }
 
 fn serve_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
+    shared.metrics.connections_opened.inc();
+    let r = serve_connection_inner(stream, &shared);
+    shared.metrics.connections_closed.inc();
+    r
+}
+
+fn serve_connection_inner(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     // versioned hello before the first request (clients assert on it)
@@ -282,8 +323,9 @@ fn serve_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
         match reader.read_until(b'\n', &mut buf) {
             Ok(0) => return Ok(()), // client closed
             Ok(_) => {
+                shared.metrics.bytes_in.add(buf.len() as u64);
                 let response = match std::str::from_utf8(&buf) {
-                    Ok(line) => match dispatch(line, &shared) {
+                    Ok(line) => match dispatch(line, shared) {
                         Ok(v) => Json::obj(vec![("ok", Json::Bool(true)), ("result", v)]),
                         Err(e) => error_response(&e),
                     },
@@ -293,7 +335,9 @@ fn serve_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                     ]),
                 };
                 buf.clear();
-                writeln!(writer, "{response}")?;
+                let text = response.to_string();
+                shared.metrics.bytes_out.add(text.len() as u64 + 1); // + newline
+                writeln!(writer, "{text}")?;
             }
             // read timeout: partial data (if any) stays in `buf`;
             // re-check the stop flag and keep reading
@@ -320,13 +364,36 @@ fn session_field(req: &Json) -> Result<u64> {
     }
 }
 
-/// Route one request line: table operations run inline on the connection
-/// thread (cheap, never blocked by running guests); everything that
-/// touches a platform or a sweep is dispatched onto the worker pool.
+/// Parse one request line, route it, and record it in the server
+/// metrics (per-command call/error counts + wall-clock latency). A line
+/// that fails to parse or carries no `cmd` is not attributable to a
+/// command and only shows up in the byte counters.
 fn dispatch(line: &str, shared: &Arc<Shared>) -> Result<Json> {
     let req = Json::parse(line.trim()).context("parsing request")?;
     let cmd = req.str_field("cmd")?.to_string();
-    match cmd.as_str() {
+    let t0 = std::time::Instant::now();
+    let result = route(&cmd, req, shared);
+    shared.metrics.observe_command(&cmd, result.is_ok(), t0.elapsed().as_micros() as u64);
+    // trace-stream backpressure: events delivered vs lost to ring
+    // overwrite before the subscriber drained them
+    if cmd == "trace.read" {
+        if let Ok(v) = &result {
+            if let Some(events) = v.opt("events").and_then(|e| e.as_arr().ok()) {
+                shared.metrics.trace_events_read.add(events.len() as u64);
+            }
+            if let Some(skipped) = v.opt("skipped").and_then(|s| s.as_i64().ok()) {
+                shared.metrics.trace_events_skipped.add(skipped.max(0) as u64);
+            }
+        }
+    }
+    result
+}
+
+/// Route one request: table operations run inline on the connection
+/// thread (cheap, never blocked by running guests); everything that
+/// touches a platform or a sweep is dispatched onto the worker pool.
+fn route(cmd: &str, req: Json, shared: &Arc<Shared>) -> Result<Json> {
+    match cmd {
         // ping answers inline so liveness probes work even with every
         // worker busy
         "ping" => Ok(Json::from("pong")),
@@ -382,9 +449,26 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> Result<Json> {
             })?
         }
         "session.list" => Ok(shared.sessions.describe()),
+        // metrics answers inline: observability must work with every
+        // worker busy (that is exactly when you want it)
+        "metrics" => {
+            let format = req.opt("format").map(|v| v.as_str()).transpose()?.unwrap_or("json");
+            match format {
+                "json" => Ok(metrics_json(shared)),
+                "prometheus" => Ok(Json::obj(vec![
+                    ("format", Json::from("prometheus")),
+                    ("text", Json::Str(metrics_prometheus(shared))),
+                ])),
+                other => Err(protocol::proto_err(
+                    protocol::ErrorKind::BadParam,
+                    format!("unknown metrics format `{other}` (want json|prometheus)"),
+                )),
+            }
+        }
         "batch" => {
             let session = shared.sessions.get(session_field(&req)?)?;
             let sub: Vec<Json> = req.get("requests")?.as_arr()?.to_vec();
+            shared.metrics.batch_len.observe(sub.len() as u64);
             if sub.len() > protocol::MAX_BATCH_REQUESTS {
                 return Err(protocol::proto_err(
                     protocol::ErrorKind::CapExceeded,
@@ -398,11 +482,11 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> Result<Json> {
             let shared2 = shared.clone();
             shared.pool.submit_wait(move || run_batch(&shared2, &session, &sub))?
         }
-        _ if protocol::is_experiment_cmd(&cmd) => {
+        _ if protocol::is_experiment_cmd(cmd) => {
             let (cfg, _) = shared.registry.resolve(&req)?;
             let shared2 = shared.clone();
-            // the match scrutinee borrows `cmd`, so the job gets a clone
-            let cmd = cmd.clone();
+            // the job outlives this borrow of `cmd`, so it gets an owned copy
+            let cmd = cmd.to_string();
             shared.pool.submit_wait(move || {
                 let _one_at_a_time = match shared2.experiment_lock.try_lock() {
                     Ok(guard) => guard,
@@ -420,7 +504,7 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> Result<Json> {
         _ => {
             let session = shared.sessions.get(session_field(&req)?)?;
             let shared2 = shared.clone();
-            let cmd = cmd.clone();
+            let cmd = cmd.to_string();
             shared.pool.submit_wait(move || {
                 session.with_platform(|p| {
                     let cancelled =
@@ -463,6 +547,118 @@ fn run_batch(shared: &Arc<Shared>, session: &Arc<Session>, sub: &[Json]) -> Resu
             ("completed", Json::from(completed)),
         ]))
     })?
+}
+
+/// The `metrics` response (proto v6): server counters, session
+/// lifecycle, worker-pool queue accounting, and per-command stats, all
+/// derived state (reset on server restart, never snapshotted).
+fn metrics_json(shared: &Shared) -> Json {
+    let m = &shared.metrics;
+    let ss = shared.sessions.stats();
+    let ps = shared.pool.stats();
+    let per_command = Json::Obj(
+        m.per_command()
+            .into_iter()
+            .map(|(name, st)| {
+                (
+                    name,
+                    Json::obj(vec![
+                        ("calls", Json::from(st.calls.get() as i64)),
+                        ("errors", Json::from(st.errors.get() as i64)),
+                        ("latency_us", st.latency_us.to_json()),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        (
+            "server",
+            Json::obj(vec![
+                ("connections_opened", Json::from(m.connections_opened.get() as i64)),
+                ("connections_closed", Json::from(m.connections_closed.get() as i64)),
+                ("bytes_in", Json::from(m.bytes_in.get() as i64)),
+                ("bytes_out", Json::from(m.bytes_out.get() as i64)),
+                ("commands", Json::from(m.commands.get() as i64)),
+                ("errors", Json::from(m.errors.get() as i64)),
+                ("latency_us", m.latency_us.to_json()),
+                ("batch_len", m.batch_len.to_json()),
+                ("trace_events_read", Json::from(m.trace_events_read.get() as i64)),
+                ("trace_events_skipped", Json::from(m.trace_events_skipped.get() as i64)),
+            ]),
+        ),
+        (
+            "sessions",
+            Json::obj(vec![
+                ("live", Json::from(shared.sessions.len() as i64)),
+                ("opened", Json::from(ss.opened.get() as i64)),
+                ("closed", Json::from(ss.closed.get() as i64)),
+                ("evicted", Json::from(ss.evicted.get() as i64)),
+                ("reaped", Json::from(ss.reaped.get() as i64)),
+            ]),
+        ),
+        (
+            "pool",
+            Json::obj(vec![
+                ("workers", Json::from(shared.pool.workers() as i64)),
+                ("submitted", Json::from(ps.submitted.get() as i64)),
+                ("completed", Json::from(ps.completed.get() as i64)),
+                ("rejected", Json::from(ps.rejected.get() as i64)),
+                ("queue_depth", Json::from(ps.queue_depth.get())),
+                ("wait_us", ps.wait_us.to_json()),
+            ]),
+        ),
+        ("per_command", per_command),
+    ])
+}
+
+/// The same counters in the Prometheus text exposition format, for
+/// scraping through `{"cmd":"metrics","format":"prometheus"}` or
+/// `femu metrics --prometheus`.
+fn metrics_prometheus(shared: &Shared) -> String {
+    use std::fmt::Write as _;
+    let m = &shared.metrics;
+    let ss = shared.sessions.stats();
+    let ps = shared.pool.stats();
+    let mut out = String::new();
+    let _ = writeln!(out, "femu_connections_opened_total {}", m.connections_opened.get());
+    let _ = writeln!(out, "femu_connections_closed_total {}", m.connections_closed.get());
+    let _ = writeln!(out, "femu_bytes_in_total {}", m.bytes_in.get());
+    let _ = writeln!(out, "femu_bytes_out_total {}", m.bytes_out.get());
+    let _ = writeln!(out, "femu_commands_total {}", m.commands.get());
+    let _ = writeln!(out, "femu_errors_total {}", m.errors.get());
+    for (q, p) in [("0.5", 0.5), ("0.9", 0.9), ("0.99", 0.99)] {
+        let _ = writeln!(
+            out,
+            "femu_command_latency_us{{quantile=\"{q}\"}} {}",
+            m.latency_us.percentile(p)
+        );
+    }
+    let _ = writeln!(out, "femu_trace_events_read_total {}", m.trace_events_read.get());
+    let _ = writeln!(out, "femu_trace_events_skipped_total {}", m.trace_events_skipped.get());
+    let _ = writeln!(out, "femu_sessions_live {}", shared.sessions.len());
+    let _ = writeln!(out, "femu_sessions_opened_total {}", ss.opened.get());
+    let _ = writeln!(out, "femu_sessions_closed_total {}", ss.closed.get());
+    let _ = writeln!(out, "femu_sessions_evicted_total {}", ss.evicted.get());
+    let _ = writeln!(out, "femu_sessions_reaped_total {}", ss.reaped.get());
+    let _ = writeln!(out, "femu_pool_workers {}", shared.pool.workers());
+    let _ = writeln!(out, "femu_pool_submitted_total {}", ps.submitted.get());
+    let _ = writeln!(out, "femu_pool_completed_total {}", ps.completed.get());
+    let _ = writeln!(out, "femu_pool_rejected_total {}", ps.rejected.get());
+    let _ = writeln!(out, "femu_pool_queue_depth {}", ps.queue_depth.get());
+    for (q, p) in [("0.5", 0.5), ("0.99", 0.99)] {
+        let _ = writeln!(
+            out,
+            "femu_pool_wait_us{{quantile=\"{q}\"}} {}",
+            ps.wait_us.percentile(p)
+        );
+    }
+    for (name, st) in m.per_command() {
+        let _ = writeln!(out, "femu_command_calls_total{{cmd=\"{name}\"}} {}", st.calls.get());
+        let _ =
+            writeln!(out, "femu_command_errors_total{{cmd=\"{name}\"}} {}", st.errors.get());
+    }
+    out
 }
 
 /// Line-protocol client. Reads and validates the server's hello banner
@@ -632,6 +828,12 @@ impl Client {
                 ("cursor", Json::from(cursor as i64)),
             ]),
         )
+    }
+
+    /// Fetch the server's control-plane metrics (proto v6): `server`,
+    /// `sessions`, `pool`, and `per_command` sections.
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.call(Json::obj(vec![("cmd", Json::from("metrics"))]))
     }
 }
 
@@ -933,6 +1135,128 @@ mod tests {
         // tracing on one session never arms another: the default session
         // rejects reads
         assert!(client.call(Json::obj(vec![("cmd", Json::from("trace.read"))])).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_command_reports_counters() {
+        let (server, mut client) = spawn();
+        client.call(Json::obj(vec![("cmd", Json::from("ping"))])).unwrap();
+        client
+            .call(Json::obj(vec![
+                ("cmd", Json::from("load_asm")),
+                ("source", Json::from("_start: li a0, 1\nebreak")),
+            ]))
+            .unwrap();
+        client.call(Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        assert!(client.call(Json::obj(vec![("cmd", Json::from("warp"))])).is_err());
+
+        let m = client.metrics().unwrap();
+        let srv = m.get("server").unwrap();
+        assert!(srv.get("commands").unwrap().as_i64().unwrap() >= 4);
+        assert!(srv.get("errors").unwrap().as_i64().unwrap() >= 1);
+        assert!(srv.get("connections_opened").unwrap().as_i64().unwrap() >= 1);
+        assert!(srv.get("bytes_in").unwrap().as_i64().unwrap() > 0);
+        assert!(srv.get("bytes_out").unwrap().as_i64().unwrap() > 0);
+        let pool = m.get("pool").unwrap();
+        // ping and metrics run inline; load_asm + run + warp hit the pool
+        assert!(pool.get("submitted").unwrap().as_i64().unwrap() >= 3);
+        assert_eq!(m.get("sessions").unwrap().get("live").unwrap().as_i64().unwrap(), 1);
+        let per = m.get("per_command").unwrap();
+        assert_eq!(per.get("run").unwrap().get("calls").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(per.get("warp").unwrap().get("errors").unwrap().as_i64().unwrap(), 1);
+        assert!(
+            per.get("run").unwrap().get("latency_us").unwrap().get("count").unwrap()
+                .as_i64()
+                .unwrap()
+                == 1
+        );
+
+        // the prometheus text form carries the same counters
+        let prom = client
+            .call(Json::obj(vec![
+                ("cmd", Json::from("metrics")),
+                ("format", Json::from("prometheus")),
+            ]))
+            .unwrap();
+        let text = prom.str_field("text").unwrap();
+        assert!(text.contains("femu_commands_total"), "{text}");
+        assert!(text.contains("femu_command_calls_total{cmd=\"run\"} 1"), "{text}");
+        assert!(text.contains("femu_pool_queue_depth"), "{text}");
+        // a bad format is a clean error
+        assert!(client
+            .call(Json::obj(vec![
+                ("cmd", Json::from("metrics")),
+                ("format", Json::from("xml")),
+            ]))
+            .is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn session_list_is_enriched_over_the_wire() {
+        let (server, mut client) = spawn();
+        let id = client.open_session(Json::Null).unwrap();
+        client
+            .call_on(
+                id,
+                Json::obj(vec![
+                    ("cmd", Json::from("load_asm")),
+                    ("source", Json::from("_start: li a0, 1\nli a1, 2\nebreak")),
+                ]),
+            )
+            .unwrap();
+        client.call_on(id, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        let listed = client.call(Json::obj(vec![("cmd", Json::from("session.list"))])).unwrap();
+        let entry = listed
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|s| s.get("session").unwrap().as_i64().unwrap() == id as i64)
+            .unwrap()
+            .clone();
+        assert!(!entry.get("busy").unwrap().as_bool().unwrap());
+        assert_eq!(entry.str_field("backend").unwrap(), "interp");
+        assert_eq!(entry.get("instret").unwrap().as_i64().unwrap(), 3);
+        assert!(entry.get("cycles").unwrap().as_i64().unwrap() > 0);
+        assert!(entry.get("last_command_unix_ms").unwrap().as_i64().unwrap() > 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn profile_over_the_wire_conserves_cycles() {
+        let (server, mut client) = spawn();
+        let id = client.open_session(Json::Null).unwrap();
+        client
+            .call_on(
+                id,
+                Json::obj(vec![
+                    ("cmd", Json::from("load_asm")),
+                    ("source", Json::from("_start: li a0, 5\nli a1, 7\nadd a2, a0, a1\nebreak")),
+                ]),
+            )
+            .unwrap();
+        client.call_on(id, Json::obj(vec![("cmd", Json::from("profile.start"))])).unwrap();
+        client.call_on(id, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+        let prof =
+            client.call_on(id, Json::obj(vec![("cmd", Json::from("profile.read"))])).unwrap();
+        assert_eq!(prof.get("retired").unwrap().as_i64().unwrap(), 4);
+        let flat: i64 = prof
+            .get("functions")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|f| f.get("flat_cycles").unwrap().as_i64().unwrap())
+            .sum();
+        assert_eq!(flat, prof.get("attributed_cycles").unwrap().as_i64().unwrap());
+        // profiling on one session never arms another
+        assert!(client
+            .call(Json::obj(vec![("cmd", Json::from("profile.read"))]))
+            .is_err());
+        let stop =
+            client.call_on(id, Json::obj(vec![("cmd", Json::from("profile.stop"))])).unwrap();
+        assert_eq!(stop.get("retired").unwrap().as_i64().unwrap(), 4);
         server.shutdown();
     }
 

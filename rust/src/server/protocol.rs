@@ -256,6 +256,16 @@ pub enum PlatformCmd {
     TraceRead { cursor: u64, max: usize },
     /// Disarm the ring and report its final totals (proto v5).
     TraceStop,
+    /// Arm the cycle-exact guest profiler on the session platform
+    /// (proto v6). The window opens at the current cycle; the current pc
+    /// becomes the call-graph root for `profile.read`.
+    ProfileStart,
+    /// Fold the armed profiler to function granularity and report flat /
+    /// inclusive cycles plus the energy split (proto v6). `folded`
+    /// selects the flamegraph text form instead of the JSON report.
+    ProfileRead { model: String, folded: bool },
+    /// Disarm the profiler and report its final totals (proto v6).
+    ProfileStop,
 }
 
 impl PlatformCmd {
@@ -400,6 +410,32 @@ impl PlatformCmd {
                 PlatformCmd::TraceRead { cursor, max }
             }
             "trace.stop" => PlatformCmd::TraceStop,
+            "profile.start" => PlatformCmd::ProfileStart,
+            "profile.read" => {
+                let model =
+                    req.opt("model").map(|v| v.as_str()).transpose()?.unwrap_or("femu").to_string();
+                if EnergyModel::by_name(&model).is_none() {
+                    return Err(proto_err(
+                        ErrorKind::BadParam,
+                        format!("unknown energy model `{model}`"),
+                    ));
+                }
+                let folded = match req.opt("format") {
+                    None => false,
+                    Some(v) => match v.as_str()? {
+                        "json" => false,
+                        "folded" => true,
+                        other => {
+                            return Err(proto_err(
+                                ErrorKind::BadParam,
+                                format!("unknown profile format `{other}` (want json|folded)"),
+                            ))
+                        }
+                    },
+                };
+                PlatformCmd::ProfileRead { model, folded }
+            }
+            "profile.stop" => PlatformCmd::ProfileStop,
             other => {
                 return Err(proto_err(
                     ErrorKind::UnknownCommand,
@@ -571,6 +607,63 @@ impl PlatformCmd {
                     ("total", Json::from(ring.total() as i64)),
                     ("dropped", Json::from(ring.dropped() as i64)),
                     ("digest", Json::Str(format!("{:#018x}", ring.digest()))),
+                ]))
+            }
+            PlatformCmd::ProfileStart => {
+                p.dbg.soc.set_profile();
+                let prof = p.dbg.soc.profiler().expect("armed above");
+                Ok(Json::obj(vec![
+                    ("enabled", Json::from(true)),
+                    ("start_cycle", Json::from(prof.start_cycle() as i64)),
+                    ("entry", Json::from(prof.entry_pc() as i64)),
+                ]))
+            }
+            PlatformCmd::ProfileRead { model, folded } => {
+                let m = EnergyModel::by_name(&model).ok_or_else(|| {
+                    proto_err(ErrorKind::BadParam, format!("unknown energy model `{model}`"))
+                })?;
+                let soc = &p.dbg.soc;
+                let prof = soc.profiler().ok_or_else(|| {
+                    proto_err(
+                        ErrorKind::BadParam,
+                        "profiling not enabled (profile.start first)".into(),
+                    )
+                })?;
+                // No assembled program survives `load_asm`, so symbols
+                // come from re-analyzing the live memory image, rooted
+                // at the pc the profile window opened on.
+                let acfg = crate::analyze::AnalyzeConfig::from_platform(&p.cfg);
+                let mut img = crate::analyze::Image::from_soc(soc);
+                img.entry = prof.entry_pc();
+                let report = crate::analyze::analyze(&img, "session", &acfg);
+                let table = report.function_table();
+                let perf_now = soc.perf.snapshot(soc.now);
+                let rep = crate::profile::build_report(
+                    prof,
+                    soc.now,
+                    &perf_now,
+                    &table,
+                    &m,
+                    soc.backend_kind().name(),
+                );
+                if folded {
+                    Ok(Json::obj(vec![("folded", Json::Str(rep.to_folded()))]))
+                } else {
+                    Ok(rep.to_json())
+                }
+            }
+            PlatformCmd::ProfileStop => {
+                let prof = p.dbg.soc.take_profile().ok_or_else(|| {
+                    proto_err(
+                        ErrorKind::BadParam,
+                        "profiling not enabled (profile.start first)".into(),
+                    )
+                })?;
+                Ok(Json::obj(vec![
+                    ("attributed_cycles", Json::from(prof.attributed_cycles() as i64)),
+                    ("retired", Json::from(prof.retired() as i64)),
+                    ("records", Json::from(prof.records() as i64)),
+                    ("digest", Json::Str(format!("{:#018x}", prof.digest()))),
                 ]))
             }
         }
@@ -1142,6 +1235,67 @@ mod tests {
         )
         .unwrap_err();
         assert_eq!(err.downcast_ref::<ProtoError>().map(|e| e.kind), Some(ErrorKind::BadParam));
+    }
+
+    #[test]
+    fn profile_start_read_stop_over_protocol() {
+        let mut p = platform();
+        // read/stop before start: a typed protocol failure
+        let err =
+            exec(&mut p, Json::obj(vec![("cmd", Json::from("profile.read"))])).unwrap_err();
+        assert!(format!("{err:#}").contains("not enabled"), "{err:#}");
+        assert_eq!(err.downcast_ref::<ProtoError>().map(|e| e.kind), Some(ErrorKind::BadParam));
+
+        p.dbg.load_source("_start: li a0, 5\nli a1, 7\nadd a2, a0, a1\nebreak").unwrap();
+        let started =
+            exec(&mut p, Json::obj(vec![("cmd", Json::from("profile.start"))])).unwrap();
+        assert!(started.get("enabled").unwrap().as_bool().unwrap());
+        exec(&mut p, Json::obj(vec![("cmd", Json::from("run"))])).unwrap();
+
+        let read = exec(&mut p, Json::obj(vec![("cmd", Json::from("profile.read"))])).unwrap();
+        assert_eq!(read.get("retired").unwrap().as_i64().unwrap(), 4);
+        let funcs = read.get("functions").unwrap().as_arr().unwrap();
+        assert!(!funcs.is_empty());
+        let flat_sum: i64 =
+            funcs.iter().map(|f| f.get("flat_cycles").unwrap().as_i64().unwrap()).sum();
+        assert_eq!(
+            flat_sum,
+            read.get("attributed_cycles").unwrap().as_i64().unwrap(),
+            "per-function cycles must conserve"
+        );
+
+        // the folded form carries stack lines with cycle counts
+        let folded = exec(
+            &mut p,
+            Json::obj(vec![
+                ("cmd", Json::from("profile.read")),
+                ("format", Json::from("folded")),
+            ]),
+        )
+        .unwrap();
+        assert!(folded.str_field("folded").unwrap().contains(' '));
+
+        let stop = exec(&mut p, Json::obj(vec![("cmd", Json::from("profile.stop"))])).unwrap();
+        assert_eq!(stop.get("retired").unwrap().as_i64().unwrap(), 4);
+        assert!(p.dbg.soc.profiler().is_none(), "stop must disarm the profiler");
+
+        // bad formats and models are typed protocol errors
+        for req in [
+            Json::obj(vec![
+                ("cmd", Json::from("profile.read")),
+                ("format", Json::from("xml")),
+            ]),
+            Json::obj(vec![
+                ("cmd", Json::from("profile.read")),
+                ("model", Json::from("coal")),
+            ]),
+        ] {
+            let err = exec(&mut p, req).unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<ProtoError>().map(|e| e.kind),
+                Some(ErrorKind::BadParam)
+            );
+        }
     }
 
     #[test]

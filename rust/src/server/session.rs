@@ -12,12 +12,13 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, TryLockError};
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::PlatformConfig;
 use crate::coordinator::Platform;
+use crate::metrics::Counter;
 use crate::util::Json;
 
 /// The id of the default session (the platform `Server::spawn` received).
@@ -48,7 +49,12 @@ pub struct Session {
     /// long `run` in flight observes it at its next slice boundary and
     /// returns with exit `"interrupted"`.
     cancel: AtomicBool,
+    created: Instant,
     last_used: Mutex<Instant>,
+    /// Wall-clock timestamp (unix ms) of the last command on this
+    /// session; 0 until the first command. `session.list` reports it so
+    /// operators can correlate sessions with external logs.
+    last_cmd_unix_ms: AtomicU64,
 }
 
 impl Session {
@@ -58,7 +64,9 @@ impl Session {
             config_label,
             platform: Mutex::new(platform),
             cancel: AtomicBool::new(false),
+            created: Instant::now(),
             last_used: Mutex::new(Instant::now()),
+            last_cmd_unix_ms: AtomicU64::new(0),
         }
     }
 
@@ -99,11 +107,34 @@ impl Session {
 
     fn touch(&self) {
         *self.last_used.lock().unwrap_or_else(|p| p.into_inner()) = Instant::now();
+        let unix_ms = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        self.last_cmd_unix_ms.store(unix_ms, Ordering::Relaxed);
     }
 
     fn idle_for(&self) -> Duration {
         self.last_used.lock().unwrap_or_else(|p| p.into_inner()).elapsed()
     }
+
+    pub fn uptime(&self) -> Duration {
+        self.created.elapsed()
+    }
+}
+
+/// Lifecycle counters for the [`SessionTable`], exposed through the
+/// server's `metrics` command. Monotonic over the server's lifetime.
+#[derive(Debug, Default)]
+pub struct SessionStats {
+    /// Sessions opened (excluding the default session 0).
+    pub opened: Counter,
+    /// Sessions closed by explicit `session.close`.
+    pub closed: Counter,
+    /// Sessions evicted by LRU pressure on `session.open`.
+    pub evicted: Counter,
+    /// Sessions dropped by the idle reaper.
+    pub reaped: Counter,
 }
 
 /// The live-session table: LRU-capped, idle-reaped.
@@ -113,6 +144,7 @@ pub struct SessionTable {
     idle_timeout: Duration,
     next_id: AtomicU64,
     sessions: Mutex<BTreeMap<u64, Arc<Session>>>,
+    stats: SessionStats,
 }
 
 impl SessionTable {
@@ -130,7 +162,13 @@ impl SessionTable {
             idle_timeout: idle_timeout.max(Duration::from_millis(1)),
             next_id: AtomicU64::new(1),
             sessions: Mutex::new(map),
+            stats: SessionStats::default(),
         }
+    }
+
+    /// Lifecycle counters (opened / closed / evicted / reaped).
+    pub fn stats(&self) -> &SessionStats {
+        &self.stats
     }
 
     /// Open a new session. At capacity, the least-recently-used *idle*
@@ -138,7 +176,7 @@ impl SessionTable {
     /// is busy the open is refused — that is the backpressure signal.
     pub fn open(&self, platform: Platform, config_label: String) -> Result<Arc<Session>> {
         let mut map = self.lock_map();
-        Self::reap_locked(&mut map, self.idle_timeout);
+        Self::reap_locked(&mut map, self.idle_timeout, &self.stats);
         if map.len() >= self.max_sessions {
             let lru = map
                 .values()
@@ -149,6 +187,7 @@ impl SessionTable {
                 Some(id) => {
                     if let Some(evicted) = map.remove(&id) {
                         evicted.cancel();
+                        self.stats.evicted.inc();
                     }
                 }
                 None => bail!(
@@ -162,6 +201,7 @@ impl SessionTable {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let session = Arc::new(Session::new(id, config_label, platform));
         map.insert(id, session.clone());
+        self.stats.opened.inc();
         Ok(session)
     }
 
@@ -187,6 +227,7 @@ impl SessionTable {
         match self.lock_map().remove(&id) {
             Some(s) => {
                 s.cancel();
+                self.stats.closed.inc();
                 Ok(())
             }
             None => bail!("unknown session {id}"),
@@ -198,14 +239,15 @@ impl SessionTable {
     /// and on every `open`.
     pub fn reap_idle(&self) {
         let mut map = self.lock_map();
-        Self::reap_locked(&mut map, self.idle_timeout);
+        Self::reap_locked(&mut map, self.idle_timeout, &self.stats);
     }
 
-    fn reap_locked(map: &mut BTreeMap<u64, Arc<Session>>, timeout: Duration) {
+    fn reap_locked(map: &mut BTreeMap<u64, Arc<Session>>, timeout: Duration, stats: &SessionStats) {
         map.retain(|&id, s| {
             let keep = id == DEFAULT_SESSION || s.busy() || s.idle_for() < timeout;
             if !keep {
                 s.cancel();
+                stats.reaped.inc();
             }
             keep
         });
@@ -219,17 +261,41 @@ impl SessionTable {
         self.len() == 0
     }
 
-    /// Protocol view of the table (for `session.list`).
+    /// Protocol view of the table (for `session.list`). Guest-state
+    /// fields (backend, instret, cycles) come from a non-blocking peek at
+    /// each platform and are omitted for a busy session — `session.list`
+    /// must never queue behind a long `run`.
     pub fn describe(&self) -> Json {
         Json::Arr(
             self.lock_map()
                 .values()
                 .map(|s| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("session", Json::from(s.id() as i64)),
                         ("config", Json::from(s.config_label())),
-                        ("busy", Json::from(s.busy())),
-                    ])
+                        ("uptime_s", Json::from(s.uptime().as_secs() as i64)),
+                        ("idle_s", Json::from(s.idle_for().as_secs() as i64)),
+                        (
+                            "last_command_unix_ms",
+                            Json::from(s.last_cmd_unix_ms.load(Ordering::Relaxed) as i64),
+                        ),
+                    ];
+                    match s.platform.try_lock() {
+                        Ok(p) => {
+                            fields.push(("busy", Json::from(false)));
+                            fields.push((
+                                "backend",
+                                Json::from(p.dbg.soc.backend_kind().name()),
+                            ));
+                            fields.push((
+                                "instret",
+                                Json::from(p.dbg.soc.stats.instructions as i64),
+                            ));
+                            fields.push(("cycles", Json::from(p.dbg.soc.now as i64)));
+                        }
+                        Err(_) => fields.push(("busy", Json::from(true))),
+                    }
+                    Json::obj(fields)
                 })
                 .collect(),
         )
@@ -371,6 +437,46 @@ mod tests {
         t.reap_idle();
         assert!(t.get(id).is_err(), "idle session must be reaped");
         assert!(t.get(DEFAULT_SESSION).is_ok());
+    }
+
+    #[test]
+    fn describe_reports_uptime_backend_and_instret() {
+        let t = table(4, 60_000);
+        let id = open(&t);
+        t.get(id).unwrap(); // touch: stamps last_command_unix_ms
+        let listed = t.describe();
+        let arr = listed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        for entry in arr {
+            assert!(entry.opt("uptime_s").is_some());
+            assert!(entry.opt("idle_s").is_some());
+            assert!(!entry.get("busy").unwrap().as_bool().unwrap());
+            // idle sessions expose guest state
+            assert_eq!(entry.str_field("backend").unwrap(), "interp");
+            assert_eq!(entry.get("instret").unwrap().as_i64().unwrap(), 0);
+        }
+        let touched = arr
+            .iter()
+            .find(|e| e.get("session").unwrap().as_i64().unwrap() == id as i64)
+            .unwrap();
+        assert!(touched.get("last_command_unix_ms").unwrap().as_i64().unwrap() > 0);
+    }
+
+    #[test]
+    fn lifecycle_counters_track_open_close_evict_reap() {
+        let t = table(2, 20);
+        let a = open(&t);
+        t.close(a).unwrap();
+        let _b = open(&t);
+        std::thread::sleep(Duration::from_millis(5));
+        let _c = open(&t); // at capacity: evicts b (idle LRU)
+        std::thread::sleep(Duration::from_millis(60));
+        t.reap_idle(); // c idles out
+        let s = t.stats();
+        assert_eq!(s.opened.get(), 3);
+        assert_eq!(s.closed.get(), 1);
+        assert_eq!(s.evicted.get(), 1);
+        assert_eq!(s.reaped.get(), 1);
     }
 
     #[test]

@@ -64,6 +64,10 @@ pub struct SocConfig {
     /// Event tracing ([`crate::trace`]). The default mask is 0: no ring
     /// is even allocated, so untraced runs pay nothing.
     pub trace: crate::trace::TraceConfig,
+    /// Arm the guest profiler ([`crate::profile`]) at construction.
+    /// Default off: no buckets are allocated and both backends pay a
+    /// single never-taken branch per instruction.
+    pub profile: bool,
 }
 
 impl Default for SocConfig {
@@ -77,6 +81,7 @@ impl Default for SocConfig {
             freq_hz: 20_000_000,
             backend: BackendKind::Interp,
             trace: crate::trace::TraceConfig::default(),
+            profile: false,
         }
     }
 }
@@ -134,6 +139,9 @@ impl Soc {
         if cfg.trace.mask != 0 {
             soc.set_trace(cfg.trace);
         }
+        if cfg.profile {
+            soc.set_profile();
+        }
         soc
     }
 
@@ -183,6 +191,7 @@ impl Soc {
             b.restore_hook();
         }
         self.reset_trace();
+        self.reset_profile();
         Ok(())
     }
 
@@ -230,6 +239,47 @@ impl Soc {
     /// the final totals this way).
     pub fn take_trace(&mut self) -> Option<Box<crate::trace::TraceRing>> {
         self.bus.trace.take()
+    }
+
+    // ---- guest profiling ------------------------------------------------
+
+    /// Install (or re-arm) the guest profiler (DESIGN.md §14): dense
+    /// pc buckets over the SRAM span, with the capture window opening
+    /// at the current cycle/pc/perf-counter state.
+    pub fn set_profile(&mut self) {
+        let span = self.bus.banks.len() as u32 * self.bus.bank_size;
+        let baseline = self.perf.snapshot(self.now);
+        self.bus.profile =
+            Some(Box::new(crate::profile::Profiler::new(span, self.now, self.cpu.pc, baseline)));
+    }
+
+    /// The installed profiler, if any.
+    pub fn profiler(&self) -> Option<&crate::profile::Profiler> {
+        self.bus.profile.as_deref()
+    }
+
+    pub fn profiler_mut(&mut self) -> Option<&mut crate::profile::Profiler> {
+        self.bus.profile.as_deref_mut()
+    }
+
+    /// Remove the profiler and return it (server `profile.stop` takes
+    /// the final totals this way).
+    pub fn take_profile(&mut self) -> Option<Box<crate::profile::Profiler>> {
+        self.bus.profile.take()
+    }
+
+    /// Drop recorded profile history and reopen the window at the
+    /// current cycle/pc with a fresh perf baseline — profile state is
+    /// derived, like the trace ring: it never survives a program load
+    /// or snapshot restore (no phantom samples).
+    fn reset_profile(&mut self) {
+        if self.bus.profile.is_some() {
+            let baseline = self.perf.snapshot(self.now);
+            let (now, pc) = (self.now, self.cpu.pc);
+            if let Some(p) = self.bus.profile.as_deref_mut() {
+                p.reset(now, pc, baseline);
+            }
+        }
     }
 
     /// Combined IRQ-line word in `mip` bit layout (bit 7 = machine
@@ -575,9 +625,12 @@ impl Soc {
         if let Some(b) = &mut self.backend {
             b.restore_hook();
         }
-        // the ring is derived state: never part of the payload, always
-        // reset so a restored platform starts with a clean capture
+        // the ring and the profiler are derived state: never part of
+        // the payload, always reset so a restored platform starts with
+        // a clean capture (and a perf baseline matching the restored
+        // counters — no phantom samples, no phantom energy)
         self.reset_trace();
+        self.reset_profile();
         Ok(())
     }
 }

@@ -1,0 +1,236 @@
+//! Guest profiler + control-plane metrics integration tests
+//! (DESIGN.md §14): cross-backend bit-identity of pc histograms, the
+//! cycle/instruction/energy conservation contract of folded reports,
+//! derived-state behavior across snapshot restore, and the histogram
+//! percentile math the server metrics are built on.
+
+use femu::analyze::{analyze_program, AnalyzeConfig};
+use femu::config::PlatformConfig;
+use femu::coordinator::{AppExit, Platform};
+use femu::exec::BackendKind;
+use femu::profile::{build_report, ProfileReport};
+
+/// Run `src` with the profiler armed on `backend`; returns the halted
+/// platform.
+fn run_profiled(backend: BackendKind, src: &str) -> Platform {
+    let mut cfg = PlatformConfig::default();
+    cfg.soc.backend = backend;
+    cfg.soc.profile = true;
+    let mut p = Platform::new(cfg);
+    p.dbg.load_source(src).unwrap();
+    let exit = p.run_app(1 << 30).unwrap();
+    assert!(matches!(exit, AppExit::Halted(_)), "guest did not halt: {exit:?}");
+    p
+}
+
+/// Fold the platform's capture through the analyzer's symbols — the
+/// same path `femu profile` takes.
+fn report_of(p: &Platform, src: &str, name: &str) -> ProfileReport {
+    let prog = femu::isa::assemble(src).unwrap();
+    let acfg = AnalyzeConfig::from_platform(&p.cfg);
+    let table = analyze_program(&prog, name, &acfg).function_table();
+    let soc = &p.dbg.soc;
+    let prof = soc.profiler().unwrap();
+    let perf_now = soc.perf.snapshot(soc.now);
+    build_report(prof, soc.now, &perf_now, &table, &p.cfg.energy, soc.backend_kind().name())
+}
+
+/// A self-modifying guest: the loop patches its own body (the store
+/// invalidates any compiled block), so the blocks backend must fall
+/// back and still produce the interpreter's exact capture.
+const SMC_SRC: &str = r#"
+    _start:
+        li t0, 3
+        la t1, target
+        li t3, 0x00250513    # addi a0, a0, 2
+    loop:
+        sw t3, 0(t1)
+    target:
+        addi a0, a0, 1       # rewritten to +2 by the first store
+        addi t0, t0, -1
+        bnez t0, loop
+        ebreak
+"#;
+
+#[test]
+fn interp_and_blocks_profiles_are_bit_identical() {
+    for src in [femu::workloads::builtin("mm_cpu").unwrap(), SMC_SRC.to_string()] {
+        let a = run_profiled(BackendKind::Interp, &src);
+        let b = run_profiled(BackendKind::Blocks, &src);
+        let c = run_profiled(BackendKind::Interp, &src);
+        let digest = |p: &Platform| {
+            let prof = p.dbg.soc.profiler().unwrap();
+            (prof.digest(), prof.attributed_cycles(), prof.retired(), prof.records())
+        };
+        assert_eq!(digest(&a), digest(&b), "backends produced different captures");
+        assert_eq!(digest(&a), digest(&c), "repeat run produced a different capture");
+    }
+}
+
+#[test]
+fn attribution_conserves_cycles_instructions_and_energy() {
+    let src = femu::workloads::builtin("mm_cpu").unwrap();
+    let p = run_profiled(BackendKind::Interp, &src);
+    let rep = report_of(&p, &src, "mm_cpu");
+    let soc = &p.dbg.soc;
+
+    // the window is exactly the perf monitor's delta over the same span
+    let prof = soc.profiler().unwrap();
+    let delta = soc.perf.snapshot(soc.now).delta(prof.baseline());
+    assert_eq!(rep.window_cycles, delta.cycles);
+    assert_eq!(rep.attributed_cycles + rep.idle_cycles, rep.window_cycles);
+
+    // every attributed cycle and retire lands in exactly one function
+    let flat: u64 = rep.functions.iter().map(|f| f.flat_cycles).sum();
+    assert_eq!(flat, rep.attributed_cycles);
+    let instret: u64 = rep.functions.iter().map(|f| f.flat_instret).sum();
+    assert_eq!(instret, rep.retired);
+    assert_eq!(rep.retired, soc.stats.instructions, "profiler missed retires");
+
+    // energy conserves: function shares + [idle] == the model's total
+    // for the same window, to float round-off
+    let mj: f64 = rep.functions.iter().map(|f| f.flat_mj).sum::<f64>() + rep.idle_mj;
+    assert!((mj - rep.total_mj).abs() <= 1e-9 * rep.total_mj.max(1.0), "{mj} != {}", rep.total_mj);
+    let est = p.cfg.energy.estimate(&delta);
+    assert!((rep.total_mj - est.total_mj).abs() < 1e-12);
+}
+
+#[test]
+fn sleep_fast_forward_lands_in_idle() {
+    // WFI until a timer at cycle 20000: the fast-forwarded cycles never
+    // hit a retire hook, so they must come out as [idle], and the
+    // conservation identity must still hold exactly
+    const SRC: &str = r#"
+        .equ TIMER, 0x20000200
+        _start:
+            la t0, handler
+            csrw mtvec, t0
+            li t0, TIMER
+            li t1, 20000
+            sw t1, 8(t0)
+            sw zero, 12(t0)
+            li t1, 1
+            sw t1, 16(t0)
+            li t1, 0x80
+            csrw mie, t1
+            csrsi mstatus, 8
+            wfi
+            ebreak
+        handler:
+            ebreak
+    "#;
+    let p = run_profiled(BackendKind::Interp, SRC);
+    let rep = report_of(&p, SRC, "wfi");
+    assert!(rep.idle_cycles > 0, "sleep fast-forward recorded no idle cycles");
+    assert_eq!(rep.attributed_cycles + rep.idle_cycles, rep.window_cycles);
+    assert!(rep.idle_mj > 0.0, "sleeping must still cost retention/gated power");
+}
+
+#[test]
+fn restore_resets_the_profile_without_phantom_samples() {
+    const SRC: &str = "_start: li t0, 5000\nloop: addi t0, t0, -1\nbnez t0, loop\nebreak";
+    let mut cfg = PlatformConfig::default();
+    cfg.soc.profile = true;
+    let mut p = Platform::new(cfg.clone());
+    p.dbg.load_source(SRC).unwrap();
+    let exit = p.run_app(1000).unwrap();
+    assert!(matches!(exit, AppExit::Budget), "{exit:?}");
+    assert!(p.dbg.soc.profiler().unwrap().records() > 0, "nothing recorded before snapshot");
+    let snap = p.snapshot();
+
+    // profiles are derived state: an armed and an unarmed platform at
+    // the same architectural point snapshot to identical bytes
+    let mut cfg_off = cfg.clone();
+    cfg_off.soc.profile = false;
+    let mut q = Platform::new(cfg_off);
+    q.dbg.load_source(SRC).unwrap();
+    q.run_app(1000).unwrap();
+    let dir = std::env::temp_dir();
+    let pa = dir.join(format!("femu_prof_a_{}.femusnap", std::process::id()));
+    let pb = dir.join(format!("femu_prof_b_{}.femusnap", std::process::id()));
+    snap.save(&pa).unwrap();
+    q.snapshot().save(&pb).unwrap();
+    let (ba, bb) = (std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+    assert_eq!(ba, bb, "an armed profiler leaked into the snapshot");
+
+    // restoring into an armed platform reopens an empty window at the
+    // restored clock — no samples from before the boundary survive
+    let mut r = Platform::new(cfg);
+    r.restore(&snap).unwrap();
+    let restored_at = r.dbg.soc.now;
+    let prof = r.dbg.soc.profiler().expect("profiling stays armed across restore");
+    assert_eq!(prof.records(), 0, "phantom samples survived the restore");
+    assert_eq!(prof.start_cycle(), restored_at);
+    let exit = r.run_app(1 << 24).unwrap();
+    assert!(matches!(exit, AppExit::Halted(_)), "{exit:?}");
+    let prof = r.dbg.soc.profiler().unwrap();
+    assert_eq!(
+        prof.attributed_cycles(),
+        r.dbg.soc.now - restored_at,
+        "the restored window must cover exactly the post-restore cycles"
+    );
+}
+
+#[test]
+fn profile_and_analyze_share_symbol_names() {
+    // the satellite contract: profile JSON function names are drawn
+    // from the same symbol scheme as `femu analyze --json`
+    let src = femu::workloads::builtin("mm_cpu").unwrap();
+    let prog = femu::isa::assemble(&src).unwrap();
+    let p = run_profiled(BackendKind::Interp, &src);
+    let acfg = AnalyzeConfig::from_platform(&p.cfg);
+    let analyze_json = analyze_program(&prog, "mm_cpu", &acfg).to_json().to_string();
+    let rep = report_of(&p, &src, "mm_cpu");
+    assert!(!rep.functions.is_empty());
+    for f in &rep.functions {
+        if f.name == femu::profile::UNKNOWN_NAME {
+            continue;
+        }
+        assert!(
+            analyze_json.contains(&format!("\"{}\"", f.name)),
+            "profile function `{}` is not an analyzer symbol",
+            f.name
+        );
+    }
+}
+
+#[test]
+fn histogram_percentiles_and_counters() {
+    use femu::metrics::{Counter, Gauge, Histogram, LATENCY_BOUNDS_US};
+
+    let c = Counter::new();
+    c.inc();
+    c.add(4);
+    assert_eq!(c.get(), 5);
+    let g = Gauge::new();
+    g.add(3);
+    g.add(-5);
+    assert_eq!(g.get(), -2);
+    g.set(7);
+    assert_eq!(g.get(), 7);
+
+    // 100 observations 1..=100 µs: every one lands in the 100 µs bucket
+    // or below, so p50/p90/p99 all report bucket upper bounds that
+    // bracket the true values
+    let h = Histogram::new(LATENCY_BOUNDS_US);
+    for v in 1..=100u64 {
+        h.observe(v);
+    }
+    assert_eq!(h.count(), 100);
+    assert_eq!(h.sum(), 5050);
+    assert!((h.mean() - 50.5).abs() < 1e-9);
+    let p50 = h.percentile(0.50);
+    let p90 = h.percentile(0.90);
+    let p99 = h.percentile(0.99);
+    assert!((50..=100).contains(&p50), "p50 bucket bound {p50}");
+    assert!(p90 >= 90, "p90 bucket bound {p90}");
+    assert!(p99 >= p90 && p50 <= p90, "percentiles must be monotone");
+
+    // overflow observations clamp to the last finite bound
+    let h = Histogram::new(LATENCY_BOUNDS_US);
+    h.observe(u64::MAX);
+    assert_eq!(h.count(), 1);
+    assert_eq!(h.percentile(0.99), *LATENCY_BOUNDS_US.last().unwrap());
+}
