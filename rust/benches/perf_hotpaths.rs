@@ -277,6 +277,34 @@ fn main() {
         results.push(harness::json_result("sleep_fast_forward", secs));
     }
 
+    harness::header("Fault-injection campaign throughput");
+    {
+        // the restore-inject-classify hot loop (DESIGN.md §15). The
+        // committed `faults_points_per_sec` metric is SECONDS PER POINT
+        // (the harness gates on wall time, lower = better) despite the
+        // rate-shaped name; the BENCH_baseline.json ceiling keeps
+        // campaign throughput within the gate tolerance of baseline.
+        use femu::config::PlatformConfig;
+        use femu::coordinator::Fleet;
+        use femu::faults::{run_campaign, CampaignSpec};
+        let mut spec = CampaignSpec::new("acquisition").unwrap();
+        spec.points = 32;
+        spec.seed = 0xBE7C;
+        let cfg = PlatformConfig::default();
+        let (report, secs) = harness::time_best(harness::reps(3), || {
+            run_campaign(&cfg, Fleet::serial(), &spec).unwrap()
+        });
+        assert_eq!(report.results.len(), spec.points);
+        println!(
+            "campaign: {} points in {}s -> {} points/s ({} s/point)",
+            spec.points,
+            harness::eng(secs),
+            harness::eng(spec.points as f64 / secs),
+            harness::eng(secs / spec.points as f64),
+        );
+        results.push(harness::json_result("faults_points_per_sec", secs / spec.points as f64));
+    }
+
     harness::header("CGRA emulator throughput");
     {
         use femu::cgra::{kernels, CgraCore};

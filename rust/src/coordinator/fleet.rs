@@ -432,6 +432,15 @@ mod tests {
     }
 
     #[test]
+    fn point_seed_constants_are_frozen() {
+        // splitmix64 reference vectors: stored fault-campaign results
+        // ([`crate::faults`]) replay only if the per-point seed stream
+        // never changes, so the mix function is pinned to known outputs
+        assert_eq!(point_seed(0, 0), 0);
+        assert_eq!(point_seed(0, 1), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
     fn run_sweep_preserves_serial_order() {
         let cfg = PlatformConfig::default();
         // batches of varying length, tagged by (index, seed)

@@ -180,17 +180,20 @@ impl Platform {
             || info.flash_size != soc.flash_size as u64
             || info.freq_hz != soc.freq_hz
         {
-            bail!(
-                "snapshot shape mismatch: snapshot `{}` has {} banks x {:#x} B, \
+            return Err(crate::snapshot::snap_err(
+                crate::snapshot::SnapErrorKind::ShapeMismatch,
+                format!(
+                    "snapshot shape mismatch: snapshot `{}` has {} banks x {:#x} B, \
                  {} B CS DRAM, {} B flash at {} Hz; platform `{}` differs",
-                info.name,
-                info.num_banks,
-                info.bank_size,
-                info.cs_dram_size,
-                info.flash_size,
-                info.freq_hz,
-                self.cfg.name,
-            );
+                    info.name,
+                    info.num_banks,
+                    info.bank_size,
+                    info.cs_dram_size,
+                    info.flash_size,
+                    info.freq_hz,
+                    self.cfg.name,
+                ),
+            ));
         }
         self.dbg.restore_state(&mut r)?;
         self.adc = if r.bool()? { Some(AdcService::from_state(&mut r)?) } else { None };

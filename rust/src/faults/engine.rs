@@ -1,0 +1,682 @@
+//! Campaign engine: golden-run capture, deterministic fault sampling,
+//! injection, the slice-based watchdog, and the outcome classifier.
+//!
+//! Determinism is the load-bearing property. A point's fault is fully
+//! derived from `point_seed(campaign_seed, index)` **before** the point
+//! executes, every point starts from the bit-identical golden snapshot,
+//! and both execution backends are cycle-exact — so the outcome table
+//! is a pure function of (spec, platform config) and bit-identical for
+//! any worker count and for interp vs blocks
+//! (`tests/fault_campaign.rs` holds the line).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::PlatformConfig;
+use crate::coordinator::{AppExit, Fleet, Platform};
+use crate::cpu::Halt;
+use crate::isa::Program;
+use crate::snapshot::PlatformSnapshot;
+use crate::workloads;
+
+use super::fnv1a64;
+use super::report::{CampaignReport, PointResult};
+use super::spec::{CampaignSpec, FaultModel, TargetSpace};
+use super::Outcome;
+
+/// Watchdog slice: a faulted run's budget is spent in slices this size
+/// so a wedged guest is bounded without giving up run-loop service
+/// hand-offs (ADC refills keep working under the watchdog).
+pub const WATCHDOG_SLICE: u64 = 2_000_000;
+
+/// Cycle budget for the golden run — generous; a builtin that cannot
+/// finish under it is a staging bug, not a campaign outcome.
+pub const GOLDEN_BUDGET: u64 = 1 << 33;
+
+/// Fixed watchdog slack on top of the scaled golden remainder, so
+/// near-end injections still get a meaningful grace window.
+const WATCHDOG_SLACK: u64 = 100_000;
+
+/// What the fault-free run did — the oracle every faulted run is
+/// diffed against.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GoldenRecord {
+    /// Cycle the golden snapshot was taken at (boot + staging done).
+    pub warm_cycle: u64,
+    /// Cycle the golden run halted at.
+    pub end_cycle: u64,
+    /// Instructions retired at halt (absolute counter).
+    pub instret: u64,
+    /// Instructions recorded by the retire trace (counted from warm).
+    pub retire_count: u64,
+    /// FNV-1a digest of the retired-pc stream (from warm).
+    pub retire_hash: u64,
+    /// FNV-1a digest of the workload's output buffers plus the UART
+    /// stream at halt.
+    pub output_digest: u64,
+}
+
+/// One fully-specified injection, derived from the point seed before
+/// execution. `addr` is a byte address for SRAM/flash targets, a
+/// register index (1..=31) for the register file, and a CSR slot
+/// (0..8) for CSRs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPoint {
+    pub target: TargetSpace,
+    pub model: FaultModel,
+    pub addr: u32,
+    pub bit: u8,
+    pub inject_cycle: u64,
+}
+
+/// The address spans faults are sampled from, fixed per campaign from
+/// the staged program and the platform config.
+#[derive(Clone, Copy, Debug)]
+pub struct TargetGeometry {
+    /// Text segment: `[code_base, code_base + code_len)`.
+    pub code_base: u32,
+    pub code_len: u32,
+    /// Data segment: `[data_base, data_base + data_len)`.
+    pub data_base: u32,
+    pub data_len: u32,
+    /// SPI flash contents: `[0, flash_len)`.
+    pub flash_len: u32,
+}
+
+impl TargetGeometry {
+    pub fn new(prog: &Program, cfg: &PlatformConfig) -> TargetGeometry {
+        TargetGeometry {
+            code_base: prog.text_base,
+            code_len: (prog.text.len() * 4) as u32,
+            data_base: prog.data_base,
+            data_len: prog.data.len() as u32,
+            flash_len: cfg.soc.flash_size as u32,
+        }
+    }
+}
+
+/// One splitmix64 draw; the same finalizer as
+/// [`point_seed`](crate::coordinator::fleet::point_seed), advanced as a
+/// stream. Frozen: stored campaign results replay only if this never
+/// changes.
+fn mix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derive point `seed`'s fault: target space, model, word-aligned
+/// address (or register/CSR index), bit position, and injection cycle
+/// inside the spec's window of the golden run. Pure — no platform
+/// state is read, which is what makes the campaign's outcome table
+/// independent of scheduling.
+pub fn sample_fault(
+    spec: &CampaignSpec,
+    geom: &TargetGeometry,
+    golden: &GoldenRecord,
+    seed: u64,
+) -> FaultPoint {
+    let mut s = seed;
+    let target = spec.targets[(mix(&mut s) as usize) % spec.targets.len()];
+    let model = spec.models[(mix(&mut s) as usize) % spec.models.len()];
+    let word_in = |s: &mut u64, base: u32, len: u32| {
+        let words = (len / 4).max(1) as u64;
+        base + ((mix(s) % words) as u32) * 4
+    };
+    let addr = match target {
+        TargetSpace::SramData => word_in(&mut s, geom.data_base, geom.data_len),
+        TargetSpace::SramCode => word_in(&mut s, geom.code_base, geom.code_len),
+        TargetSpace::RegFile => 1 + (mix(&mut s) % 31) as u32,
+        TargetSpace::Csr => (mix(&mut s) % 8) as u32,
+        TargetSpace::Flash => word_in(&mut s, 0, geom.flash_len),
+    };
+    let bit = (mix(&mut s) % 32) as u8;
+    let dur = golden.end_cycle.saturating_sub(golden.warm_cycle);
+    let lo = golden.warm_cycle + (dur as f64 * spec.window.0) as u64;
+    let hi = golden.warm_cycle + (dur as f64 * spec.window.1) as u64;
+    let span = hi.saturating_sub(lo).max(1);
+    let inject_cycle = lo + mix(&mut s) % span;
+    FaultPoint { target, model, addr, bit, inject_cycle }
+}
+
+/// Load builtin `name` and stage its input buffers with deterministic
+/// data (derived from the workload name, not the campaign seed — the
+/// staged image is part of the golden state, identical across
+/// campaigns). Returns the assembled program for symbol lookups.
+pub fn stage_workload(platform: &mut Platform, name: &str) -> Result<Program> {
+    let src = workloads::builtin(name)
+        .ok_or_else(|| anyhow!("unknown builtin workload `{name}`"))?;
+    let prog = platform.dbg.load_source(&src)?;
+    let mut s = fnv1a64(name.as_bytes());
+    let mut fill = |platform: &mut Platform, sym: &str, words: usize| -> Result<()> {
+        let addr = prog.symbol(sym)?;
+        let vals: Vec<i32> =
+            (0..words).map(|_| ((mix(&mut s) & 0xFFFF) as i32) - 0x8000).collect();
+        platform.dbg.write_i32_slice(addr, &vals)
+    };
+    match name {
+        "acquisition" => platform.start_adc((0..100).collect(), 100_000.0),
+        "mm_cpu" | "mm_cgra" => {
+            fill(platform, "a_buf", 121 * 16)?;
+            fill(platform, "b_buf", 16 * 4)?;
+        }
+        "conv_cpu" | "conv_cgra" => {
+            fill(platform, "x_buf", 16 * 16 * 3)?;
+            fill(platform, "w_buf", 8 * 3 * 3 * 3)?;
+        }
+        "fft_cpu" | "fft_cgra" => {
+            fill(platform, "re_buf", 512)?;
+            fill(platform, "im_buf", 512)?;
+            fill(platform, "wr_tbl", 256)?;
+            fill(platform, "wi_tbl", 256)?;
+            // identity permutation: a valid bit-reversal table shape
+            // (indices in range, no swaps executed)
+            let rev: Vec<i32> = (0..512).collect();
+            platform.dbg.write_i32_slice(prog.symbol("rev_tbl")?, &rev)?;
+        }
+        other => bail!("workload `{other}` is not campaignable (needs host artifacts)"),
+    }
+    Ok(prog)
+}
+
+/// Arm the retire trace, snapshot the warmed platform, run the golden
+/// (fault-free) pass to completion, and record the oracle. `outputs`
+/// are resolved `(address, length_in_bytes)` output regions.
+pub fn golden_from(
+    platform: &mut Platform,
+    outputs: &[(u32, usize)],
+) -> Result<(PlatformSnapshot, GoldenRecord)> {
+    platform.dbg.soc.cpu.trace = Some(Box::default());
+    let warm_cycle = platform.dbg.soc.now;
+    let snap = platform.snapshot();
+    match platform.run_app(GOLDEN_BUDGET)? {
+        AppExit::Halted(Halt::Ebreak) => {}
+        other => bail!("golden run did not halt cleanly: {other:?}"),
+    }
+    let soc = &platform.dbg.soc;
+    let trace = soc.cpu.trace.as_ref().ok_or_else(|| anyhow!("retire trace disappeared"))?;
+    let golden = GoldenRecord {
+        warm_cycle,
+        end_cycle: soc.now,
+        instret: soc.cpu.instret,
+        retire_count: trace.count,
+        retire_hash: trace.hash,
+        output_digest: output_digest(platform, outputs),
+    };
+    Ok((snap, golden))
+}
+
+/// Digest the workload's output state: every word of every output
+/// region (via the side-effect-free debug port; unmapped/unpowered
+/// reads fold in as `0xFFFF_FFFF`) plus the accumulated UART stream
+/// (peeked, not drained — the digest is side-effect-free too).
+pub fn output_digest(platform: &Platform, outputs: &[(u32, usize)]) -> u64 {
+    let bus = &platform.dbg.soc.bus;
+    let mut bytes = Vec::new();
+    for &(addr, len) in outputs {
+        let mut off = 0u32;
+        while (off as usize) < len {
+            let word = bus.debug_read32(addr.wrapping_add(off)).unwrap_or(0xFFFF_FFFF);
+            bytes.extend_from_slice(&word.to_le_bytes());
+            off += 4;
+        }
+    }
+    bytes.extend_from_slice(bus.uart.peek());
+    fnv1a64(&bytes)
+}
+
+/// Apply `fault` to the platform's live state through the existing
+/// architectural surfaces. SRAM faults go through [`SramBank::load`]
+/// (`crate::mem`), which bumps the page write generations — exactly
+/// the path a guest store takes, so the blocks backend's
+/// self-modifying-code invalidation sees code faults and never runs a
+/// stale compiled block.
+pub fn inject(platform: &mut Platform, fault: FaultPoint) -> Result<()> {
+    match fault.target {
+        TargetSpace::SramData | TargetSpace::SramCode => {
+            let bus = &mut platform.dbg.soc.bus;
+            let idx = bus
+                .bank_index(fault.addr)
+                .ok_or_else(|| anyhow!("fault address {:#x} outside SRAM", fault.addr))?;
+            let off = bus.bank_offset(fault.addr);
+            let word = {
+                let b = bus.banks[idx]
+                    .dump(off, 4)
+                    .map_err(|e| anyhow!("reading fault word at {:#x}: {e:?}", fault.addr))?;
+                u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+            };
+            bus.banks[idx]
+                .load(off, &fault.model.apply(word, fault.bit).to_le_bytes())
+                .map_err(|e| anyhow!("writing fault word at {:#x}: {e:?}", fault.addr))?;
+        }
+        TargetSpace::Flash => {
+            let flash = &mut platform.dbg.soc.bus.spi_flash;
+            let word = {
+                let b = flash.dump(fault.addr as usize, 4);
+                let mut w = [0u8; 4];
+                let n = b.len().min(4);
+                w[..n].copy_from_slice(&b[..n]);
+                u32::from_le_bytes(w)
+            };
+            flash.load(fault.addr as usize, &fault.model.apply(word, fault.bit).to_le_bytes());
+        }
+        TargetSpace::RegFile => {
+            let idx = (fault.addr as usize % 32).max(1); // x0 is hardwired zero
+            let cpu = &mut platform.dbg.soc.cpu;
+            cpu.regs[idx] = fault.model.apply(cpu.regs[idx], fault.bit);
+        }
+        TargetSpace::Csr => {
+            let c = &mut platform.dbg.soc.cpu.csrs;
+            let reg = match fault.addr % 8 {
+                0 => &mut c.mstatus,
+                1 => &mut c.mie,
+                2 => &mut c.mip,
+                3 => &mut c.mtvec,
+                4 => &mut c.mscratch,
+                5 => &mut c.mepc,
+                6 => &mut c.mcause,
+                _ => &mut c.mtval,
+            };
+            *reg = fault.model.apply(*reg, fault.bit);
+        }
+    }
+    Ok(())
+}
+
+/// Run one injection point on a platform freshly restored from the
+/// golden snapshot: run to the injection cycle, inject, run under the
+/// watchdog, classify. Guest misbehavior (traps, wedged sleeps,
+/// watchdog expiry) is a *classification*, never an `Err` — only
+/// infrastructure failures (a fault address outside every surface)
+/// propagate and abort the sweep.
+pub fn run_point(
+    platform: &mut Platform,
+    golden: &GoldenRecord,
+    outputs: &[(u32, usize)],
+    watchdog_factor: u64,
+    index: usize,
+    fault: FaultPoint,
+) -> Result<PointResult> {
+    // snapshots never carry the retire trace -- re-arm after restore so
+    // faulted runs hash their pc stream from the same warm point the
+    // golden record did
+    platform.dbg.soc.cpu.trace = Some(Box::default());
+
+    let result = |platform: &Platform, outcome: Outcome| PointResult {
+        index,
+        target: fault.target,
+        model: fault.model,
+        addr: fault.addr,
+        bit: fault.bit,
+        inject_cycle: fault.inject_cycle,
+        outcome,
+        end_cycle: platform.dbg.soc.now,
+    };
+
+    // phase 1: fault-free run up to the injection cycle
+    let pre = fault.inject_cycle.saturating_sub(platform.dbg.soc.now);
+    if pre > 0 {
+        match platform.run_app(pre) {
+            Ok(AppExit::Budget) => {}
+            // deterministically unreachable (inject_cycle < golden end),
+            // but classify rather than abort if a surface drifts
+            Ok(AppExit::Halted(Halt::UnhandledTrap { .. })) => {
+                return Ok(result(platform, Outcome::Trap))
+            }
+            Ok(AppExit::Halted(Halt::Ebreak)) => {
+                return Ok(result(platform, classify_end(platform, golden, outputs)))
+            }
+            Err(_) => return Ok(result(platform, Outcome::Hang)),
+        }
+    }
+
+    inject(platform, fault)?;
+
+    // phase 2: run under the watchdog, in slices
+    let budget = golden
+        .end_cycle
+        .saturating_sub(fault.inject_cycle)
+        .saturating_mul(watchdog_factor)
+        .saturating_add(WATCHDOG_SLACK);
+    let mut remaining = budget;
+    let halt = loop {
+        if remaining == 0 {
+            break None; // watchdog expired
+        }
+        let slice = remaining.min(WATCHDOG_SLICE);
+        remaining -= slice;
+        match platform.run_app(slice) {
+            Ok(AppExit::Budget) => continue,
+            Ok(AppExit::Halted(h)) => break Some(Ok(h)),
+            Err(e) => break Some(Err(e)),
+        }
+    };
+
+    let outcome = match halt {
+        None => Outcome::Hang,
+        Some(Err(_)) => Outcome::Hang, // dead sleep / unserviceable hand-off
+        Some(Ok(Halt::UnhandledTrap { .. })) => Outcome::Trap,
+        Some(Ok(Halt::Ebreak)) => classify_end(platform, golden, outputs),
+    };
+    Ok(result(platform, outcome))
+}
+
+/// Classify a run that halted cleanly: output diff first (SDC), then
+/// timing/path diff (timing-divergent), else masked.
+fn classify_end(platform: &Platform, golden: &GoldenRecord, outputs: &[(u32, usize)]) -> Outcome {
+    if output_digest(platform, outputs) != golden.output_digest {
+        return Outcome::Sdc;
+    }
+    let soc = &platform.dbg.soc;
+    let trace_same = soc
+        .cpu
+        .trace
+        .as_ref()
+        .map(|t| t.count == golden.retire_count && t.hash == golden.retire_hash)
+        .unwrap_or(false);
+    if soc.now == golden.end_cycle && soc.cpu.instret == golden.instret && trace_same {
+        Outcome::Masked
+    } else {
+        Outcome::TimingDivergent
+    }
+}
+
+/// Run a full campaign: golden phase once, then every point through
+/// [`Fleet::run_sweep_forked`].
+pub fn run_campaign(cfg: &PlatformConfig, fleet: Fleet, spec: &CampaignSpec) -> Result<CampaignReport> {
+    run_campaign_cancellable(cfg, fleet, spec, &|| false)
+}
+
+/// [`run_campaign`] with a cancellation hook, polled once per point
+/// (the server's session-shutdown path).
+pub fn run_campaign_cancellable(
+    cfg: &PlatformConfig,
+    fleet: Fleet,
+    spec: &CampaignSpec,
+    cancelled: &(dyn Fn() -> bool + Sync),
+) -> Result<CampaignReport> {
+    spec.validate()?;
+
+    // golden phase: boot + stage once, capture snapshot and oracle
+    let mut warm = Platform::new(cfg.clone());
+    let prog = stage_workload(&mut warm, &spec.workload)?;
+    let outputs: Vec<(u32, usize)> = workloads::output_region(&spec.workload)
+        .ok_or_else(|| anyhow!("workload `{}` has no output region map", spec.workload))?
+        .into_iter()
+        .map(|(sym, len)| Ok((prog.symbol(sym)?, len)))
+        .collect::<Result<_>>()?;
+    let geom = TargetGeometry::new(&prog, cfg);
+    let (snap, golden) = golden_from(&mut warm, &outputs)?;
+    drop(warm);
+
+    let points: Vec<usize> = (0..spec.points).collect();
+    let results = fleet.run_sweep_forked(
+        cfg,
+        spec.seed,
+        points,
+        Some(&snap),
+        &|_| Ok(()),
+        |platform, index, seed| {
+            if cancelled() {
+                bail!("campaign interrupted");
+            }
+            let fault = sample_fault(spec, &geom, &golden, seed);
+            Ok(vec![run_point(platform, &golden, &outputs, spec.watchdog_factor, index, fault)?])
+        },
+    )?;
+
+    Ok(CampaignReport {
+        workload: spec.workload.clone(),
+        backend: cfg.soc.backend.name().to_string(),
+        points: spec.points,
+        seed: spec.seed,
+        golden,
+        results,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Stage `asm`, capture the golden record, then inject one explicit
+    /// fault at the warm cycle and return its classification.
+    fn classify_oracle(
+        asm: &str,
+        outputs_syms: &[(&str, usize)],
+        target: TargetSpace,
+        addr_of: &dyn Fn(&Program) -> u32,
+        bit: u8,
+    ) -> Outcome {
+        let cfg = PlatformConfig::default();
+        let mut p = Platform::new(cfg);
+        let prog = p.dbg.load_source(asm).unwrap();
+        let outputs: Vec<(u32, usize)> =
+            outputs_syms.iter().map(|&(s, l)| (prog.symbol(s).unwrap(), l)).collect();
+        let (snap, golden) = golden_from(&mut p, &outputs).unwrap();
+        p.restore(&snap).unwrap();
+        let fault = FaultPoint {
+            target,
+            model: FaultModel::BitFlip,
+            addr: addr_of(&prog),
+            bit,
+            inject_cycle: golden.warm_cycle,
+        };
+        let r = run_point(&mut p, &golden, &outputs, 4, 0, fault).unwrap();
+        assert_eq!(r.index, 0);
+        r.outcome
+    }
+
+    #[test]
+    fn oracle_masked_nop_region_flip() {
+        // flipping bit 7 of the 2nd nop turns `addi x0,x0,0` into
+        // `addi x1,x0,0` -- x1 is unused, outputs and timing unchanged
+        let asm = r#"
+            _start:
+                addi zero, zero, 0
+                addi zero, zero, 0
+                addi zero, zero, 0
+                addi zero, zero, 0
+                li t0, 42
+                la t1, dst
+                sw t0, 0(t1)
+                ebreak
+            .data
+            dst: .word 0
+        "#;
+        let got = classify_oracle(
+            asm,
+            &[("dst", 4)],
+            TargetSpace::SramCode,
+            &|prog| prog.text_base + 4,
+            7,
+        );
+        assert_eq!(got, Outcome::Masked);
+    }
+
+    #[test]
+    fn oracle_sdc_store_source_flip() {
+        // flip bit 0 of the source word: the copied value differs, the
+        // run is otherwise identical -- silent data corruption
+        let asm = r#"
+            _start:
+                la t0, src
+                lw t1, 0(t0)
+                la t2, dst
+                sw t1, 0(t2)
+                ebreak
+            .data
+            src: .word 0x1234
+            dst: .word 0
+        "#;
+        let got = classify_oracle(
+            asm,
+            &[("dst", 4)],
+            TargetSpace::SramData,
+            &|prog| prog.symbol("src").unwrap(),
+            0,
+        );
+        assert_eq!(got, Outcome::Sdc);
+    }
+
+    #[test]
+    fn oracle_trap_illegal_opcode_flip() {
+        // flipping opcode bit 0 makes the low bits `10` -- not a valid
+        // 32-bit encoding, the core traps with mtvec unset and halts
+        let asm = r#"
+            _start:
+                li t0, 1
+                la t1, dst
+                sw t0, 0(t1)
+                ebreak
+            .data
+            dst: .word 0
+        "#;
+        let got = classify_oracle(
+            asm,
+            &[("dst", 4)],
+            TargetSpace::SramCode,
+            &|prog| prog.text_base,
+            0,
+        );
+        assert_eq!(got, Outcome::Trap);
+    }
+
+    #[test]
+    fn oracle_hang_branch_target_flip() {
+        // `j skip` encodes as 0x0080006F (jal x0, +8); flipping bit 23
+        // zeroes the offset -- `jal x0, 0`, a tight self-loop the
+        // watchdog has to catch
+        let asm = r#"
+            _start:
+                j skip
+                addi zero, zero, 0
+            skip:
+                la t0, dst
+                li t1, 7
+                sw t1, 0(t0)
+                ebreak
+            .data
+            dst: .word 0
+        "#;
+        let got = classify_oracle(
+            asm,
+            &[("dst", 4)],
+            TargetSpace::SramCode,
+            &|prog| prog.text_base,
+            23,
+        );
+        assert_eq!(got, Outcome::Hang);
+    }
+
+    #[test]
+    fn oracle_timing_divergent_loop_count_flip() {
+        // flip bit 2 of the loop count (32 -> 36): four extra
+        // iterations, same stored output -- different path, same answer
+        let asm = r#"
+            _start:
+                la t0, n
+                lw t1, 0(t0)
+            loop:
+                addi t1, t1, -1
+                bnez t1, loop
+                li t2, 5
+                la t3, dst
+                sw t2, 0(t3)
+                ebreak
+            .data
+            n: .word 32
+            dst: .word 0
+        "#;
+        let got = classify_oracle(
+            asm,
+            &[("dst", 4)],
+            TargetSpace::SramData,
+            &|prog| prog.symbol("n").unwrap(),
+            2,
+        );
+        assert_eq!(got, Outcome::TimingDivergent);
+    }
+
+    #[test]
+    fn sample_fault_is_deterministic_and_in_bounds() {
+        let spec = CampaignSpec::new("mm_cpu").unwrap();
+        let geom = TargetGeometry {
+            code_base: 0,
+            code_len: 0x400,
+            data_base: 0x1000,
+            data_len: 0x800,
+            flash_len: 0x10_0000,
+        };
+        let golden = GoldenRecord {
+            warm_cycle: 1_000,
+            end_cycle: 51_000,
+            instret: 40_000,
+            retire_count: 40_000,
+            retire_hash: 0xABCD,
+            output_digest: 0x1234,
+        };
+        for seed in 0..2_000u64 {
+            let a = sample_fault(&spec, &geom, &golden, seed);
+            let b = sample_fault(&spec, &geom, &golden, seed);
+            assert_eq!(a, b);
+            assert!(a.bit < 32);
+            assert!(
+                (golden.warm_cycle..golden.end_cycle).contains(&a.inject_cycle),
+                "{a:?} outside the golden window"
+            );
+            match a.target {
+                TargetSpace::SramData => {
+                    assert!(a.addr >= 0x1000 && a.addr < 0x1800 && a.addr % 4 == 0)
+                }
+                TargetSpace::SramCode => assert!(a.addr < 0x400 && a.addr % 4 == 0),
+                TargetSpace::RegFile => assert!((1..=31).contains(&a.addr)),
+                TargetSpace::Csr => assert!(a.addr < 8),
+                TargetSpace::Flash => assert!(a.addr < 0x10_0000 && a.addr % 4 == 0),
+            }
+        }
+    }
+
+    #[test]
+    fn stage_workload_covers_every_campaignable_builtin() {
+        for &name in workloads::BUILTIN_NAMES {
+            let campaignable =
+                workloads::output_region(name).map(|r| !r.is_empty()).unwrap_or(false);
+            let cfg = PlatformConfig::default();
+            let mut p = Platform::new(cfg);
+            let staged = stage_workload(&mut p, name);
+            assert_eq!(staged.is_ok(), campaignable, "{name}: {staged:?}");
+        }
+    }
+
+    #[test]
+    fn golden_record_is_reproducible() {
+        let cfg = PlatformConfig::default();
+        let mut a = Platform::new(cfg.clone());
+        let prog = stage_workload(&mut a, "mm_cpu").unwrap();
+        let outputs = vec![(prog.symbol("c_buf").unwrap(), 121 * 4 * 4)];
+        let (_, ga) = golden_from(&mut a, &outputs).unwrap();
+
+        let mut b = Platform::new(cfg);
+        stage_workload(&mut b, "mm_cpu").unwrap();
+        let (_, gb) = golden_from(&mut b, &outputs).unwrap();
+        assert_eq!(ga, gb);
+        assert!(ga.end_cycle > ga.warm_cycle);
+        assert!(ga.retire_count > 0);
+    }
+
+    #[test]
+    fn small_campaign_classifies_every_point() {
+        let cfg = PlatformConfig::default();
+        let mut spec = CampaignSpec::new("mm_cpu").unwrap();
+        spec.points = 16;
+        spec.seed = 11;
+        let report = run_campaign(&cfg, Fleet::serial(), &spec).unwrap();
+        assert_eq!(report.results.len(), 16);
+        for (i, r) in report.results.iter().enumerate() {
+            assert_eq!(r.index, i, "serial order preserved");
+        }
+        assert_eq!(report.class_counts().iter().sum::<usize>(), 16);
+    }
+}

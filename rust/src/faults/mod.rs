@@ -1,0 +1,134 @@
+//! Snapshot-powered fault-injection campaigns (DESIGN.md §15).
+//!
+//! HEEPocrates-class TinyAI deployments run firmware out of noisy,
+//! low-voltage SRAM where single-event upsets are a first-order design
+//! concern. This subsystem turns the emulator into a resilience
+//! evaluation platform: a campaign boots and warms a workload **once**,
+//! saves a golden snapshot plus a golden run record (exit kind, cycle
+//! count, retired-pc digest, output-memory digest), then fans N
+//! injection points out through
+//! [`Fleet::run_sweep_forked`](crate::coordinator::Fleet::run_sweep_forked).
+//! Every point restores the golden image, injects exactly one fault —
+//! fully derived from the campaign seed *before* execution, so the
+//! outcome table is bit-identical for any worker count and across the
+//! interp/blocks backends — runs under a slice-based watchdog, and is
+//! classified by diffing against the golden record.
+//!
+//! Module layout:
+//!
+//! * [`spec`] — the campaign specification (workload, target spaces,
+//!   fault models, injection window, point count/seed), parsed from
+//!   TOML (`femu faults run --campaign FILE`) or built from CLI flags;
+//! * [`engine`] — golden-run capture, deterministic fault sampling,
+//!   injection through the existing bus/snapshot surfaces, the
+//!   watchdog, and the outcome classifier;
+//! * [`report`] — per-target-region breakdown, the architectural
+//!   vulnerability factor (AVF) summary, and the text/JSON renderers
+//!   shared by `femu faults run|report` and the `faults.run` server
+//!   command (proto v7).
+
+pub mod engine;
+pub mod report;
+pub mod spec;
+
+use anyhow::{bail, Result};
+
+pub use engine::{
+    golden_from, inject, run_campaign, run_campaign_cancellable, run_point, sample_fault,
+    stage_workload, FaultPoint, GoldenRecord, TargetGeometry,
+};
+pub use report::{CampaignReport, PointResult};
+pub use spec::{CampaignSpec, FaultModel, TargetSpace};
+
+/// How a faulted run differs from the golden run. Classification is a
+/// strict priority order — trap, then hang, then output diff, then
+/// timing diff — so every run lands in exactly one class (there is no
+/// "unclassified" by construction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Outcome {
+    /// Completed; architectural outputs, cycle count, and retired-pc
+    /// stream all match the golden run.
+    Masked,
+    /// Completed without any trap, but the output memory region (or
+    /// UART stream) differs from the golden run — the dangerous class.
+    Sdc,
+    /// The core halted on an unhandled trap (illegal instruction, bus
+    /// error, misaligned access).
+    Trap,
+    /// The watchdog budget expired, or the guest wedged in a state that
+    /// cannot make progress (dead WFI sleep with no wake source, a
+    /// service request the harness cannot satisfy).
+    Hang,
+    /// Outputs match the golden run but the cycle count or retired-pc
+    /// stream differs — the run took a different path to the same
+    /// answer.
+    TimingDivergent,
+}
+
+impl Outcome {
+    /// Every class, in canonical report order.
+    pub const ALL: [Outcome; 5] =
+        [Outcome::Masked, Outcome::Sdc, Outcome::Trap, Outcome::Hang, Outcome::TimingDivergent];
+
+    /// Canonical (wire/JSON) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Masked => "masked",
+            Outcome::Sdc => "silent-data-corruption",
+            Outcome::Trap => "trap",
+            Outcome::Hang => "hang",
+            Outcome::TimingDivergent => "timing-divergent",
+        }
+    }
+
+    /// Index into [`Outcome::ALL`]-shaped count tables.
+    pub fn index(self) -> usize {
+        match self {
+            Outcome::Masked => 0,
+            Outcome::Sdc => 1,
+            Outcome::Trap => 2,
+            Outcome::Hang => 3,
+            Outcome::TimingDivergent => 4,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Outcome> {
+        for o in Outcome::ALL {
+            if o.name() == s {
+                return Ok(o);
+            }
+        }
+        bail!("unknown outcome class `{s}`");
+    }
+}
+
+/// FNV-1a 64-bit over a byte stream (same parameters as the snapshot
+/// and trace framing) — the output-memory digest of the golden record.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_names_roundtrip_and_index() {
+        for (i, o) in Outcome::ALL.into_iter().enumerate() {
+            assert_eq!(o.index(), i);
+            assert_eq!(Outcome::parse(o.name()).unwrap(), o);
+        }
+        assert!(Outcome::parse("melted").is_err());
+    }
+
+    #[test]
+    fn fnv_matches_reference_vector() {
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+    }
+}

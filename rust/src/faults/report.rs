@@ -1,0 +1,334 @@
+//! Campaign results: the per-point outcome table, class counts, the
+//! per-target-region breakdown, the AVF summary, and the text/JSON
+//! renderers shared by `femu faults run|report` and the `faults.run`
+//! server command.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::engine::GoldenRecord;
+use super::spec::{FaultModel, TargetSpace};
+use super::Outcome;
+
+/// One injection point's fault and classification. The full campaign
+/// result is the ordered `Vec<PointResult>` — bit-identical for any
+/// worker count and either execution backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PointResult {
+    pub index: usize,
+    pub target: TargetSpace,
+    pub model: FaultModel,
+    /// Byte address (SRAM/flash), register index (regfile), or CSR slot.
+    pub addr: u32,
+    pub bit: u8,
+    pub inject_cycle: u64,
+    pub outcome: Outcome,
+    /// Cycle the faulted run ended at (halt, trap, or watchdog stop).
+    pub end_cycle: u64,
+}
+
+/// A completed campaign: spec echo, golden oracle, and the outcome
+/// table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignReport {
+    pub workload: String,
+    /// Execution backend the campaign ran on (informational — the
+    /// outcome table is identical across backends).
+    pub backend: String,
+    pub points: usize,
+    pub seed: u64,
+    pub golden: GoldenRecord,
+    pub results: Vec<PointResult>,
+}
+
+impl CampaignReport {
+    /// Outcome counts, indexed by [`Outcome::index`].
+    pub fn class_counts(&self) -> [usize; 5] {
+        let mut counts = [0usize; 5];
+        for r in &self.results {
+            counts[r.outcome.index()] += 1;
+        }
+        counts
+    }
+
+    /// Per-target-region rows `(target, counts)` for every region that
+    /// received at least one injection, in canonical target order.
+    pub fn region_table(&self) -> Vec<(TargetSpace, [usize; 5])> {
+        let mut rows: Vec<(TargetSpace, [usize; 5])> = Vec::new();
+        for t in TargetSpace::ALL {
+            let mut counts = [0usize; 5];
+            for r in self.results.iter().filter(|r| r.target == t) {
+                counts[r.outcome.index()] += 1;
+            }
+            if counts.iter().sum::<usize>() > 0 {
+                rows.push((t, counts));
+            }
+        }
+        rows
+    }
+
+    /// Architectural vulnerability factor: the fraction of injections
+    /// that visibly perturbed the run (everything but masked).
+    pub fn avf(&self) -> f64 {
+        avf_of(&self.class_counts())
+    }
+
+    /// JSON encoding. 64-bit hashes and the seed are hex *strings* —
+    /// they do not survive an f64 round-trip as numbers.
+    pub fn to_json(&self) -> Json {
+        let counts = self.class_counts();
+        let classes = Json::obj(
+            Outcome::ALL
+                .iter()
+                .map(|o| (o.name(), Json::from(counts[o.index()] as i64)))
+                .collect(),
+        );
+        let regions = Json::Arr(
+            self.region_table()
+                .into_iter()
+                .map(|(t, counts)| {
+                    let mut fields = vec![
+                        ("target", Json::from(t.name())),
+                        ("points", Json::from(counts.iter().sum::<usize>() as i64)),
+                    ];
+                    for o in Outcome::ALL {
+                        fields.push((o.name(), Json::from(counts[o.index()] as i64)));
+                    }
+                    fields.push(("avf", Json::from(avf_of(&counts))));
+                    Json::obj(fields)
+                })
+                .collect(),
+        );
+        let results = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("index", Json::from(r.index as i64)),
+                        ("target", Json::from(r.target.name())),
+                        ("model", Json::from(r.model.name())),
+                        ("addr", Json::from(i64::from(r.addr))),
+                        ("bit", Json::from(i64::from(r.bit))),
+                        ("inject_cycle", Json::from(r.inject_cycle as i64)),
+                        ("outcome", Json::from(r.outcome.name())),
+                        ("end_cycle", Json::from(r.end_cycle as i64)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("workload", Json::from(self.workload.as_str())),
+            ("backend", Json::from(self.backend.as_str())),
+            ("points", Json::from(self.points as i64)),
+            ("seed", hex_u64(self.seed)),
+            (
+                "golden",
+                Json::obj(vec![
+                    ("warm_cycle", Json::from(self.golden.warm_cycle as i64)),
+                    ("end_cycle", Json::from(self.golden.end_cycle as i64)),
+                    ("instret", Json::from(self.golden.instret as i64)),
+                    ("retire_count", Json::from(self.golden.retire_count as i64)),
+                    ("retire_hash", hex_u64(self.golden.retire_hash)),
+                    ("output_digest", hex_u64(self.golden.output_digest)),
+                ]),
+            ),
+            ("classes", classes),
+            ("avf", Json::from(self.avf())),
+            ("regions", regions),
+            ("results", results),
+        ])
+    }
+
+    /// Decode [`CampaignReport::to_json`] output (the `femu faults
+    /// report` path). Derived tables (`classes`, `regions`, `avf`) are
+    /// recomputed from `results`, not trusted from the document.
+    pub fn from_json(json: &Json) -> Result<CampaignReport> {
+        let golden = json.get("golden").context("reading golden record")?;
+        let results = json
+            .get("results")?
+            .as_arr()?
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                (|| -> Result<PointResult> {
+                    Ok(PointResult {
+                        index: r.get("index")?.as_usize()?,
+                        target: TargetSpace::parse(r.str_field("target")?)?,
+                        model: FaultModel::parse(r.str_field("model")?)?,
+                        addr: u32::try_from(r.get("addr")?.as_i64()?)?,
+                        bit: u8::try_from(r.get("bit")?.as_i64()?)?,
+                        inject_cycle: u64::try_from(r.get("inject_cycle")?.as_i64()?)?,
+                        outcome: Outcome::parse(r.str_field("outcome")?)?,
+                        end_cycle: u64::try_from(r.get("end_cycle")?.as_i64()?)?,
+                    })
+                })()
+                .with_context(|| format!("reading result {i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CampaignReport {
+            workload: json.str_field("workload")?.to_string(),
+            backend: json.str_field("backend")?.to_string(),
+            points: json.get("points")?.as_usize()?,
+            seed: parse_hex_u64(json.str_field("seed")?)?,
+            golden: GoldenRecord {
+                warm_cycle: u64::try_from(golden.get("warm_cycle")?.as_i64()?)?,
+                end_cycle: u64::try_from(golden.get("end_cycle")?.as_i64()?)?,
+                instret: u64::try_from(golden.get("instret")?.as_i64()?)?,
+                retire_count: u64::try_from(golden.get("retire_count")?.as_i64()?)?,
+                retire_hash: parse_hex_u64(golden.str_field("retire_hash")?)?,
+                output_digest: parse_hex_u64(golden.str_field("output_digest")?)?,
+            },
+            results,
+        })
+    }
+
+    /// Human-readable report: campaign header, the class-count table,
+    /// the AVF line, and the per-target-region breakdown.
+    pub fn render_text(&self) -> String {
+        let counts = self.class_counts();
+        let total = self.results.len().max(1);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fault campaign: {} on {} backend, {} points, seed {:#x}\n",
+            self.workload, self.backend, self.points, self.seed
+        ));
+        out.push_str(&format!(
+            "golden run: {} cycles warm -> {} cycles end, {} retired, output {:#018x}\n\n",
+            self.golden.warm_cycle,
+            self.golden.end_cycle,
+            self.golden.retire_count,
+            self.golden.output_digest
+        ));
+        out.push_str(&format!("  {:<24} {:>8} {:>9}\n", "class", "points", "fraction"));
+        for o in Outcome::ALL {
+            let c = counts[o.index()];
+            out.push_str(&format!(
+                "  {:<24} {:>8} {:>8.1}%\n",
+                o.name(),
+                c,
+                100.0 * c as f64 / total as f64
+            ));
+        }
+        out.push_str(&format!("\n  AVF (1 - masked fraction): {:.3}\n\n", self.avf()));
+        out.push_str(&format!(
+            "  {:<10} {:>7} {:>7} {:>5} {:>5} {:>5} {:>7} {:>7}\n",
+            "region", "points", "masked", "sdc", "trap", "hang", "timing", "avf"
+        ));
+        for (t, counts) in self.region_table() {
+            out.push_str(&format!(
+                "  {:<10} {:>7} {:>7} {:>5} {:>5} {:>5} {:>7} {:>7.3}\n",
+                t.name(),
+                counts.iter().sum::<usize>(),
+                counts[Outcome::Masked.index()],
+                counts[Outcome::Sdc.index()],
+                counts[Outcome::Trap.index()],
+                counts[Outcome::Hang.index()],
+                counts[Outcome::TimingDivergent.index()],
+                avf_of(&counts),
+            ));
+        }
+        out
+    }
+}
+
+fn avf_of(counts: &[usize; 5]) -> f64 {
+    let total: usize = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    1.0 - counts[Outcome::Masked.index()] as f64 / total as f64
+}
+
+fn hex_u64(v: u64) -> Json {
+    Json::from(format!("{v:#x}").as_str())
+}
+
+fn parse_hex_u64(s: &str) -> Result<u64> {
+    let digits = s
+        .strip_prefix("0x")
+        .or_else(|| s.strip_prefix("0X"))
+        .ok_or_else(|| anyhow!("expected 0x-prefixed hex, got `{s}`"))?;
+    u64::from_str_radix(digits, 16).map_err(|e| anyhow!("bad hex `{s}`: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> CampaignReport {
+        let mk = |index, target, outcome| PointResult {
+            index,
+            target,
+            model: FaultModel::BitFlip,
+            addr: 0x100 + index as u32 * 4,
+            bit: (index % 32) as u8,
+            inject_cycle: 1_000 + index as u64,
+            outcome,
+            end_cycle: 9_000 + index as u64,
+        };
+        CampaignReport {
+            workload: "mm_cpu".to_string(),
+            backend: "interp".to_string(),
+            points: 6,
+            seed: 0xFA17_C0DE,
+            golden: GoldenRecord {
+                warm_cycle: 1_000,
+                end_cycle: 9_000,
+                instret: 7_500,
+                retire_count: 7_500,
+                retire_hash: 0xDEAD_BEEF_CAFE_F00D,
+                output_digest: 0x0123_4567_89AB_CDEF,
+            },
+            results: vec![
+                mk(0, TargetSpace::SramData, Outcome::Masked),
+                mk(1, TargetSpace::SramData, Outcome::Sdc),
+                mk(2, TargetSpace::SramCode, Outcome::Trap),
+                mk(3, TargetSpace::RegFile, Outcome::Hang),
+                mk(4, TargetSpace::Csr, Outcome::TimingDivergent),
+                mk(5, TargetSpace::Flash, Outcome::Masked),
+            ],
+        }
+    }
+
+    #[test]
+    fn counts_regions_and_avf() {
+        let r = sample_report();
+        assert_eq!(r.class_counts(), [2, 1, 1, 1, 1]);
+        assert!((r.avf() - (1.0 - 2.0 / 6.0)).abs() < 1e-12);
+        let regions = r.region_table();
+        assert_eq!(regions.len(), 5);
+        assert_eq!(regions[0].0, TargetSpace::SramData);
+        assert_eq!(regions[0].1[Outcome::Sdc.index()], 1);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let r = sample_report();
+        let text = r.to_json().to_string();
+        let back = CampaignReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // hex fields really are strings on the wire
+        assert!(text.contains("\"0xdeadbeefcafef00d\""));
+        assert!(text.contains("\"0xfa17c0de\""));
+    }
+
+    #[test]
+    fn render_text_mentions_every_class_and_region() {
+        let text = sample_report().render_text();
+        for o in Outcome::ALL {
+            assert!(text.contains(o.name()), "missing {}", o.name());
+        }
+        for t in TargetSpace::ALL {
+            assert!(text.contains(t.name()), "missing {}", t.name());
+        }
+        assert!(text.contains("AVF"));
+    }
+
+    #[test]
+    fn hex_parsing_is_strict() {
+        assert_eq!(parse_hex_u64("0xff").unwrap(), 255);
+        assert!(parse_hex_u64("ff").is_err());
+        assert!(parse_hex_u64("0xzz").is_err());
+    }
+}

@@ -1,0 +1,375 @@
+//! Campaign specification: what to fault, how, and how many times.
+//!
+//! A spec comes from three places that all funnel through
+//! [`CampaignSpec`]: a campaign TOML file (`femu faults run --campaign
+//! FILE`), bare CLI flags (`--builtin/--points/--seed/--targets/
+//! --models/--window`), and the `faults.run` server command. Validation
+//! happens once, in [`CampaignSpec::validate`], so every surface
+//! rejects the same bad inputs with the same messages.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::toml::Doc;
+use crate::workloads;
+
+/// Hard cap on campaign size — a runaway-request backstop for the
+/// server surface, far above any CI or interactive campaign.
+pub const MAX_POINTS: usize = 1_000_000;
+
+/// Where a fault lands: the architectural state spaces of the emulated
+/// X-HEEP platform that real SEUs hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TargetSpace {
+    /// The workload's data segment in SRAM (operand/result buffers).
+    SramData,
+    /// The workload's text segment in SRAM — exercises the blocks
+    /// backend's self-modifying-code invalidation on every hit.
+    SramCode,
+    /// The integer register file, x1..x31 (x0 is architecturally zero).
+    RegFile,
+    /// The machine CSRs (mstatus/mie/mip/mtvec/mscratch/mepc/mcause/mtval).
+    Csr,
+    /// External SPI flash contents.
+    Flash,
+}
+
+impl TargetSpace {
+    /// Every target space, in canonical report order.
+    pub const ALL: [TargetSpace; 5] = [
+        TargetSpace::SramData,
+        TargetSpace::SramCode,
+        TargetSpace::RegFile,
+        TargetSpace::Csr,
+        TargetSpace::Flash,
+    ];
+
+    /// Canonical (wire/JSON/CLI) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TargetSpace::SramData => "sram-data",
+            TargetSpace::SramCode => "sram-code",
+            TargetSpace::RegFile => "regfile",
+            TargetSpace::Csr => "csr",
+            TargetSpace::Flash => "flash",
+        }
+    }
+
+    /// Index into [`TargetSpace::ALL`]-shaped tables.
+    pub fn index(self) -> usize {
+        match self {
+            TargetSpace::SramData => 0,
+            TargetSpace::SramCode => 1,
+            TargetSpace::RegFile => 2,
+            TargetSpace::Csr => 3,
+            TargetSpace::Flash => 4,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TargetSpace> {
+        for t in TargetSpace::ALL {
+            if t.name() == s {
+                return Ok(t);
+            }
+        }
+        bail!(
+            "unknown target space `{s}` (want {})",
+            TargetSpace::ALL.map(TargetSpace::name).join("|")
+        );
+    }
+
+    /// Parse a comma list (`"sram-data,csr"`) or the keyword `all`.
+    pub fn parse_list(s: &str) -> Result<Vec<TargetSpace>> {
+        parse_name_list(s, TargetSpace::parse, &TargetSpace::ALL)
+    }
+}
+
+/// What the fault does to the targeted 32-bit word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultModel {
+    /// Invert one bit (the classic SEU).
+    BitFlip,
+    /// Clear one bit at injection time (transient stuck-low sample).
+    StuckAt0,
+    /// Set one bit at injection time (transient stuck-high sample).
+    StuckAt1,
+    /// Invert three adjacent bits, wrapping within the word (a
+    /// multi-bit upset burst).
+    Burst,
+}
+
+impl FaultModel {
+    /// Every model, in canonical order.
+    pub const ALL: [FaultModel; 4] =
+        [FaultModel::BitFlip, FaultModel::StuckAt0, FaultModel::StuckAt1, FaultModel::Burst];
+
+    /// Canonical (wire/JSON/CLI) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultModel::BitFlip => "bit-flip",
+            FaultModel::StuckAt0 => "stuck-at-0",
+            FaultModel::StuckAt1 => "stuck-at-1",
+            FaultModel::Burst => "burst",
+        }
+    }
+
+    /// Apply the model to `word` at bit position `bit` (0..32).
+    pub fn apply(self, word: u32, bit: u8) -> u32 {
+        let bit = u32::from(bit) % 32;
+        match self {
+            FaultModel::BitFlip => word ^ (1 << bit),
+            FaultModel::StuckAt0 => word & !(1 << bit),
+            FaultModel::StuckAt1 => word | (1 << bit),
+            FaultModel::Burst => {
+                let mut w = word;
+                for i in 0..3 {
+                    w ^= 1 << ((bit + i) % 32);
+                }
+                w
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultModel> {
+        for m in FaultModel::ALL {
+            if m.name() == s {
+                return Ok(m);
+            }
+        }
+        bail!("unknown fault model `{s}` (want {})", FaultModel::ALL.map(FaultModel::name).join("|"));
+    }
+
+    /// Parse a comma list (`"bit-flip,burst"`) or the keyword `all`.
+    pub fn parse_list(s: &str) -> Result<Vec<FaultModel>> {
+        parse_name_list(s, FaultModel::parse, &FaultModel::ALL)
+    }
+}
+
+fn parse_name_list<T: Copy>(
+    s: &str,
+    parse: impl Fn(&str) -> Result<T>,
+    all: &[T],
+) -> Result<Vec<T>> {
+    let s = s.trim();
+    if s == "all" {
+        return Ok(all.to_vec());
+    }
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(parse(part)?);
+    }
+    if out.is_empty() {
+        bail!("empty list `{s}`");
+    }
+    Ok(out)
+}
+
+/// A full campaign specification. Everything a campaign does is a pure
+/// function of this struct plus the platform config — same spec, same
+/// outcome table, for any worker count and either execution backend.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignSpec {
+    /// Built-in workload name ([`crate::workloads::BUILTIN_NAMES`]).
+    pub workload: String,
+    /// Number of injection points.
+    pub points: usize,
+    /// Campaign seed; per-point faults derive from
+    /// [`point_seed`](crate::coordinator::fleet::point_seed)`(seed, index)`.
+    pub seed: u64,
+    /// Target spaces faults are drawn from (uniformly).
+    pub targets: Vec<TargetSpace>,
+    /// Fault models faults are drawn from (uniformly).
+    pub models: Vec<FaultModel>,
+    /// Injection window as fractions of the golden run's duration,
+    /// `0.0..=1.0` with `window.0 <= window.1`.
+    pub window: (f64, f64),
+    /// Watchdog budget multiplier: a faulted run may spend up to
+    /// `factor x` the golden run's remaining cycles (plus fixed slack)
+    /// before it is classified as a hang.
+    pub watchdog_factor: u64,
+}
+
+impl CampaignSpec {
+    /// A default campaign over `workload`: 100 points, every target
+    /// space, single bit-flips, the full run as the injection window.
+    pub fn new(workload: &str) -> Result<CampaignSpec> {
+        let spec = CampaignSpec {
+            workload: workload.to_string(),
+            points: 100,
+            seed: 0xF417,
+            targets: TargetSpace::ALL.to_vec(),
+            models: vec![FaultModel::BitFlip],
+            window: (0.0, 1.0),
+            watchdog_factor: 4,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Single validation point for every surface (TOML, CLI, server).
+    pub fn validate(&self) -> Result<()> {
+        let known = workloads::builtin(&self.workload).is_some();
+        if !known {
+            bail!(
+                "unknown workload `{}` (have: {})",
+                self.workload,
+                workloads::BUILTIN_NAMES.join(", ")
+            );
+        }
+        let outputs = workloads::output_region(&self.workload)
+            .ok_or_else(|| anyhow!("workload `{}` has no output region map", self.workload))?;
+        if outputs.is_empty() {
+            bail!(
+                "workload `{}` needs host artifacts / has no memory output region -- \
+                 not campaignable",
+                self.workload
+            );
+        }
+        if self.points == 0 || self.points > MAX_POINTS {
+            bail!("points {} out of range 1..={MAX_POINTS}", self.points);
+        }
+        if self.targets.is_empty() {
+            bail!("no target spaces selected");
+        }
+        if self.models.is_empty() {
+            bail!("no fault models selected");
+        }
+        let (lo, hi) = self.window;
+        if !(0.0..=1.0).contains(&lo) || !(0.0..=1.0).contains(&hi) || lo > hi {
+            bail!("injection window {lo}..{hi} must satisfy 0 <= lo <= hi <= 1");
+        }
+        if self.watchdog_factor < 2 {
+            bail!("watchdog factor {} too small (need >= 2)", self.watchdog_factor);
+        }
+        Ok(())
+    }
+
+    /// Parse a campaign TOML document:
+    ///
+    /// ```toml
+    /// [campaign]
+    /// workload = "mm_cpu"
+    /// points = 1000
+    /// seed = 0xF417
+    /// targets = "sram-data,sram-code,regfile,csr,flash"  # or "all"
+    /// models = "bit-flip"                                # or "all"
+    /// window_lo = 0.0
+    /// window_hi = 1.0
+    /// watchdog_factor = 4
+    /// ```
+    pub fn from_toml(text: &str) -> Result<CampaignSpec> {
+        let doc = Doc::parse(text)?;
+        let workload = doc.str_or("campaign.workload", "mm_cpu")?;
+        let mut spec = CampaignSpec {
+            workload,
+            points: doc.u64_or("campaign.points", 100)? as usize,
+            seed: doc.u64_or("campaign.seed", 0xF417)?,
+            targets: TargetSpace::parse_list(&doc.str_or("campaign.targets", "all")?)?,
+            models: FaultModel::parse_list(&doc.str_or("campaign.models", "bit-flip")?)?,
+            window: (
+                doc.f64_or("campaign.window_lo", 0.0)?,
+                doc.f64_or("campaign.window_hi", 1.0)?,
+            ),
+            watchdog_factor: doc.u64_or("campaign.watchdog_factor", 4)?,
+        };
+        spec.targets.sort_unstable();
+        spec.targets.dedup();
+        spec.models.sort_unstable();
+        spec.models.dedup();
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_parse_back() {
+        for t in TargetSpace::ALL {
+            assert_eq!(TargetSpace::parse(t.name()).unwrap(), t);
+        }
+        for m in FaultModel::ALL {
+            assert_eq!(FaultModel::parse(m.name()).unwrap(), m);
+        }
+        assert!(TargetSpace::parse("dram").is_err());
+        assert!(FaultModel::parse("latchup").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        assert_eq!(TargetSpace::parse_list("all").unwrap(), TargetSpace::ALL.to_vec());
+        assert_eq!(
+            TargetSpace::parse_list("csr, flash").unwrap(),
+            vec![TargetSpace::Csr, TargetSpace::Flash]
+        );
+        assert_eq!(FaultModel::parse_list("burst").unwrap(), vec![FaultModel::Burst]);
+        assert!(TargetSpace::parse_list("").is_err());
+        assert!(TargetSpace::parse_list("csr,warp").is_err());
+    }
+
+    #[test]
+    fn fault_models_apply() {
+        assert_eq!(FaultModel::BitFlip.apply(0b1000, 3), 0);
+        assert_eq!(FaultModel::BitFlip.apply(0, 0), 1);
+        assert_eq!(FaultModel::StuckAt0.apply(0xFFFF_FFFF, 31), 0x7FFF_FFFF);
+        assert_eq!(FaultModel::StuckAt1.apply(0, 31), 0x8000_0000);
+        // burst wraps within the word
+        assert_eq!(FaultModel::Burst.apply(0, 0), 0b111);
+        assert_eq!(FaultModel::Burst.apply(0, 31), 0x8000_0003);
+    }
+
+    #[test]
+    fn toml_roundtrip_and_defaults() {
+        let spec = CampaignSpec::from_toml(
+            r#"
+            [campaign]
+            workload = "acquisition"
+            points = 64
+            seed = 0xBEEF
+            targets = "sram-code,csr"
+            models = "all"
+            window_lo = 0.25
+            window_hi = 0.75
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.workload, "acquisition");
+        assert_eq!(spec.points, 64);
+        assert_eq!(spec.seed, 0xBEEF);
+        assert_eq!(spec.targets, vec![TargetSpace::SramCode, TargetSpace::Csr]);
+        assert_eq!(spec.models, FaultModel::ALL.to_vec());
+        assert_eq!(spec.window, (0.25, 0.75));
+
+        let defaults = CampaignSpec::from_toml("[campaign]\nworkload = \"mm_cpu\"").unwrap();
+        assert_eq!(defaults.points, 100);
+        assert_eq!(defaults.models, vec![FaultModel::BitFlip]);
+        assert_eq!(defaults.targets, TargetSpace::ALL.to_vec());
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        assert!(CampaignSpec::new("warp_drive").is_err());
+        // UART-only workload needs artifacts -- not campaignable
+        assert!(CampaignSpec::new("classifier_mailbox").is_err());
+        let mut spec = CampaignSpec::new("mm_cpu").unwrap();
+        spec.points = 0;
+        assert!(spec.validate().is_err());
+        let mut spec = CampaignSpec::new("mm_cpu").unwrap();
+        spec.points = MAX_POINTS + 1;
+        assert!(spec.validate().is_err());
+        let mut spec = CampaignSpec::new("mm_cpu").unwrap();
+        spec.window = (0.8, 0.2);
+        assert!(spec.validate().is_err());
+        let mut spec = CampaignSpec::new("mm_cpu").unwrap();
+        spec.targets.clear();
+        assert!(spec.validate().is_err());
+        let mut spec = CampaignSpec::new("mm_cpu").unwrap();
+        spec.watchdog_factor = 1;
+        assert!(spec.validate().is_err());
+    }
+}

@@ -14,6 +14,7 @@ pub mod coordinator;
 pub mod cpu;
 pub mod energy;
 pub mod exec;
+pub mod faults;
 pub mod isa;
 pub mod mem;
 pub mod metrics;
@@ -43,6 +44,7 @@ pub mod prelude {
         diff::{self, LockstepOptions, LockstepReport},
         BackendKind, ExecBackend, ExecStats, SliceResult,
     };
+    pub use crate::faults::{CampaignReport, CampaignSpec, Outcome};
     pub use crate::perfmon::PerfSnapshot;
     pub use crate::server::{Client, Server};
     pub use crate::snapshot::PlatformSnapshot;

@@ -20,6 +20,10 @@
 //! femu trace info <FILE>
 //! femu trace validate [--builtin NAME|all]
 //! femu table1                                                    (Table I)
+//! femu faults run [--builtin NAME | --campaign FILE] [--points N]
+//!            [--seed S] [--targets LIST] [--models LIST] [--window LO:HI]
+//!            [--watchdog-factor N] [--check] [--json | --out FILE]
+//! femu faults report <FILE> [--json]
 //! femu serve [--addr HOST:PORT] [--artifacts DIR] [--config ..]
 //!            [--max-sessions N] [--workers N] [--idle-timeout SECS]
 //!            [--configs DIR] [--metrics-interval SECS]
@@ -50,6 +54,11 @@ use femu::util::eng;
 fn main() {
     if let Err(e) = run() {
         eprintln!("femu: error: {e:#}");
+        // snapshot-load failures carry a typed kind; turn it into an
+        // actionable hint (corrupt file vs stale build vs wrong config)
+        if let Some(se) = e.downcast_ref::<femu::snapshot::SnapError>() {
+            eprintln!("femu: {}: {}", se.kind.name(), se.kind.hint());
+        }
         std::process::exit(1);
     }
 }
@@ -127,6 +136,7 @@ fn run() -> Result<()> {
         "analyze" => cmd_analyze(&args),
         "table1" => cmd_table1(),
         "disasm" => cmd_disasm(&args),
+        "faults" => cmd_faults(&args),
         "serve" => cmd_serve(&args),
         "metrics" => cmd_metrics(&args),
         "help" | "--help" | "-h" => {
@@ -163,6 +173,11 @@ fn print_usage() {
          femu analyze [prog.s] [--builtin NAME|all] [--from-snapshot FILE]\n  \
          \x20          [--config <platform.toml>] [--json]  static analysis\n  \
          femu table1                                  reproduce Table I\n  \
+         femu faults run [--builtin NAME | --campaign FILE] [--points N]\n  \
+         \x20          [--seed S] [--targets LIST] [--models LIST]\n  \
+         \x20          [--window LO:HI] [--watchdog-factor N] [--check]\n  \
+         \x20          [--json | --out FILE]          fault-injection campaign\n  \
+         femu faults report <FILE> [--json]           re-render a campaign\n  \
          femu serve [--addr HOST:PORT] [--artifacts DIR] [--max-sessions N]\n  \
          \x20          [--workers N] [--idle-timeout SECS] [--configs DIR]\n  \
          \x20          [--metrics-interval SECS]\n  \
@@ -1061,6 +1076,154 @@ fn cmd_trace_validate(args: &Args) -> Result<()> {
         bail!("trace validation failed");
     }
     println!("trace validation passed");
+    Ok(())
+}
+
+fn cmd_faults(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_faults_run(args),
+        Some("report") => cmd_faults_report(args),
+        _ => bail!(
+            "usage: femu faults run [--builtin NAME | --campaign FILE] [--points N] \
+             [--seed S] [--targets LIST] [--models LIST] [--window LO:HI] [--check] \
+             [--json | --out FILE] | femu faults report <FILE> [--json]"
+        ),
+    }
+}
+
+/// A `--flag` value that may be decimal or `0x`-hex.
+fn parse_u64_flag(flag: &str, v: &str) -> Result<u64> {
+    let r = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => v.parse(),
+    };
+    r.with_context(|| format!("--{flag} `{v}`"))
+}
+
+/// Build a campaign spec from `--campaign FILE` (TOML) or `--builtin
+/// NAME`, then apply per-flag overrides. Validation runs last, so a
+/// TOML base plus CLI overrides is checked as a whole.
+fn faults_spec_from_args(args: &Args) -> Result<femu::faults::CampaignSpec> {
+    use femu::faults::{CampaignSpec, FaultModel, TargetSpace};
+
+    let mut spec = match args.flags.get("campaign") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            CampaignSpec::from_toml(&text).with_context(|| format!("parsing campaign {path}"))?
+        }
+        None => {
+            let builtin = args.flags.get("builtin").map(String::as_str).unwrap_or("mm_cpu");
+            CampaignSpec::new(builtin)?
+        }
+    };
+    if let Some(v) = args.flags.get("points") {
+        spec.points = v.parse().with_context(|| format!("--points `{v}`"))?;
+    }
+    if let Some(v) = args.flags.get("seed") {
+        spec.seed = parse_u64_flag("seed", v)?;
+    }
+    if let Some(v) = args.flags.get("targets") {
+        spec.targets = TargetSpace::parse_list(v)?;
+    }
+    if let Some(v) = args.flags.get("models") {
+        spec.models = FaultModel::parse_list(v)?;
+    }
+    if let Some(v) = args.flags.get("window") {
+        let (lo, hi) = v
+            .split_once(':')
+            .ok_or_else(|| anyhow!("--window `{v}` (want LO:HI, e.g. 0.0:1.0)"))?;
+        spec.window = (
+            lo.parse().with_context(|| format!("--window lo `{lo}`"))?,
+            hi.parse().with_context(|| format!("--window hi `{hi}`"))?,
+        );
+    }
+    if let Some(v) = args.flags.get("watchdog-factor") {
+        spec.watchdog_factor = v.parse().with_context(|| format!("--watchdog-factor `{v}`"))?;
+    }
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// `femu faults run`: run a fault-injection campaign (DESIGN.md §15).
+/// `--check` additionally re-runs it with a different worker count and
+/// on the other execution backend and requires the outcome tables to be
+/// bit-identical — the CI `fault-smoke` gate.
+fn cmd_faults_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let fleet = fleet_from_args(args)?;
+    let spec = faults_spec_from_args(args)?;
+
+    let report = femu::faults::run_campaign(&cfg, fleet, &spec)?;
+
+    if args.switches.iter().any(|s| s == "check") {
+        let mut problems = Vec::new();
+
+        let other_fleet = if fleet.is_serial() { Fleet::new(4) } else { Fleet::serial() };
+        let across_workers = femu::faults::run_campaign(&cfg, other_fleet, &spec)?;
+        let workers_ok = across_workers.results == report.results
+            && across_workers.golden == report.golden;
+        println!(
+            "  [{}] outcome table identical across {} and {} worker(s)",
+            if workers_ok { "ok" } else { "FAIL" },
+            fleet.workers(),
+            other_fleet.workers()
+        );
+        if !workers_ok {
+            problems.push("worker-count divergence".to_string());
+        }
+
+        let mut other_cfg = cfg.clone();
+        other_cfg.soc.backend = match cfg.soc.backend {
+            BackendKind::Interp => BackendKind::Blocks,
+            BackendKind::Blocks => BackendKind::Interp,
+        };
+        let across_backends = femu::faults::run_campaign(&other_cfg, fleet, &spec)?;
+        let backends_ok = across_backends.results == report.results
+            && across_backends.golden == report.golden;
+        println!(
+            "  [{}] outcome table identical across {} and {} backends",
+            if backends_ok { "ok" } else { "FAIL" },
+            cfg.soc.backend.name(),
+            other_cfg.soc.backend.name()
+        );
+        if !backends_ok {
+            problems.push("cross-backend divergence".to_string());
+        }
+
+        if !problems.is_empty() {
+            bail!("fault campaign determinism check failed: {}", problems.join("; "));
+        }
+    }
+
+    let json = report.to_json().to_string();
+    if let Some(path) = args.flags.get("out") {
+        std::fs::write(path, format!("{json}\n")).with_context(|| format!("writing {path}"))?;
+        println!("wrote {} points to {path}", report.results.len());
+    } else if args.switches.iter().any(|s| s == "json") {
+        println!("{json}");
+    } else {
+        print!("{}", report.render_text());
+    }
+    Ok(())
+}
+
+/// `femu faults report`: re-render a saved campaign JSON document.
+fn cmd_faults_report(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: femu faults report <FILE> [--json]"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let report = femu::faults::CampaignReport::from_json(
+        &femu::util::json::Json::parse(&text).with_context(|| format!("parsing {path}"))?,
+    )
+    .with_context(|| format!("decoding campaign report {path}"))?;
+    if args.switches.iter().any(|s| s == "json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
     Ok(())
 }
 

@@ -73,8 +73,14 @@ pub use session::{ConfigRegistry, Session, SessionTable, DEFAULT_SESSION};
 /// cycle-exact guest profiling — [`crate::profile`]) arrived, and
 /// `session.list` entries grew additive `uptime_s` / `idle_s` /
 /// `last_command_unix_ms` / `backend` / `instret` / `cycles` fields;
-/// every v5 request is unchanged.
-pub const PROTO_VERSION: u32 = 6;
+/// every v5 request is unchanged. Bumped to 7 when the additive
+/// `faults.run` experiment command arrived (snapshot-powered
+/// fault-injection campaigns — [`crate::faults`], DESIGN.md §15) and
+/// snapshot-load failures gained distinct `error_kind` values
+/// (`snapshot_checksum_mismatch` / `snapshot_version_mismatch` /
+/// `snapshot_shape_mismatch`, [`crate::snapshot::SnapErrorKind`]) with
+/// unchanged error text; every v6 request is unchanged.
+pub const PROTO_VERSION: u32 = 7;
 
 /// The one-line JSON banner every accepted connection receives before
 /// its first request: `{"hello":"femu-control-server","proto":...,
@@ -297,6 +303,8 @@ fn error_response(e: &anyhow::Error) -> Json {
         vec![("ok", Json::Bool(false)), ("error", Json::Str(format!("{e:#}")))];
     if let Some(pe) = e.downcast_ref::<protocol::ProtoError>() {
         fields.push(("error_kind", Json::from(pe.kind.name())));
+    } else if let Some(se) = e.downcast_ref::<crate::snapshot::SnapError>() {
+        fields.push(("error_kind", Json::from(se.kind.name())));
     }
     Json::obj(fields)
 }
@@ -1022,6 +1030,42 @@ mod tests {
         let resp = ask("{\"cmd\":\"load_asm\",\"source\":\"bogus$\"}");
         assert!(!resp.get("ok").unwrap().as_bool().unwrap());
         assert!(resp.opt("error_kind").is_none());
+        server.shutdown();
+    }
+
+    #[test]
+    fn snapshot_load_failures_carry_distinct_error_kinds() {
+        let (server, _client) = spawn();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // hello banner
+        let mut ask = |req: String| {
+            writeln!(writer, "{req}").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(line.trim()).unwrap()
+        };
+        let good = crate::coordinator::Platform::new(crate::config::PlatformConfig::default())
+            .snapshot();
+
+        // checksum mismatch: flip one payload bit and re-hex
+        let mut corrupt = good.as_bytes().to_vec();
+        *corrupt.last_mut().unwrap() ^= 0x01;
+        let hex: String = corrupt.iter().map(|b| format!("{b:02x}")).collect();
+        let resp = ask(format!("{{\"cmd\":\"snapshot.restore\",\"hex\":\"{hex}\"}}"));
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(resp.str_field("error_kind").unwrap(), "snapshot_checksum_mismatch");
+        assert!(resp.str_field("error").unwrap().contains("checksum"));
+
+        // version mismatch: stamp a bogus format version
+        let mut stale = good.as_bytes().to_vec();
+        stale[8] = 0x7E;
+        let hex: String = stale.iter().map(|b| format!("{b:02x}")).collect();
+        let resp = ask(format!("{{\"cmd\":\"snapshot.restore\",\"hex\":\"{hex}\"}}"));
+        assert_eq!(resp.str_field("error_kind").unwrap(), "snapshot_version_mismatch");
+        assert!(resp.str_field("error").unwrap().contains("version"));
         server.shutdown();
     }
 

@@ -45,6 +45,12 @@ pub const RUN_SLICE_CYCLES: u64 = 2_000_000;
 /// Default `run` budget when the request does not carry `max_cycles`.
 pub const DEFAULT_RUN_BUDGET: u64 = 1 << 33;
 
+/// Cap on `faults.run` campaign points over the wire (proto v7): a
+/// remote campaign holds the experiment lock for its whole run, so one
+/// request must not pin the fleet on a million-point sweep. Larger
+/// campaigns belong on the CLI (`femu faults run --campaign FILE`).
+pub const MAX_CAMPAIGN_POINTS: usize = 100_000;
+
 /// Cap on events per `trace.read` response (proto v5): one drain is at
 /// most ~5 MiB of JSON; clients page with the returned `next` cursor.
 pub const MAX_TRACE_READ: usize = 1 << 16;
@@ -714,15 +720,16 @@ fn run_sliced(p: &mut Platform, budget: u64, cancelled: &dyn Fn() -> bool) -> Re
 
 /// Does `cmd` name a server-side experiment driver?
 pub fn is_experiment_cmd(cmd: &str) -> bool {
-    matches!(cmd, "sweep_acquisition" | "kernels" | "flash_study")
+    matches!(cmd, "sweep_acquisition" | "kernels" | "flash_study" | "faults.run")
 }
 
 /// One §V experiment request, parsed and range-checked.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub enum ExperimentCmd {
     SweepAcquisition { window_s: f64, seed: u64 },
     Kernels { seed: u64 },
     FlashStudy { scale: usize },
+    FaultsRun { spec: crate::faults::CampaignSpec },
 }
 
 impl ExperimentCmd {
@@ -758,6 +765,57 @@ impl ExperimentCmd {
                     }
                 };
                 ExperimentCmd::FlashStudy { scale }
+            }
+            "faults.run" => {
+                let builtin = match req.opt("builtin") {
+                    None => "mm_cpu".to_string(),
+                    Some(v) => v.as_str()?.to_string(),
+                };
+                let mut spec = crate::faults::CampaignSpec::new(&builtin)
+                    .map_err(|e| proto_err(ErrorKind::BadParam, format!("{e:#}")))?;
+                if let Some(v) = req.opt("points") {
+                    let n = v.as_i64()?;
+                    if !(1..=MAX_CAMPAIGN_POINTS as i64).contains(&n) {
+                        let kind = if n > MAX_CAMPAIGN_POINTS as i64 {
+                            ErrorKind::CapExceeded
+                        } else {
+                            ErrorKind::OutOfRange
+                        };
+                        return Err(proto_err(
+                            kind,
+                            format!("`points` must be in 1..={MAX_CAMPAIGN_POINTS}, got {n}"),
+                        ));
+                    }
+                    spec.points = n as usize;
+                }
+                spec.seed = seed_field(req, spec.seed)?;
+                if let Some(v) = req.opt("targets") {
+                    spec.targets = crate::faults::TargetSpace::parse_list(v.as_str()?)
+                        .map_err(|e| proto_err(ErrorKind::BadParam, format!("{e:#}")))?;
+                }
+                if let Some(v) = req.opt("models") {
+                    spec.models = crate::faults::FaultModel::parse_list(v.as_str()?)
+                        .map_err(|e| proto_err(ErrorKind::BadParam, format!("{e:#}")))?;
+                }
+                if let Some(v) = req.opt("window_lo") {
+                    spec.window.0 = v.as_f64()?;
+                }
+                if let Some(v) = req.opt("window_hi") {
+                    spec.window.1 = v.as_f64()?;
+                }
+                if let Some(v) = req.opt("watchdog_factor") {
+                    let f = v.as_i64()?;
+                    if !(2..=64).contains(&f) {
+                        return Err(proto_err(
+                            ErrorKind::OutOfRange,
+                            format!("`watchdog_factor` must be in 2..=64, got {f}"),
+                        ));
+                    }
+                    spec.watchdog_factor = f as u64;
+                }
+                spec.validate()
+                    .map_err(|e| proto_err(ErrorKind::BadParam, format!("{e:#}")))?;
+                ExperimentCmd::FaultsRun { spec }
             }
             other => {
                 return Err(proto_err(
@@ -836,6 +894,10 @@ impl ExperimentCmd {
                     ("phys_total_s", Json::Num(r.phys_total_s)),
                     ("speedup", Json::Num(r.speedup)),
                 ]))
+            }
+            ExperimentCmd::FaultsRun { spec } => {
+                let report = crate::faults::run_campaign_cancellable(cfg, *fleet, &spec, cancelled)?;
+                Ok(report.to_json())
             }
         }
     }
@@ -956,6 +1018,61 @@ mod tests {
                 "{kind:?}: {msg}"
             );
         }
+    }
+
+    #[test]
+    fn faults_run_parses_validates_and_executes() {
+        // defaults: mm_cpu, bit-flips over every target space
+        let cmd = ExperimentCmd::parse("faults.run", &Json::obj(vec![])).unwrap();
+        let ExperimentCmd::FaultsRun { spec } = cmd else { panic!("wrong variant") };
+        assert_eq!(spec.workload, "mm_cpu");
+        assert_eq!(spec.points, 100);
+
+        // field violations surface as typed protocol errors at parse time
+        let kind_of = |req: Json| {
+            ExperimentCmd::parse("faults.run", &req)
+                .unwrap_err()
+                .downcast_ref::<ProtoError>()
+                .map(|e| e.kind)
+        };
+        assert_eq!(
+            kind_of(Json::obj(vec![("builtin", Json::from("warp_core"))])),
+            Some(ErrorKind::BadParam)
+        );
+        assert_eq!(
+            kind_of(Json::obj(vec![("points", Json::from(0i64))])),
+            Some(ErrorKind::OutOfRange)
+        );
+        assert_eq!(
+            kind_of(Json::obj(vec![("points", Json::from((MAX_CAMPAIGN_POINTS + 1) as i64))])),
+            Some(ErrorKind::CapExceeded)
+        );
+        assert_eq!(
+            kind_of(Json::obj(vec![("targets", Json::from("dram"))])),
+            Some(ErrorKind::BadParam)
+        );
+        assert_eq!(
+            kind_of(Json::obj(vec![("watchdog_factor", Json::from(1i64))])),
+            Some(ErrorKind::OutOfRange)
+        );
+
+        // a tiny campaign over the wire-shaped path returns the report
+        let req = Json::obj(vec![
+            ("builtin", Json::from("mm_cpu")),
+            ("points", Json::from(4i64)),
+            ("seed", Json::from(9i64)),
+        ]);
+        let r = execute_experiment_cmd(
+            &Fleet::serial(),
+            &PlatformConfig::default(),
+            "faults.run",
+            &req,
+            &never(),
+        )
+        .unwrap();
+        assert_eq!(r.get("points").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(r.get("results").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(r.str_field("seed").unwrap(), "0x9");
     }
 
     #[test]

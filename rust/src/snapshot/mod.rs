@@ -34,12 +34,87 @@
 //! accelerator runtime (`Platform::accel` — process-local handles; the
 //! restored platform keeps whatever artifact binding it already has).
 
+use std::fmt;
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 /// File/stream magic.
 pub const MAGIC: [u8; 8] = *b"FEMUSNAP";
+
+/// Machine-readable discriminant for the snapshot-load failures tooling
+/// needs to tell apart: a corrupt file (checksum), a file from another
+/// build (version), and a healthy file for the wrong platform shape.
+/// Surfaced over the wire as the `error_kind` response field and as a
+/// distinct CLI exit hint — campaign tooling uses it to distinguish
+/// corruption from staleness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapErrorKind {
+    /// The frame's FNV-1a64 checksum does not match the payload.
+    ChecksumMismatch,
+    /// The frame was written by a build with a different format version.
+    VersionMismatch,
+    /// The snapshot is valid but describes a different platform shape
+    /// (bank count/size, memory sizes, clock) than the restore target.
+    ShapeMismatch,
+}
+
+impl SnapErrorKind {
+    /// Wire-stable name, used as the `error_kind` response field.
+    pub fn name(self) -> &'static str {
+        match self {
+            SnapErrorKind::ChecksumMismatch => "snapshot_checksum_mismatch",
+            SnapErrorKind::VersionMismatch => "snapshot_version_mismatch",
+            SnapErrorKind::ShapeMismatch => "snapshot_shape_mismatch",
+        }
+    }
+
+    /// One-line operator hint printed by the CLI alongside the error.
+    pub fn hint(self) -> &'static str {
+        match self {
+            SnapErrorKind::ChecksumMismatch => {
+                "the file is corrupt -- re-copy or re-create the snapshot"
+            }
+            SnapErrorKind::VersionMismatch => {
+                "the file was written by a different build -- re-save it with this femu"
+            }
+            SnapErrorKind::ShapeMismatch => {
+                "the snapshot's platform shape differs from the target config"
+            }
+        }
+    }
+}
+
+/// A typed snapshot-load error: a [`SnapErrorKind`] plus the exact
+/// human-readable message the untyped path used to produce (the wire and
+/// CLI text is byte-identical to previous releases; only the machine
+/// discriminant is new).
+#[derive(Debug)]
+pub struct SnapError {
+    pub kind: SnapErrorKind,
+    msg: String,
+}
+
+impl SnapError {
+    pub fn new(kind: SnapErrorKind, msg: impl Into<String>) -> Self {
+        Self { kind, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for SnapError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for SnapError {}
+
+/// Build an `anyhow::Error` carrying a typed [`SnapError`], so callers
+/// (the control server's `error_response`, the CLI exit path) can
+/// `downcast_ref::<SnapError>()` through any context layers.
+pub fn snap_err(kind: SnapErrorKind, msg: String) -> anyhow::Error {
+    anyhow::Error::new(SnapError::new(kind, msg))
+}
 
 /// Snapshot format version. Bump on any layout change; restore rejects
 /// mismatches outright (no cross-version migration).
@@ -363,7 +438,10 @@ impl PlatformSnapshot {
         }
         let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
         if version != VERSION {
-            bail!("snapshot version {version} unsupported (this build reads version {VERSION})");
+            return Err(snap_err(
+                SnapErrorKind::VersionMismatch,
+                format!("snapshot version {version} unsupported (this build reads version {VERSION})"),
+            ));
         }
         let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
         if bytes.len() - HEADER_LEN != payload_len {
@@ -375,7 +453,10 @@ impl PlatformSnapshot {
         let checksum = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
         let actual = fnv1a64(&bytes[HEADER_LEN..]);
         if checksum != actual {
-            bail!("snapshot corrupt: checksum {actual:#x} != recorded {checksum:#x}");
+            return Err(snap_err(
+                SnapErrorKind::ChecksumMismatch,
+                format!("snapshot corrupt: checksum {actual:#x} != recorded {checksum:#x}"),
+            ));
         }
         Ok(Self { bytes })
     }
@@ -444,6 +525,41 @@ impl PlatformSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn load_failures_carry_typed_kinds() {
+        let mut w = Writer::new();
+        w.u32(0xDEAD_BEEF);
+        let good = PlatformSnapshot::from_payload(w.into_payload()).as_bytes().to_vec();
+
+        let mut corrupt = good.clone();
+        *corrupt.last_mut().unwrap() ^= 0x01;
+        let err = PlatformSnapshot::from_bytes(corrupt).unwrap_err();
+        let kind = err.downcast_ref::<SnapError>().expect("typed checksum error").kind;
+        assert_eq!(kind, SnapErrorKind::ChecksumMismatch);
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+        let mut stale = good;
+        stale[8] = 0x7F; // version field
+        let err = PlatformSnapshot::from_bytes(stale).unwrap_err();
+        let kind = err.downcast_ref::<SnapError>().expect("typed version error").kind;
+        assert_eq!(kind, SnapErrorKind::VersionMismatch);
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+
+        // wire names + hints are distinct per kind
+        let names: Vec<&str> = [
+            SnapErrorKind::ChecksumMismatch,
+            SnapErrorKind::VersionMismatch,
+            SnapErrorKind::ShapeMismatch,
+        ]
+        .iter()
+        .map(|k| k.name())
+        .collect();
+        let mut uniq = names.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), names.len());
+    }
 
     #[test]
     fn primitive_roundtrip() {

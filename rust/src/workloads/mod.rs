@@ -22,6 +22,23 @@ pub const BUILTIN_NAMES: &[&str] = &[
     "mm_cpu",
 ];
 
+/// The output buffers of the built-in workload `name` at its canonical
+/// parameters, as `(symbol, length_in_bytes)` pairs — the memory a
+/// correctness oracle (the fault-injection campaign's golden-record
+/// diff, [`crate::faults`]) should digest to detect silent data
+/// corruption. Empty for workloads whose observable output is UART-only.
+/// `None` for an unknown name.
+pub fn output_region(name: &str) -> Option<Vec<(&'static str, usize)>> {
+    Some(match name {
+        "acquisition" => vec![("buf", 4096)],
+        "classifier_mailbox" => vec![], // UART-only observable output
+        "conv_cgra" | "conv_cpu" => vec![("y_buf", 14 * 14 * 8 * 4)],
+        "fft_cgra" | "fft_cpu" => vec![("re_buf", 512 * 4), ("im_buf", 512 * 4)],
+        "mm_cgra" | "mm_cpu" => vec![("c_buf", 121 * 4 * 4)],
+        _ => return None,
+    })
+}
+
 /// Source of the built-in workload `name` at its canonical parameters
 /// (the sizes the paper's case studies run), or `None` for an unknown
 /// name.
@@ -50,5 +67,26 @@ mod tests {
             crate::isa::assemble(&src).unwrap_or_else(|e| panic!("{name}: {e:#}"));
         }
         assert!(builtin("nope").is_none());
+    }
+
+    #[test]
+    fn output_regions_name_real_symbols() {
+        for &name in BUILTIN_NAMES {
+            let regions = output_region(name).unwrap_or_else(|| panic!("{name} missing"));
+            let prog = crate::isa::assemble(&builtin(name).unwrap()).unwrap();
+            for (sym, len) in regions {
+                let addr = prog
+                    .symbol(sym)
+                    .unwrap_or_else(|e| panic!("{name}: {sym}: {e:#}"));
+                assert!(len > 0 && len % 4 == 0, "{name}: {sym} length {len}");
+                // the region sits inside the program's data segment
+                assert!(addr >= prog.data_base, "{name}: {sym} at {addr:#x}");
+                assert!(
+                    addr + len as u32 <= prog.data_base + prog.data.len() as u32,
+                    "{name}: {sym} spills past the data segment"
+                );
+            }
+        }
+        assert!(output_region("nope").is_none());
     }
 }

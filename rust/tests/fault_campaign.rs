@@ -1,0 +1,143 @@
+//! Campaign determinism matrix (DESIGN.md §15): the same spec must
+//! produce a bit-identical outcome table for any worker count and on
+//! either execution backend, every point must classify, and code-page
+//! faults on the blocks backend must trip the self-modifying-code
+//! invalidation rather than executing a stale compiled block.
+
+use femu::config::PlatformConfig;
+use femu::coordinator::{Fleet, Platform};
+use femu::exec::BackendKind;
+use femu::faults::{
+    golden_from, run_campaign, run_point, CampaignSpec, FaultModel, FaultPoint, Outcome,
+    TargetSpace,
+};
+
+/// The acceptance-criteria campaign: 1000 points over every target
+/// space of the acquisition workload at a fixed seed, run three ways.
+/// Results must be identical across serial vs fleet(4) and across
+/// interp vs blocks, with zero unclassified outcomes (classification is
+/// total by construction; the sum check holds the line).
+#[test]
+fn thousand_point_campaign_is_bit_identical_across_workers_and_backends() {
+    let mut spec = CampaignSpec::new("acquisition").unwrap();
+    spec.points = 1000;
+    spec.seed = 0x5EED_F417;
+
+    let mut interp_cfg = PlatformConfig::default();
+    interp_cfg.soc.backend = BackendKind::Interp;
+    let mut blocks_cfg = interp_cfg.clone();
+    blocks_cfg.soc.backend = BackendKind::Blocks;
+
+    let serial = run_campaign(&interp_cfg, Fleet::serial(), &spec).unwrap();
+    let fleet = run_campaign(&interp_cfg, Fleet::new(4), &spec).unwrap();
+    let blocks = run_campaign(&blocks_cfg, Fleet::new(4), &spec).unwrap();
+
+    assert_eq!(serial.results.len(), 1000);
+    let counts = serial.class_counts();
+    assert_eq!(counts.iter().sum::<usize>(), 1000, "zero unclassified outcomes");
+    // a full-space campaign is not degenerate: more than one class shows up
+    assert!(counts.iter().filter(|&&c| c > 0).count() >= 2, "{counts:?}");
+
+    assert_eq!(serial.golden, fleet.golden, "golden record: serial vs fleet(4)");
+    assert_eq!(serial.results, fleet.results, "outcome table: serial vs fleet(4)");
+    assert_eq!(serial.golden, blocks.golden, "golden record: interp vs blocks");
+    assert_eq!(serial.results, blocks.results, "outcome table: interp vs blocks");
+}
+
+/// A code-page fault injected mid-loop on the blocks backend: the
+/// faulted word sits in a block that has already been compiled and
+/// dispatched, so a stale-block bug would keep adding the old constant
+/// (masked); correct SMC invalidation recompiles and the output
+/// diverges (SDC). The invalidation must also be visible in
+/// `exec_stats`.
+#[test]
+fn code_fault_trips_block_invalidation_not_stale_execution() {
+    let asm = r#"
+        _start:
+            li s0, 64
+            la s1, dst
+        pass:
+            li t0, 42
+            add t2, t2, t0
+            addi s0, s0, -1
+            bnez s0, pass
+            sw t2, 0(s1)
+            ebreak
+        .data
+        dst: .word 0
+    "#;
+    let mut cfg = PlatformConfig::default();
+    cfg.soc.backend = BackendKind::Blocks;
+    let mut p = Platform::new(cfg);
+    let prog = p.dbg.load_source(asm).unwrap();
+    let outputs = vec![(prog.symbol("dst").unwrap(), 4)];
+    let (snap, golden) = golden_from(&mut p, &outputs).unwrap();
+
+    p.restore(&snap).unwrap();
+    // `li t0, 42` at the `pass` label assembles to addi with the
+    // immediate in bits 31:20; flipping bit 20 turns 42 into 43 for
+    // every remaining iteration
+    let fault = FaultPoint {
+        target: TargetSpace::SramCode,
+        model: FaultModel::BitFlip,
+        addr: prog.symbol("pass").unwrap(),
+        bit: 20,
+        inject_cycle: (golden.warm_cycle + golden.end_cycle) / 2,
+    };
+    let r = run_point(&mut p, &golden, &outputs, 4, 0, fault).unwrap();
+    assert_eq!(
+        r.outcome,
+        Outcome::Sdc,
+        "a mid-loop code flip must change the sum — masked means a stale block executed"
+    );
+    let stats = p.dbg.soc.exec_stats();
+    assert!(stats.block_dispatches > 0, "the blocks backend actually ran: {stats:?}");
+    assert!(
+        stats.block_invalidations >= 1,
+        "the code-page write must invalidate compiled blocks: {stats:?}"
+    );
+}
+
+/// The same point-level scenario classifies identically on both
+/// backends — the per-point path (restore, inject, watchdog, classify)
+/// is backend-agnostic, not just whole campaigns.
+#[test]
+fn single_point_classification_matches_across_backends() {
+    let run_on = |backend: BackendKind| {
+        let mut cfg = PlatformConfig::default();
+        cfg.soc.backend = backend;
+        let mut p = Platform::new(cfg);
+        let prog = p
+            .dbg
+            .load_source(
+                r#"
+                _start:
+                    la t0, src
+                    lw t1, 0(t0)
+                    la t2, dst
+                    sw t1, 0(t2)
+                    ebreak
+                .data
+                src: .word 0x5A5A
+                dst: .word 0
+                "#,
+            )
+            .unwrap();
+        let outputs = vec![(prog.symbol("dst").unwrap(), 4)];
+        let (snap, golden) = golden_from(&mut p, &outputs).unwrap();
+        p.restore(&snap).unwrap();
+        let fault = FaultPoint {
+            target: TargetSpace::SramData,
+            model: FaultModel::BitFlip,
+            addr: prog.symbol("src").unwrap(),
+            bit: 3,
+            inject_cycle: golden.warm_cycle,
+        };
+        (golden.clone(), run_point(&mut p, &golden, &outputs, 4, 0, fault).unwrap())
+    };
+    let (ga, ra) = run_on(BackendKind::Interp);
+    let (gb, rb) = run_on(BackendKind::Blocks);
+    assert_eq!(ga, gb);
+    assert_eq!(ra, rb);
+    assert_eq!(ra.outcome, Outcome::Sdc);
+}
